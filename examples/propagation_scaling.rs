@@ -1,0 +1,60 @@
+//! Mean-embedding-propagation scaling (§2.2 / Fig 2): sweep the initial
+//! core index k0 and watch total time collapse while F1 degrades only
+//! moderately — the paper's central trade-off.
+//!
+//! Run: `cargo run --release --example propagation_scaling`
+
+use kcore_embed::coordinator::pipeline::{PHASE_DECOMP, PHASE_PROP};
+use kcore_embed::coordinator::{run_pipeline, Backend, PipelineConfig};
+use kcore_embed::eval::{evaluate_link_prediction, split_edges};
+use kcore_embed::graph::generators;
+use kcore_embed::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let g = generators::facebook_like(7);
+    let mut rng = Rng::new(9);
+    let split = split_edges(&g, 0.10, &mut rng);
+
+    let base = PipelineConfig {
+        backend: Backend::Native,
+        walks_per_node: 10,
+        seed: 9,
+        ..Default::default()
+    };
+
+    // Baseline row.
+    let out = run_pipeline(&split.train_graph, &base, None)?;
+    let res = evaluate_link_prediction(&g, &split.removed, &out.embedding, &mut Rng::new(1));
+    let t_base = out.total_secs();
+    println!(
+        "{:<12} core {:>5}  total {:>6.2}s  decomp {:>5.2}s  prop {:>5.2}s  F1 {:>6.2}%",
+        "DeepWalk",
+        out.core_size,
+        t_base,
+        0.0,
+        0.0,
+        res.f1 * 100.0
+    );
+
+    for k0 in [9u32, 25, 49, 73, 97] {
+        let cfg = PipelineConfig {
+            k0: Some(k0),
+            ..base.clone()
+        };
+        let out = run_pipeline(&split.train_graph, &cfg, None)?;
+        let res = evaluate_link_prediction(&g, &split.removed, &out.embedding, &mut Rng::new(1));
+        println!(
+            "{:<12} core {:>5}  total {:>6.2}s  decomp {:>5.2}s  prop {:>5.2}s  F1 {:>6.2}%  speedup x{:.1}",
+            format!("{k0}-core (Dw)"),
+            out.core_size,
+            out.total_secs(),
+            out.timer.secs(PHASE_DECOMP),
+            out.timer.secs(PHASE_PROP),
+            res.f1 * 100.0,
+            t_base / out.total_secs()
+        );
+    }
+    println!("\nExpected shape (paper Table 2): total time collapses with k0,");
+    println!("decomposition+propagation stay sub-second, F1 drop stays bounded.");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: the whole system in ~40 lines.
+//!
+//! Generates a small clustered graph, embeds it with CoreWalk
+//! (core-adaptive random walks) on the PJRT backend if artifacts exist
+//! (native fallback otherwise), and evaluates link prediction.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use kcore_embed::coordinator::{run_pipeline, Backend, Embedder, PipelineConfig};
+use kcore_embed::eval::{evaluate_link_prediction, split_edges};
+use kcore_embed::graph::generators;
+use kcore_embed::runtime::{default_artifacts_dir, Manifest, Runtime};
+use kcore_embed::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A graph: Holme-Kim power-law-cluster, 800 nodes.
+    let g = generators::holme_kim(800, 4, 0.5, &mut Rng::new(42));
+    println!("graph: {} nodes, {} edges", g.n_nodes(), g.n_edges());
+
+    // 2. Hold out 10% of edges for link prediction.
+    let mut rng = Rng::new(1);
+    let split = split_edges(&g, 0.10, &mut rng);
+
+    // 3. Configure the pipeline: CoreWalk walks, PJRT backend if built.
+    let runtime = match Manifest::load(&default_artifacts_dir()) {
+        Ok(m) => Some((Runtime::cpu()?, m)),
+        Err(_) => {
+            eprintln!("(artifacts not found — run `make artifacts`; using native backend)");
+            None
+        }
+    };
+    let cfg = PipelineConfig {
+        embedder: Embedder::CoreWalk,
+        backend: if runtime.is_some() {
+            Backend::Pjrt
+        } else {
+            Backend::Native
+        },
+        walks_per_node: 10,
+        seed: 42,
+        ..Default::default()
+    };
+
+    // 4. Run: decompose → walk → train → (no propagation: k0 = None).
+    let rt_ref = runtime.as_ref().map(|(r, m)| (r, m));
+    let out = run_pipeline(&split.train_graph, &cfg, rt_ref)?;
+    println!(
+        "embedded {} nodes in {:.2}s (degeneracy {}, {} walks, {} pairs)",
+        out.embedding.n(),
+        out.total_secs(),
+        out.degeneracy,
+        out.n_walks,
+        out.n_pairs
+    );
+
+    // 5. Evaluate.
+    let res = evaluate_link_prediction(&g, &split.removed, &out.embedding, &mut rng);
+    println!(
+        "link prediction: F1 {:.1}%  AUC {:.3}  (test size {})",
+        res.f1 * 100.0,
+        res.auc,
+        res.n_test
+    );
+    Ok(())
+}

@@ -1,0 +1,152 @@
+"""AOT: lower the L2 step functions to HLO *text* artifacts + manifest.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via `make artifacts`; python never runs on the request path.
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one .hlo.txt per static-shape configuration plus manifest.json that
+the rust runtime (rust/src/runtime/artifact.rs) reads to pick the smallest
+artifact that fits a given graph.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+# Static-shape configurations. Vocab buckets are chosen so that each of the
+# paper's three graphs (2708, 4039, 37700 nodes) fits the smallest bucket
+# with headroom: rust pads node ids up to the bucket; untouched rows cost
+# memory but never compute (indices never reach them).
+#
+# PERF (EXPERIMENTS.md §Perf): on the CPU-PJRT testbed the artifacts use
+#   * block_b = batch — a single Pallas grid step. interpret-mode lowering
+#     of a multi-step grid emits a dynamic-slice loop that costs ~3.5x; on
+#     a real TPU the kernel would tile at block_b = 128 (the pytest sweep
+#     covers those shapes).
+#   * donate_argnums=(0,) — records input_output_alias in the HLO so XLA
+#     updates the [2V+2, D] state in place inside the scan (3.4x at
+#     vocab 40960; without it every scan iteration copies the state).
+SGNS_CONFIGS = [
+    # name,            vocab,  dim, batch, K, scan_steps, block_b
+    ("sgns_v1024", 1024, 128, 256, 5, 16, 256),
+    ("sgns_v4096", 4096, 128, 512, 5, 16, 512),
+    ("sgns_v8192", 8192, 128, 512, 5, 16, 512),
+    ("sgns_v16384", 16384, 128, 512, 5, 16, 512),
+    ("sgns_v40960", 40960, 128, 512, 5, 16, 512),
+]
+
+PROP_CONFIGS = [
+    # name,            vocab,  dim, frontier, max_deg, block_f
+    ("prop_v1024", 1024, 128, 256, 32, 64),
+    ("prop_v4096", 4096, 128, 512, 64, 64),
+    ("prop_v8192", 8192, 128, 512, 64, 64),
+    ("prop_v40960", 40960, 128, 1024, 64, 64),
+]
+
+
+def to_hlo_text(fn, example_args, donate_state=True):
+    """jit -> lower -> stablehlo -> XlaComputation -> HLO text.
+
+    donate_state=True donates argument 0 (the state tensor), recording an
+    input_output_alias in the lowered module so the PJRT runtime updates
+    the state buffer in place across `execute_b` chaining (§Perf).
+    """
+    donate = (0,) if donate_state else ()
+    lowered = jax.jit(fn, donate_argnums=donate).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir, only=None, use_ref=False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "generated_unix": int(time.time()), "artifacts": []}
+
+    for name, vocab, dim, batch, k, s, block_b in SGNS_CONFIGS:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        fn, args = model.make_sgns_step(
+            vocab, dim, batch, k, s, use_ref=use_ref, block_b=block_b
+        )
+        text = to_hlo_text(fn, args)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "kind": "sgns",
+                "file": fname,
+                "vocab": vocab,
+                "dim": dim,
+                "batch": batch,
+                "negatives": k,
+                "scan_steps": s,
+                "block_b": block_b,
+            }
+        )
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s")
+
+    for name, vocab, dim, frontier, max_deg, block_f in PROP_CONFIGS:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        fn, args = model.make_prop_step(
+            vocab, dim, frontier, max_deg, use_ref=use_ref, block_f=block_f
+        )
+        text = to_hlo_text(fn, args)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "kind": "prop",
+                "file": fname,
+                "vocab": vocab,
+                "dim": dim,
+                "frontier": frontier,
+                "max_deg": max_deg,
+                "block_f": block_f,
+            }
+        )
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument(
+        "--only", nargs="*", default=None, help="subset of artifact names to build"
+    )
+    p.add_argument(
+        "--use-ref",
+        action="store_true",
+        help="lower the pure-jnp reference instead of the Pallas kernel "
+        "(debug aid: lets rust-side tests isolate kernel-vs-ref diffs)",
+    )
+    a = p.parse_args()
+    build(a.out, only=a.only, use_ref=a.use_ref)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the Pallas kernels are tested against (pytest +
+hypothesis sweeps in python/tests). They are intentionally written in the
+most direct way possible — clarity over speed.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def log_sigmoid(x):
+    """Numerically stable log(sigmoid(x)) = min(x, 0) - log1p(exp(-|x|))."""
+    return jnp.minimum(x, 0.0) - jnp.log1p(jnp.exp(-jnp.abs(x)))
+
+
+def sgns_grads_ref(h, c, n):
+    """Skip-gram negative sampling forward + gradients (reference).
+
+    Args:
+      h: [B, D] f32 — center ("input") vectors, W_in[center].
+      c: [B, D] f32 — context ("output") vectors, W_out[context].
+      n: [B, K, D] f32 — negative vectors, W_out[negatives].
+
+    Returns:
+      (g_h [B, D], g_c [B, D], g_n [B, K, D], loss [B]) where the loss is
+      -log sigma(h.c) - sum_k log sigma(-h.n_k) and the gradients are with
+      respect to h, c and n respectively (no learning rate applied).
+    """
+    pos = jnp.sum(h * c, axis=-1)  # [B]
+    neg = jnp.sum(h[:, None, :] * n, axis=-1)  # [B, K]
+    s_pos = jax.nn.sigmoid(pos)  # [B]
+    s_neg = jax.nn.sigmoid(neg)  # [B, K]
+    g_pos = (s_pos - 1.0)[:, None]  # [B, 1]
+    g_h = g_pos * c + jnp.sum(s_neg[..., None] * n, axis=1)  # [B, D]
+    g_c = g_pos * h  # [B, D]
+    g_n = s_neg[..., None] * h[:, None, :]  # [B, K, D]
+    loss = -log_sigmoid(pos) - jnp.sum(log_sigmoid(-neg), axis=-1)  # [B]
+    return g_h, g_c, g_n, loss
+
+
+def masked_mean_ref(gathered, mask):
+    """Masked mean over the neighbour axis (reference).
+
+    Args:
+      gathered: [F, M, D] f32 — gathered neighbour embeddings.
+      mask: [F, M] f32 — 1.0 for real neighbours, 0.0 for padding.
+
+    Returns:
+      [F, D] f32 — sum(mask * gathered) / max(sum(mask), 1) per row.
+    """
+    s = jnp.sum(gathered * mask[..., None], axis=1)  # [F, D]
+    cnt = jnp.maximum(jnp.sum(mask, axis=1), 1.0)  # [F]
+    return s / cnt[:, None]

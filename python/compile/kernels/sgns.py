@@ -1,0 +1,104 @@
+"""Pallas kernel for the SGNS (skip-gram negative sampling) hot spot.
+
+The kernel receives *dense, already-gathered* operands — the L2 model owns
+the dynamic gather/scatter addressing (XLA is good at that); the kernel
+does only the dense math, which is the part that maps onto TPU MXU/VPU
+tiles:
+
+    pos    = sigma(<h, c>)                 per pair
+    neg_k  = sigma(<h, n_k>)               per pair x negative
+    g_h    = (pos - 1) c + sum_k neg_k n_k
+    g_c    = (pos - 1) h
+    g_n_k  = neg_k h
+    loss   = -log sigma(<h,c>) - sum_k log sigma(-<h,n_k>)
+
+TPU shaping (see DESIGN.md §Hardware-Adaptation): D = 128 is one lane
+tile; the grid tiles the batch dimension so each block holds
+[Bb, D] + [Bb, D] + [Bb, K, D] inputs and the same outputs in VMEM
+(Bb = 128, K = 5 -> ~1.3 MB working set, leaving VMEM room for
+double-buffering). interpret=True everywhere on this CPU testbed — real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _log_sigmoid(x):
+    # Stable log(sigmoid(x)); avoids overflow for large |x|.
+    return jnp.minimum(x, 0.0) - jnp.log1p(jnp.exp(-jnp.abs(x)))
+
+
+def _sgns_kernel(h_ref, c_ref, n_ref, gh_ref, gc_ref, gn_ref, loss_ref):
+    """One batch block: [Bb, D] x [Bb, D] x [Bb, K, D] -> grads + loss."""
+    h = h_ref[...]  # [Bb, D]
+    c = c_ref[...]  # [Bb, D]
+    n = n_ref[...]  # [Bb, K, D]
+
+    pos = jnp.sum(h * c, axis=-1)  # [Bb]
+    neg = jnp.sum(h[:, None, :] * n, axis=-1)  # [Bb, K]
+
+    s_pos = jax.nn.sigmoid(pos)
+    s_neg = jax.nn.sigmoid(neg)
+
+    g_pos = (s_pos - 1.0)[:, None]  # [Bb, 1]
+    gh_ref[...] = g_pos * c + jnp.sum(s_neg[..., None] * n, axis=1)
+    gc_ref[...] = g_pos * h
+    gn_ref[...] = s_neg[..., None] * h[:, None, :]
+    loss_ref[...] = -_log_sigmoid(pos) - jnp.sum(_log_sigmoid(-neg), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def sgns_grads(h, c, n, *, block_b=128):
+    """Pallas-tiled SGNS gradients. See `_sgns_kernel` for the math.
+
+    Args:
+      h: [B, D] f32 center vectors.
+      c: [B, D] f32 context vectors.
+      n: [B, K, D] f32 negative vectors.
+      block_b: batch tile size; must divide B.
+
+    Returns:
+      (g_h [B, D], g_c [B, D], g_n [B, K, D], loss [B]).
+    """
+    b, d = h.shape
+    k = n.shape[1]
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+    grid = (b // block_b,)
+    bd_spec = pl.BlockSpec((block_b, d), lambda i: (i, 0))
+    bkd_spec = pl.BlockSpec((block_b, k, d), lambda i: (i, 0, 0))
+    b_spec = pl.BlockSpec((block_b,), lambda i: (i,))
+    return pl.pallas_call(
+        _sgns_kernel,
+        grid=grid,
+        in_specs=[bd_spec, bd_spec, bkd_spec],
+        out_specs=[bd_spec, bd_spec, bkd_spec, b_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), h.dtype),
+            jax.ShapeDtypeStruct((b, d), h.dtype),
+            jax.ShapeDtypeStruct((b, k, d), h.dtype),
+            jax.ShapeDtypeStruct((b,), h.dtype),
+        ],
+        interpret=True,
+    )(h, c, n)
+
+
+def vmem_bytes(block_b, k, d, dtype_bytes=4):
+    """Estimated VMEM working set of one grid step (inputs + outputs).
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf to argue TPU viability:
+    the estimate must stay well under ~16 MB (v4 VMEM per core) with
+    room for double buffering.
+    """
+    per_block = (
+        2 * block_b * d  # h, c in
+        + block_b * k * d  # n in
+        + 2 * block_b * d  # gh, gc out
+        + block_b * k * d  # gn out
+        + block_b  # loss out
+    )
+    return per_block * dtype_bytes

@@ -1,0 +1,126 @@
+"""L2: the jax compute graphs that are AOT-lowered to HLO artifacts.
+
+Two step functions, both shaped as *single-array-output* programs so the
+rust coordinator can chain the state tensor device-resident through
+`execute_b` (see DESIGN.md §Runtime-interchange):
+
+  sgns_step(state, batch, lr) -> state'
+      state  f32[2V+2, D]   rows 0..V   = W_in
+                            rows V..2V  = W_out
+                            row  2V     = stats (col 0: loss sum, col 1:
+                                          pair count)
+                            row  2V+1   = scratch row written by padding
+                                          lanes, never read
+      batch  i32[S, B, 3+K] per micro-step, per pair:
+                            [valid, center, context, neg_1..neg_K]
+      lr     f32[S]         per-micro-step learning rate
+
+  prop_step(state, rows, nbrs, mask) -> state'
+      state  f32[V, D]      embedding matrix
+      rows   i32[F]         frontier rows to overwrite (padding lanes
+                            point at row V-1's scratch duplicate — the
+                            rust side pads with a dedicated scratch row)
+      nbrs   i32[F, M]      padded neighbour lists
+      mask   f32[F, M]      1.0 where nbrs is a real neighbour
+
+The dense math inside both steps is a Pallas kernel (kernels/sgns.py,
+kernels/meanprop.py); gathers and scatter-adds stay here where XLA owns
+dynamic addressing. `use_ref=True` swaps in the pure-jnp oracle, which the
+pytest suite uses to check the two paths agree at the whole-step level.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref as kref
+from compile.kernels import sgns as ksgns
+from compile.kernels import meanprop as kprop
+
+
+def sgns_micro_step(state, idx, lr_t, *, vocab, use_ref=False, block_b=128):
+    """One SGNS micro-step over a [B, 3+K] batch of pairs.
+
+    Applies SGD updates by scatter-add, which resolves duplicate rows
+    within the batch the same way hogwild word2vec does (all contributions
+    land). Invalid (padding) lanes have valid=0 which zeroes their
+    gradient contribution and redirects their loss to 0.
+    """
+    d = state.shape[1]
+    valid = idx[:, 0].astype(state.dtype)  # [B]
+    centers = idx[:, 1]  # [B]
+    contexts = vocab + idx[:, 2]  # [B] -> W_out half
+    negs = vocab + idx[:, 3:]  # [B, K] -> W_out half
+
+    h = state[centers]  # [B, D]
+    c = state[contexts]  # [B, D]
+    n = state[negs]  # [B, K, D]
+
+    grads = (kref.sgns_grads_ref if use_ref else lambda *a: ksgns.sgns_grads(*a, block_b=block_b))(h, c, n)
+    g_h, g_c, g_n, loss = grads
+
+    vm = (valid * lr_t)[:, None]  # [B, 1]
+    state = state.at[centers].add(-vm * g_h)
+    state = state.at[contexts].add(-vm * g_c)
+    k = negs.shape[1]
+    state = state.at[negs.reshape(-1)].add(
+        (-(vm[:, None, :] * g_n)).reshape(-1, d)
+    )
+    stats_row = 2 * vocab
+    state = state.at[stats_row, 0].add(jnp.sum(loss * valid))
+    state = state.at[stats_row, 1].add(jnp.sum(valid))
+    return state
+
+
+def sgns_step(state, batch, lr, *, vocab, use_ref=False, block_b=128):
+    """S chained micro-steps (lax.scan) — one PJRT dispatch from rust."""
+
+    def body(st, inp):
+        idx, lr_t = inp
+        return (
+            sgns_micro_step(st, idx, lr_t, vocab=vocab, use_ref=use_ref, block_b=block_b),
+            (),
+        )
+
+    state, _ = jax.lax.scan(body, state, (batch, lr))
+    return state
+
+
+def prop_step(state, rows, nbrs, mask, *, use_ref=False, block_f=64):
+    """One Jacobi round of mean propagation over a frontier.
+
+    state'[rows[i]] = masked mean of state[nbrs[i, :]].  All frontier rows
+    are computed from the *previous* state (Jacobi, not Gauss-Seidel), so
+    the update is deterministic regardless of row order; rust calls this
+    repeatedly with the same uploaded index buffers until convergence.
+    """
+    state = jnp.asarray(state)
+    gathered = state[nbrs]  # [F, M, D]
+    mean = (kref.masked_mean_ref if use_ref else lambda *a: kprop.masked_mean(*a, block_f=block_f))(gathered, mask)
+    return state.at[rows].set(mean)
+
+
+def make_sgns_step(vocab, dim, batch, negatives, scan_steps, *, use_ref=False, block_b=128):
+    """Returns (fn, example_args) for AOT lowering of sgns_step."""
+
+    fn = functools.partial(sgns_step, vocab=vocab, use_ref=use_ref, block_b=block_b)
+    args = (
+        jax.ShapeDtypeStruct((2 * vocab + 2, dim), jnp.float32),
+        jax.ShapeDtypeStruct((scan_steps, batch, 3 + negatives), jnp.int32),
+        jax.ShapeDtypeStruct((scan_steps,), jnp.float32),
+    )
+    return fn, args
+
+
+def make_prop_step(vocab, dim, frontier, max_deg, *, use_ref=False, block_f=64):
+    """Returns (fn, example_args) for AOT lowering of prop_step."""
+
+    fn = functools.partial(prop_step, use_ref=use_ref, block_f=block_f)
+    args = (
+        jax.ShapeDtypeStruct((vocab, dim), jnp.float32),
+        jax.ShapeDtypeStruct((frontier,), jnp.int32),
+        jax.ShapeDtypeStruct((frontier, max_deg), jnp.int32),
+        jax.ShapeDtypeStruct((frontier, max_deg), jnp.float32),
+    )
+    return fn, args

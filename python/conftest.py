@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make `compile.*` importable when pytest is run from the python/ directory
+# (or from the repo root as `pytest python/tests`).
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

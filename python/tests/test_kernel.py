@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and block sizes; assert_allclose against ref.
+This is the CORE correctness signal for the kernel layer — everything the
+rust hot path executes flows through these kernels.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels import sgns
+from compile.kernels import meanprop
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rnd(rng, *shape):
+    return rng.standard_normal(shape, dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
+# sgns kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    block_b=st.sampled_from([8, 16, 32]),
+    k=st.integers(1, 8),
+    d=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgns_matches_ref_hypothesis(blocks, block_b, k, d, seed):
+    rng = np.random.default_rng(seed)
+    b = blocks * block_b
+    h, c = rnd(rng, b, d), rnd(rng, b, d)
+    n = rnd(rng, b, k, d)
+    got = sgns.sgns_grads(h, c, n, block_b=block_b)
+    want = ref.sgns_grads_ref(h, c, n)
+    for g, w, name in zip(got, want, ["g_h", "g_c", "g_n", "loss"]):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5, err_msg=name)
+
+
+def test_sgns_production_shape():
+    """The exact shape the artifacts use: B=512, K=5, D=128, block 128."""
+    rng = np.random.default_rng(0)
+    h, c = rnd(rng, 512, 128), rnd(rng, 512, 128)
+    n = rnd(rng, 512, 5, 128)
+    got = sgns.sgns_grads(h, c, n, block_b=128)
+    want = ref.sgns_grads_ref(h, c, n)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
+
+
+def test_sgns_rejects_bad_block():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        sgns.sgns_grads(rnd(rng, 10, 8), rnd(rng, 10, 8), rnd(rng, 10, 2, 8), block_b=4)
+
+
+def test_sgns_extreme_logits_stable():
+    """Large dot products must not overflow the loss (stable log-sigmoid)."""
+    b, d, k = 8, 16, 3
+    h = np.full((b, d), 10.0, np.float32)
+    c = np.full((b, d), 10.0, np.float32)  # <h,c> = 1600
+    n = np.full((b, k, d), -10.0, np.float32)
+    g_h, g_c, g_n, loss = sgns.sgns_grads(h, c, n, block_b=8)
+    assert np.all(np.isfinite(loss))
+    assert np.all(np.isfinite(g_h)) and np.all(np.isfinite(g_n))
+    # Positive pair saturated: its grad ~ 0; negatives saturated at -1600:
+    # sigma ~ 0 so negative grads ~ 0 too.
+    np.testing.assert_allclose(g_c, 0.0, atol=1e-4)
+
+
+def test_sgns_gradient_is_true_gradient():
+    """g must equal the analytic gradient of the loss (autodiff check)."""
+    rng = np.random.default_rng(7)
+    b, k, d = 16, 4, 32
+    h, c, n = rnd(rng, b, d), rnd(rng, b, d), rnd(rng, b, k, d)
+
+    def total_loss(h, c, n):
+        pos = jnp.sum(h * c, -1)
+        neg = jnp.sum(h[:, None, :] * n, -1)
+        return jnp.sum(-ref.log_sigmoid(pos) - jnp.sum(ref.log_sigmoid(-neg), -1))
+
+    gh_auto, gc_auto, gn_auto = jax.grad(total_loss, argnums=(0, 1, 2))(h, c, n)
+    g_h, g_c, g_n, _ = sgns.sgns_grads(h, c, n, block_b=16)
+    np.testing.assert_allclose(g_h, gh_auto, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g_c, gc_auto, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g_n, gn_auto, rtol=1e-4, atol=1e-5)
+
+
+def test_sgns_vmem_budget():
+    """Production block config must fit comfortably in TPU VMEM (~16MB)."""
+    assert sgns.vmem_bytes(128, 5, 128) < 4 * 1024 * 1024  # room to double-buffer
+
+
+# ---------------------------------------------------------------------------
+# meanprop kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    block_f=st.sampled_from([4, 8, 16]),
+    m=st.integers(1, 40),
+    d=st.sampled_from([8, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_meanprop_matches_ref_hypothesis(blocks, block_f, m, d, seed):
+    rng = np.random.default_rng(seed)
+    f = blocks * block_f
+    gathered = rnd(rng, f, m, d)
+    mask = (rng.random((f, m)) < 0.6).astype(np.float32)
+    got = meanprop.masked_mean(gathered, mask, block_f=block_f)
+    want = ref.masked_mean_ref(gathered, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_meanprop_empty_mask_rows_are_zero():
+    rng = np.random.default_rng(3)
+    gathered = rnd(rng, 8, 5, 16)
+    mask = np.zeros((8, 5), np.float32)
+    mask[0, :2] = 1.0  # only row 0 has neighbours
+    out = np.asarray(meanprop.masked_mean(gathered, mask, block_f=8))
+    np.testing.assert_allclose(out[1:], 0.0, atol=1e-7)
+    np.testing.assert_allclose(out[0], gathered[0, :2].mean(0), rtol=1e-5)
+
+
+def test_meanprop_full_mask_is_plain_mean():
+    rng = np.random.default_rng(4)
+    gathered = rnd(rng, 16, 7, 32)
+    mask = np.ones((16, 7), np.float32)
+    out = meanprop.masked_mean(gathered, mask, block_f=16)
+    np.testing.assert_allclose(out, gathered.mean(1), rtol=1e-5, atol=1e-6)
+
+
+def test_meanprop_rejects_bad_block():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        meanprop.masked_mean(rnd(rng, 10, 3, 8), np.ones((10, 3), np.float32), block_f=4)
+
+
+def test_meanprop_vmem_budget():
+    assert meanprop.vmem_bytes(64, 64, 128) < 4 * 1024 * 1024

@@ -1,0 +1,171 @@
+//! `cargo bench` target: micro-benchmarks of the per-layer hot paths the
+//! §Perf pass optimizes. Reports throughput per component so regressions
+//! are visible without running whole experiments.
+//!
+//! harness = false (hand-rolled timing: warmup + repeated runs, report
+//! best and mean — criterion is unavailable offline).
+
+use std::time::Instant;
+
+use kcore_embed::cores::core_decomposition;
+use kcore_embed::embed::{batches::SgnsParams, native, sampler::NegativeSampler};
+use kcore_embed::eval::logistic::{LogRegParams, LogisticRegression};
+use kcore_embed::graph::generators;
+use kcore_embed::propagate::{propagate_mean, PropagationParams};
+use kcore_embed::runtime::{default_artifacts_dir, Manifest, Runtime};
+use kcore_embed::util::rng::Rng;
+use kcore_embed::walks::{generate_walks, WalkParams, WalkSchedule};
+
+fn bench<F: FnMut() -> u64>(name: &str, unit: &str, iters: usize, mut f: F) {
+    // warmup
+    let _ = f();
+    let mut best = f64::INFINITY;
+    let mut mean = 0.0;
+    let mut work = 0u64;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        work = f();
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.min(dt);
+        mean += dt / iters as f64;
+    }
+    println!(
+        "{name:<42} best {:>9.2} {unit}/s   mean {:>9.2} {unit}/s   ({} {unit}/iter)",
+        work as f64 / best / 1e6,
+        work as f64 / mean / 1e6,
+        work
+    );
+}
+
+fn main() {
+    println!("hot-path micro-benchmarks (M = 1e6 units/s)\n");
+    let mut rng = Rng::new(1);
+    let fb = generators::facebook_like(7);
+    let gh = generators::github_like(7);
+
+    // L3: core decomposition (unit: edges).
+    bench("core_decomposition facebook (M edges)", "M-edge", 5, || {
+        let d = core_decomposition(&fb);
+        std::hint::black_box(d.degeneracy);
+        fb.n_edges() as u64
+    });
+    bench("core_decomposition github (M edges)", "M-edge", 3, || {
+        let d = core_decomposition(&gh);
+        std::hint::black_box(d.degeneracy);
+        gh.n_edges() as u64
+    });
+
+    // L3: walk generation (unit: walk steps).
+    let sched = WalkSchedule::uniform(fb.n_nodes(), 5);
+    bench("walk generation facebook (M steps)", "M-step", 3, || {
+        let c = generate_walks(
+            &fb,
+            &sched,
+            &WalkParams {
+                walk_length: 30,
+                seed: 2,
+                threads: kcore_embed::util::pool::default_threads(),
+            },
+        );
+        c.n_tokens() as u64
+    });
+
+    // L3: negative sampling (unit: draws).
+    let counts: Vec<u64> = (1..=fb.n_nodes() as u64).collect();
+    let sampler = NegativeSampler::from_counts(&counts);
+    bench("negative sampling (M draws)", "M-draw", 5, || {
+        let mut s = 0u64;
+        for _ in 0..2_000_000 {
+            s = s.wrapping_add(sampler.sample(&mut rng) as u64);
+        }
+        std::hint::black_box(s);
+        2_000_000
+    });
+
+    // L3: native SGNS training (unit: pairs).
+    let small = generators::holme_kim(1000, 4, 0.4, &mut Rng::new(3));
+    let corpus = generate_walks(
+        &small,
+        &WalkSchedule::uniform(1000, 5),
+        &WalkParams {
+            walk_length: 20,
+            seed: 3,
+            threads: 4,
+        },
+    );
+    let params = SgnsParams::default();
+    bench("native SGNS train (M pairs)", "M-pair", 3, || {
+        let r = native::train_native(&corpus, 1000, &params);
+        std::hint::black_box(r.mean_loss);
+        r.n_pairs
+    });
+
+    // L3: mean propagation (unit: propagated node-rounds).
+    let d = core_decomposition(&fb);
+    let core_nodes = kcore_embed::cores::subcore::k_core_nodes(&d, 25);
+    let emb = kcore_embed::embed::Embedding::word2vec_init(
+        core_nodes.len(),
+        128,
+        &mut Rng::new(4),
+    );
+    bench("mean propagation k0=25 (M node-rounds)", "M-nr", 3, || {
+        let (out, stats) = propagate_mean(
+            &fb,
+            &d,
+            25,
+            &core_nodes,
+            &emb,
+            &PropagationParams::default(),
+        );
+        std::hint::black_box(out.row(0)[0]);
+        (stats.nodes_propagated * stats.total_rounds.max(1)) as u64
+    });
+
+    // L3: logistic regression fit (unit: sample-epochs).
+    let (n, dim) = (4000usize, 256usize);
+    let mut x = vec![0f32; n * dim];
+    let mut y = vec![false; n];
+    let mut r2 = Rng::new(5);
+    for i in 0..n {
+        y[i] = i % 2 == 0;
+        for j in 0..dim {
+            x[i * dim + j] = r2.gen_normal() as f32 + if y[i] && j < 4 { 1.0 } else { 0.0 };
+        }
+    }
+    let lr_params = LogRegParams {
+        epochs: 10,
+        ..Default::default()
+    };
+    bench("logreg fit 4000x256 (M sample-epochs)", "M-se", 3, || {
+        let m = LogisticRegression::fit(&x, &y, dim, &lr_params);
+        std::hint::black_box(m.b);
+        (n * lr_params.epochs) as u64
+    });
+
+    // RT: PJRT SGNS dispatch (unit: pairs), if artifacts are present.
+    match Manifest::load(&default_artifacts_dir()) {
+        Ok(manifest) => {
+            let rt = Runtime::cpu().expect("pjrt cpu client");
+            let corpus2 = generate_walks(
+                &small,
+                &WalkSchedule::uniform(1000, 10),
+                &WalkParams {
+                    walk_length: 30,
+                    seed: 6,
+                    threads: 4,
+                },
+            );
+            bench("PJRT SGNS train v1024 (M pairs)", "M-pair", 3, || {
+                let r = kcore_embed::embed::trainer::train_pjrt(
+                    &rt, &manifest, &corpus2, 1000, &params, 0,
+                )
+                .expect("pjrt train");
+                std::hint::black_box(r.n_pairs);
+                r.n_pairs
+            });
+        }
+        Err(_) => {
+            println!("(skipping PJRT benches: run `make artifacts` first)");
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! `cargo bench` target: quick-mode regeneration of every paper table
+//! and figure (reduced trials/walks so the suite completes in minutes;
+//! the full-scale runs go through `kcore-embed bench --exp <name>`).
+//!
+//! harness = false: this is an end-to-end experiment driver, not a
+//! statistical micro-benchmark.
+
+use std::time::Instant;
+
+use kcore_embed::coordinator::bench::{run_bench, BenchOpts};
+
+fn main() {
+    let mut opts = BenchOpts::quick();
+    opts.out_dir = std::path::PathBuf::from("bench_out/quick");
+    // Allow narrowing to one experiment: `cargo bench --bench paper_tables -- table2`
+    let only: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let names: Vec<&str> = if only.is_empty() {
+        vec![
+            "coredist", "fig1", "table1", "table6", "table2", "table3", "table8", "table4",
+            "table10", "fig2", "fig3", "fig4", "fig5", "fig6",
+        ]
+    } else {
+        only.iter().map(|s| s.as_str()).collect()
+    };
+    println!("paper-table bench (quick mode: {} trials, n = {} walks/node)\n", opts.trials, opts.walks_per_node);
+    let mut failures = 0;
+    for name in names {
+        let t0 = Instant::now();
+        match run_bench(name, &opts, None) {
+            Ok(out) => {
+                println!("==== {name} ({:.1}s) ====", t0.elapsed().as_secs_f64());
+                println!("{out}");
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("==== {name} FAILED: {e:#} ====");
+            }
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,66 @@
+// Perf probe for the PJRT hot path: times SGNS dispatch latency for any
+// artifact directory, breaking out batch-upload vs execute. Used by the
+// §Perf pass to compare artifact variants (pallas vs ref lowering, batch
+// shapes, scan depths).
+//
+// Usage: probe_runtime [artifacts_dir] [artifact_name] [n_dispatches]
+use anyhow::Result;
+use kcore_embed::runtime::{Manifest, Runtime};
+use kcore_embed::util::rng::Rng;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let dir = args.get(1).map(|s| s.as_str()).unwrap_or("artifacts");
+    let name = args.get(2).map(|s| s.as_str()).unwrap_or("sgns_v1024");
+    let n_dispatch: usize = args.get(3).map(|s| s.parse().unwrap()).unwrap_or(20);
+
+    let manifest = Manifest::load(std::path::Path::new(dir))?;
+    let meta = manifest
+        .sgns
+        .iter()
+        .find(|m| m.name == name)
+        .expect("artifact name")
+        .clone();
+    let rt = Runtime::cpu()?;
+    let t0 = Instant::now();
+    let mut session = rt.sgns_session(&manifest, &meta)?;
+    println!("compile: {:?}", t0.elapsed());
+
+    let n = meta.vocab;
+    let mut rng = Rng::new(1);
+    let w: Vec<f32> = (0..n * meta.dim).map(|_| rng.gen_f32() - 0.5).collect();
+    let t0 = Instant::now();
+    session.start(n, &w, &w)?;
+    println!("state upload ({} MB): {:?}", w.len() * 8 / 1_000_000, t0.elapsed());
+
+    // Random valid batch.
+    let lane = meta.lane();
+    let mut idx = vec![0i32; meta.scan_steps * meta.batch * lane];
+    for l in idx.chunks_exact_mut(lane) {
+        l[0] = 1;
+        l[1] = rng.gen_index(n) as i32;
+        l[2] = rng.gen_index(n) as i32;
+        for k in 3..lane {
+            l[k] = rng.gen_index(n) as i32;
+        }
+    }
+    let lr = vec![0.01f32; meta.scan_steps];
+
+    // Warmup.
+    session.step(&idx, &lr)?;
+    let t0 = Instant::now();
+    for _ in 0..n_dispatch {
+        session.step(&idx, &lr)?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let pairs = (n_dispatch * meta.pairs_per_call()) as f64;
+    println!(
+        "{name}: {n_dispatch} dispatches in {dt:.3}s -> {:.2} ms/dispatch, {:.3} M pairs/s",
+        dt / n_dispatch as f64 * 1e3,
+        pairs / dt / 1e6
+    );
+    let (_, _, loss_sum, cnt) = session.read_state(0)?;
+    println!("stats: loss_sum={loss_sum:.1} pairs={cnt}");
+    Ok(())
+}

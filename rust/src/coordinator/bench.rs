@@ -1,0 +1,691 @@
+//! Bench harness: regenerates every table and figure of the paper's
+//! evaluation section (see DESIGN.md §Experiment-index).
+//!
+//! Each benchmark renders a paper-style table/plot to stdout AND writes
+//! `<name>.txt` / `<name>.csv` into the output directory, so
+//! EXPERIMENTS.md can quote the artifacts directly.
+//!
+//! Datasets are the calibrated synthetic stand-ins (offline testbed; see
+//! DESIGN.md §Substitutions). Absolute seconds differ from the paper's
+//! hardware — the reproduced quantities are the *shapes*: who wins, the
+//! speedup growth with k0, the bounded F1 drop, the breakdown dominance
+//! of embedding time.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::config::{Backend, Embedder, PipelineConfig};
+use crate::coordinator::experiment::Experiment;
+use crate::coordinator::pipeline::run_pipeline;
+use crate::coordinator::report::render_table;
+use crate::cores::{core_decomposition, subcore};
+use crate::embed::SgnsParams;
+use crate::graph::{generators, Graph};
+use crate::runtime::{Manifest, Runtime};
+use crate::util::plot::{ascii_plot, series_csv, Series};
+use crate::util::stats::Pca;
+use crate::util::table::Table;
+use crate::walks::corewalk;
+
+/// Harness options.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub trials: usize,
+    /// The paper's n (walks per node); 15 in the paper.
+    pub walks_per_node: u32,
+    pub backend: Backend,
+    pub seed: u64,
+    pub threads: usize,
+    pub out_dir: PathBuf,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            trials: 5,
+            walks_per_node: 15,
+            backend: Backend::Native,
+            seed: 7,
+            threads: crate::util::pool::default_threads(),
+            out_dir: PathBuf::from("bench_out"),
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Reduced-scale settings for `cargo bench` smoke runs.
+    pub fn quick() -> Self {
+        BenchOpts {
+            trials: 2,
+            walks_per_node: 5,
+            ..Default::default()
+        }
+    }
+
+    fn base_config(&self) -> PipelineConfig {
+        PipelineConfig {
+            backend: self.backend,
+            walks_per_node: self.walks_per_node,
+            walk_length: 30,
+            sgns: SgnsParams::default(), // dim 128, window 4, K 5
+            threads: self.threads,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+}
+
+/// All recognized benchmark names. `ablate-*` are design-choice ablations
+/// beyond the paper's own tables (DESIGN.md §Experiment-index).
+pub const BENCH_NAMES: &[&str] = &[
+    "table1", "table2", "table3", "table4", "table6", "table8", "table10", "fig1", "fig2",
+    "fig3", "fig4", "fig5", "fig6", "coredist", "ablate-op", "ablate-bridge", "ablate-walks",
+    "all",
+];
+
+/// Entry point: run one named benchmark (or "all").
+pub fn run_bench(
+    name: &str,
+    opts: &BenchOpts,
+    runtime: Option<(&Runtime, &Manifest)>,
+) -> Result<String> {
+    std::fs::create_dir_all(&opts.out_dir)
+        .with_context(|| format!("creating {}", opts.out_dir.display()))?;
+    let out = match name {
+        "table1" => bench_core_table(
+            "table1",
+            "Table 1/5: Link prediction on Cora-like graph, 10% of edges removed (K-core(Dw))",
+            "cora",
+            0.10,
+            Embedder::DeepWalk,
+            &[2, 3],
+            opts,
+            runtime,
+        )?,
+        "table6" => bench_core_table(
+            "table6",
+            "Table 6: Link prediction on Cora-like graph, 30% of edges removed (K-core(Dw))",
+            "cora",
+            0.30,
+            Embedder::DeepWalk,
+            &[2, 3],
+            opts,
+            runtime,
+        )?,
+        "table2" => bench_facebook_table("table2", 0.10, opts, runtime)?,
+        "table3" => bench_core_table(
+            "table3",
+            "Table 3: Link prediction on Facebook-like graph, 10% removed — CoreWalk rows (K-core(Cw))",
+            "facebook",
+            0.10,
+            Embedder::CoreWalk,
+            &[9, 25, 49, 73, 97],
+            opts,
+            runtime,
+        )?,
+        "table8" => bench_facebook_table("table8", 0.30, opts, runtime)?,
+        "table4" => bench_core_table(
+            "table4",
+            "Table 4/9: Link prediction on Github-like graph, 10% removed (K-core(Dw))",
+            "github",
+            0.10,
+            Embedder::DeepWalk,
+            &[10, 20, 30],
+            opts,
+            runtime,
+        )?,
+        "table10" => bench_core_table(
+            "table10",
+            "Table 10: Link prediction on Github-like graph, 30% removed (K-core(Dw))",
+            "github",
+            0.30,
+            Embedder::DeepWalk,
+            &[10, 20],
+            opts,
+            runtime,
+        )?,
+        "fig1" => bench_fig1(opts)?,
+        "fig2" => bench_fig23("fig2", 0.10, opts, runtime)?,
+        "fig3" => bench_fig23("fig3", 0.30, opts, runtime)?,
+        "fig4" => bench_fig4(opts, runtime)?,
+        "fig5" => bench_fig56("fig5", true, opts, runtime)?,
+        "fig6" => bench_fig56("fig6", false, opts, runtime)?,
+        "coredist" => bench_coredist(opts)?,
+        "ablate-op" => bench_ablate_op(opts, runtime)?,
+        "ablate-bridge" => bench_ablate_bridge(opts, runtime)?,
+        "ablate-walks" => bench_ablate_walks(opts, runtime)?,
+        "all" => {
+            let mut all = String::new();
+            for n in BENCH_NAMES.iter().filter(|&&n| n != "all") {
+                all.push_str(&run_bench(n, opts, runtime)?);
+                all.push('\n');
+            }
+            return Ok(all);
+        }
+        _ => bail!("unknown benchmark {name:?}; known: {BENCH_NAMES:?}"),
+    };
+    Ok(out)
+}
+
+fn graph_by_name(name: &str, seed: u64) -> Result<Graph> {
+    generators::by_name(name, seed).ok_or_else(|| anyhow::anyhow!("unknown graph {name:?}"))
+}
+
+fn write_out(opts: &BenchOpts, name: &str, text: &str, csv: Option<&str>) -> Result<()> {
+    std::fs::write(opts.out_dir.join(format!("{name}.txt")), text)?;
+    if let Some(c) = csv {
+        std::fs::write(opts.out_dir.join(format!("{name}.csv")), c)?;
+    }
+    Ok(())
+}
+
+/// Shared machinery: DeepWalk baseline + k0-core sweep for one embedder.
+#[allow(clippy::too_many_arguments)]
+fn bench_core_table(
+    name: &str,
+    title: &str,
+    graph: &str,
+    frac: f64,
+    embedder: Embedder,
+    cores: &[u32],
+    opts: &BenchOpts,
+    runtime: Option<(&Runtime, &Manifest)>,
+) -> Result<String> {
+    let g = graph_by_name(graph, opts.seed)?;
+    let exp = Experiment {
+        graph: &g,
+        remove_frac: frac,
+        trials: opts.trials,
+        seed: opts.seed,
+        runtime,
+    };
+    let baseline = exp.run_row(&opts.base_config())?;
+    let mut rows = Vec::new();
+    // CoreWalk tables include the no-propagation CoreWalk row first
+    // (paper's Table 3).
+    if embedder == Embedder::CoreWalk {
+        let mut cw = opts.base_config();
+        cw.embedder = Embedder::CoreWalk;
+        rows.push(exp.run_row(&cw)?);
+    }
+    for &k0 in cores {
+        let mut cfg = opts.base_config();
+        cfg.embedder = embedder.clone();
+        cfg.k0 = Some(k0);
+        rows.push(exp.run_row(&cfg)?);
+    }
+    let t = render_table(title, &baseline, &rows);
+    let text = t.render();
+    write_out(opts, name, &text, Some(&t.to_csv()))?;
+    Ok(text)
+}
+
+/// Tables 2/7 and 8: Facebook sweep with BOTH embedders (Dw core rows,
+/// then CoreWalk + Cw core rows), like the appendix tables.
+fn bench_facebook_table(
+    name: &str,
+    frac: f64,
+    opts: &BenchOpts,
+    runtime: Option<(&Runtime, &Manifest)>,
+) -> Result<String> {
+    let pct = (frac * 100.0) as u32;
+    let title = format!(
+        "Table {}: Link prediction on Facebook-like graph, {pct}% removed (K-core(Dw) + K-core(Cw))",
+        if frac < 0.2 { "2/7" } else { "8" }
+    );
+    let cores: &[u32] = &[9, 17, 25, 33, 41, 49, 57, 65, 73, 81, 89, 97];
+    let g = graph_by_name("facebook", opts.seed)?;
+    let exp = Experiment {
+        graph: &g,
+        remove_frac: frac,
+        trials: opts.trials,
+        seed: opts.seed,
+        runtime,
+    };
+    let baseline = exp.run_row(&opts.base_config())?;
+    let mut rows = Vec::new();
+    for &k0 in cores {
+        let mut cfg = opts.base_config();
+        cfg.k0 = Some(k0);
+        rows.push(exp.run_row(&cfg)?);
+    }
+    let mut cw = opts.base_config();
+    cw.embedder = Embedder::CoreWalk;
+    rows.push(exp.run_row(&cw)?);
+    for &k0 in cores {
+        let mut cfg = opts.base_config();
+        cfg.embedder = Embedder::CoreWalk;
+        cfg.k0 = Some(k0);
+        rows.push(exp.run_row(&cfg)?);
+    }
+    let t = render_table(&title, &baseline, &rows);
+    let text = t.render();
+    write_out(opts, name, &text, Some(&t.to_csv()))?;
+    Ok(text)
+}
+
+/// Fig 1: number of walks per root core index (n = 15).
+fn bench_fig1(opts: &BenchOpts) -> Result<String> {
+    let g = graph_by_name("facebook", opts.seed)?;
+    let d = core_decomposition(&g);
+    let pts = corewalk::walks_per_core(&d, opts.walks_per_node.max(15));
+    let series = vec![Series::new(
+        "walks per node",
+        'o',
+        pts.iter().map(|&(k, n)| (k as f64, n as f64)).collect(),
+    )];
+    let mut text = ascii_plot(
+        &format!(
+            "Fig 1: walks generated vs root core index (n = {}, degeneracy = {})",
+            opts.walks_per_node.max(15),
+            d.degeneracy
+        ),
+        "core index",
+        "walks",
+        &series,
+        70,
+        16,
+    );
+    let reduction = corewalk::walk_reduction(&d, opts.walks_per_node.max(15));
+    text.push_str(&format!(
+        "total walk reduction vs uniform schedule: {:.1}%\n",
+        reduction * 100.0
+    ));
+    write_out(opts, "fig1", &text, Some(&series_csv(&series)))?;
+    Ok(text)
+}
+
+/// Figs 2/3: F1 and total time as functions of the initial core index,
+/// for both embedders.
+fn bench_fig23(
+    name: &str,
+    frac: f64,
+    opts: &BenchOpts,
+    runtime: Option<(&Runtime, &Manifest)>,
+) -> Result<String> {
+    let cores: &[u32] = &[9, 25, 41, 57, 73, 97];
+    let g = graph_by_name("facebook", opts.seed)?;
+    let exp = Experiment {
+        graph: &g,
+        remove_frac: frac,
+        trials: opts.trials,
+        seed: opts.seed,
+        runtime,
+    };
+    let mut f1_series = Vec::new();
+    let mut time_series = Vec::new();
+    for (embedder, marker) in [(Embedder::DeepWalk, 'o'), (Embedder::CoreWalk, 'x')] {
+        let mut f1_pts = Vec::new();
+        let mut t_pts = Vec::new();
+        for &k0 in cores {
+            let mut cfg = opts.base_config();
+            cfg.embedder = embedder.clone();
+            cfg.k0 = Some(k0);
+            let row = exp.run_row(&cfg)?;
+            f1_pts.push((k0 as f64, row.f1_pct()));
+            t_pts.push((k0 as f64, row.total_secs.mean()));
+        }
+        let label = embedder.name();
+        f1_series.push(Series::new(&format!("f1:{label}"), marker, f1_pts));
+        time_series.push(Series::new(&format!("time:{label}"), marker, t_pts));
+    }
+    let pct = (frac * 100.0) as u32;
+    let mut text = ascii_plot(
+        &format!("Fig {name}: F1 vs initial core index ({pct}% removed)"),
+        "k0",
+        "F1 (%)",
+        &f1_series,
+        70,
+        14,
+    );
+    text.push_str(&ascii_plot(
+        &format!("Fig {name}: total execution time vs initial core index ({pct}% removed)"),
+        "k0",
+        "seconds",
+        &time_series,
+        70,
+        14,
+    ));
+    let mut all = f1_series;
+    all.extend(time_series);
+    write_out(opts, name, &text, Some(&series_csv(&all)))?;
+    Ok(text)
+}
+
+/// Fig 4: (top) nodes in the initial k-core; (bottom) per-phase time
+/// breakdown vs k0.
+fn bench_fig4(opts: &BenchOpts, runtime: Option<(&Runtime, &Manifest)>) -> Result<String> {
+    let g = graph_by_name("facebook", opts.seed)?;
+    let d = core_decomposition(&g);
+    let sizes = subcore::core_sizes(&d);
+    let size_series = vec![Series::new(
+        "k-core size",
+        '#',
+        sizes.iter().map(|&(k, n)| (k as f64, n as f64)).collect(),
+    )];
+    let mut text = ascii_plot(
+        "Fig 4 (top): nodes in the initial k-core to embed",
+        "k",
+        "nodes",
+        &size_series,
+        70,
+        14,
+    );
+
+    let cores: &[u32] = &[9, 25, 41, 57, 73, 97];
+    let exp = Experiment {
+        graph: &g,
+        remove_frac: 0.10,
+        trials: opts.trials.min(3),
+        seed: opts.seed,
+        runtime,
+    };
+    let mut t = Table::new(
+        "Fig 4 (bottom): execution-time breakdown vs initial core index (10% removed, Dw)",
+        &["k0", "core nodes", "decomp (s)", "prop (s)", "embed (s)", "total (s)"],
+    );
+    let mut breakdown_series: Vec<Series> = Vec::new();
+    let mut decomp_pts = Vec::new();
+    let mut prop_pts = Vec::new();
+    let mut embed_pts = Vec::new();
+    for &k0 in cores {
+        let mut cfg = opts.base_config();
+        cfg.k0 = Some(k0);
+        let row = exp.run_row(&cfg)?;
+        t.add_row(vec![
+            k0.to_string(),
+            row.core_size.to_string(),
+            format!("{:.2}", row.decomp_secs.mean()),
+            format!("{:.2}", row.prop_secs.mean()),
+            format!("{:.2}", row.embed_secs.mean()),
+            format!("{:.2}", row.total_secs.mean()),
+        ]);
+        decomp_pts.push((k0 as f64, row.decomp_secs.mean()));
+        prop_pts.push((k0 as f64, row.prop_secs.mean()));
+        embed_pts.push((k0 as f64, row.embed_secs.mean()));
+    }
+    breakdown_series.push(Series::new("decomp", 'd', decomp_pts));
+    breakdown_series.push(Series::new("prop", 'p', prop_pts));
+    breakdown_series.push(Series::new("embed", 'e', embed_pts));
+    text.push_str(&t.render());
+    let mut all = size_series;
+    all.extend(breakdown_series);
+    write_out(opts, "fig4", &text, Some(&series_csv(&all)))?;
+    Ok(text)
+}
+
+/// Figs 5/6: PCA projection of the final embeddings when the initially
+/// embedded core is connected (Fig 5) vs disconnected (Fig 6).
+fn bench_fig56(
+    name: &str,
+    connected: bool,
+    opts: &BenchOpts,
+    runtime: Option<(&Runtime, &Manifest)>,
+) -> Result<String> {
+    let g = graph_by_name("facebook", opts.seed)?;
+    let mut rng = crate::util::rng::Rng::new(opts.seed);
+    let split = crate::eval::split_edges(&g, 0.10, &mut rng);
+    // Pick k0 on the *train* graph (removal shifts core numbers):
+    // largest connected core for Fig 5; the largest DISCONNECTED core for
+    // Fig 6 (the calibrated facebook graph has a two-blob band).
+    let d_train = core_decomposition(&split.train_graph);
+    let k0 = if connected {
+        subcore::max_connected_core(&split.train_graph, &d_train)
+    } else {
+        (2..=d_train.degeneracy)
+            .rev()
+            .find(|&k| !subcore::k_core_connected(&split.train_graph, &d_train, k))
+            .unwrap_or(d_train.degeneracy)
+    };
+    let mut cfg = opts.base_config();
+    cfg.k0 = Some(k0);
+    let out = run_pipeline(&split.train_graph, &cfg, runtime)?;
+
+    let emb = &out.embedding;
+    let pca = Pca::fit(emb.data(), emb.n(), emb.dim(), 2);
+    let proj = pca.transform(emb.data(), emb.n(), emb.dim());
+    let core_flag: Vec<bool> = (0..g.n_nodes())
+        .map(|v| d_train.core[v] >= k0)
+        .collect();
+    let core_pts: Vec<(f64, f64)> = proj
+        .iter()
+        .zip(&core_flag)
+        .filter(|(_, &c)| c)
+        .map(|(p, _)| (p[0], p[1]))
+        .collect();
+    let prop_pts: Vec<(f64, f64)> = proj
+        .iter()
+        .zip(&core_flag)
+        .filter(|(_, &c)| !c)
+        .map(|(p, _)| (p[0], p[1]))
+        .collect();
+    let series = vec![
+        Series::new("k0-core (trained)", 'o', core_pts),
+        Series::new("propagated", '.', prop_pts),
+    ];
+    let is_conn = subcore::k_core_connected(&split.train_graph, &d_train, k0);
+    let mut text = ascii_plot(
+        &format!(
+            "Fig {name}: PCA of embeddings, initial {k0}-core ({} — {})",
+            if is_conn { "connected" } else { "NOT connected" },
+            if connected {
+                "Fig 5 scenario"
+            } else {
+                "Fig 6 scenario"
+            }
+        ),
+        "PC1",
+        "PC2",
+        &series,
+        78,
+        22,
+    );
+    text.push_str(&format!(
+        "explained variance: PC1 {:.3}, PC2 {:.3} (ratio {:.1})\n",
+        pca.explained[0],
+        pca.explained[1],
+        pca.explained[0] / pca.explained[1].max(1e-12)
+    ));
+    write_out(opts, name, &text, Some(&series_csv(&series)))?;
+    Ok(text)
+}
+
+/// Ablation: edge-feature operator (the paper's concat vs node2vec's
+/// binary operators) on a fixed CoreWalk embedding.
+fn bench_ablate_op(opts: &BenchOpts, runtime: Option<(&Runtime, &Manifest)>) -> Result<String> {
+    use crate::eval::linkpred::evaluate_link_prediction_with;
+    use crate::eval::EdgeOp;
+    let g = graph_by_name("facebook", opts.seed)?;
+    let mut t = Table::new(
+        "Ablation: edge-feature operator, CoreWalk embedding, Facebook-like 10% removed",
+        &["Operator", "F1-Score (%)", "AUC"],
+    );
+    let mut f1s: Vec<crate::util::stats::MeanStd> =
+        vec![crate::util::stats::MeanStd::new(); EdgeOp::ALL.len()];
+    let mut aucs = f1s.clone();
+    for trial in 0..opts.trials {
+        let mut rng = crate::util::rng::Rng::new(opts.seed ^ (0xAB1 + trial as u64));
+        let split = crate::eval::split_edges(&g, 0.10, &mut rng);
+        let mut cfg = opts.base_config();
+        cfg.embedder = Embedder::CoreWalk;
+        cfg.seed = opts.seed ^ ((trial as u64) << 8);
+        let out = run_pipeline(&split.train_graph, &cfg, runtime)?;
+        for (i, op) in EdgeOp::ALL.iter().enumerate() {
+            let r = evaluate_link_prediction_with(
+                &g,
+                &split.removed,
+                &out.embedding,
+                *op,
+                &mut crate::util::rng::Rng::new(99 ^ trial as u64),
+            );
+            f1s[i].push(r.f1);
+            aucs[i].push(r.auc);
+        }
+    }
+    for (i, op) in EdgeOp::ALL.iter().enumerate() {
+        t.add_row(vec![
+            op.name().to_string(),
+            crate::util::table::mean_std_cell(f1s[i].mean() * 100.0, f1s[i].std() * 100.0, 2),
+            format!("{:.3}", aucs[i].mean()),
+        ]);
+    }
+    let text = t.render();
+    write_out(opts, "ablate-op", &text, Some(&t.to_csv()))?;
+    Ok(text)
+}
+
+/// Ablation: bridge walks on a disconnected k0-core (paper §4's proposed
+/// fix) — does bridging recover F1 / normalize the PCA variance ratio?
+fn bench_ablate_bridge(
+    opts: &BenchOpts,
+    runtime: Option<(&Runtime, &Manifest)>,
+) -> Result<String> {
+    let g = graph_by_name("facebook", opts.seed)?;
+    let mut rng = crate::util::rng::Rng::new(opts.seed);
+    let split = crate::eval::split_edges(&g, 0.10, &mut rng);
+    let d_train = core_decomposition(&split.train_graph);
+    let k0 = (2..=d_train.degeneracy)
+        .rev()
+        .find(|&k| !subcore::k_core_connected(&split.train_graph, &d_train, k))
+        .unwrap_or(d_train.degeneracy);
+    let mut t = Table::new(
+        &format!("Ablation: bridge walks on the disconnected {k0}-core (Facebook-like, 10% removed)"),
+        &["Bridges", "F1-Score (%)", "AUC", "PC1/PC2 variance ratio"],
+    );
+    for bridges in [0usize, 50, 200] {
+        let mut f1 = crate::util::stats::MeanStd::new();
+        let mut auc = crate::util::stats::MeanStd::new();
+        let mut ratio = crate::util::stats::MeanStd::new();
+        for trial in 0..opts.trials {
+            let mut cfg = opts.base_config();
+            cfg.k0 = Some(k0);
+            cfg.bridge_walks = bridges;
+            cfg.seed = opts.seed ^ ((trial as u64) << 24);
+            let out = run_pipeline(&split.train_graph, &cfg, runtime)?;
+            let r = crate::eval::evaluate_link_prediction(
+                &g,
+                &split.removed,
+                &out.embedding,
+                &mut crate::util::rng::Rng::new(7 ^ trial as u64),
+            );
+            f1.push(r.f1);
+            auc.push(r.auc);
+            let emb = &out.embedding;
+            let pca = Pca::fit(emb.data(), emb.n(), emb.dim(), 2);
+            ratio.push(pca.explained[0] / pca.explained[1].max(1e-12));
+        }
+        t.add_row(vec![
+            bridges.to_string(),
+            crate::util::table::mean_std_cell(f1.mean() * 100.0, f1.std() * 100.0, 2),
+            format!("{:.3}", auc.mean()),
+            format!("{:.1}", ratio.mean()),
+        ]);
+    }
+    let text = t.render();
+    write_out(opts, "ablate-bridge", &text, Some(&t.to_csv()))?;
+    Ok(text)
+}
+
+/// Ablation: the paper's n (max walks per node) — quality/time trade of
+/// the CoreWalk schedule's single knob.
+fn bench_ablate_walks(
+    opts: &BenchOpts,
+    runtime: Option<(&Runtime, &Manifest)>,
+) -> Result<String> {
+    let g = graph_by_name("facebook", opts.seed)?;
+    let exp = Experiment {
+        graph: &g,
+        remove_frac: 0.10,
+        trials: opts.trials,
+        seed: opts.seed,
+        runtime,
+    };
+    let mut t = Table::new(
+        "Ablation: walks-per-node n (CoreWalk, Facebook-like, 10% removed)",
+        &["n", "F1-Score (%)", "Total (s)", "Pairs"],
+    );
+    for n in [3u32, 7, 15, 30] {
+        let mut cfg = opts.base_config();
+        cfg.embedder = Embedder::CoreWalk;
+        cfg.walks_per_node = n;
+        let row = exp.run_row(&cfg)?;
+        t.add_row(vec![
+            n.to_string(),
+            crate::util::table::mean_std_cell(row.f1_pct(), row.f1.std() * 100.0, 2),
+            format!("{:.2}", row.total_secs.mean()),
+            row.n_pairs.to_string(),
+        ]);
+    }
+    let text = t.render();
+    write_out(opts, "ablate-walks", &text, Some(&t.to_csv()))?;
+    Ok(text)
+}
+
+/// §3.1.1: nodes per k-shell for all three graphs.
+fn bench_coredist(opts: &BenchOpts) -> Result<String> {
+    let mut text = String::new();
+    let mut all_series = Vec::new();
+    for (name, marker) in [("cora", 'c'), ("facebook", 'f'), ("github", 'g')] {
+        let g = graph_by_name(name, opts.seed)?;
+        let d = core_decomposition(&g);
+        let shells = subcore::shell_histogram(&d);
+        let pts: Vec<(f64, f64)> = shells
+            .iter()
+            .map(|&(k, n)| (k as f64, (n as f64).max(1.0).log10()))
+            .collect();
+        text.push_str(&ascii_plot(
+            &format!(
+                "§3.1.1 {name}-like: nodes per shell (log10 count), degeneracy {}",
+                d.degeneracy
+            ),
+            "core index",
+            "log10(nodes)",
+            &[Series::new(name, marker, pts.clone())],
+            70,
+            12,
+        ));
+        all_series.push(Series::new(name, marker, pts));
+    }
+    write_out(opts, "coredist", &text, Some(&series_csv(&all_series)))?;
+    Ok(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_opts() -> BenchOpts {
+        let mut o = BenchOpts::quick();
+        o.trials = 1;
+        o.walks_per_node = 2;
+        o.out_dir = std::env::temp_dir().join(format!("kcore_bench_{}", std::process::id()));
+        o
+    }
+
+    #[test]
+    fn unknown_bench_is_error() {
+        assert!(run_bench("nope", &tmp_opts(), None).is_err());
+    }
+
+    #[test]
+    fn fig1_and_coredist_run() {
+        let opts = tmp_opts();
+        let out = run_bench("fig1", &opts, None).unwrap();
+        assert!(out.contains("walk reduction"));
+        assert!(opts.out_dir.join("fig1.csv").exists());
+        let out = run_bench("coredist", &opts, None).unwrap();
+        assert!(out.contains("degeneracy"));
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+
+    #[test]
+    fn table1_quick_runs_native() {
+        let opts = tmp_opts();
+        let out = run_bench("table1", &opts, None).unwrap();
+        assert!(out.contains("DeepWalk"));
+        assert!(out.contains("-core (Dw)"));
+        assert!(opts.out_dir.join("table1.csv").exists());
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

@@ -1,0 +1,236 @@
+//! Experiment/pipeline configuration, with JSON (de)serialization so
+//! experiments are reproducible from config files.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::embed::SgnsParams;
+use crate::propagate::PropagationParams;
+use crate::util::json::Json;
+
+/// Which walk scheduler/walker produces the corpus.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Embedder {
+    /// Uniform schedule (the paper's DeepWalk baseline).
+    DeepWalk,
+    /// Core-adaptive schedule (the paper's §2.1 contribution).
+    CoreWalk,
+    /// node2vec biased walks with uniform schedule (extension).
+    Node2Vec { p: f64, q: f64 },
+}
+
+impl Embedder {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Embedder::DeepWalk => "deepwalk",
+            Embedder::CoreWalk => "corewalk",
+            Embedder::Node2Vec { .. } => "node2vec",
+        }
+    }
+}
+
+/// Where SGNS training runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT XLA/PJRT executable (Pallas kernel inside) — the paper's
+    /// system re-expressed for this stack; the request-path default.
+    Pjrt,
+    /// Pure-rust word2vec-style trainer — CPU baseline + cross-check.
+    Native,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Native => "native",
+        }
+    }
+}
+
+/// Full pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub embedder: Embedder,
+    pub backend: Backend,
+    /// Embed only the k0-core and propagate outward; None = embed the
+    /// whole graph (no propagation).
+    pub k0: Option<u32>,
+    /// Paper's n: maximum walks per node (DeepWalk default 15).
+    pub walks_per_node: u32,
+    /// Paper default 30.
+    pub walk_length: usize,
+    pub sgns: SgnsParams,
+    pub propagation: PropagationParams,
+    pub threads: usize,
+    pub seed: u64,
+    /// PJRT backend: poll the on-device loss stats every N dispatches
+    /// (0 = only at the end; each poll downloads the full state).
+    pub loss_poll: u64,
+    /// When the k0-core is disconnected, add this many bridge walks
+    /// (paper §4's proposed fix, see [`crate::walks::bridge`]); 0 = off.
+    pub bridge_walks: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            embedder: Embedder::DeepWalk,
+            backend: Backend::Pjrt,
+            k0: None,
+            walks_per_node: 15,
+            walk_length: 30,
+            sgns: SgnsParams::default(),
+            propagation: PropagationParams::default(),
+            threads: crate::util::pool::default_threads(),
+            seed: 0,
+            loss_poll: 0,
+            bridge_walks: 0,
+        }
+    }
+}
+
+impl PipelineConfig {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("embedder", Json::str(self.embedder.name())),
+            ("backend", Json::str(self.backend.name())),
+            (
+                "k0",
+                self.k0.map(|k| Json::num(k as f64)).unwrap_or(Json::Null),
+            ),
+            ("walks_per_node", Json::num(self.walks_per_node as f64)),
+            ("walk_length", Json::num(self.walk_length as f64)),
+            ("dim", Json::num(self.sgns.dim as f64)),
+            ("window", Json::num(self.sgns.window as f64)),
+            ("negatives", Json::num(self.sgns.negatives as f64)),
+            ("lr0", Json::num(self.sgns.lr0 as f64)),
+            ("lr_min", Json::num(self.sgns.lr_min as f64)),
+            ("epochs", Json::num(self.sgns.epochs as f64)),
+            ("prop_iterations", Json::num(self.propagation.iterations as f64)),
+            ("prop_tolerance", Json::num(self.propagation.tolerance as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ];
+        if let Embedder::Node2Vec { p, q } = self.embedder {
+            fields.push(("p", Json::num(p)));
+            fields.push(("q", Json::num(q)));
+        }
+        Json::object(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<PipelineConfig> {
+        let mut cfg = PipelineConfig::default();
+        let get_f = |k: &str, d: f64| j.get(k).and_then(Json::as_f64).unwrap_or(d);
+        let get_u = |k: &str, d: usize| j.get(k).and_then(Json::as_usize).unwrap_or(d);
+        cfg.embedder = match j.get("embedder").and_then(Json::as_str) {
+            None | Some("deepwalk") => Embedder::DeepWalk,
+            Some("corewalk") => Embedder::CoreWalk,
+            Some("node2vec") => Embedder::Node2Vec {
+                p: get_f("p", 1.0),
+                q: get_f("q", 1.0),
+            },
+            Some(x) => bail!("unknown embedder {x:?}"),
+        };
+        cfg.backend = match j.get("backend").and_then(Json::as_str) {
+            None | Some("pjrt") => Backend::Pjrt,
+            Some("native") => Backend::Native,
+            Some(x) => bail!("unknown backend {x:?}"),
+        };
+        cfg.k0 = match j.get("k0") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_usize()
+                    .ok_or_else(|| anyhow!("k0 must be a non-negative integer"))?
+                    as u32,
+            ),
+        };
+        cfg.walks_per_node = get_u("walks_per_node", 15) as u32;
+        cfg.walk_length = get_u("walk_length", 30);
+        cfg.sgns.dim = get_u("dim", cfg.sgns.dim);
+        cfg.sgns.window = get_u("window", cfg.sgns.window);
+        cfg.sgns.negatives = get_u("negatives", cfg.sgns.negatives);
+        cfg.sgns.lr0 = get_f("lr0", cfg.sgns.lr0 as f64) as f32;
+        cfg.sgns.lr_min = get_f("lr_min", cfg.sgns.lr_min as f64) as f32;
+        cfg.sgns.epochs = get_u("epochs", cfg.sgns.epochs);
+        cfg.propagation.iterations = get_u("prop_iterations", cfg.propagation.iterations);
+        cfg.propagation.tolerance = get_f("prop_tolerance", cfg.propagation.tolerance as f64) as f32;
+        cfg.threads = get_u("threads", cfg.threads);
+        cfg.seed = get_f("seed", 0.0) as u64;
+        Ok(cfg)
+    }
+
+    /// Row label in the paper's table style: `DeepWalk`, `CoreWalk`,
+    /// `25-core (Dw)`, `9-core (Cw)` …
+    pub fn label(&self) -> String {
+        let base = match self.embedder {
+            Embedder::DeepWalk => ("DeepWalk", "Dw"),
+            Embedder::CoreWalk => ("CoreWalk", "Cw"),
+            Embedder::Node2Vec { .. } => ("Node2Vec", "N2v"),
+        };
+        match self.k0 {
+            None => base.0.to_string(),
+            Some(k) => format!("{k}-core ({})", base.1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_round_trips_json() {
+        let cfg = PipelineConfig::default();
+        let j = cfg.to_json();
+        let back = PipelineConfig::from_json(&j).unwrap();
+        assert_eq!(back.embedder, cfg.embedder);
+        assert_eq!(back.backend, cfg.backend);
+        assert_eq!(back.k0, cfg.k0);
+        assert_eq!(back.walks_per_node, cfg.walks_per_node);
+        assert_eq!(back.sgns.dim, cfg.sgns.dim);
+    }
+
+    #[test]
+    fn node2vec_round_trips_pq() {
+        let cfg = PipelineConfig {
+            embedder: Embedder::Node2Vec { p: 0.5, q: 2.0 },
+            k0: Some(25),
+            backend: Backend::Native,
+            ..Default::default()
+        };
+        let back = PipelineConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.embedder, Embedder::Node2Vec { p: 0.5, q: 2.0 });
+        assert_eq!(back.k0, Some(25));
+        assert_eq!(back.backend, Backend::Native);
+    }
+
+    #[test]
+    fn labels_match_paper_style() {
+        let mut cfg = PipelineConfig::default();
+        assert_eq!(cfg.label(), "DeepWalk");
+        cfg.embedder = Embedder::CoreWalk;
+        assert_eq!(cfg.label(), "CoreWalk");
+        cfg.k0 = Some(25);
+        assert_eq!(cfg.label(), "25-core (Cw)");
+        cfg.embedder = Embedder::DeepWalk;
+        assert_eq!(cfg.label(), "25-core (Dw)");
+    }
+
+    #[test]
+    fn rejects_unknown_variants() {
+        let j = Json::parse(r#"{"embedder": "gnn"}"#).unwrap();
+        assert!(PipelineConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"backend": "tpu"}"#).unwrap();
+        assert!(PipelineConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn parses_partial_config() {
+        let j = Json::parse(r#"{"embedder": "corewalk", "k0": 9, "walks_per_node": 10}"#).unwrap();
+        let cfg = PipelineConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.embedder, Embedder::CoreWalk);
+        assert_eq!(cfg.k0, Some(9));
+        assert_eq!(cfg.walks_per_node, 10);
+        assert_eq!(cfg.walk_length, 30); // default preserved
+    }
+}

@@ -1,0 +1,152 @@
+//! Experiment runner: repeated-trial link-prediction experiments with
+//! mean ± std aggregation — the machinery behind every table row the
+//! paper reports (5 trials each, §3.1.2).
+
+use anyhow::Result;
+
+use crate::coordinator::config::PipelineConfig;
+use crate::coordinator::pipeline::{self, run_pipeline};
+use crate::eval::{evaluate_link_prediction, split_edges};
+use crate::graph::Graph;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::rng::Rng;
+use crate::util::stats::MeanStd;
+
+/// One row of a paper table, aggregated over trials.
+#[derive(Debug, Clone)]
+pub struct RowResult {
+    pub label: String,
+    pub f1: MeanStd,
+    pub auc: MeanStd,
+    pub total_secs: MeanStd,
+    pub decomp_secs: MeanStd,
+    pub prop_secs: MeanStd,
+    pub embed_secs: MeanStd,
+    pub core_size: usize,
+    pub n_walks: u64,
+    pub n_pairs: u64,
+}
+
+impl RowResult {
+    pub fn f1_pct(&self) -> f64 {
+        self.f1.mean() * 100.0
+    }
+}
+
+/// A link-prediction experiment: graph + removal fraction + trials.
+pub struct Experiment<'a> {
+    pub graph: &'a Graph,
+    pub remove_frac: f64,
+    pub trials: usize,
+    pub seed: u64,
+    pub runtime: Option<(&'a Runtime, &'a Manifest)>,
+}
+
+impl<'a> Experiment<'a> {
+    /// Run one pipeline configuration over all trials. Each trial uses
+    /// its own edge split and pipeline seed (seed = base ^ trial).
+    pub fn run_row(&self, cfg: &PipelineConfig) -> Result<RowResult> {
+        let mut f1 = MeanStd::new();
+        let mut auc = MeanStd::new();
+        let mut total = MeanStd::new();
+        let mut decomp = MeanStd::new();
+        let mut prop = MeanStd::new();
+        let mut embed = MeanStd::new();
+        let mut core_size = 0usize;
+        let mut n_walks = 0u64;
+        let mut n_pairs = 0u64;
+        for trial in 0..self.trials {
+            let mut rng = Rng::new(self.seed ^ (0xD00D + trial as u64));
+            let split = split_edges(self.graph, self.remove_frac, &mut rng);
+            let mut cfg_t = cfg.clone();
+            cfg_t.seed = self.seed ^ ((trial as u64) << 16);
+            let out = run_pipeline(&split.train_graph, &cfg_t, self.runtime)?;
+            let res =
+                evaluate_link_prediction(self.graph, &split.removed, &out.embedding, &mut rng);
+            f1.push(res.f1);
+            auc.push(res.auc);
+            total.push(out.total_secs());
+            decomp.push(out.timer.secs(pipeline::PHASE_DECOMP));
+            prop.push(out.timer.secs(pipeline::PHASE_PROP));
+            embed.push(out.embed_secs());
+            core_size = out.core_size;
+            n_walks = out.n_walks;
+            n_pairs = out.n_pairs;
+        }
+        Ok(RowResult {
+            label: cfg.label(),
+            f1,
+            auc,
+            total_secs: total,
+            decomp_secs: decomp,
+            prop_secs: prop,
+            embed_secs: embed,
+            core_size,
+            n_walks,
+            n_pairs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{Backend, Embedder};
+    use crate::graph::generators;
+
+    fn fast_cfg() -> PipelineConfig {
+        PipelineConfig {
+            backend: Backend::Native,
+            walks_per_node: 4,
+            walk_length: 10,
+            sgns: crate::embed::SgnsParams {
+                dim: 16,
+                window: 2,
+                ..Default::default()
+            },
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn rows_aggregate_trials() {
+        let g = generators::holme_kim(200, 4, 0.5, &mut Rng::new(1));
+        let exp = Experiment {
+            graph: &g,
+            remove_frac: 0.1,
+            trials: 3,
+            seed: 7,
+            runtime: None,
+        };
+        let row = exp.run_row(&fast_cfg()).unwrap();
+        assert_eq!(row.label, "DeepWalk");
+        assert_eq!(row.f1.count(), 3);
+        assert!(row.f1.mean() > 0.0 && row.f1.mean() <= 1.0);
+        assert!(row.total_secs.mean() > 0.0);
+        assert_eq!(row.core_size, 200);
+        // F1 should comfortably beat chance on a clustered graph.
+        assert!(row.f1.mean() > 0.5, "f1 {}", row.f1.mean());
+    }
+
+    #[test]
+    fn corewalk_row_runs_with_k0() {
+        let g = generators::facebook_like(9);
+        let exp = Experiment {
+            graph: &g,
+            remove_frac: 0.1,
+            trials: 2,
+            seed: 3,
+            runtime: None,
+        };
+        let mut cfg = fast_cfg();
+        cfg.embedder = Embedder::CoreWalk;
+        cfg.k0 = Some(49);
+        cfg.walks_per_node = 3;
+        let row = exp.run_row(&cfg).unwrap();
+        assert_eq!(row.label, "49-core (Cw)");
+        assert!(row.core_size > 0 && row.core_size < 4039);
+        assert!(row.decomp_secs.mean() > 0.0);
+        assert!(row.prop_secs.mean() > 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordination: the experiment pipeline (decompose → extract core →
+//! walk → train → propagate), repeated-trial experiment runner, report
+//! rendering and the table/figure bench harness.
+
+pub mod bench;
+pub mod config;
+pub mod experiment;
+pub mod pipeline;
+pub mod report;
+
+pub use config::{Backend, Embedder, PipelineConfig};
+pub use pipeline::{run_pipeline, PipelineOutput};

@@ -1,0 +1,299 @@
+//! The end-to-end embedding pipeline — the system the paper's tables
+//! time: core decomposition → (k0-core extraction) → walk generation →
+//! SGNS embedding → mean propagation.
+//!
+//! Each phase is timed separately because the paper's appendix tables
+//! report the breakdown (core decomposition / propagation / embedding).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::config::{Backend, Embedder, PipelineConfig};
+use crate::cores::{core_decomposition, subcore, CoreDecomposition};
+use crate::embed::{native, trainer, Embedding};
+use crate::graph::Graph;
+use crate::propagate::propagate_mean;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::timer::PhaseTimer;
+use crate::walks::{corewalk, generate_walks, node2vec, WalkParams, WalkSchedule};
+
+/// Phase names used in [`PhaseTimer`] (match the paper's columns).
+pub const PHASE_DECOMP: &str = "core_decomposition";
+pub const PHASE_WALKS: &str = "walks";
+pub const PHASE_TRAIN: &str = "train";
+pub const PHASE_PROP: &str = "propagation";
+
+/// Everything a pipeline run produces.
+pub struct PipelineOutput {
+    /// Full-graph embedding (propagated if k0 was set).
+    pub embedding: Embedding,
+    pub timer: PhaseTimer,
+    pub degeneracy: u32,
+    /// k0 actually used (clamped to the degeneracy).
+    pub k0_used: Option<u32>,
+    pub core_size: usize,
+    pub n_walks: u64,
+    pub n_tokens: u64,
+    pub n_pairs: u64,
+    /// (pairs, mean loss) checkpoints when the PJRT backend polls loss.
+    pub loss_curve: Vec<trainer::LossPoint>,
+}
+
+impl PipelineOutput {
+    /// The paper's "Embedding" column = walk generation + SGNS training.
+    pub fn embed_secs(&self) -> f64 {
+        self.timer.secs(PHASE_WALKS) + self.timer.secs(PHASE_TRAIN)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.timer.total_secs()
+    }
+}
+
+/// Run the full pipeline on `g`. `runtime` is required for
+/// [`Backend::Pjrt`] (pass the shared client + manifest).
+pub fn run_pipeline(
+    g: &Graph,
+    cfg: &PipelineConfig,
+    runtime: Option<(&Runtime, &Manifest)>,
+) -> Result<PipelineOutput> {
+    let mut timer = PhaseTimer::new();
+
+    // Phase 1: core decomposition (needed by CoreWalk scheduling and/or
+    // k0-core extraction; the plain DeepWalk baseline skips it, like the
+    // paper's baseline rows which have no decomposition column).
+    let needs_decomp = cfg.k0.is_some() || matches!(cfg.embedder, Embedder::CoreWalk);
+    let decomp: Option<CoreDecomposition> =
+        needs_decomp.then(|| timer.time(PHASE_DECOMP, || core_decomposition(g)));
+    let degeneracy = decomp.as_ref().map(|d| d.degeneracy).unwrap_or(0);
+
+    // Phase 2: pick the graph to embed (whole graph or k0-core).
+    let (target, core_nodes, k0_used): (Graph, Option<Vec<u32>>, Option<u32>) = match cfg.k0 {
+        None => (g.clone(), None, None),
+        Some(k0_req) => {
+            let d = decomp.as_ref().unwrap();
+            let k0 = k0_req.min(d.degeneracy);
+            if k0 == 0 {
+                bail!("k0=0 requested; use k0=None for the full graph");
+            }
+            let (sub, map) = subcore::k_core_subgraph(g, d, k0);
+            if sub.n_nodes() == 0 {
+                bail!("{k0}-core is empty (degeneracy {})", d.degeneracy);
+            }
+            (sub, Some(map), Some(k0))
+        }
+    };
+
+    // Phase 3: walk schedule + corpus on the target graph.
+    let schedule = match cfg.embedder {
+        Embedder::DeepWalk | Embedder::Node2Vec { .. } => {
+            WalkSchedule::uniform(target.n_nodes(), cfg.walks_per_node)
+        }
+        Embedder::CoreWalk => {
+            // Core indices *of the embedded graph*: recompute on the
+            // target (for the full graph this equals `decomp`).
+            let d_target = if cfg.k0.is_none() {
+                decomp.clone().unwrap()
+            } else {
+                core_decomposition(&target)
+            };
+            corewalk::corewalk_schedule(&d_target, cfg.walks_per_node)
+        }
+    };
+    let mut corpus = timer.time(PHASE_WALKS, || match cfg.embedder {
+        Embedder::Node2Vec { p, q } => node2vec::generate_node2vec_walks(
+            &target,
+            &schedule,
+            &node2vec::Node2VecParams {
+                p,
+                q,
+                walk_length: cfg.walk_length,
+                seed: cfg.seed ^ 0xA11CE,
+                threads: cfg.threads,
+            },
+        ),
+        _ => generate_walks(
+            &target,
+            &schedule,
+            &WalkParams {
+                walk_length: cfg.walk_length,
+                seed: cfg.seed ^ 0xA11CE,
+                threads: cfg.threads,
+            },
+        ),
+    });
+
+    // Phase 3b: bridge walks for disconnected cores (paper §4 extension).
+    if cfg.bridge_walks > 0 {
+        if let Some(map) = &core_nodes {
+            let (bridges, _) = timer.time(PHASE_WALKS, || {
+                let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xB21D);
+                crate::walks::bridge::bridge_walks(
+                    g,
+                    &target,
+                    map,
+                    cfg.bridge_walks,
+                    cfg.walk_length / 4,
+                    &mut rng,
+                )
+            });
+            corpus.append(&bridges);
+        }
+    }
+
+    // Phase 4: SGNS training on the chosen backend.
+    let mut sgns = cfg.sgns.clone();
+    sgns.seed = cfg.seed ^ 0x7EA1;
+    let (core_embedding, n_pairs, loss_curve) = match cfg.backend {
+        Backend::Pjrt => {
+            let (rt, manifest) = match runtime {
+                Some(x) => x,
+                None => bail!("PJRT backend requires a Runtime + Manifest"),
+            };
+            let r = timer.time(PHASE_TRAIN, || {
+                trainer::train_pjrt(rt, manifest, &corpus, target.n_nodes(), &sgns, cfg.loss_poll)
+            })?;
+            (r.w_in, r.n_pairs, r.loss_curve)
+        }
+        Backend::Native => {
+            let r = timer.time(PHASE_TRAIN, || {
+                native::train_native_parallel(&corpus, target.n_nodes(), &sgns, cfg.threads)
+            });
+            (r.w_in, r.n_pairs, Vec::new())
+        }
+    };
+
+    // Phase 5: propagation back to the whole graph.
+    let embedding = match (&core_nodes, k0_used) {
+        (Some(map), Some(k0)) => {
+            let d = decomp.as_ref().unwrap();
+            timer
+                .time(PHASE_PROP, || {
+                    propagate_mean(g, d, k0, map, &core_embedding, &cfg.propagation)
+                })
+                .0
+        }
+        _ => core_embedding,
+    };
+
+    Ok(PipelineOutput {
+        embedding,
+        degeneracy,
+        k0_used,
+        core_size: core_nodes.as_ref().map(|m| m.len()).unwrap_or(g.n_nodes()),
+        n_walks: corpus.n_walks() as u64,
+        n_tokens: corpus.n_tokens() as u64,
+        n_pairs,
+        loss_curve,
+        timer,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{Backend, Embedder};
+    use crate::graph::generators;
+
+    fn tiny_cfg() -> PipelineConfig {
+        PipelineConfig {
+            backend: Backend::Native,
+            walks_per_node: 4,
+            walk_length: 8,
+            sgns: crate::embed::SgnsParams {
+                dim: 16,
+                window: 2,
+                ..Default::default()
+            },
+            threads: 2,
+            seed: 11,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn baseline_deepwalk_full_graph() {
+        let g = generators::holme_kim(120, 3, 0.4, &mut crate::util::rng::Rng::new(1));
+        let out = run_pipeline(&g, &tiny_cfg(), None).unwrap();
+        assert_eq!(out.embedding.n(), 120);
+        assert_eq!(out.k0_used, None);
+        assert_eq!(out.core_size, 120);
+        assert_eq!(out.n_walks, 480);
+        assert!(out.n_pairs > 0);
+        // Baseline has no decomposition phase, like the paper's rows.
+        assert_eq!(out.timer.secs(PHASE_DECOMP), 0.0);
+        assert_eq!(out.timer.secs(PHASE_PROP), 0.0);
+        assert!(out.embed_secs() > 0.0);
+    }
+
+    #[test]
+    fn kcore_pipeline_embeds_core_then_propagates() {
+        let g = generators::facebook_like(2);
+        let mut cfg = tiny_cfg();
+        cfg.k0 = Some(25);
+        cfg.walks_per_node = 2;
+        let out = run_pipeline(&g, &cfg, None).unwrap();
+        assert_eq!(out.embedding.n(), g.n_nodes());
+        assert_eq!(out.k0_used, Some(25));
+        assert!(out.core_size < g.n_nodes() / 2);
+        assert!(out.timer.secs(PHASE_DECOMP) > 0.0);
+        assert!(out.timer.secs(PHASE_PROP) > 0.0);
+        // Core nodes keep their trained rows; far nodes get propagated
+        // values (non-zero within the core's component).
+        let d = core_decomposition(&g);
+        let some_core_node = (0..g.n_nodes() as u32)
+            .find(|&v| d.core[v as usize] >= 25)
+            .unwrap();
+        let norm: f32 = out
+            .embedding
+            .row(some_core_node)
+            .iter()
+            .map(|x| x * x)
+            .sum();
+        assert!(norm > 0.0);
+    }
+
+    #[test]
+    fn corewalk_generates_fewer_walks() {
+        let g = generators::facebook_like(3);
+        let mut dw = tiny_cfg();
+        dw.walks_per_node = 6;
+        let mut cw = dw.clone();
+        cw.embedder = Embedder::CoreWalk;
+        let out_dw = run_pipeline(&g, &dw, None).unwrap();
+        let out_cw = run_pipeline(&g, &cw, None).unwrap();
+        assert!(
+            out_cw.n_walks < out_dw.n_walks / 2,
+            "corewalk {} vs deepwalk {}",
+            out_cw.n_walks,
+            out_dw.n_walks
+        );
+        assert!(out_cw.degeneracy > 0);
+    }
+
+    #[test]
+    fn k0_clamps_to_degeneracy() {
+        let g = generators::holme_kim(80, 2, 0.4, &mut crate::util::rng::Rng::new(4));
+        let mut cfg = tiny_cfg();
+        cfg.k0 = Some(10_000);
+        let out = run_pipeline(&g, &cfg, None).unwrap();
+        assert_eq!(out.k0_used, Some(out.degeneracy));
+    }
+
+    #[test]
+    fn pjrt_backend_without_runtime_errors() {
+        let g = generators::ring(10);
+        let mut cfg = tiny_cfg();
+        cfg.backend = Backend::Pjrt;
+        assert!(run_pipeline(&g, &cfg, None).is_err());
+    }
+
+    #[test]
+    fn node2vec_embedder_runs() {
+        let g = generators::holme_kim(60, 2, 0.3, &mut crate::util::rng::Rng::new(5));
+        let mut cfg = tiny_cfg();
+        cfg.embedder = Embedder::Node2Vec { p: 0.5, q: 2.0 };
+        let out = run_pipeline(&g, &cfg, None).unwrap();
+        assert_eq!(out.embedding.n(), 60);
+        assert!(out.n_pairs > 0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Render experiment rows as the paper's tables (model, F1 ± std, perf
+//! drop, per-phase breakdown, total ± std, speedup).
+
+use crate::coordinator::experiment::RowResult;
+use crate::util::table::{mean_std_cell, perf_drop_cell, speedup_cell, Table};
+
+/// Full appendix-style table (Tables 5-10 layout; the main-text tables
+/// are column subsets of this).
+pub fn render_table(title: &str, baseline: &RowResult, rows: &[RowResult]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "Model",
+            "F1-Score (%)",
+            "Perf. Drop",
+            "Core decomp. (s)",
+            "Propagation (s)",
+            "Embedding (s)",
+            "Total (s)",
+            "Speedup",
+        ],
+    );
+    t.add_row(row_cells(baseline, None));
+    for r in rows {
+        t.add_row(row_cells(r, Some(baseline)));
+    }
+    t
+}
+
+fn row_cells(r: &RowResult, baseline: Option<&RowResult>) -> Vec<String> {
+    let f1_cell = mean_std_cell(r.f1.mean() * 100.0, r.f1.std() * 100.0, 2);
+    let (drop, speedup) = match baseline {
+        None => ("".to_string(), "".to_string()),
+        Some(b) => (
+            perf_drop_cell(b.f1.mean() * 100.0, r.f1.mean() * 100.0),
+            speedup_cell(b.total_secs.mean(), r.total_secs.mean()),
+        ),
+    };
+    vec![
+        r.label.clone(),
+        f1_cell,
+        drop,
+        format!("{:.2}", r.decomp_secs.mean()),
+        format!("{:.2}", r.prop_secs.mean()),
+        format!("{:.2}", r.embed_secs.mean()),
+        mean_std_cell(r.total_secs.mean(), r.total_secs.std(), 2),
+        speedup,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::MeanStd;
+
+    fn row(label: &str, f1: f64, total: f64) -> RowResult {
+        RowResult {
+            label: label.into(),
+            f1: MeanStd::from_slice(&[f1, f1 + 0.01]),
+            auc: MeanStd::from_slice(&[0.8]),
+            total_secs: MeanStd::from_slice(&[total, total * 1.1]),
+            decomp_secs: MeanStd::from_slice(&[0.1]),
+            prop_secs: MeanStd::from_slice(&[0.2]),
+            embed_secs: MeanStd::from_slice(&[total - 0.3]),
+            core_size: 100,
+            n_walks: 500,
+            n_pairs: 10_000,
+        }
+    }
+
+    #[test]
+    fn table_shape_and_speedup() {
+        let base = row("DeepWalk", 0.71, 10.0);
+        let rows = vec![row("9-core (Dw)", 0.69, 5.0), row("25-core (Dw)", 0.67, 2.0)];
+        let t = render_table("Table 2", &base, &rows);
+        let s = t.render();
+        assert!(s.contains("Table 2"));
+        assert!(s.contains("DeepWalk"));
+        assert!(s.contains("x2.1") || s.contains("x2.0"), "{s}");
+        assert!(s.contains("x5.2") || s.contains("x5.3") || s.contains("x5.0"), "{s}");
+        assert!(s.contains("-2.0") || s.contains("-1.9"), "{s}");
+        let csv = t.to_csv();
+        assert!(csv.lines().count() == 4);
+    }
+}

@@ -1,0 +1,249 @@
+//! K-core decomposition (Batagelj–Zaveršnik bucket algorithm, O(V+E)).
+//!
+//! §1.2.3 of the paper: the k-core is the maximal subgraph in which every
+//! vertex has degree ≥ k; a node's *core number* is the largest k whose
+//! k-core contains it; the graph's *degeneracy* is the largest k with a
+//! non-empty k-core. Both of the paper's contributions consume this
+//! decomposition: CoreWalk scales walk counts by core number (eq. 13) and
+//! the propagation framework peels shells from the k0-core outward.
+
+use crate::graph::Graph;
+
+/// Result of a k-core decomposition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoreDecomposition {
+    /// Core number per node.
+    pub core: Vec<u32>,
+    /// Degeneracy = max core number (0 for an empty/edgeless graph).
+    pub degeneracy: u32,
+    /// Peel order: nodes sorted by removal time. Reversed, this is a
+    /// *degeneracy ordering* (each node has ≤ degeneracy neighbours
+    /// later in the order).
+    pub order: Vec<u32>,
+}
+
+/// Batagelj–Zaveršnik: bucket-sort nodes by degree, repeatedly peel the
+/// minimum-degree node and decrement neighbours, maintaining buckets in
+/// place. Exact O(V + E).
+pub fn core_decomposition(g: &Graph) -> CoreDecomposition {
+    let n = g.n_nodes();
+    if n == 0 {
+        return CoreDecomposition {
+            core: vec![],
+            degeneracy: 0,
+            order: vec![],
+        };
+    }
+    let mut deg: Vec<u32> = (0..n as u32).map(|v| g.degree(v) as u32).collect();
+    let max_deg = *deg.iter().max().unwrap() as usize;
+
+    // bin[d] = start index of the degree-d block in `vert`.
+    let mut bin = vec![0u32; max_deg + 2];
+    for &d in &deg {
+        bin[d as usize + 1] += 1;
+    }
+    for d in 0..=max_deg {
+        bin[d + 1] += bin[d];
+    }
+    let mut bin_start = bin.clone(); // working copy of block starts
+    let mut vert = vec![0u32; n]; // nodes sorted by current degree
+    let mut pos = vec![0u32; n]; // position of each node in vert
+    {
+        let mut cursor = bin.clone();
+        for v in 0..n as u32 {
+            let d = deg[v as usize] as usize;
+            vert[cursor[d] as usize] = v;
+            pos[v as usize] = cursor[d];
+            cursor[d] += 1;
+        }
+    }
+
+    let mut core = vec![0u32; n];
+    let mut order = Vec::with_capacity(n);
+    for i in 0..n {
+        let v = vert[i];
+        core[v as usize] = deg[v as usize];
+        order.push(v);
+        for &u in g.neighbors(v) {
+            if deg[u as usize] > deg[v as usize] {
+                let du = deg[u as usize] as usize;
+                let pu = pos[u as usize];
+                let pw = bin_start[du]; // first node of u's degree block
+                let w = vert[pw as usize];
+                if u != w {
+                    vert.swap(pu as usize, pw as usize);
+                    pos[u as usize] = pw;
+                    pos[w as usize] = pu;
+                }
+                bin_start[du] += 1;
+                deg[u as usize] -= 1;
+            }
+        }
+    }
+    let degeneracy = *core.iter().max().unwrap();
+    CoreDecomposition {
+        core,
+        degeneracy,
+        order,
+    }
+}
+
+/// Naive reference peeler: repeatedly remove a minimum-degree node.
+/// O(V^2)-ish; used by property tests as the oracle for the bucket
+/// implementation.
+pub fn core_decomposition_naive(g: &Graph) -> Vec<u32> {
+    let n = g.n_nodes();
+    let mut deg: Vec<i64> = (0..n as u32).map(|v| g.degree(v) as i64).collect();
+    let mut removed = vec![false; n];
+    let mut core = vec![0u32; n];
+    let mut k = 0i64;
+    for _ in 0..n {
+        let v = (0..n)
+            .filter(|&v| !removed[v])
+            .min_by_key(|&v| deg[v])
+            .unwrap();
+        k = k.max(deg[v]);
+        core[v] = k as u32;
+        removed[v] = true;
+        for &u in g.neighbors(v as u32) {
+            if !removed[u as usize] {
+                deg[u as usize] -= 1;
+            }
+        }
+    }
+    core
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::proptest::{ensure, forall};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn clique_core_is_k_minus_1() {
+        let g = generators::complete(7);
+        let d = core_decomposition(&g);
+        assert_eq!(d.degeneracy, 6);
+        assert!(d.core.iter().all(|&c| c == 6));
+    }
+
+    #[test]
+    fn ring_core_is_2_star_is_1() {
+        let d = core_decomposition(&generators::ring(10));
+        assert!(d.core.iter().all(|&c| c == 2));
+        let d = core_decomposition(&generators::star(10));
+        assert!(d.core.iter().all(|&c| c == 1));
+        assert_eq!(d.degeneracy, 1);
+    }
+
+    #[test]
+    fn triangle_with_tail() {
+        // 0-1-2 triangle + path 2-3-4: triangle core 2, tail core 1.
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2), (0, 2), (2, 3), (3, 4)]);
+        let d = core_decomposition(&g);
+        assert_eq!(d.core, vec![2, 2, 2, 1, 1]);
+        assert_eq!(d.degeneracy, 2);
+    }
+
+    #[test]
+    fn isolated_nodes_core_zero() {
+        let g = Graph::from_edges(4, &[(0, 1)]);
+        let d = core_decomposition(&g);
+        assert_eq!(d.core[2], 0);
+        assert_eq!(d.core[3], 0);
+        assert_eq!(d.core[0], 1);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let d = core_decomposition(&Graph::from_edges(0, &[]));
+        assert_eq!(d.degeneracy, 0);
+        assert!(d.core.is_empty());
+    }
+
+    #[test]
+    fn order_is_permutation_and_degenerate() {
+        let mut rng = Rng::new(1);
+        let g = generators::holme_kim(300, 3, 0.5, &mut rng);
+        let d = core_decomposition(&g);
+        let mut seen = vec![false; 300];
+        for &v in &d.order {
+            assert!(!seen[v as usize]);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // Degeneracy ordering property: each node has <= degeneracy
+        // neighbours that come *later* in the peel order.
+        let mut rank = vec![0usize; 300];
+        for (i, &v) in d.order.iter().enumerate() {
+            rank[v as usize] = i;
+        }
+        for v in 0..300u32 {
+            let later = g
+                .neighbors(v)
+                .iter()
+                .filter(|&&u| rank[u as usize] > rank[v as usize])
+                .count();
+            assert!(
+                later <= d.degeneracy as usize,
+                "node {v}: {later} later neighbours > degeneracy {}",
+                d.degeneracy
+            );
+        }
+    }
+
+    #[test]
+    fn property_matches_naive_oracle() {
+        forall("bucket core == naive core", 60, 0xC0DE, |ctx| {
+            let n = ctx.scaled(4, 120);
+            let m = ctx.rng.gen_index(2 * n) + 1;
+            let m = m.min(n * (n - 1) / 2);
+            let g = generators::erdos_renyi_gnm(n, m, &mut ctx.rng);
+            let fast = core_decomposition(&g).core;
+            let slow = core_decomposition_naive(&g);
+            ensure(fast == slow, || {
+                format!("mismatch on n={n} m={m}: fast={fast:?} slow={slow:?}")
+            })
+        });
+    }
+
+    #[test]
+    fn property_core_at_most_degree() {
+        forall("core[v] <= deg(v)", 40, 0xFACE, |ctx| {
+            let n = ctx.scaled(4, 150);
+            let g = generators::barabasi_albert(n.max(5), 2, &mut ctx.rng);
+            let d = core_decomposition(&g);
+            for v in 0..g.n_nodes() as u32 {
+                if d.core[v as usize] as usize > g.degree(v) {
+                    return Err(format!("core[{v}] > deg"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_kcore_min_degree() {
+        // Within the induced k-core subgraph, every node has degree >= k.
+        forall("k-core min degree >= k", 40, 0xBEEF, |ctx| {
+            let n = ctx.scaled(6, 150);
+            let m = (2 * n).min(n * (n - 1) / 2);
+            let g = generators::erdos_renyi_gnm(n, m, &mut ctx.rng);
+            let d = core_decomposition(&g);
+            for k in 1..=d.degeneracy {
+                let nodes: Vec<u32> = (0..n as u32)
+                    .filter(|&v| d.core[v as usize] >= k)
+                    .collect();
+                let (sub, _) = g.induced_subgraph(&nodes);
+                for v in 0..sub.n_nodes() as u32 {
+                    if (sub.degree(v) as u32) < k {
+                        return Err(format!("k={k}: node degree {} < k", sub.degree(v)));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,8 @@
+//! Graph degeneracy: k-core decomposition and core/shell utilities
+//! (§1.2.3 of the paper). Everything in the paper's contribution sits on
+//! top of this module.
+
+pub mod decompose;
+pub mod subcore;
+
+pub use decompose::{core_decomposition, CoreDecomposition};

@@ -1,0 +1,154 @@
+//! K-core subgraph extraction and shell utilities built on the
+//! decomposition.
+
+use super::decompose::CoreDecomposition;
+use crate::graph::connectivity;
+use crate::graph::Graph;
+
+/// Nodes with core number >= k (sorted by id).
+pub fn k_core_nodes(d: &CoreDecomposition, k: u32) -> Vec<u32> {
+    (0..d.core.len() as u32)
+        .filter(|&v| d.core[v as usize] >= k)
+        .collect()
+}
+
+/// Nodes with core number exactly k (the "k-shell").
+pub fn shell_nodes(d: &CoreDecomposition, k: u32) -> Vec<u32> {
+    (0..d.core.len() as u32)
+        .filter(|&v| d.core[v as usize] == k)
+        .collect()
+}
+
+/// Induced k-core subgraph + the new->old node map.
+pub fn k_core_subgraph(g: &Graph, d: &CoreDecomposition, k: u32) -> (Graph, Vec<u32>) {
+    g.induced_subgraph(&k_core_nodes(d, k))
+}
+
+/// (k, shell size) for every k in `0..=degeneracy` with a non-empty
+/// shell — the §3.1.1 shell-distribution plot data.
+pub fn shell_histogram(d: &CoreDecomposition) -> Vec<(u32, usize)> {
+    let mut counts = vec![0usize; d.degeneracy as usize + 1];
+    for &c in &d.core {
+        counts[c as usize] += 1;
+    }
+    counts
+        .into_iter()
+        .enumerate()
+        .filter(|&(_, n)| n > 0)
+        .map(|(k, n)| (k as u32, n))
+        .collect()
+}
+
+/// Cumulative k-core sizes: (k, |k-core|) for k in 1..=degeneracy.
+/// This is Fig 4 (top): number of nodes in the initial core to embed.
+pub fn core_sizes(d: &CoreDecomposition) -> Vec<(u32, usize)> {
+    let shells = shell_histogram(d);
+    let mut out = Vec::new();
+    let mut cum: usize = d.core.len();
+    let mut prev_k = 0u32;
+    for &(k, n) in &shells {
+        // Nodes with core < k leave the k-core.
+        if k > 0 {
+            for kk in (prev_k + 1)..=k {
+                out.push((kk, cum));
+            }
+        }
+        cum -= n;
+        prev_k = k;
+    }
+    out
+}
+
+/// Is the k-core connected? Drives the Fig 5 (connected) vs Fig 6
+/// (disconnected) embedding-visualization scenarios.
+pub fn k_core_connected(g: &Graph, d: &CoreDecomposition, k: u32) -> bool {
+    let (sub, _) = k_core_subgraph(g, d, k);
+    sub.n_nodes() > 0 && connectivity::is_connected(&sub)
+}
+
+/// The largest k whose k-core is still connected (useful for picking the
+/// Fig 5 scenario automatically).
+pub fn max_connected_core(g: &Graph, d: &CoreDecomposition) -> u32 {
+    (1..=d.degeneracy)
+        .rev()
+        .find(|&k| k_core_connected(g, d, k))
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cores::decompose::core_decomposition;
+    use crate::graph::generators;
+
+    fn triangle_tail() -> (Graph, CoreDecomposition) {
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2), (0, 2), (2, 3), (3, 4)]);
+        let d = core_decomposition(&g);
+        (g, d)
+    }
+
+    #[test]
+    fn k_core_nodes_and_shells() {
+        let (_, d) = triangle_tail();
+        assert_eq!(k_core_nodes(&d, 2), vec![0, 1, 2]);
+        assert_eq!(k_core_nodes(&d, 1), vec![0, 1, 2, 3, 4]);
+        assert_eq!(shell_nodes(&d, 1), vec![3, 4]);
+        assert_eq!(shell_nodes(&d, 2), vec![0, 1, 2]);
+        assert!(shell_nodes(&d, 3).is_empty());
+    }
+
+    #[test]
+    fn subgraph_is_triangle() {
+        let (g, d) = triangle_tail();
+        let (sub, map) = k_core_subgraph(&g, &d, 2);
+        assert_eq!(sub.n_nodes(), 3);
+        assert_eq!(sub.n_edges(), 3);
+        assert_eq!(map, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn histogram_and_core_sizes() {
+        let (_, d) = triangle_tail();
+        assert_eq!(shell_histogram(&d), vec![(1, 2), (2, 3)]);
+        assert_eq!(core_sizes(&d), vec![(1, 5), (2, 3)]);
+    }
+
+    #[test]
+    fn core_sizes_skips_empty_shells_correctly() {
+        // K5 plus a pendant: shells are {1: 1 node, 4: 5 nodes}.
+        let mut edges = generators::complete(5).edges().collect::<Vec<_>>();
+        edges.push((0, 5));
+        let g = Graph::from_edges(6, &edges);
+        let d = core_decomposition(&g);
+        assert_eq!(d.degeneracy, 4);
+        // 2-core, 3-core and 4-core are all the K5.
+        assert_eq!(
+            core_sizes(&d),
+            vec![(1, 6), (2, 5), (3, 5), (4, 5)]
+        );
+    }
+
+    #[test]
+    fn connectivity_of_cores() {
+        // Two K4s joined by a 2-hop bridge through node 8: the bridge
+        // node has degree 2 so it peels out of the 3-core, leaving the
+        // 3-core = two disconnected K4s while the graph itself is
+        // connected — exactly the paper's Fig 6 scenario in miniature.
+        let mut edges = Vec::new();
+        for i in 0..4u32 {
+            for j in (i + 1)..4 {
+                edges.push((i, j));
+                edges.push((i + 4, j + 4));
+            }
+        }
+        edges.push((0, 8));
+        edges.push((8, 4));
+        let g = Graph::from_edges(9, &edges);
+        assert!(crate::graph::connectivity::is_connected(&g));
+        let d = core_decomposition(&g);
+        assert_eq!(d.degeneracy, 3);
+        assert!(!k_core_connected(&g, &d, 3));
+        assert!(k_core_connected(&g, &d, 1));
+        assert_eq!(max_connected_core(&g, &d), 2);
+    }
+}

@@ -1,0 +1,235 @@
+//! Batch building: stream skip-gram pairs into the `[S, B, 3+K]` i32
+//! super-batches the AOT-compiled SGNS step consumes, plus the linear
+//! learning-rate schedule.
+//!
+//! Layout per lane (matches python/compile/model.py):
+//!   `[valid, center, context, neg_1 .. neg_K]`
+//! Padding lanes have `valid = 0` and all ids 0 (they scatter zeros).
+
+use crate::util::rng::Rng;
+use crate::walks::{Corpus, PairStream};
+
+use super::sampler::NegativeSampler;
+
+/// Training hyper-parameters shared by the PJRT and native trainers.
+#[derive(Debug, Clone)]
+pub struct SgnsParams {
+    pub dim: usize,
+    pub window: usize,
+    pub negatives: usize,
+    pub lr0: f32,
+    pub lr_min: f32,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for SgnsParams {
+    fn default() -> Self {
+        SgnsParams {
+            dim: 128,   // paper uses 150; 128 is the TPU-tiled substitution
+            window: 4,  // paper default
+            negatives: 5,
+            lr0: 0.025, // word2vec default
+            lr_min: 1e-4,
+            epochs: 1,
+            seed: 0,
+        }
+    }
+}
+
+/// One super-batch ready for upload: `S*B*(3+K)` i32 + `S` f32 lrs.
+pub struct SuperBatch {
+    pub idx: Vec<i32>,
+    pub lr: Vec<f32>,
+    pub n_pairs: usize,
+}
+
+/// Streams pairs from a corpus into fixed-shape super-batches.
+pub struct BatchBuilder<'a> {
+    pairs: PairStream<'a>,
+    sampler: &'a NegativeSampler,
+    rng: Rng,
+    batch: usize,
+    scan: usize,
+    negatives: usize,
+    // lr schedule state
+    lr0: f32,
+    lr_min: f32,
+    total_pairs: u64,
+    emitted_pairs: u64,
+    neg_buf: Vec<u32>,
+}
+
+impl<'a> BatchBuilder<'a> {
+    /// `total_pairs` drives the linear lr decay; use
+    /// `corpus.exact_pair_count(window) * epochs` scaled by the dynamic
+    /// window expectation (~(w+1)/2w) or just the exact count — slight
+    /// over-estimates only make the decay end above `lr_min`, harmless.
+    pub fn new(
+        corpus: &'a Corpus,
+        sampler: &'a NegativeSampler,
+        params: &SgnsParams,
+        batch: usize,
+        scan: usize,
+        total_pairs: u64,
+        seed: u64,
+    ) -> Self {
+        BatchBuilder {
+            pairs: PairStream::new(corpus, params.window, Rng::new(seed ^ 0x9A1C)),
+            sampler,
+            rng: Rng::new(seed ^ 0x5EED),
+            batch,
+            scan,
+            negatives: params.negatives,
+            lr0: params.lr0,
+            lr_min: params.lr_min,
+            total_pairs: total_pairs.max(1),
+            emitted_pairs: 0,
+            neg_buf: Vec::with_capacity(params.negatives),
+        }
+    }
+
+    /// Jump the lr schedule to `pairs_done` already-processed pairs
+    /// (multi-epoch runs hand global progress to a fresh builder).
+    pub fn set_progress(&mut self, pairs_done: u64) {
+        self.emitted_pairs = pairs_done;
+    }
+
+    /// Current point in the linear lr schedule.
+    pub fn current_lr(&self) -> f32 {
+        let frac = self.emitted_pairs as f64 / self.total_pairs as f64;
+        let lr = self.lr0 as f64 * (1.0 - frac);
+        lr.max(self.lr_min as f64) as f32
+    }
+
+    /// Build the next super-batch, or None once the pair stream is dry.
+    /// The final batch is padded with invalid lanes.
+    pub fn next_super_batch(&mut self) -> Option<SuperBatch> {
+        let lane = 3 + self.negatives;
+        let mut idx = vec![0i32; self.scan * self.batch * lane];
+        let mut lr = vec![0f32; self.scan];
+        let mut n_pairs = 0usize;
+        for s in 0..self.scan {
+            lr[s] = self.current_lr();
+            for b in 0..self.batch {
+                match self.pairs.next() {
+                    Some((center, context)) => {
+                        self.sampler.sample_k(
+                            self.negatives,
+                            context,
+                            &mut self.rng,
+                            &mut self.neg_buf,
+                        );
+                        let base = (s * self.batch + b) * lane;
+                        idx[base] = 1;
+                        idx[base + 1] = center as i32;
+                        idx[base + 2] = context as i32;
+                        for (k, &ng) in self.neg_buf.iter().enumerate() {
+                            idx[base + 3 + k] = ng as i32;
+                        }
+                        n_pairs += 1;
+                        self.emitted_pairs += 1;
+                    }
+                    None => {
+                        // leave the lane zeroed: valid=0
+                    }
+                }
+            }
+        }
+        if n_pairs == 0 {
+            None
+        } else {
+            Some(SuperBatch { idx, lr, n_pairs })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::walks::Corpus;
+
+    fn tiny_corpus() -> Corpus {
+        let mut c = Corpus::new(6);
+        c.push_walk(&[0, 1, 2, 3, 4, 5]);
+        c.push_walk(&[5, 4, 3, 2, 1, 0]);
+        c
+    }
+
+    fn params() -> SgnsParams {
+        SgnsParams {
+            window: 2,
+            negatives: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn batches_have_layout_and_padding() {
+        let corpus = tiny_corpus();
+        let sampler = NegativeSampler::from_counts(&corpus.node_counts());
+        let p = params();
+        let total = corpus.exact_pair_count(p.window);
+        let mut bb = BatchBuilder::new(&corpus, &sampler, &p, 4, 2, total, 1);
+        let lane = 3 + p.negatives;
+        let mut pairs_seen = 0usize;
+        let mut saw_padding = false;
+        while let Some(sb) = bb.next_super_batch() {
+            assert_eq!(sb.idx.len(), 2 * 4 * lane);
+            assert_eq!(sb.lr.len(), 2);
+            for l in sb.idx.chunks_exact(lane) {
+                match l[0] {
+                    1 => {
+                        pairs_seen += 1;
+                        assert!((0..6).contains(&l[1]));
+                        assert!((0..6).contains(&l[2]));
+                        for &ng in &l[3..] {
+                            assert!((0..6).contains(&ng));
+                            assert_ne!(ng, l[2], "negative equals context");
+                        }
+                    }
+                    0 => {
+                        saw_padding = true;
+                        assert!(l.iter().all(|&x| x == 0));
+                    }
+                    v => panic!("bad valid flag {v}"),
+                }
+            }
+        }
+        assert!(pairs_seen > 0);
+        assert!(saw_padding, "expected a padded tail batch");
+        assert_eq!(pairs_seen, bb.emitted_pairs as usize);
+    }
+
+    #[test]
+    fn lr_decays_linearly_to_floor() {
+        let corpus = tiny_corpus();
+        let sampler = NegativeSampler::from_counts(&corpus.node_counts());
+        let p = params();
+        let total = corpus.exact_pair_count(p.window);
+        let mut bb = BatchBuilder::new(&corpus, &sampler, &p, 2, 1, total, 2);
+        let mut lrs = Vec::new();
+        while let Some(sb) = bb.next_super_batch() {
+            lrs.push(sb.lr[0]);
+        }
+        assert!(lrs.len() > 3);
+        assert!((lrs[0] - p.lr0).abs() < 1e-6);
+        assert!(lrs.windows(2).all(|w| w[1] <= w[0]), "{lrs:?}");
+        assert!(*lrs.last().unwrap() >= p.lr_min);
+    }
+
+    #[test]
+    fn exhausts_exact_pair_count_with_window_1() {
+        let corpus = tiny_corpus();
+        let sampler = NegativeSampler::from_counts(&corpus.node_counts());
+        let mut p = params();
+        p.window = 1;
+        let total = corpus.exact_pair_count(1);
+        let mut bb = BatchBuilder::new(&corpus, &sampler, &p, 3, 2, total, 3);
+        let mut n = 0u64;
+        while let Some(sb) = bb.next_super_batch() {
+            n += sb.n_pairs as u64;
+        }
+        assert_eq!(n, total);
+    }
+}

@@ -1,0 +1,154 @@
+//! Embedding matrix: row-major `n x dim` f32 storage with word2vec-style
+//! initialization and the vector ops evaluation needs.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major embedding matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Embedding {
+    data: Vec<f32>,
+    n: usize,
+    dim: usize,
+}
+
+impl Embedding {
+    pub fn zeros(n: usize, dim: usize) -> Embedding {
+        Embedding {
+            data: vec![0f32; n * dim],
+            n,
+            dim,
+        }
+    }
+
+    /// word2vec W_in init: uniform in (-0.5/dim, 0.5/dim).
+    pub fn word2vec_init(n: usize, dim: usize, rng: &mut Rng) -> Embedding {
+        let scale = 1.0 / dim as f32;
+        let data = (0..n * dim)
+            .map(|_| (rng.gen_f32() - 0.5) * scale)
+            .collect();
+        Embedding { data, n, dim }
+    }
+
+    pub fn from_data(data: Vec<f32>, n: usize, dim: usize) -> Embedding {
+        assert_eq!(data.len(), n * dim);
+        Embedding { data, n, dim }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, v: u32) -> &[f32] {
+        &self.data[v as usize * self.dim..(v as usize + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, v: u32) -> &mut [f32] {
+        &mut self.data[v as usize * self.dim..(v as usize + 1) * self.dim]
+    }
+
+    pub fn set_row(&mut self, v: u32, values: &[f32]) {
+        assert_eq!(values.len(), self.dim);
+        self.row_mut(v).copy_from_slice(values);
+    }
+
+    pub fn dot(&self, a: u32, b: u32) -> f32 {
+        dot(self.row(a), self.row(b))
+    }
+
+    pub fn cosine(&self, a: u32, b: u32) -> f32 {
+        let (ra, rb) = (self.row(a), self.row(b));
+        let na = dot(ra, ra).sqrt();
+        let nb = dot(rb, rb).sqrt();
+        if na == 0.0 || nb == 0.0 {
+            0.0
+        } else {
+            dot(ra, rb) / (na * nb)
+        }
+    }
+
+    /// Top-`k` nearest rows to `v` by cosine (excluding `v`).
+    pub fn nearest(&self, v: u32, k: usize) -> Vec<(u32, f32)> {
+        let mut scored: Vec<(u32, f32)> = (0..self.n as u32)
+            .filter(|&u| u != v)
+            .map(|u| (u, self.cosine(v, u)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.truncate(k);
+        scored
+    }
+
+    /// Gather a sub-embedding by row ids (`new row i = old row ids[i]`).
+    pub fn gather(&self, ids: &[u32]) -> Embedding {
+        let mut out = Embedding::zeros(ids.len(), self.dim);
+        for (i, &v) in ids.iter().enumerate() {
+            out.set_row(i as u32, self.row(v));
+        }
+        out
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_range() {
+        let mut rng = Rng::new(1);
+        let e = Embedding::word2vec_init(100, 16, &mut rng);
+        assert!(e.data().iter().all(|&x| x.abs() <= 0.5 / 16.0));
+        // Not all zero.
+        assert!(e.data().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn rows_and_ops() {
+        let mut e = Embedding::zeros(3, 2);
+        e.set_row(0, &[3.0, 4.0]);
+        e.set_row(1, &[3.0, 4.0]);
+        e.set_row(2, &[-4.0, 3.0]);
+        assert_eq!(e.dot(0, 1), 25.0);
+        assert!((e.cosine(0, 1) - 1.0).abs() < 1e-6);
+        assert!(e.cosine(0, 2).abs() < 1e-6);
+        let nn = e.nearest(0, 1);
+        assert_eq!(nn[0].0, 1);
+    }
+
+    #[test]
+    fn cosine_zero_vector_defined() {
+        let mut e = Embedding::zeros(2, 2);
+        e.set_row(0, &[1.0, 0.0]);
+        assert_eq!(e.cosine(0, 1), 0.0);
+    }
+
+    #[test]
+    fn gather_picks_rows() {
+        let mut e = Embedding::zeros(4, 2);
+        for v in 0..4u32 {
+            e.set_row(v, &[v as f32, v as f32]);
+        }
+        let g = e.gather(&[2, 0]);
+        assert_eq!(g.n(), 2);
+        assert_eq!(g.row(0), &[2.0, 2.0]);
+        assert_eq!(g.row(1), &[0.0, 0.0]);
+    }
+}

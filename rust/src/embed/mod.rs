@@ -1,0 +1,12 @@
+//! SkipGram-negative-sampling embedding: matrix storage, negative
+//! sampling, batch building, the PJRT-backed trainer (the hot path) and
+//! the pure-rust cross-check trainer.
+
+pub mod batches;
+pub mod matrix;
+pub mod native;
+pub mod sampler;
+pub mod trainer;
+
+pub use batches::SgnsParams;
+pub use matrix::Embedding;

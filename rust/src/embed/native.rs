@@ -1,0 +1,459 @@
+//! Pure-rust SGNS trainer.
+//!
+//! Role in the repo: (a) the cross-check oracle for the PJRT trainer
+//! (same math, same sampling — embeddings must reach comparable link-
+//! prediction F1); (b) the word2vec-style CPU baseline the paper's
+//! DeepWalk timings correspond to; (c) a fallback when artifacts are
+//! absent. Uses word2vec's precomputed sigmoid table for speed.
+
+use crate::util::rng::Rng;
+use crate::walks::{Corpus, PairStream};
+
+use super::batches::SgnsParams;
+use super::matrix::Embedding;
+use super::sampler::NegativeSampler;
+
+const EXP_TABLE_SIZE: usize = 1024;
+const MAX_EXP: f32 = 6.0;
+
+/// Precomputed sigmoid lookup (word2vec trick): sigma(x) for x in
+/// [-MAX_EXP, MAX_EXP], saturated outside.
+struct SigmoidTable {
+    table: Vec<f32>,
+}
+
+impl SigmoidTable {
+    fn new() -> Self {
+        let table = (0..EXP_TABLE_SIZE)
+            .map(|i| {
+                let x = (i as f32 / EXP_TABLE_SIZE as f32 * 2.0 - 1.0) * MAX_EXP;
+                1.0 / (1.0 + (-x).exp())
+            })
+            .collect();
+        SigmoidTable { table }
+    }
+
+    #[inline]
+    fn get(&self, x: f32) -> f32 {
+        if x >= MAX_EXP {
+            1.0
+        } else if x <= -MAX_EXP {
+            0.0
+        } else {
+            let i = ((x / MAX_EXP + 1.0) * 0.5 * EXP_TABLE_SIZE as f32) as usize;
+            self.table[i.min(EXP_TABLE_SIZE - 1)]
+        }
+    }
+}
+
+/// Result of a native training run.
+pub struct NativeTrainResult {
+    pub w_in: Embedding,
+    pub w_out: Embedding,
+    pub mean_loss: f64,
+    pub n_pairs: u64,
+}
+
+/// Train SGNS over the corpus with the exact semantics of the L2 step
+/// (per-pair SGD, linear lr decay, unigram^0.75 negatives, context
+/// excluded from its own negatives).
+pub fn train_native(
+    corpus: &Corpus,
+    n_nodes: usize,
+    params: &SgnsParams,
+) -> NativeTrainResult {
+    let mut rng = Rng::new(params.seed);
+    let mut w_in = Embedding::word2vec_init(n_nodes, params.dim, &mut rng);
+    let mut w_out = Embedding::zeros(n_nodes, params.dim);
+    let sampler = NegativeSampler::from_counts(&corpus.node_counts());
+    let sig = SigmoidTable::new();
+
+    let total_pairs = corpus.exact_pair_count(params.window) * params.epochs as u64;
+    let mut emitted = 0u64;
+    let mut loss_sum = 0f64;
+    let dim = params.dim;
+    let mut neg_buf: Vec<u32> = Vec::with_capacity(params.negatives);
+    let mut grad_h = vec![0f32; dim];
+
+    for epoch in 0..params.epochs {
+        let pair_rng = Rng::new(params.seed ^ (0x9A1C + epoch as u64));
+        let mut neg_rng = Rng::new(params.seed ^ (0x5EED + epoch as u64));
+        for (center, context) in PairStream::new(corpus, params.window, pair_rng) {
+            let frac = emitted as f64 / total_pairs.max(1) as f64;
+            let lr = ((params.lr0 as f64 * (1.0 - frac)).max(params.lr_min as f64)) as f32;
+            sampler.sample_k(params.negatives, context, &mut neg_rng, &mut neg_buf);
+
+            grad_h.iter_mut().for_each(|x| *x = 0.0);
+            let h = w_in.row(center);
+
+            // Positive pair.
+            let pos = dot_rows(h, w_out.row(context));
+            let s_pos = sig.get(pos);
+            let g_pos = s_pos - 1.0;
+            loss_sum += -ln_sigmoid(pos) as f64;
+            accumulate(&mut grad_h, w_out.row(context), g_pos);
+            axpy(w_out.row_mut(context), h, -lr * g_pos);
+
+            // Negatives.
+            for &ng in &neg_buf {
+                let neg = dot_rows(h, w_out.row(ng));
+                let s_neg = sig.get(neg);
+                loss_sum += -ln_sigmoid(-neg) as f64;
+                accumulate(&mut grad_h, w_out.row(ng), s_neg);
+                axpy(w_out.row_mut(ng), h, -lr * s_neg);
+            }
+            axpy(w_in.row_mut(center), &grad_h, -lr);
+            emitted += 1;
+        }
+    }
+    NativeTrainResult {
+        w_in,
+        w_out,
+        mean_loss: if emitted == 0 {
+            0.0
+        } else {
+            loss_sum / emitted as f64
+        },
+        n_pairs: emitted,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hogwild-parallel trainer (§Perf): the word2vec trick, made sound in
+// rust with relaxed AtomicU32 loads/stores (bit-cast f32). Racy lost
+// updates are part of hogwild's contract (SGD tolerates them); results
+// are non-deterministic across runs, so the serial `train_native`
+// remains the cross-check oracle.
+//
+// Measured on this testbed (EXPERIMENTS.md §Perf): the container exposes
+// ONE cpu core, so threads > 1 only adds overhead (atomic element ops
+// also defeat SIMD: ~1.5x slower per op than the serial slice path).
+// `threads = 1` therefore routes to the serial trainer, and the pipeline
+// default (`pool::default_threads()` = available_parallelism = 1 here)
+// picks the fast path automatically; the hogwild path exists for
+// multi-core deployments.
+// ---------------------------------------------------------------------------
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering::Relaxed};
+
+#[inline]
+fn at_load(a: &AtomicU32) -> f32 {
+    f32::from_bits(a.load(Relaxed))
+}
+
+#[inline]
+fn at_store(a: &AtomicU32, v: f32) {
+    a.store(v.to_bits(), Relaxed)
+}
+
+/// Train SGNS over the corpus with `threads` hogwild workers. Same
+/// objective/sampling as [`train_native`]; walk ranges are partitioned
+/// across workers, the lr schedule advances on a shared pair counter.
+pub fn train_native_parallel(
+    corpus: &Corpus,
+    n_nodes: usize,
+    params: &SgnsParams,
+    threads: usize,
+) -> NativeTrainResult {
+    let threads = threads.max(1);
+    if threads == 1 {
+        return train_native(corpus, n_nodes, params);
+    }
+    let dim = params.dim;
+    let mut seed_rng = Rng::new(params.seed);
+    let init = Embedding::word2vec_init(n_nodes, dim, &mut seed_rng);
+    let w_in: Vec<AtomicU32> = init.data().iter().map(|x| AtomicU32::new(x.to_bits())).collect();
+    let w_out: Vec<AtomicU32> = (0..n_nodes * dim).map(|_| AtomicU32::new(0)).collect();
+    let sampler = NegativeSampler::from_counts(&corpus.node_counts());
+    let total_pairs = (corpus.exact_pair_count(params.window) * params.epochs as u64).max(1);
+    let global_pairs = AtomicU64::new(0);
+
+    let worker_rngs: Vec<Rng> = (0..threads).map(|i| Rng::new(params.seed ^ (0xBEEF + i as u64))).collect();
+    let results: Vec<(f64, u64)> = crate::util::pool::parallel_chunks(
+        corpus.n_walks(),
+        threads,
+        |ci, walk_range| {
+            let sig = SigmoidTable::new();
+            let mut rng = worker_rngs[ci].clone();
+            let mut neg_buf: Vec<u32> = Vec::with_capacity(params.negatives);
+            let mut grad_h = vec![0f32; dim];
+            let mut h_snap = vec![0f32; dim];
+            let mut loss_sum = 0f64;
+            let mut local_pairs = 0u64;
+            let mut lr = params.lr0;
+            for _epoch in 0..params.epochs {
+                for wi in walk_range.clone() {
+                    let walk = corpus.walk(wi);
+                    for c_pos in 0..walk.len() {
+                        let radius = 1 + rng.gen_index(params.window);
+                        let lo = c_pos.saturating_sub(radius);
+                        let hi = (c_pos + radius).min(walk.len() - 1);
+                        for t_pos in lo..=hi {
+                            if t_pos == c_pos {
+                                continue;
+                            }
+                            let center = walk[c_pos] as usize;
+                            let context = walk[t_pos] as usize;
+                            // Refresh lr from the shared counter every 4096
+                            // local pairs (keeps the contended RMW rare).
+                            if local_pairs % 4096 == 0 {
+                                let done = global_pairs.fetch_add(4096, Relaxed);
+                                let frac = done as f64 / total_pairs as f64;
+                                lr = ((params.lr0 as f64 * (1.0 - frac))
+                                    .max(params.lr_min as f64))
+                                    as f32;
+                            }
+                            sampler.sample_k(
+                                params.negatives,
+                                context as u32,
+                                &mut rng,
+                                &mut neg_buf,
+                            );
+                            let h_row = &w_in[center * dim..(center + 1) * dim];
+                            for (s, a) in h_snap.iter_mut().zip(h_row) {
+                                *s = at_load(a);
+                            }
+                            grad_h.iter_mut().for_each(|x| *x = 0.0);
+                            // Positive.
+                            let c_row = &w_out[context * dim..(context + 1) * dim];
+                            let mut pos = 0f32;
+                            for (hs, ca) in h_snap.iter().zip(c_row) {
+                                pos += hs * at_load(ca);
+                            }
+                            let g_pos = sig.get(pos) - 1.0;
+                            loss_sum += -ln_sigmoid(pos) as f64;
+                            for ((gh, ca), hs) in
+                                grad_h.iter_mut().zip(c_row).zip(&h_snap)
+                            {
+                                *gh += g_pos * at_load(ca);
+                                at_store(ca, at_load(ca) - lr * g_pos * hs);
+                            }
+                            // Negatives.
+                            for &ng in &neg_buf {
+                                let n_row =
+                                    &w_out[ng as usize * dim..(ng as usize + 1) * dim];
+                                let mut neg = 0f32;
+                                for (hs, na) in h_snap.iter().zip(n_row) {
+                                    neg += hs * at_load(na);
+                                }
+                                let s_neg = sig.get(neg);
+                                loss_sum += -ln_sigmoid(-neg) as f64;
+                                for ((gh, na), hs) in
+                                    grad_h.iter_mut().zip(n_row).zip(&h_snap)
+                                {
+                                    *gh += s_neg * at_load(na);
+                                    at_store(na, at_load(na) - lr * s_neg * hs);
+                                }
+                            }
+                            for (ha, gh) in h_row.iter().zip(&grad_h) {
+                                at_store(ha, at_load(ha) - lr * gh);
+                            }
+                            local_pairs += 1;
+                        }
+                    }
+                }
+            }
+            (loss_sum, local_pairs)
+        },
+    );
+
+    let (loss_sum, n_pairs) = results
+        .into_iter()
+        .fold((0f64, 0u64), |(l, n), (dl, dn)| (l + dl, n + dn));
+    let to_emb = |ws: Vec<AtomicU32>| -> Embedding {
+        Embedding::from_data(
+            ws.into_iter().map(|a| f32::from_bits(a.into_inner())).collect(),
+            n_nodes,
+            dim,
+        )
+    };
+    NativeTrainResult {
+        w_in: to_emb(w_in),
+        w_out: to_emb(w_out),
+        mean_loss: if n_pairs == 0 {
+            0.0
+        } else {
+            loss_sum / n_pairs as f64
+        },
+        n_pairs,
+    }
+}
+
+#[inline]
+fn dot_rows(a: &[f32], b: &[f32]) -> f32 {
+    super::matrix::dot(a, b)
+}
+
+/// `acc += scale * row`
+#[inline]
+fn accumulate(acc: &mut [f32], row: &[f32], scale: f32) {
+    for (a, &r) in acc.iter_mut().zip(row) {
+        *a += scale * r;
+    }
+}
+
+/// `row += scale * delta`  (delta must not alias row)
+#[inline]
+fn axpy(row: &mut [f32], delta: &[f32], scale: f32) {
+    for (r, &d) in row.iter_mut().zip(delta) {
+        *r += scale * d;
+    }
+}
+
+#[inline]
+fn ln_sigmoid(x: f32) -> f32 {
+    // stable: min(x,0) - ln(1 + e^{-|x|})
+    x.min(0.0) - (-x.abs()).exp().ln_1p()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::walks::{generate_walks, WalkParams, WalkSchedule};
+
+    fn small_params(dim: usize) -> SgnsParams {
+        SgnsParams {
+            dim,
+            window: 3,
+            negatives: 5,
+            lr0: 0.05,
+            lr_min: 1e-4,
+            epochs: 2,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn training_learns_ring_structure() {
+        // On a ring, adjacent nodes should end up more similar than
+        // antipodal ones.
+        let n = 24;
+        let g = generators::ring(n);
+        let corpus = generate_walks(
+            &g,
+            &WalkSchedule::uniform(n, 20),
+            &WalkParams {
+                walk_length: 12,
+                seed: 1,
+                threads: 2,
+            },
+        );
+        let r = train_native(&corpus, n, &small_params(16));
+        assert!(r.n_pairs > 1000);
+        let mut adj_sim = 0f64;
+        let mut far_sim = 0f64;
+        for v in 0..n as u32 {
+            adj_sim += r.w_in.cosine(v, (v + 1) % n as u32) as f64;
+            far_sim += r.w_in.cosine(v, (v + n as u32 / 2) % n as u32) as f64;
+        }
+        adj_sim /= n as f64;
+        far_sim /= n as f64;
+        assert!(
+            adj_sim > far_sim + 0.2,
+            "adjacent {adj_sim} vs antipodal {far_sim}"
+        );
+    }
+
+    #[test]
+    fn loss_reasonable_and_finite() {
+        let g = generators::holme_kim(60, 2, 0.3, &mut Rng::new(2));
+        let corpus = generate_walks(
+            &g,
+            &WalkSchedule::uniform(60, 5),
+            &WalkParams {
+                walk_length: 10,
+                seed: 2,
+                threads: 2,
+            },
+        );
+        let r = train_native(&corpus, 60, &small_params(8));
+        assert!(r.mean_loss.is_finite());
+        // Untrained loss is (1+K)*ln2 ~ 4.16; training should beat it.
+        assert!(r.mean_loss < 4.16, "mean loss {}", r.mean_loss);
+        assert!(r.mean_loss > 0.0);
+    }
+
+    #[test]
+    fn sigmoid_table_accuracy() {
+        let sig = SigmoidTable::new();
+        for &x in &[-5.9f32, -2.0, -0.5, 0.0, 0.5, 2.0, 5.9] {
+            let exact = 1.0 / (1.0 + (-x).exp());
+            assert!(
+                (sig.get(x) - exact).abs() < 0.01,
+                "x={x}: {} vs {exact}",
+                sig.get(x)
+            );
+        }
+        assert_eq!(sig.get(100.0), 1.0);
+        assert_eq!(sig.get(-100.0), 0.0);
+    }
+
+    #[test]
+    fn parallel_matches_serial_quality() {
+        let n = 24;
+        let g = generators::ring(n);
+        let corpus = generate_walks(
+            &g,
+            &WalkSchedule::uniform(n, 20),
+            &WalkParams {
+                walk_length: 12,
+                seed: 1,
+                threads: 2,
+            },
+        );
+        let serial = train_native(&corpus, n, &small_params(16));
+        let par = train_native_parallel(&corpus, n, &small_params(16), 4);
+        // Similar pair throughput (same dynamic-window distribution).
+        let ratio = par.n_pairs as f64 / serial.n_pairs as f64;
+        assert!((0.8..1.2).contains(&ratio), "pair ratio {ratio}");
+        assert!(par.mean_loss.is_finite() && par.mean_loss < 4.16);
+        // Learns the same ring structure.
+        let (mut adj, mut far) = (0f64, 0f64);
+        for v in 0..n as u32 {
+            adj += par.w_in.cosine(v, (v + 1) % n as u32) as f64;
+            far += par.w_in.cosine(v, (v + n as u32 / 2) % n as u32) as f64;
+        }
+        assert!(
+            adj / n as f64 > far / n as f64 + 0.2,
+            "adjacent {} vs antipodal {}",
+            adj / n as f64,
+            far / n as f64
+        );
+    }
+
+    #[test]
+    fn parallel_single_thread_is_serial() {
+        let g = generators::ring(12);
+        let corpus = generate_walks(
+            &g,
+            &WalkSchedule::uniform(12, 3),
+            &WalkParams {
+                walk_length: 6,
+                seed: 3,
+                threads: 1,
+            },
+        );
+        let a = train_native(&corpus, 12, &small_params(8));
+        let b = train_native_parallel(&corpus, 12, &small_params(8), 1);
+        assert_eq!(a.w_in, b.w_in);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = generators::ring(12);
+        let corpus = generate_walks(
+            &g,
+            &WalkSchedule::uniform(12, 3),
+            &WalkParams {
+                walk_length: 6,
+                seed: 3,
+                threads: 1,
+            },
+        );
+        let a = train_native(&corpus, 12, &small_params(8));
+        let b = train_native(&corpus, 12, &small_params(8));
+        assert_eq!(a.w_in, b.w_in);
+        assert_eq!(a.n_pairs, b.n_pairs);
+    }
+}

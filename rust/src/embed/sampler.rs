@@ -1,0 +1,81 @@
+//! Negative sampling for SGNS: word2vec's unigram^0.75 distribution over
+//! corpus token counts, backed by the O(1) alias table.
+
+use crate::util::alias::AliasTable;
+use crate::util::rng::Rng;
+
+/// Draws negative node ids. Nodes absent from the corpus get weight 0
+/// and are never drawn.
+#[derive(Clone, Debug)]
+pub struct NegativeSampler {
+    table: AliasTable,
+}
+
+impl NegativeSampler {
+    /// Standard word2vec setting: weights = count^0.75.
+    pub fn from_counts(counts: &[u64]) -> NegativeSampler {
+        assert!(
+            counts.iter().any(|&c| c > 0),
+            "corpus has no tokens to sample negatives from"
+        );
+        NegativeSampler {
+            table: AliasTable::unigram(counts, 0.75),
+        }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        self.table.sample(rng)
+    }
+
+    /// Fill `out` with `k` negatives, rejecting the positive context
+    /// (word2vec keeps accidental collisions with the *center*; we follow
+    /// that and only exclude the context node).
+    #[inline]
+    pub fn sample_k(&self, k: usize, exclude: u32, rng: &mut Rng, out: &mut Vec<u32>) {
+        out.clear();
+        while out.len() < k {
+            let s = self.table.sample(rng);
+            if s != exclude {
+                out.push(s);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_unigram_power() {
+        // counts c and c*16: with alpha=.75 the ratio of draws is 16^.75=8.
+        let counts = vec![16u64, 256, 0];
+        let s = NegativeSampler::from_counts(&counts);
+        let mut rng = Rng::new(1);
+        let mut hist = [0u64; 3];
+        for _ in 0..90_000 {
+            hist[s.sample(&mut rng) as usize] += 1;
+        }
+        assert_eq!(hist[2], 0);
+        let ratio = hist[1] as f64 / hist[0] as f64;
+        assert!((ratio - 8.0).abs() < 0.6, "ratio {ratio}");
+    }
+
+    #[test]
+    fn sample_k_excludes_context() {
+        let counts = vec![10u64, 10];
+        let s = NegativeSampler::from_counts(&counts);
+        let mut rng = Rng::new(2);
+        let mut out = Vec::new();
+        s.sample_k(50, 1, &mut rng, &mut out);
+        assert_eq!(out.len(), 50);
+        assert!(out.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "no tokens")]
+    fn rejects_empty_corpus() {
+        NegativeSampler::from_counts(&[0, 0]);
+    }
+}

@@ -1,0 +1,120 @@
+//! The PJRT-backed SGNS trainer — the request-path hot loop.
+//!
+//! Orchestration: stream skip-gram pairs from the corpus into
+//! `[S, B, 3+K]` super-batches ([`super::batches::BatchBuilder`]), upload
+//! each batch, and chain the device-resident state through the
+//! AOT-compiled step ([`crate::runtime::SgnsSession`]). Loss is polled
+//! from the on-device stats row at a configurable cadence.
+
+use anyhow::Result;
+
+use crate::runtime::{Manifest, Runtime};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+use crate::walks::Corpus;
+
+use super::batches::{BatchBuilder, SgnsParams};
+use super::matrix::Embedding;
+use super::sampler::NegativeSampler;
+
+/// A (pairs processed, mean loss) sample of the training trajectory.
+#[derive(Debug, Clone, Copy)]
+pub struct LossPoint {
+    pub pairs: u64,
+    pub mean_loss: f64,
+}
+
+/// Result of a PJRT training run.
+pub struct PjrtTrainResult {
+    pub w_in: Embedding,
+    pub w_out: Embedding,
+    pub loss_curve: Vec<LossPoint>,
+    pub n_pairs: u64,
+    pub n_dispatches: u64,
+    pub train_secs: f64,
+}
+
+/// Train SGNS on the PJRT device. `loss_every` = poll the stats row every
+/// that many dispatches (0 = only at the end; each poll downloads the
+/// full state, so keep it sparse on big vocabularies).
+pub fn train_pjrt(
+    runtime: &Runtime,
+    manifest: &Manifest,
+    corpus: &Corpus,
+    n_nodes: usize,
+    params: &SgnsParams,
+    loss_every: u64,
+) -> Result<PjrtTrainResult> {
+    let meta = manifest.select_sgns(n_nodes)?.clone();
+    assert_eq!(
+        meta.dim, params.dim,
+        "artifact dim {} != requested dim {}",
+        meta.dim, params.dim
+    );
+    assert_eq!(
+        meta.negatives, params.negatives,
+        "artifact negatives {} != requested {}",
+        meta.negatives, params.negatives
+    );
+    let mut session = runtime.sgns_session(manifest, &meta)?;
+
+    // word2vec-style init, uploaded once.
+    let mut rng = Rng::new(params.seed);
+    let w_in0 = Embedding::word2vec_init(n_nodes, params.dim, &mut rng);
+    let w_out0 = Embedding::zeros(n_nodes, params.dim);
+    session.start(n_nodes, w_in0.data(), w_out0.data())?;
+
+    let sampler = NegativeSampler::from_counts(&corpus.node_counts());
+    let total_pairs = corpus.exact_pair_count(params.window) * params.epochs as u64;
+
+    let watch = Stopwatch::start();
+    let mut loss_curve = Vec::new();
+    let mut n_pairs = 0u64;
+    let mut last_loss_sum = 0f64;
+    let mut last_loss_cnt = 0f64;
+    for epoch in 0..params.epochs {
+        let mut bb = BatchBuilder::new(
+            corpus,
+            &sampler,
+            params,
+            meta.batch,
+            meta.scan_steps,
+            total_pairs,
+            params.seed ^ (epoch as u64) << 32,
+        );
+        // BatchBuilder restarts its lr schedule per instance; feed it the
+        // global progress so multi-epoch decay is continuous.
+        bb.set_progress(n_pairs);
+        while let Some(sb) = bb.next_super_batch() {
+            session.step(&sb.idx, &sb.lr)?;
+            n_pairs += sb.n_pairs as u64;
+            if loss_every > 0 && session.steps_run() % loss_every == 0 {
+                let (_, _, loss_sum, cnt) = session.read_state(0)?;
+                let (dl, dc) = (loss_sum - last_loss_sum, cnt - last_loss_cnt);
+                if dc > 0.0 {
+                    loss_curve.push(LossPoint {
+                        pairs: n_pairs,
+                        mean_loss: dl / dc,
+                    });
+                }
+                last_loss_sum = loss_sum;
+                last_loss_cnt = cnt;
+            }
+        }
+    }
+    let (w_in, w_out, loss_sum, cnt) = session.read_state(n_nodes)?;
+    if cnt > last_loss_cnt {
+        loss_curve.push(LossPoint {
+            pairs: n_pairs,
+            mean_loss: (loss_sum - last_loss_sum) / (cnt - last_loss_cnt),
+        });
+    }
+    Ok(PjrtTrainResult {
+        w_in: Embedding::from_data(w_in, n_nodes, params.dim),
+        w_out: Embedding::from_data(w_out, n_nodes, params.dim),
+        loss_curve,
+        n_pairs,
+        n_dispatches: session.steps_run(),
+        train_secs: watch.elapsed_secs(),
+    })
+}

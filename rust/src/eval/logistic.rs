@@ -1,0 +1,207 @@
+//! Binary logistic regression with L2 regularization, trained by
+//! mini-batch SGD with momentum over standardized features — the paper's
+//! downstream classifier for link prediction (§1.2.2, §3.1.2).
+
+use crate::util::rng::Rng;
+
+/// Training hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct LogRegParams {
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub l2: f64,
+    pub seed: u64,
+}
+
+impl Default for LogRegParams {
+    fn default() -> Self {
+        LogRegParams {
+            epochs: 60,
+            batch: 64,
+            lr: 0.1,
+            momentum: 0.9,
+            l2: 1e-4,
+            seed: 0,
+        }
+    }
+}
+
+/// Fitted model: standardization + linear weights.
+#[derive(Debug, Clone)]
+pub struct LogisticRegression {
+    pub w: Vec<f64>,
+    pub b: f64,
+    mean: Vec<f64>,
+    std: Vec<f64>,
+}
+
+impl LogisticRegression {
+    /// Fit on row-major `x` (`n x d`) with boolean labels.
+    pub fn fit(x: &[f32], y: &[bool], d: usize, params: &LogRegParams) -> LogisticRegression {
+        let n = y.len();
+        assert_eq!(x.len(), n * d);
+        assert!(n > 0);
+        // Standardize.
+        let mut mean = vec![0f64; d];
+        for row in x.chunks_exact(d) {
+            for (m, &v) in mean.iter_mut().zip(row) {
+                *m += v as f64;
+            }
+        }
+        mean.iter_mut().for_each(|m| *m /= n as f64);
+        let mut std = vec![0f64; d];
+        for row in x.chunks_exact(d) {
+            for (s, (&v, &m)) in std.iter_mut().zip(row.iter().zip(&mean)) {
+                let dvi = v as f64 - m;
+                *s += dvi * dvi;
+            }
+        }
+        std.iter_mut()
+            .for_each(|s| *s = (*s / n as f64).sqrt().max(1e-9));
+
+        let mut w = vec![0f64; d];
+        let mut b = 0f64;
+        let mut vw = vec![0f64; d];
+        let mut vb = 0f64;
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(params.seed);
+        let mut xi = vec![0f64; d];
+        for _epoch in 0..params.epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(params.batch) {
+                let mut gw = vec![0f64; d];
+                let mut gb = 0f64;
+                for &i in chunk {
+                    for (j, &v) in x[i * d..(i + 1) * d].iter().enumerate() {
+                        xi[j] = (v as f64 - mean[j]) / std[j];
+                    }
+                    let z: f64 = w.iter().zip(&xi).map(|(&a, &b)| a * b).sum::<f64>() + b;
+                    let p = sigmoid(z);
+                    let g = p - if y[i] { 1.0 } else { 0.0 };
+                    for (gwj, &xij) in gw.iter_mut().zip(&xi) {
+                        *gwj += g * xij;
+                    }
+                    gb += g;
+                }
+                let inv = 1.0 / chunk.len() as f64;
+                for j in 0..d {
+                    let grad = gw[j] * inv + params.l2 * w[j];
+                    vw[j] = params.momentum * vw[j] - params.lr * grad;
+                    w[j] += vw[j];
+                }
+                vb = params.momentum * vb - params.lr * gb * inv;
+                b += vb;
+            }
+        }
+        LogisticRegression { w, b, mean, std }
+    }
+
+    /// P(y = 1 | x) for one row.
+    pub fn predict_proba(&self, row: &[f32]) -> f64 {
+        let z: f64 = self
+            .w
+            .iter()
+            .zip(row.iter().zip(self.mean.iter().zip(&self.std)))
+            .map(|(&w, (&x, (&m, &s)))| w * (x as f64 - m) / s)
+            .sum::<f64>()
+            + self.b;
+        sigmoid(z)
+    }
+
+    pub fn predict(&self, row: &[f32]) -> bool {
+        self.predict_proba(row) >= 0.5
+    }
+
+    /// Batch helpers over row-major data.
+    pub fn predict_all(&self, x: &[f32], d: usize) -> Vec<bool> {
+        x.chunks_exact(d).map(|r| self.predict(r)).collect()
+    }
+
+    pub fn predict_proba_all(&self, x: &[f32], d: usize) -> Vec<f64> {
+        x.chunks_exact(d).map(|r| self.predict_proba(r)).collect()
+    }
+}
+
+#[inline]
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::metrics::Confusion;
+
+    fn gaussian_blobs(n: usize, d: usize, sep: f64, seed: u64) -> (Vec<f32>, Vec<bool>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let pos = i % 2 == 0;
+            for j in 0..d {
+                let c = if pos && j < 2 { sep } else { 0.0 };
+                x.push((rng.gen_normal() + c) as f32);
+            }
+            y.push(pos);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn separable_blobs_high_accuracy() {
+        let (x, y) = gaussian_blobs(600, 8, 3.0, 1);
+        let m = LogisticRegression::fit(&x, &y, 8, &LogRegParams::default());
+        let preds = m.predict_all(&x, 8);
+        let acc = Confusion::from_predictions(&y, &preds).accuracy();
+        assert!(acc > 0.97, "accuracy {acc}");
+    }
+
+    #[test]
+    fn overlapping_blobs_reasonable() {
+        let (x, y) = gaussian_blobs(800, 4, 1.0, 2);
+        let m = LogisticRegression::fit(&x, &y, 4, &LogRegParams::default());
+        let preds = m.predict_all(&x, 4);
+        let acc = Confusion::from_predictions(&y, &preds).accuracy();
+        assert!(acc > 0.70, "accuracy {acc}");
+    }
+
+    #[test]
+    fn probabilities_calibrated_shape() {
+        let (x, y) = gaussian_blobs(400, 4, 2.0, 3);
+        let m = LogisticRegression::fit(&x, &y, 4, &LogRegParams::default());
+        for p in m.predict_proba_all(&x, 4) {
+            assert!((0.0..=1.0).contains(&p));
+        }
+        // AUC must be high on separable data.
+        let probs = m.predict_proba_all(&x, 4);
+        let auc = crate::eval::metrics::roc_auc(&y, &probs);
+        assert!(auc > 0.95, "auc {auc}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = gaussian_blobs(200, 4, 2.0, 4);
+        let p = LogRegParams::default();
+        let a = LogisticRegression::fit(&x, &y, 4, &p);
+        let b = LogisticRegression::fit(&x, &y, 4, &p);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.b, b.b);
+    }
+
+    #[test]
+    fn constant_feature_does_not_nan() {
+        // One feature constant: std clamps, weights stay finite.
+        let x = vec![1.0f32, 0.0, 1.0, 1.0, 1.0, 0.5, 1.0, 0.9];
+        let y = vec![false, false, true, true];
+        let m = LogisticRegression::fit(&x, &y, 2, &LogRegParams::default());
+        assert!(m.w.iter().all(|w| w.is_finite()));
+        assert!(m.predict_proba(&[1.0, 0.7]).is_finite());
+    }
+}

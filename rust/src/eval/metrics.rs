@@ -1,0 +1,169 @@
+//! Classification metrics: precision / recall / F1 (the paper's quality
+//! measure, eq. 8), accuracy and ROC-AUC.
+
+/// Binary confusion counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    /// Tally from (label, prediction) pairs.
+    pub fn from_predictions(labels: &[bool], preds: &[bool]) -> Confusion {
+        assert_eq!(labels.len(), preds.len());
+        let mut c = Confusion::default();
+        for (&y, &p) in labels.iter().zip(preds) {
+            match (y, p) {
+                (true, true) => c.tp += 1,
+                (false, true) => c.fp += 1,
+                (false, false) => c.tn += 1,
+                (true, false) => c.fn_ += 1,
+            }
+        }
+        c
+    }
+
+    pub fn precision(&self) -> f64 {
+        let d = self.tp + self.fp;
+        if d == 0 {
+            0.0
+        } else {
+            self.tp as f64 / d as f64
+        }
+    }
+
+    pub fn recall(&self) -> f64 {
+        let d = self.tp + self.fn_;
+        if d == 0 {
+            0.0
+        } else {
+            self.tp as f64 / d as f64
+        }
+    }
+
+    /// Eq. 8: harmonic mean of precision and recall.
+    pub fn f1(&self) -> f64 {
+        let (p, r) = (self.precision(), self.recall());
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let total = self.tp + self.fp + self.tn + self.fn_;
+        if total == 0 {
+            0.0
+        } else {
+            (self.tp + self.tn) as f64 / total as f64
+        }
+    }
+}
+
+/// ROC-AUC from scores (higher = more positive). Ties handled by the
+/// rank-sum (Mann-Whitney) formulation with midranks.
+pub fn roc_auc(labels: &[bool], scores: &[f64]) -> f64 {
+    assert_eq!(labels.len(), scores.len());
+    let n_pos = labels.iter().filter(|&&l| l).count() as f64;
+    let n_neg = labels.len() as f64 - n_pos;
+    if n_pos == 0.0 || n_neg == 0.0 {
+        return 0.5;
+    }
+    let mut idx: Vec<usize> = (0..labels.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // Midranks over tied score groups.
+    let mut rank_sum_pos = 0f64;
+    let mut i = 0usize;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let midrank = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            if labels[k] {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j + 1;
+    }
+    (rank_sum_pos - n_pos * (n_pos + 1.0) / 2.0) / (n_pos * n_neg)
+}
+
+/// Macro-averaged F1 over classes (node-classification extension).
+pub fn macro_f1(labels: &[u32], preds: &[u32], n_classes: u32) -> f64 {
+    assert_eq!(labels.len(), preds.len());
+    let mut sum = 0f64;
+    for c in 0..n_classes {
+        let ls: Vec<bool> = labels.iter().map(|&l| l == c).collect();
+        let ps: Vec<bool> = preds.iter().map(|&p| p == c).collect();
+        sum += Confusion::from_predictions(&ls, &ps).f1();
+    }
+    sum / n_classes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confusion_hand_computed() {
+        let labels = [true, true, true, false, false, false];
+        let preds = [true, true, false, true, false, false];
+        let c = Confusion::from_predictions(&labels, &preds);
+        assert_eq!(
+            c,
+            Confusion {
+                tp: 2,
+                fp: 1,
+                tn: 2,
+                fn_: 1
+            }
+        );
+        assert!((c.precision() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.recall() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.f1() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.accuracy() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_cases_are_zero() {
+        let c = Confusion::from_predictions(&[true, true], &[false, false]);
+        assert_eq!(c.precision(), 0.0);
+        assert_eq!(c.f1(), 0.0);
+        let empty = Confusion::default();
+        assert_eq!(empty.accuracy(), 0.0);
+    }
+
+    #[test]
+    fn auc_perfect_and_random_and_inverted() {
+        let labels = [false, false, true, true];
+        assert_eq!(roc_auc(&labels, &[0.1, 0.2, 0.8, 0.9]), 1.0);
+        assert_eq!(roc_auc(&labels, &[0.9, 0.8, 0.2, 0.1]), 0.0);
+        // All tied scores -> 0.5.
+        assert_eq!(roc_auc(&labels, &[0.5, 0.5, 0.5, 0.5]), 0.5);
+        // Single class -> defined as 0.5.
+        assert_eq!(roc_auc(&[true, true], &[0.1, 0.9]), 0.5);
+    }
+
+    #[test]
+    fn auc_with_partial_ties() {
+        // pos scores {0.8, 0.5}, neg {0.5, 0.2}: pairs: (0.8>0.5)=1,
+        // (0.8>0.2)=1, (0.5=0.5)=0.5, (0.5>0.2)=1 -> 3.5/4.
+        let auc = roc_auc(&[true, true, false, false], &[0.8, 0.5, 0.5, 0.2]);
+        assert!((auc - 0.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn macro_f1_multiclass() {
+        let labels = [0u32, 0, 1, 1, 2, 2];
+        let preds = [0u32, 0, 1, 1, 2, 2];
+        assert_eq!(macro_f1(&labels, &preds, 3), 1.0);
+        let worst = [1u32, 1, 2, 2, 0, 0];
+        assert_eq!(macro_f1(&labels, &worst, 3), 0.0);
+    }
+}

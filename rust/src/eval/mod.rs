@@ -1,0 +1,12 @@
+//! Downstream evaluation: the paper's link-prediction protocol with a
+//! logistic-regression classifier and F1 scoring, the node2vec edge-
+//! operator ablation, plus the node-classification extension task.
+
+pub mod linkpred;
+pub mod logistic;
+pub mod metrics;
+pub mod nodeclass;
+pub mod operators;
+
+pub use linkpred::{evaluate_link_prediction, split_edges, EdgeSplit, LinkPredResult};
+pub use operators::EdgeOp;

@@ -1,0 +1,139 @@
+//! Edge-feature operators for link prediction.
+//!
+//! The paper scores pairs on the *concatenation* `[x_u ‖ x_v]` (§3.1.2)
+//! and observes low absolute F1; node2vec's binary operators (average,
+//! hadamard, L1, L2) are the standard alternatives. We ship all five so
+//! the `ablate-op` bench can quantify how much of the paper's low scores
+//! is the operator choice rather than the embedding.
+
+use crate::embed::Embedding;
+
+/// Binary operator turning two node vectors into an edge feature vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeOp {
+    /// `[x_u ‖ x_v]` — the paper's choice (dimension 2d).
+    Concat,
+    /// `(x_u + x_v) / 2`
+    Average,
+    /// `x_u ⊙ x_v` — node2vec's best performer.
+    Hadamard,
+    /// `|x_u - x_v|`
+    L1,
+    /// `(x_u - x_v)^2`
+    L2,
+}
+
+impl EdgeOp {
+    pub const ALL: [EdgeOp; 5] = [
+        EdgeOp::Concat,
+        EdgeOp::Average,
+        EdgeOp::Hadamard,
+        EdgeOp::L1,
+        EdgeOp::L2,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EdgeOp::Concat => "concat",
+            EdgeOp::Average => "average",
+            EdgeOp::Hadamard => "hadamard",
+            EdgeOp::L1 => "l1",
+            EdgeOp::L2 => "l2",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<EdgeOp> {
+        Self::ALL.iter().copied().find(|o| o.name() == name)
+    }
+
+    /// Output feature dimension for embeddings of dimension `d`.
+    pub fn feature_dim(&self, d: usize) -> usize {
+        match self {
+            EdgeOp::Concat => 2 * d,
+            _ => d,
+        }
+    }
+
+    /// Append the feature vector for pair (u, v) to `out`.
+    pub fn extend_features(&self, emb: &Embedding, u: u32, v: u32, out: &mut Vec<f32>) {
+        let (a, b) = (emb.row(u), emb.row(v));
+        match self {
+            EdgeOp::Concat => {
+                out.extend_from_slice(a);
+                out.extend_from_slice(b);
+            }
+            EdgeOp::Average => out.extend(a.iter().zip(b).map(|(&x, &y)| (x + y) * 0.5)),
+            EdgeOp::Hadamard => out.extend(a.iter().zip(b).map(|(&x, &y)| x * y)),
+            EdgeOp::L1 => out.extend(a.iter().zip(b).map(|(&x, &y)| (x - y).abs())),
+            EdgeOp::L2 => out.extend(a.iter().zip(b).map(|(&x, &y)| (x - y) * (x - y))),
+        }
+    }
+
+    /// Feature matrix for a pair list (row-major).
+    pub fn pair_features(&self, emb: &Embedding, pairs: &[(u32, u32)]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(pairs.len() * self.feature_dim(emb.dim()));
+        for &(u, v) in pairs {
+            self.extend_features(emb, u, v, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn emb() -> Embedding {
+        let mut e = Embedding::zeros(2, 3);
+        e.set_row(0, &[1.0, -2.0, 3.0]);
+        e.set_row(1, &[4.0, 5.0, -6.0]);
+        e
+    }
+
+    #[test]
+    fn operator_values() {
+        let e = emb();
+        let mut out = Vec::new();
+        EdgeOp::Concat.extend_features(&e, 0, 1, &mut out);
+        assert_eq!(out, vec![1.0, -2.0, 3.0, 4.0, 5.0, -6.0]);
+        out.clear();
+        EdgeOp::Average.extend_features(&e, 0, 1, &mut out);
+        assert_eq!(out, vec![2.5, 1.5, -1.5]);
+        out.clear();
+        EdgeOp::Hadamard.extend_features(&e, 0, 1, &mut out);
+        assert_eq!(out, vec![4.0, -10.0, -18.0]);
+        out.clear();
+        EdgeOp::L1.extend_features(&e, 0, 1, &mut out);
+        assert_eq!(out, vec![3.0, 7.0, 9.0]);
+        out.clear();
+        EdgeOp::L2.extend_features(&e, 0, 1, &mut out);
+        assert_eq!(out, vec![9.0, 49.0, 81.0]);
+    }
+
+    #[test]
+    fn dims_and_names() {
+        assert_eq!(EdgeOp::Concat.feature_dim(8), 16);
+        assert_eq!(EdgeOp::Hadamard.feature_dim(8), 8);
+        for op in EdgeOp::ALL {
+            assert_eq!(EdgeOp::by_name(op.name()), Some(op));
+        }
+        assert_eq!(EdgeOp::by_name("nope"), None);
+    }
+
+    #[test]
+    fn symmetric_ops_are_symmetric() {
+        let e = emb();
+        for op in [EdgeOp::Average, EdgeOp::Hadamard, EdgeOp::L1, EdgeOp::L2] {
+            let uv = op.pair_features(&e, &[(0, 1)]);
+            let vu = op.pair_features(&e, &[(1, 0)]);
+            assert_eq!(uv, vu, "{op:?} not symmetric");
+        }
+    }
+
+    #[test]
+    fn pair_features_shape() {
+        let e = emb();
+        let f = EdgeOp::Concat.pair_features(&e, &[(0, 1), (1, 0)]);
+        assert_eq!(f.len(), 12);
+    }
+}

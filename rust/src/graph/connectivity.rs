@@ -1,0 +1,228 @@
+//! Connected components: union-find plus BFS utilities.
+//!
+//! The paper restricts embedding to the largest connected component (§2)
+//! and its Fig 6 scenario hinges on whether a k-core is connected, so
+//! connectivity checks show up throughout the pipeline.
+
+use super::csr::Graph;
+
+/// Disjoint-set forest with union by rank + path halving.
+#[derive(Debug, Clone)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+    components: usize,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        UnionFind {
+            parent: (0..n as u32).collect(),
+            rank: vec![0; n],
+            components: n,
+        }
+    }
+
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            self.parent[x as usize] = self.parent[self.parent[x as usize] as usize];
+            x = self.parent[x as usize];
+        }
+        x
+    }
+
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (ra, rb) = if self.rank[ra as usize] < self.rank[rb as usize] {
+            (rb, ra)
+        } else {
+            (ra, rb)
+        };
+        self.parent[rb as usize] = ra;
+        if self.rank[ra as usize] == self.rank[rb as usize] {
+            self.rank[ra as usize] += 1;
+        }
+        self.components -= 1;
+        true
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.components
+    }
+
+    pub fn same(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+}
+
+/// Component id per node (ids are 0..k, ordered by first appearance).
+pub fn connected_components(g: &Graph) -> Vec<u32> {
+    let n = g.n_nodes();
+    let mut comp = vec![u32::MAX; n];
+    let mut next = 0u32;
+    let mut queue = std::collections::VecDeque::new();
+    for start in 0..n as u32 {
+        if comp[start as usize] != u32::MAX {
+            continue;
+        }
+        comp[start as usize] = next;
+        queue.push_back(start);
+        while let Some(u) = queue.pop_front() {
+            for &v in g.neighbors(u) {
+                if comp[v as usize] == u32::MAX {
+                    comp[v as usize] = next;
+                    queue.push_back(v);
+                }
+            }
+        }
+        next += 1;
+    }
+    comp
+}
+
+/// Number of connected components.
+pub fn n_components(g: &Graph) -> usize {
+    if g.n_nodes() == 0 {
+        return 0;
+    }
+    connected_components(g).iter().max().map(|&m| m as usize + 1).unwrap()
+}
+
+pub fn is_connected(g: &Graph) -> bool {
+    g.n_nodes() <= 1 || n_components(g) == 1
+}
+
+/// Node list of the largest connected component (sorted).
+pub fn largest_component(g: &Graph) -> Vec<u32> {
+    let comp = connected_components(g);
+    let mut counts = std::collections::HashMap::new();
+    for &c in &comp {
+        *counts.entry(c).or_insert(0usize) += 1;
+    }
+    let best = counts
+        .into_iter()
+        .max_by_key(|&(c, n)| (n, std::cmp::Reverse(c)))
+        .map(|(c, _)| c)
+        .unwrap_or(0);
+    (0..g.n_nodes() as u32)
+        .filter(|&v| comp[v as usize] == best)
+        .collect()
+}
+
+/// Shortest path from `src` to `dst` (inclusive), or None if
+/// unreachable. BFS with parent reconstruction.
+pub fn bfs_path(g: &Graph, src: u32, dst: u32) -> Option<Vec<u32>> {
+    if src == dst {
+        return Some(vec![src]);
+    }
+    let mut parent = vec![u32::MAX; g.n_nodes()];
+    parent[src as usize] = src;
+    let mut queue = std::collections::VecDeque::from([src]);
+    while let Some(u) = queue.pop_front() {
+        for &v in g.neighbors(u) {
+            if parent[v as usize] == u32::MAX {
+                parent[v as usize] = u;
+                if v == dst {
+                    let mut path = vec![dst];
+                    let mut cur = dst;
+                    while cur != src {
+                        cur = parent[cur as usize];
+                        path.push(cur);
+                    }
+                    path.reverse();
+                    return Some(path);
+                }
+                queue.push_back(v);
+            }
+        }
+    }
+    None
+}
+
+/// BFS hop distances from `src` (u32::MAX for unreachable).
+pub fn bfs_distances(g: &Graph, src: u32) -> Vec<u32> {
+    let mut dist = vec![u32::MAX; g.n_nodes()];
+    dist[src as usize] = 0;
+    let mut queue = std::collections::VecDeque::from([src]);
+    while let Some(u) = queue.pop_front() {
+        for &v in g.neighbors(u) {
+            if dist[v as usize] == u32::MAX {
+                dist[v as usize] = dist[u as usize] + 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_triangles() -> Graph {
+        Graph::from_edges(7, &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)])
+    }
+
+    #[test]
+    fn components_found() {
+        let g = two_triangles();
+        let comp = connected_components(&g);
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[3], comp[4]);
+        assert_ne!(comp[0], comp[3]);
+        assert_ne!(comp[6], comp[0]);
+        assert_eq!(n_components(&g), 3); // two triangles + isolated node 6
+        assert!(!is_connected(&g));
+    }
+
+    #[test]
+    fn largest_component_ties_and_sizes() {
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (3, 4)]);
+        assert_eq!(largest_component(&g), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn single_node_connected() {
+        let g = Graph::from_edges(1, &[]);
+        assert!(is_connected(&g));
+        let empty = Graph::from_edges(0, &[]);
+        assert_eq!(n_components(&empty), 0);
+    }
+
+    #[test]
+    fn union_find_tracks_components() {
+        let mut uf = UnionFind::new(5);
+        assert_eq!(uf.n_components(), 5);
+        assert!(uf.union(0, 1));
+        assert!(!uf.union(1, 0));
+        uf.union(2, 3);
+        uf.union(0, 3);
+        assert_eq!(uf.n_components(), 2);
+        assert!(uf.same(1, 2));
+        assert!(!uf.same(0, 4));
+    }
+
+    #[test]
+    fn bfs_path_found_and_shortest() {
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (0, 4), (4, 3)]);
+        let p = bfs_path(&g, 0, 3).unwrap();
+        assert_eq!(p.len(), 3); // 0-4-3 beats 0-1-2-3
+        assert_eq!(p[0], 0);
+        assert_eq!(*p.last().unwrap(), 3);
+        for w in p.windows(2) {
+            assert!(g.has_edge(w[0], w[1]));
+        }
+        assert_eq!(bfs_path(&g, 0, 5), None);
+        assert_eq!(bfs_path(&g, 2, 2), Some(vec![2]));
+    }
+
+    #[test]
+    fn bfs_distances_on_path() {
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3)]);
+        let d = bfs_distances(&g, 0);
+        assert_eq!(d, vec![0, 1, 2, 3, u32::MAX]);
+    }
+}

@@ -1,0 +1,247 @@
+//! Immutable CSR (compressed sparse row) graph.
+//!
+//! All algorithms in the library (k-core decomposition, random walks,
+//! propagation, evaluation) run on this structure. Graphs are undirected
+//! and unweighted, like the paper's datasets (§3.1.1): every edge is
+//! stored in both adjacency rows; per-row targets are sorted so
+//! `has_edge` is a binary search and neighbour slices are deterministic.
+
+/// Undirected, unweighted graph in CSR form. Node ids are `u32` and
+/// contiguous in `[0, n)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    offsets: Vec<u32>, // n + 1
+    targets: Vec<u32>, // 2 * m, sorted within each row
+}
+
+impl Graph {
+    /// Build from an edge list. Self-loops are rejected; duplicate edges
+    /// (in either orientation) are deduplicated.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Graph {
+        assert!(n <= u32::MAX as usize - 1, "graph too large for u32 ids");
+        let mut deg = vec![0u32; n];
+        let mut canon: Vec<(u32, u32)> = Vec::with_capacity(edges.len());
+        for &(a, b) in edges {
+            assert!(
+                (a as usize) < n && (b as usize) < n,
+                "edge ({a},{b}) out of range for n={n}"
+            );
+            assert!(a != b, "self-loop at node {a}");
+            canon.push((a.min(b), a.max(b)));
+        }
+        canon.sort_unstable();
+        canon.dedup();
+        for &(a, b) in &canon {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + deg[v];
+        }
+        let mut targets = vec![0u32; offsets[n] as usize];
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        for &(a, b) in &canon {
+            targets[cursor[a as usize] as usize] = b;
+            cursor[a as usize] += 1;
+            targets[cursor[b as usize] as usize] = a;
+            cursor[b as usize] += 1;
+        }
+        // Rows are sorted because canon is sorted lexicographically and we
+        // append targets in increasing order per row for the first
+        // endpoint, but the second-endpoint appends can interleave, so
+        // sort each row explicitly (cheap, m log deg).
+        for v in 0..n {
+            let (s, e) = (offsets[v] as usize, offsets[v + 1] as usize);
+            targets[s..e].sort_unstable();
+        }
+        Graph { offsets, targets }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn n_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn n_edges(&self) -> usize {
+        self.targets.len() / 2
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Sorted neighbour slice of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.targets[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    /// O(log deg) membership test.
+    #[inline]
+    pub fn has_edge(&self, a: u32, b: u32) -> bool {
+        self.neighbors(a).binary_search(&b).is_ok()
+    }
+
+    /// Iterate undirected edges once each, as (u, v) with u < v.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.n_nodes() as u32).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .copied()
+                .filter(move |&v| u < v)
+                .map(move |v| (u, v))
+        })
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n_nodes() as u32)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Average degree (2m / n).
+    pub fn avg_degree(&self) -> f64 {
+        if self.n_nodes() == 0 {
+            0.0
+        } else {
+            self.targets.len() as f64 / self.n_nodes() as f64
+        }
+    }
+
+    /// Nodes with degree zero.
+    pub fn isolated_nodes(&self) -> Vec<u32> {
+        (0..self.n_nodes() as u32)
+            .filter(|&v| self.degree(v) == 0)
+            .collect()
+    }
+
+    /// Induced subgraph on `nodes` (need not be sorted; duplicates
+    /// rejected). Returns the subgraph plus the old-id list indexed by
+    /// new id (`new -> old`); the inverse map is derivable.
+    pub fn induced_subgraph(&self, nodes: &[u32]) -> (Graph, Vec<u32>) {
+        let n_old = self.n_nodes();
+        let mut new_id = vec![u32::MAX; n_old];
+        for (new, &old) in nodes.iter().enumerate() {
+            assert!(
+                new_id[old as usize] == u32::MAX,
+                "duplicate node {old} in induced_subgraph"
+            );
+            new_id[old as usize] = new as u32;
+        }
+        let mut edges = Vec::new();
+        for (new_u, &old_u) in nodes.iter().enumerate() {
+            for &old_v in self.neighbors(old_u) {
+                let new_v = new_id[old_v as usize];
+                if new_v != u32::MAX && (new_u as u32) < new_v {
+                    edges.push((new_u as u32, new_v));
+                }
+            }
+        }
+        (Graph::from_edges(nodes.len(), &edges), nodes.to_vec())
+    }
+
+    /// Remove the given undirected edges (orientation-insensitive),
+    /// returning the remaining graph. Unknown edges are ignored.
+    pub fn remove_edges(&self, removed: &[(u32, u32)]) -> Graph {
+        use std::collections::HashSet;
+        let gone: HashSet<(u32, u32)> = removed
+            .iter()
+            .map(|&(a, b)| (a.min(b), a.max(b)))
+            .collect();
+        let kept: Vec<(u32, u32)> = self.edges().filter(|e| !gone.contains(e)).collect();
+        Graph::from_edges(self.n_nodes(), &kept)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_plus_tail() -> Graph {
+        // 0-1-2 triangle, 2-3 tail.
+        Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)])
+    }
+
+    #[test]
+    fn basic_shape() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.n_nodes(), 4);
+        assert_eq!(g.n_edges(), 4);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.degree(3), 1);
+        assert_eq!(g.neighbors(2), &[0, 1, 3]);
+        assert_eq!(g.max_degree(), 3);
+        assert!((g.avg_degree() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dedup_and_orientation() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (0, 1), (1, 2)]);
+        assert_eq!(g.n_edges(), 2);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn rejects_self_loops() {
+        Graph::from_edges(2, &[(1, 1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range() {
+        Graph::from_edges(2, &[(0, 5)]);
+    }
+
+    #[test]
+    fn edges_iterator_each_once() {
+        let g = triangle_plus_tail();
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es, vec![(0, 1), (0, 2), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn isolated_nodes_listed() {
+        let g = Graph::from_edges(5, &[(0, 1)]);
+        assert_eq!(g.isolated_nodes(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn induced_subgraph_maps_ids() {
+        let g = triangle_plus_tail();
+        let (sub, new_to_old) = g.induced_subgraph(&[2, 0, 1]);
+        assert_eq!(sub.n_nodes(), 3);
+        assert_eq!(sub.n_edges(), 3); // the triangle survives
+        assert_eq!(new_to_old, vec![2, 0, 1]);
+        // Node 3's tail edge is dropped.
+        assert!(sub.has_edge(0, 1) && sub.has_edge(0, 2) && sub.has_edge(1, 2));
+    }
+
+    #[test]
+    fn remove_edges_either_orientation() {
+        let g = triangle_plus_tail();
+        let g2 = g.remove_edges(&[(1, 0), (3, 2)]);
+        assert_eq!(g2.n_edges(), 2);
+        assert!(!g2.has_edge(0, 1));
+        assert!(!g2.has_edge(2, 3));
+        assert!(g2.has_edge(0, 2));
+        assert_eq!(g2.n_nodes(), 4); // node count preserved
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_edges(0, &[]);
+        assert_eq!(g.n_nodes(), 0);
+        assert_eq!(g.n_edges(), 0);
+        assert_eq!(g.max_degree(), 0);
+    }
+}

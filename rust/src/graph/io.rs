@@ -1,0 +1,172 @@
+//! Graph and embedding file I/O.
+//!
+//! Formats:
+//! - edge list: whitespace-separated `u v` per line, `#` comments,
+//!   node count inferred (max id + 1) or given;
+//! - embeddings: TSV `node \t x0 \t x1 ...` with a `# dim=D` header.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::csr::Graph;
+
+/// Load an edge-list file. If `n_nodes` is None the node count is
+/// `max_id + 1`.
+pub fn load_edge_list(path: &Path, n_nodes: Option<usize>) -> Result<Graph> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening edge list {}", path.display()))?;
+    let reader = std::io::BufReader::new(file);
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut max_id = 0u32;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (a, b) = match (it.next(), it.next()) {
+            (Some(a), Some(b)) => (a, b),
+            _ => bail!("{}:{}: expected 'u v'", path.display(), lineno + 1),
+        };
+        let a: u32 = a
+            .parse()
+            .with_context(|| format!("{}:{}: bad node id {a:?}", path.display(), lineno + 1))?;
+        let b: u32 = b
+            .parse()
+            .with_context(|| format!("{}:{}: bad node id {b:?}", path.display(), lineno + 1))?;
+        if a == b {
+            continue; // drop self-loops silently, like networkx read_edgelist usage in the paper
+        }
+        max_id = max_id.max(a).max(b);
+        edges.push((a, b));
+    }
+    let n = n_nodes.unwrap_or(if edges.is_empty() { 0 } else { max_id as usize + 1 });
+    Ok(Graph::from_edges(n, &edges))
+}
+
+/// Save a graph as an edge list (u < v, one edge per line).
+pub fn save_edge_list(g: &Graph, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# nodes={} edges={}", g.n_nodes(), g.n_edges())?;
+    for (u, v) in g.edges() {
+        writeln!(w, "{u} {v}")?;
+    }
+    Ok(())
+}
+
+/// Save an embedding matrix (`n x dim`, row-major f32) as TSV.
+pub fn save_embeddings(emb: &[f32], n: usize, dim: usize, path: &Path) -> Result<()> {
+    assert_eq!(emb.len(), n * dim);
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# dim={dim}")?;
+    for (v, row) in emb.chunks_exact(dim).enumerate() {
+        write!(w, "{v}")?;
+        for x in row {
+            write!(w, "\t{x}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Load embeddings saved by [`save_embeddings`]. Returns (matrix, n, dim).
+pub fn load_embeddings(path: &Path) -> Result<(Vec<f32>, usize, usize)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut dim: Option<usize> = None;
+    let mut rows: Vec<(usize, Vec<f32>)> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            if let Some(d) = rest.trim().strip_prefix("dim=") {
+                dim = Some(d.parse().context("bad dim header")?);
+            }
+            continue;
+        }
+        let mut it = line.split('\t');
+        let v: usize = it
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad node id", lineno + 1))?;
+        let row: Vec<f32> = it
+            .map(|t| t.parse::<f32>())
+            .collect::<Result<_, _>>()
+            .with_context(|| format!("line {}: bad float", lineno + 1))?;
+        rows.push((v, row));
+    }
+    let dim = dim.or_else(|| rows.first().map(|(_, r)| r.len())).unwrap_or(0);
+    let n = rows.iter().map(|(v, _)| v + 1).max().unwrap_or(0);
+    let mut out = vec![0f32; n * dim];
+    for (v, row) in rows {
+        if row.len() != dim {
+            bail!("node {v}: row width {} != dim {dim}", row.len());
+        }
+        out[v * dim..(v + 1) * dim].copy_from_slice(&row);
+    }
+    Ok((out, n, dim))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("kcore_embed_io_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn edge_list_round_trip() {
+        let g = generators::holme_kim(60, 2, 0.3, &mut crate::util::rng::Rng::new(1));
+        let p = tmp("rt.edges");
+        save_edge_list(&g, &p).unwrap();
+        let g2 = load_edge_list(&p, Some(60)).unwrap();
+        assert_eq!(g, g2);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn edge_list_parsing_rules() {
+        let p = tmp("rules.edges");
+        std::fs::write(&p, "# comment\n0 1\n\n2 2\n1 3\n").unwrap();
+        let g = load_edge_list(&p, None).unwrap();
+        assert_eq!(g.n_nodes(), 4);
+        assert_eq!(g.n_edges(), 2); // self-loop 2-2 dropped
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn edge_list_bad_input_errors() {
+        let p = tmp("bad.edges");
+        std::fs::write(&p, "0 x\n").unwrap();
+        assert!(load_edge_list(&p, None).is_err());
+        std::fs::write(&p, "0\n").unwrap();
+        assert!(load_edge_list(&p, None).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn embeddings_round_trip() {
+        let (n, dim) = (5, 3);
+        let emb: Vec<f32> = (0..n * dim).map(|i| i as f32 * 0.5).collect();
+        let p = tmp("emb.tsv");
+        save_embeddings(&emb, n, dim, &p).unwrap();
+        let (back, n2, d2) = load_embeddings(&p).unwrap();
+        assert_eq!((n2, d2), (n, dim));
+        assert_eq!(back, emb);
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,122 @@
+//! Structural graph metrics used for dataset calibration and reporting:
+//! degree statistics, (sampled) clustering coefficient, degree
+//! assortativity.
+
+use super::csr::Graph;
+use crate::util::rng::Rng;
+
+/// Degree histogram as (degree, count), sorted by degree.
+pub fn degree_histogram(g: &Graph) -> Vec<(usize, usize)> {
+    crate::util::stats::int_histogram((0..g.n_nodes() as u32).map(|v| g.degree(v)))
+}
+
+/// Sampled global clustering coefficient: probability that a random
+/// wedge (path of length 2) is closed. Exact when `samples >= #wedges`
+/// would be expensive; sampling error is fine for calibration.
+pub fn global_clustering(g: &Graph, samples: usize, rng: &mut Rng) -> f64 {
+    let candidates: Vec<u32> = (0..g.n_nodes() as u32)
+        .filter(|&v| g.degree(v) >= 2)
+        .collect();
+    if candidates.is_empty() {
+        return 0.0;
+    }
+    let mut closed = 0usize;
+    let mut total = 0usize;
+    for _ in 0..samples {
+        let v = *rng.choose(&candidates);
+        let nbrs = g.neighbors(v);
+        let i = rng.gen_index(nbrs.len());
+        let mut j = rng.gen_index(nbrs.len() - 1);
+        if j >= i {
+            j += 1;
+        }
+        total += 1;
+        if g.has_edge(nbrs[i], nbrs[j]) {
+            closed += 1;
+        }
+    }
+    closed as f64 / total as f64
+}
+
+/// Degree assortativity: Pearson correlation of endpoint degrees over
+/// all edges (both orientations, the standard Newman definition).
+pub fn degree_assortativity(g: &Graph) -> f64 {
+    let mut n = 0f64;
+    let (mut sx, mut sy, mut sxx, mut syy, mut sxy) = (0f64, 0f64, 0f64, 0f64, 0f64);
+    for (u, v) in g.edges() {
+        for (a, b) in [(u, v), (v, u)] {
+            let x = g.degree(a) as f64;
+            let y = g.degree(b) as f64;
+            n += 1.0;
+            sx += x;
+            sy += y;
+            sxx += x * x;
+            syy += y * y;
+            sxy += x * y;
+        }
+    }
+    if n == 0.0 {
+        return 0.0;
+    }
+    let cov = sxy / n - (sx / n) * (sy / n);
+    let vx = sxx / n - (sx / n) * (sx / n);
+    let vy = syy / n - (sy / n) * (sy / n);
+    if vx <= 0.0 || vy <= 0.0 {
+        0.0
+    } else {
+        cov / (vx * vy).sqrt()
+    }
+}
+
+/// One-line structural summary used by the CLI `describe` command.
+pub fn describe(g: &Graph) -> String {
+    format!(
+        "nodes={} edges={} avg_deg={:.2} max_deg={} isolated={}",
+        g.n_nodes(),
+        g.n_edges(),
+        g.avg_degree(),
+        g.max_degree(),
+        g.isolated_nodes().len(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn histogram_on_star() {
+        let g = generators::star(5);
+        let h = degree_histogram(&g);
+        assert_eq!(h, vec![(1, 4), (4, 1)]);
+    }
+
+    #[test]
+    fn clustering_extremes() {
+        let mut rng = Rng::new(1);
+        let k = generators::complete(10);
+        assert!((global_clustering(&k, 2000, &mut rng) - 1.0).abs() < 1e-9);
+        let s = generators::star(20);
+        assert_eq!(global_clustering(&s, 2000, &mut rng), 0.0);
+        let empty = crate::graph::csr::Graph::from_edges(3, &[]);
+        assert_eq!(global_clustering(&empty, 100, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn assortativity_sign_on_star() {
+        // Stars are maximally disassortative.
+        let s = generators::star(20);
+        assert!(degree_assortativity(&s) < -0.99);
+        // Ring: all degrees equal -> degenerate variance -> 0.
+        let r = generators::ring(10);
+        assert_eq!(degree_assortativity(&r), 0.0);
+    }
+
+    #[test]
+    fn describe_contains_counts() {
+        let g = generators::ring(5);
+        let d = describe(&g);
+        assert!(d.contains("nodes=5") && d.contains("edges=5"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Graph substrate: CSR storage, connectivity, generators, metrics, I/O.
+//!
+//! The paper's pipeline operates on undirected unweighted graphs
+//! (§3.1.1); everything downstream (k-core decomposition, walks,
+//! propagation, evaluation) consumes [`csr::Graph`].
+
+pub mod connectivity;
+pub mod csr;
+pub mod generators;
+pub mod io;
+pub mod metrics;
+
+pub use csr::Graph;

@@ -1,0 +1,32 @@
+//! # kcore-embed
+//!
+//! Reproduction of *“About Graph Degeneracy, Representation Learning and
+//! Scalability”* (Brandeis, Jarret & Sevestre, 2020): k-core-accelerated
+//! walk-based graph representation learning.
+//!
+//! Two techniques from the paper, as first-class features:
+//!
+//! - **CoreWalk** ([`walks::corewalk`]): scale the number of random walks
+//!   rooted at each node by its core number (eq. 13), shrinking the
+//!   SkipGram corpus with minimal embedding-quality loss.
+//! - **Mean embedding propagation** ([`propagate`]): embed only a dense
+//!   `k0`-core, then propagate embeddings outward shell-by-shell by
+//!   iterative neighbour averaging (after Salha et al. 2019).
+//!
+//! The SkipGram-negative-sampling hot path runs on an AOT-compiled
+//! XLA/PJRT executable whose inner kernel is a Pallas kernel authored in
+//! `python/compile/` — python runs only at build time (`make artifacts`);
+//! the runtime ([`runtime`]) is pure rust over the PJRT C API.
+//!
+//! See `DESIGN.md` for the architecture and experiment inventory, and
+//! `examples/` for runnable entry points.
+
+pub mod coordinator;
+pub mod cores;
+pub mod embed;
+pub mod eval;
+pub mod graph;
+pub mod propagate;
+pub mod runtime;
+pub mod util;
+pub mod walks;

@@ -1,0 +1,279 @@
+//! `kcore-embed` — CLI for the k-core accelerated graph embedding system.
+//!
+//! Subcommands:
+//!   generate   synthesize a dataset stand-in and save the edge list
+//!   describe   structural summary + core decomposition of a graph
+//!   embed      run the embedding pipeline, save embeddings as TSV
+//!   eval       full link-prediction experiment (trials, mean ± std)
+//!   bench      regenerate a paper table/figure (table1..table10, fig1..fig6,
+//!              coredist, all)
+//!
+//! Graphs are either `--graph {cora,facebook,github}` (calibrated
+//! stand-ins, see DESIGN.md §Substitutions) or `--edges <path>`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use kcore_embed::coordinator::bench::{run_bench, BenchOpts, BENCH_NAMES};
+use kcore_embed::coordinator::experiment::Experiment;
+use kcore_embed::coordinator::report::render_table;
+use kcore_embed::coordinator::{run_pipeline, Backend, Embedder, PipelineConfig};
+use kcore_embed::cores::{core_decomposition, subcore};
+use kcore_embed::graph::{generators, io, metrics, Graph};
+use kcore_embed::runtime::{default_artifacts_dir, Manifest, Runtime};
+use kcore_embed::util::cli::Args;
+
+const USAGE: &str = "\
+kcore-embed — k-core accelerated graph representation learning
+
+USAGE: kcore-embed <command> [options]
+
+COMMANDS
+  generate  --graph NAME [--seed N] --out PATH
+  describe  (--graph NAME | --edges PATH) [--seed N]
+  embed     (--graph NAME | --edges PATH) [--embedder deepwalk|corewalk|node2vec]
+            [--k0 K] [--backend pjrt|native] [--walks N] [--walk-length L]
+            [--dim D] [--window W] [--epochs E] [--seed N] --out PATH
+  eval      (--graph NAME | --edges PATH) [--remove FRAC] [--trials T]
+            [--embedder ...] [--k0 K] [--cores K1,K2,...] [--backend ...]
+            [--walks N] [--seed N]
+  bench     --exp NAME [--trials T] [--walks N] [--backend pjrt|native]
+            [--seed N] [--out-dir DIR] [--quick]
+
+Run `make artifacts` once before using the pjrt backend.
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.command.is_none() || args.has_flag("help") {
+        print!("{USAGE}");
+        return;
+    }
+    let cmd = args.command.clone().unwrap();
+    let result = match cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "describe" => cmd_describe(&args),
+        "embed" => cmd_embed(&args),
+        "eval" => cmd_eval(&args),
+        "bench" => cmd_bench(&args),
+        other => Err(anyhow::anyhow!("unknown command {other:?}\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_graph(args: &Args) -> Result<Graph> {
+    let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+    match (args.opt_str("graph"), args.opt_str("edges")) {
+        (Some(name), None) => generators::by_name(&name, seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown graph {name:?} (cora|facebook|github)")),
+        (None, Some(path)) => io::load_edge_list(Path::new(&path), None),
+        _ => bail!("specify exactly one of --graph or --edges"),
+    }
+}
+
+fn parse_embedder(args: &Args) -> Result<Embedder> {
+    Ok(match args.get_str("embedder", "deepwalk").as_str() {
+        "deepwalk" => Embedder::DeepWalk,
+        "corewalk" => Embedder::CoreWalk,
+        "node2vec" => Embedder::Node2Vec {
+            p: args.get_f64("p", 1.0).map_err(anyhow::Error::msg)?,
+            q: args.get_f64("q", 1.0).map_err(anyhow::Error::msg)?,
+        },
+        x => bail!("unknown embedder {x:?}"),
+    })
+}
+
+fn parse_backend(args: &Args, default: &str) -> Result<Backend> {
+    Ok(match args.get_str("backend", default).as_str() {
+        "pjrt" => Backend::Pjrt,
+        "native" => Backend::Native,
+        x => bail!("unknown backend {x:?}"),
+    })
+}
+
+fn build_config(args: &Args) -> Result<PipelineConfig> {
+    let mut cfg = PipelineConfig {
+        embedder: parse_embedder(args)?,
+        backend: parse_backend(args, "pjrt")?,
+        seed: args.get_u64("seed", 7).map_err(anyhow::Error::msg)?,
+        walks_per_node: args.get_usize("walks", 15).map_err(anyhow::Error::msg)? as u32,
+        walk_length: args
+            .get_usize("walk-length", 30)
+            .map_err(anyhow::Error::msg)?,
+        threads: args
+            .get_usize("threads", kcore_embed::util::pool::default_threads())
+            .map_err(anyhow::Error::msg)?,
+        ..Default::default()
+    };
+    cfg.k0 = match args.get_usize("k0", usize::MAX).map_err(anyhow::Error::msg)? {
+        usize::MAX => None,
+        k => Some(k as u32),
+    };
+    cfg.sgns.dim = args.get_usize("dim", 128).map_err(anyhow::Error::msg)?;
+    cfg.sgns.window = args.get_usize("window", 4).map_err(anyhow::Error::msg)?;
+    cfg.sgns.epochs = args.get_usize("epochs", 1).map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
+
+/// Instantiate the PJRT runtime only when the config needs it.
+fn maybe_runtime(cfg_backend: Backend) -> Result<Option<(Runtime, Manifest)>> {
+    if cfg_backend != Backend::Pjrt {
+        return Ok(None);
+    }
+    let manifest = Manifest::load(&default_artifacts_dir())?;
+    let rt = Runtime::cpu()?;
+    eprintln!("pjrt: platform={}", rt.platform());
+    Ok(Some((rt, manifest)))
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let out = args
+        .opt_str("out")
+        .ok_or_else(|| anyhow::anyhow!("--out required"))?;
+    io::save_edge_list(&g, Path::new(&out))?;
+    println!("{}", metrics::describe(&g));
+    println!("wrote {out}");
+    args.finish().map_err(anyhow::Error::msg)
+}
+
+fn cmd_describe(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    println!("{}", metrics::describe(&g));
+    let d = core_decomposition(&g);
+    println!("degeneracy: {}", d.degeneracy);
+    println!(
+        "largest connected component: {} nodes",
+        kcore_embed::graph::connectivity::largest_component(&g).len()
+    );
+    println!("shell histogram (core index: nodes):");
+    for (k, n) in subcore::shell_histogram(&d) {
+        println!("  {k:>4}: {n}");
+    }
+    args.finish().map_err(anyhow::Error::msg)
+}
+
+fn cmd_embed(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let cfg = build_config(args)?;
+    let out = args
+        .opt_str("out")
+        .ok_or_else(|| anyhow::anyhow!("--out required"))?;
+    args.finish().map_err(anyhow::Error::msg)?;
+    let rt = maybe_runtime(cfg.backend)?;
+    let rt_ref = rt.as_ref().map(|(r, m)| (r, m));
+    let res = run_pipeline(&g, &cfg, rt_ref)?;
+    println!(
+        "embedded {} nodes (core size {}, k0 {:?}, degeneracy {}) in {:.2}s",
+        res.embedding.n(),
+        res.core_size,
+        res.k0_used,
+        res.degeneracy,
+        res.total_secs()
+    );
+    for (phase, secs) in res.timer.phases() {
+        println!("  {phase}: {secs:.2}s");
+    }
+    if !res.loss_curve.is_empty() {
+        println!("loss curve (pairs, mean loss):");
+        for p in &res.loss_curve {
+            println!("  {:>10} {:.4}", p.pairs, p.mean_loss);
+        }
+    }
+    io::save_embeddings(
+        res.embedding.data(),
+        res.embedding.n(),
+        res.embedding.dim(),
+        Path::new(&out),
+    )?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let base_cfg = build_config(args)?;
+    let remove = args.get_f64("remove", 0.10).map_err(anyhow::Error::msg)?;
+    let trials = args.get_usize("trials", 5).map_err(anyhow::Error::msg)?;
+    let cores = args
+        .get_usize_list("cores", &[])
+        .map_err(anyhow::Error::msg)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+    let rt = maybe_runtime(base_cfg.backend)?;
+    let rt_ref = rt.as_ref().map(|(r, m)| (r, m));
+    let exp = Experiment {
+        graph: &g,
+        remove_frac: remove,
+        trials,
+        seed: base_cfg.seed,
+        runtime: rt_ref,
+    };
+    // Baseline: plain DeepWalk on the full graph.
+    let baseline = exp.run_row(&PipelineConfig {
+        embedder: Embedder::DeepWalk,
+        k0: None,
+        ..base_cfg.clone()
+    })?;
+    let mut rows = Vec::new();
+    if base_cfg.embedder != Embedder::DeepWalk || base_cfg.k0.is_some() {
+        rows.push(exp.run_row(&base_cfg)?);
+    }
+    for &k0 in &cores {
+        let mut cfg = base_cfg.clone();
+        cfg.k0 = Some(k0 as u32);
+        rows.push(exp.run_row(&cfg)?);
+    }
+    let t = render_table(
+        &format!(
+            "Link prediction, {:.0}% of edges removed, {} trials",
+            remove * 100.0,
+            trials
+        ),
+        &baseline,
+        &rows,
+    );
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let exp = args.get_str("exp", "all");
+    let quick = args.has_flag("quick");
+    let mut opts = if quick {
+        BenchOpts::quick()
+    } else {
+        BenchOpts::default()
+    };
+    opts.trials = args
+        .get_usize("trials", opts.trials)
+        .map_err(anyhow::Error::msg)?;
+    opts.walks_per_node = args
+        .get_usize("walks", opts.walks_per_node as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    // Benches default to the native backend (CPU baseline semantics,
+    // like the paper's gensim runs); `--backend pjrt` opts into the
+    // device path.
+    opts.backend = parse_backend(args, "native")?;
+    opts.seed = args.get_u64("seed", opts.seed).map_err(anyhow::Error::msg)?;
+    opts.out_dir = PathBuf::from(args.get_str("out-dir", "bench_out"));
+    args.finish().map_err(anyhow::Error::msg)?;
+    if !BENCH_NAMES.contains(&exp.as_str()) {
+        bail!("unknown --exp {exp:?}; known: {BENCH_NAMES:?}");
+    }
+    let rt = maybe_runtime(opts.backend)?;
+    let rt_ref = rt.as_ref().map(|(r, m)| (r, m));
+    let out = run_bench(&exp, &opts, rt_ref).context("running benchmark")?;
+    print!("{out}");
+    eprintln!("(artifacts written to {})", opts.out_dir.display());
+    Ok(())
+}

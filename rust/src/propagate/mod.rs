@@ -1,0 +1,9 @@
+//! Mean embedding propagation (§2.2): spread k0-core embeddings outward
+//! shell-by-shell by iterative neighbour averaging. `mean` is the exact
+//! native implementation (the default); `pjrt` runs each Jacobi round on
+//! the AOT-compiled Pallas masked-mean kernel.
+
+pub mod mean;
+pub mod pjrt;
+
+pub use mean::{propagate_mean, PropagationParams, PropagationStats};

@@ -1,0 +1,117 @@
+//! PJRT-accelerated mean propagation.
+//!
+//! Same algorithm as [`super::mean`], but each Jacobi round runs the
+//! AOT-compiled `prop_step` (whose inner masked-mean is the Pallas
+//! kernel) on device. Frontiers are chunked to the artifact's static
+//! `[F, M]` shape; neighbour lists longer than `M` are uniformly
+//! subsampled (counted in the stats — the native path is exact and is
+//! the default; this path exists to exercise/ablate the kernel).
+
+use anyhow::Result;
+
+use crate::cores::CoreDecomposition;
+use crate::embed::Embedding;
+use crate::graph::Graph;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::rng::Rng;
+
+use super::mean::{PropagationParams, PropagationStats};
+
+/// Extra telemetry for the device path.
+#[derive(Debug, Clone, Default)]
+pub struct PjrtPropStats {
+    pub base: PropagationStats,
+    pub truncated_rows: usize,
+    pub dispatches: u64,
+}
+
+/// Device-side propagation. Requires a prop artifact with
+/// `vocab >= n + 1` (one scratch row for padding lanes).
+pub fn propagate_mean_pjrt(
+    runtime: &Runtime,
+    manifest: &Manifest,
+    g: &Graph,
+    decomp: &CoreDecomposition,
+    k0: u32,
+    core_nodes: &[u32],
+    core_embedding: &Embedding,
+    params: &PropagationParams,
+) -> Result<(Embedding, PjrtPropStats)> {
+    let n = g.n_nodes();
+    let dim = core_embedding.dim();
+    let meta = manifest.select_prop(n + 1)?.clone();
+    assert_eq!(meta.dim, dim, "artifact dim mismatch");
+    let scratch_row = (meta.vocab - 1) as i32;
+    let (cap_f, cap_m) = (meta.frontier, meta.max_deg);
+
+    let mut session = runtime.prop_session(manifest, &meta)?;
+    // Assemble the initial full-graph state: core rows set, rest zero.
+    let mut full = Embedding::zeros(n, dim);
+    let mut known = vec![false; n];
+    for (i, &v) in core_nodes.iter().enumerate() {
+        full.set_row(v, core_embedding.row(i as u32));
+        known[v as usize] = true;
+    }
+    session.start(n, full.data())?;
+
+    let mut stats = PjrtPropStats::default();
+    let mut rng = Rng::new(0xFEED);
+    for k in (1..k0).rev() {
+        let frontier: Vec<u32> = (0..n as u32)
+            .filter(|&v| decomp.core[v as usize] == k && !known[v as usize])
+            .collect();
+        if frontier.is_empty() {
+            continue;
+        }
+        stats.base.shells_processed += 1;
+        stats.base.nodes_propagated += frontier.len();
+        let mut in_frontier = vec![false; n];
+        for &v in &frontier {
+            in_frontier[v as usize] = true;
+        }
+
+        // Build padded chunk tensors once per shell; rounds reuse them.
+        let mut chunks = Vec::new();
+        for chunk in frontier.chunks(cap_f) {
+            let mut rows = vec![scratch_row; cap_f];
+            let mut nbrs = vec![scratch_row; cap_f * cap_m];
+            let mut mask = vec![0f32; cap_f * cap_m];
+            for (i, &v) in chunk.iter().enumerate() {
+                rows[i] = v as i32;
+                let mut elig: Vec<u32> = g
+                    .neighbors(v)
+                    .iter()
+                    .copied()
+                    .filter(|&u| known[u as usize] || in_frontier[u as usize])
+                    .collect();
+                if elig.len() > cap_m {
+                    stats.truncated_rows += 1;
+                    // Uniform subsample without replacement.
+                    for j in 0..cap_m {
+                        let pick = j + rng.gen_index(elig.len() - j);
+                        elig.swap(j, pick);
+                    }
+                    elig.truncate(cap_m);
+                }
+                for (j, &u) in elig.iter().enumerate() {
+                    nbrs[i * cap_m + j] = u as i32;
+                    mask[i * cap_m + j] = 1.0;
+                }
+            }
+            chunks.push(session.upload_frontier(&rows, &nbrs, &mask)?);
+        }
+
+        for _ in 0..params.iterations {
+            stats.base.total_rounds += 1;
+            for fb in &chunks {
+                session.step(fb)?;
+                stats.dispatches += 1;
+            }
+        }
+        for &v in &frontier {
+            known[v as usize] = true;
+        }
+    }
+    let data = session.read_state(n)?;
+    Ok((Embedding::from_data(data, n, dim), stats))
+}

@@ -1,0 +1,225 @@
+//! Artifact manifest: metadata for the AOT-compiled HLO programs emitted
+//! by `python/compile/aot.py` (`make artifacts`).
+//!
+//! The rust side trusts `manifest.json` for every static shape; artifact
+//! selection picks the smallest configuration that fits a graph.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// SGNS train-step artifact parameters (python: model.make_sgns_step).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SgnsMeta {
+    pub name: String,
+    pub file: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub batch: usize,
+    pub negatives: usize,
+    pub scan_steps: usize,
+}
+
+impl SgnsMeta {
+    /// State tensor rows: `2*vocab + 2` (W_in, W_out, stats, scratch).
+    pub fn state_rows(&self) -> usize {
+        2 * self.vocab + 2
+    }
+
+    /// Pairs consumed per PJRT dispatch.
+    pub fn pairs_per_call(&self) -> usize {
+        self.batch * self.scan_steps
+    }
+
+    /// i32 lane width: [valid, center, context, negs...].
+    pub fn lane(&self) -> usize {
+        3 + self.negatives
+    }
+}
+
+/// Mean-propagation step artifact parameters (python: model.make_prop_step).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PropMeta {
+    pub name: String,
+    pub file: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub frontier: usize,
+    pub max_deg: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub sgns: Vec<SgnsMeta>,
+    pub prop: Vec<PropMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest: missing version"))?;
+        if version != 1 {
+            bail!("manifest: unsupported version {version}");
+        }
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("manifest: missing artifacts array"))?;
+        let mut sgns = Vec::new();
+        let mut prop = Vec::new();
+        for a in arts {
+            let field = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("manifest: artifact missing field {k:?}"))
+            };
+            let s_field = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("manifest: artifact missing field {k:?}"))?
+                    .to_string())
+            };
+            match a.get("kind").and_then(Json::as_str) {
+                Some("sgns") => sgns.push(SgnsMeta {
+                    name: s_field("name")?,
+                    file: s_field("file")?,
+                    vocab: field("vocab")?,
+                    dim: field("dim")?,
+                    batch: field("batch")?,
+                    negatives: field("negatives")?,
+                    scan_steps: field("scan_steps")?,
+                }),
+                Some("prop") => prop.push(PropMeta {
+                    name: s_field("name")?,
+                    file: s_field("file")?,
+                    vocab: field("vocab")?,
+                    dim: field("dim")?,
+                    frontier: field("frontier")?,
+                    max_deg: field("max_deg")?,
+                }),
+                Some(k) => bail!("manifest: unknown artifact kind {k:?}"),
+                None => bail!("manifest: artifact missing kind"),
+            }
+        }
+        sgns.sort_by_key(|m| m.vocab);
+        prop.sort_by_key(|m| m.vocab);
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            sgns,
+            prop,
+        })
+    }
+
+    /// Smallest SGNS artifact whose vocab fits `n_nodes`.
+    pub fn select_sgns(&self, n_nodes: usize) -> Result<&SgnsMeta> {
+        self.sgns
+            .iter()
+            .find(|m| m.vocab >= n_nodes)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no SGNS artifact fits {n_nodes} nodes (max vocab {})",
+                    self.sgns.last().map(|m| m.vocab).unwrap_or(0)
+                )
+            })
+    }
+
+    /// Smallest prop artifact whose vocab fits `n_nodes`.
+    pub fn select_prop(&self, n_nodes: usize) -> Result<&PropMeta> {
+        self.prop
+            .iter()
+            .find(|m| m.vocab >= n_nodes)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no prop artifact fits {n_nodes} nodes (max vocab {})",
+                    self.prop.last().map(|m| m.vocab).unwrap_or(0)
+                )
+            })
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+/// Default artifacts directory: `$KCORE_EMBED_ARTIFACTS` or `artifacts/`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("KCORE_EMBED_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "sgns_v4096", "kind": "sgns", "file": "sgns_v4096.hlo.txt",
+         "vocab": 4096, "dim": 128, "batch": 512, "negatives": 5,
+         "scan_steps": 16, "block_b": 128},
+        {"name": "sgns_v1024", "kind": "sgns", "file": "sgns_v1024.hlo.txt",
+         "vocab": 1024, "dim": 128, "batch": 256, "negatives": 5,
+         "scan_steps": 16, "block_b": 64},
+        {"name": "prop_v1024", "kind": "prop", "file": "prop_v1024.hlo.txt",
+         "vocab": 1024, "dim": 128, "frontier": 256, "max_deg": 32,
+         "block_f": 64}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_and_select() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.sgns.len(), 2);
+        assert_eq!(m.prop.len(), 1);
+        // Sorted by vocab; selection picks the smallest fit.
+        assert_eq!(m.select_sgns(1000).unwrap().name, "sgns_v1024");
+        assert_eq!(m.select_sgns(1024).unwrap().name, "sgns_v1024");
+        assert_eq!(m.select_sgns(1025).unwrap().name, "sgns_v4096");
+        assert!(m.select_sgns(100_000).is_err());
+        assert_eq!(m.select_prop(500).unwrap().name, "prop_v1024");
+        assert!(m.select_prop(5000).is_err());
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let s = m.select_sgns(4000).unwrap();
+        assert_eq!(s.state_rows(), 8194);
+        assert_eq!(s.pairs_per_call(), 512 * 16);
+        assert_eq!(s.lane(), 8);
+        assert_eq!(
+            m.hlo_path(&s.file),
+            Path::new("/tmp/a").join("sgns_v4096.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("."), "{}").is_err());
+        assert!(Manifest::parse(Path::new("."), "{\"version\": 2, \"artifacts\": []}").is_err());
+        let bad_kind = r#"{"version":1,"artifacts":[{"kind":"x","name":"a","file":"f"}]}"#;
+        assert!(Manifest::parse(Path::new("."), bad_kind).is_err());
+        let missing = r#"{"version":1,"artifacts":[{"kind":"sgns","name":"a","file":"f"}]}"#;
+        assert!(Manifest::parse(Path::new("."), missing).is_err());
+    }
+}

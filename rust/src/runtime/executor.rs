@@ -1,0 +1,251 @@
+//! PJRT execution sessions for the AOT artifacts.
+//!
+//! [`SgnsSession`] owns the training state as a **device-resident**
+//! buffer: each `step` uploads only the (small) batch tensor and chains
+//! the state through `execute_b`, so the `[2V+2, D]` weight matrix never
+//! crosses the host boundary between steps (see DESIGN.md §Runtime).
+//! [`PropSession`] does the same for Jacobi mean-propagation rounds.
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{Manifest, PropMeta, SgnsMeta};
+
+/// Shared PJRT CPU client. One per process; sessions borrow it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, manifest: &Manifest, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = manifest.hlo_path(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("XLA-compiling {}", path.display()))
+    }
+
+    /// Compile the SGNS step for `meta` and return a fresh session.
+    pub fn sgns_session(&self, manifest: &Manifest, meta: &SgnsMeta) -> Result<SgnsSession<'_>> {
+        let exe = self.compile(manifest, &meta.file)?;
+        Ok(SgnsSession {
+            client: &self.client,
+            exe,
+            meta: meta.clone(),
+            state: None,
+            steps: 0,
+        })
+    }
+
+    /// Compile the propagation step for `meta` and return a session.
+    pub fn prop_session(&self, manifest: &Manifest, meta: &PropMeta) -> Result<PropSession<'_>> {
+        let exe = self.compile(manifest, &meta.file)?;
+        Ok(PropSession {
+            client: &self.client,
+            exe,
+            meta: meta.clone(),
+            state: None,
+        })
+    }
+}
+
+/// Device-resident SGNS training session.
+pub struct SgnsSession<'rt> {
+    client: &'rt xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    meta: SgnsMeta,
+    state: Option<xla::PjRtBuffer>,
+    steps: u64,
+}
+
+impl<'rt> SgnsSession<'rt> {
+    pub fn meta(&self) -> &SgnsMeta {
+        &self.meta
+    }
+
+    /// Upload the initial state. `w_in`/`w_out` are `n x dim` with
+    /// `n <= vocab`; rows `n..vocab` are padding the step never touches.
+    pub fn start(&mut self, n: usize, w_in: &[f32], w_out: &[f32]) -> Result<()> {
+        let (v, d) = (self.meta.vocab, self.meta.dim);
+        assert!(n <= v, "{n} nodes exceed artifact vocab {v}");
+        assert_eq!(w_in.len(), n * d);
+        assert_eq!(w_out.len(), n * d);
+        let rows = self.meta.state_rows();
+        let mut state = vec![0f32; rows * d];
+        state[..n * d].copy_from_slice(w_in);
+        state[v * d..v * d + n * d].copy_from_slice(w_out);
+        let buf = self
+            .client
+            .buffer_from_host_buffer(&state, &[rows, d], None)
+            .map_err(|e| anyhow!("uploading state: {e}"))?;
+        self.state = Some(buf);
+        self.steps = 0;
+        Ok(())
+    }
+
+    /// Run one super-batch (`scan_steps` micro-steps) on device. `idx` is
+    /// the `[S, B, 3+K]` i32 tensor, `lr` the per-micro-step rates.
+    pub fn step(&mut self, idx: &[i32], lr: &[f32]) -> Result<()> {
+        let m = &self.meta;
+        assert_eq!(idx.len(), m.scan_steps * m.batch * m.lane(), "batch shape");
+        assert_eq!(lr.len(), m.scan_steps);
+        let state = self
+            .state
+            .take()
+            .ok_or_else(|| anyhow!("step() before start()"))?;
+        let idx_buf = self
+            .client
+            .buffer_from_host_buffer(idx, &[m.scan_steps, m.batch, m.lane()], None)
+            .map_err(|e| anyhow!("uploading batch: {e}"))?;
+        let lr_buf = self
+            .client
+            .buffer_from_host_buffer(lr, &[m.scan_steps], None)
+            .map_err(|e| anyhow!("uploading lr: {e}"))?;
+        let outs = self
+            .exe
+            .execute_b(&[&state, &idx_buf, &lr_buf])
+            .map_err(|e| anyhow!("executing sgns step: {e}"))?;
+        let new_state = outs
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("sgns step returned no buffer"))?;
+        self.state = Some(new_state);
+        self.steps += 1;
+        Ok(())
+    }
+
+    pub fn steps_run(&self) -> u64 {
+        self.steps
+    }
+
+    /// Download the full state (blocking). Returns
+    /// (w_in `n x d`, w_out `n x d`, loss_sum, pair_count).
+    pub fn read_state(&self, n: usize) -> Result<(Vec<f32>, Vec<f32>, f64, f64)> {
+        let (v, d) = (self.meta.vocab, self.meta.dim);
+        let state = self
+            .state
+            .as_ref()
+            .ok_or_else(|| anyhow!("read_state() before start()"))?;
+        let lit = state
+            .to_literal_sync()
+            .map_err(|e| anyhow!("downloading state: {e}"))?;
+        let flat: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e}"))?;
+        assert_eq!(flat.len(), self.meta.state_rows() * d);
+        let w_in = flat[..n * d].to_vec();
+        let w_out = flat[v * d..v * d + n * d].to_vec();
+        let stats = &flat[2 * v * d..2 * v * d + d];
+        Ok((w_in, w_out, stats[0] as f64, stats[1] as f64))
+    }
+}
+
+/// Device-resident mean-propagation session.
+pub struct PropSession<'rt> {
+    client: &'rt xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    meta: PropMeta,
+    state: Option<xla::PjRtBuffer>,
+}
+
+/// One frontier's padded index tensors, reusable across Jacobi rounds.
+pub struct FrontierBuffers {
+    rows: xla::PjRtBuffer,
+    nbrs: xla::PjRtBuffer,
+    mask: xla::PjRtBuffer,
+}
+
+impl<'rt> PropSession<'rt> {
+    pub fn meta(&self) -> &PropMeta {
+        &self.meta
+    }
+
+    /// Upload the `n x dim` embedding state (rows `n..vocab` padding).
+    pub fn start(&mut self, n: usize, emb: &[f32]) -> Result<()> {
+        let (v, d) = (self.meta.vocab, self.meta.dim);
+        assert!(n <= v);
+        assert_eq!(emb.len(), n * d);
+        let mut state = vec![0f32; v * d];
+        state[..n * d].copy_from_slice(emb);
+        self.state = Some(
+            self.client
+                .buffer_from_host_buffer(&state, &[v, d], None)
+                .map_err(|e| anyhow!("uploading prop state: {e}"))?,
+        );
+        Ok(())
+    }
+
+    /// Upload a frontier: `rows[i]` is overwritten with the masked mean
+    /// of `nbrs[i, :]`. Padding lanes must point at a scratch row with an
+    /// all-zero mask.
+    pub fn upload_frontier(
+        &self,
+        rows: &[i32],
+        nbrs: &[i32],
+        mask: &[f32],
+    ) -> Result<FrontierBuffers> {
+        let (f, m) = (self.meta.frontier, self.meta.max_deg);
+        assert_eq!(rows.len(), f);
+        assert_eq!(nbrs.len(), f * m);
+        assert_eq!(mask.len(), f * m);
+        Ok(FrontierBuffers {
+            rows: self
+                .client
+                .buffer_from_host_buffer(rows, &[f], None)
+                .map_err(|e| anyhow!("uploading rows: {e}"))?,
+            nbrs: self
+                .client
+                .buffer_from_host_buffer(nbrs, &[f, m], None)
+                .map_err(|e| anyhow!("uploading nbrs: {e}"))?,
+            mask: self
+                .client
+                .buffer_from_host_buffer(mask, &[f, m], None)
+                .map_err(|e| anyhow!("uploading mask: {e}"))?,
+        })
+    }
+
+    /// One Jacobi round over an uploaded frontier.
+    pub fn step(&mut self, frontier: &FrontierBuffers) -> Result<()> {
+        let state = self
+            .state
+            .take()
+            .ok_or_else(|| anyhow!("step() before start()"))?;
+        let outs = self
+            .exe
+            .execute_b(&[&state, &frontier.rows, &frontier.nbrs, &frontier.mask])
+            .map_err(|e| anyhow!("executing prop step: {e}"))?;
+        self.state = Some(
+            outs.into_iter()
+                .next()
+                .and_then(|r| r.into_iter().next())
+                .ok_or_else(|| anyhow!("prop step returned no buffer"))?,
+        );
+        Ok(())
+    }
+
+    /// Download the embedding rows `0..n`.
+    pub fn read_state(&self, n: usize) -> Result<Vec<f32>> {
+        let d = self.meta.dim;
+        let state = self
+            .state
+            .as_ref()
+            .ok_or_else(|| anyhow!("read_state() before start()"))?;
+        let lit = state
+            .to_literal_sync()
+            .map_err(|e| anyhow!("downloading prop state: {e}"))?;
+        let flat: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e}"))?;
+        Ok(flat[..n * d].to_vec())
+    }
+}

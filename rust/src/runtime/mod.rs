@@ -1,0 +1,8 @@
+//! PJRT runtime: load the AOT HLO artifacts (`make artifacts`) and run
+//! them from rust with device-resident state. Python never runs here.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{default_artifacts_dir, Manifest, PropMeta, SgnsMeta};
+pub use executor::{PropSession, Runtime, SgnsSession};

@@ -1,0 +1,159 @@
+//! Vose alias method: O(1) sampling from an arbitrary discrete
+//! distribution after O(n) setup.
+//!
+//! Used for the word2vec-style unigram^0.75 negative-sampling table (one
+//! table per corpus) and the node2vec transition tables. For the graphs in
+//! this repo the table build is microseconds; draws dominate, hence the
+//! alias method rather than binary-searched CDFs.
+
+use super::rng::Rng;
+
+/// Pre-built alias table over `n` outcomes.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (not necessarily normalized).
+    ///
+    /// Panics if `weights` is empty or sums to zero/NaN.
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "alias table needs at least one weight");
+        let n = weights.len();
+        let sum: f64 = weights.iter().sum();
+        assert!(
+            sum > 0.0 && sum.is_finite(),
+            "weights must sum to a positive finite value, got {sum}"
+        );
+        let scale = n as f64 / sum;
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * scale).collect();
+        let mut alias = vec![0u32; n];
+
+        // Partition into under/over-full buckets.
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &p) in prob.iter().enumerate() {
+            assert!(p >= 0.0, "negative weight at {i}");
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s as usize] = l;
+            prob[l as usize] -= 1.0 - prob[s as usize];
+            if prob[l as usize] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // Numerical leftovers: remaining buckets are (approximately) full.
+        for i in small.into_iter().chain(large) {
+            prob[i as usize] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Unigram^alpha table over token counts (word2vec uses alpha = 0.75).
+    pub fn unigram(counts: &[u64], alpha: f64) -> Self {
+        let weights: Vec<f64> = counts.iter().map(|&c| (c as f64).powf(alpha)).collect();
+        Self::new(&weights)
+    }
+
+    /// Number of outcomes.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one outcome index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let i = rng.gen_index(self.prob.len());
+        if rng.gen_f64() < self.prob[i] {
+            i as u32
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(table: &AliasTable, draws: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0u64; table.len()];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng) as usize] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn single_outcome() {
+        let t = AliasTable::new(&[3.0]);
+        let mut rng = Rng::new(0);
+        for _ in 0..10 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn matches_weights() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let t = AliasTable::new(&w);
+        let emp = empirical(&t, 200_000, 1);
+        for (i, &e) in emp.iter().enumerate() {
+            let want = w[i] / 10.0;
+            assert!((e - want).abs() < 0.01, "outcome {i}: {e} vs {want}");
+        }
+    }
+
+    #[test]
+    fn zero_weights_never_drawn() {
+        let t = AliasTable::new(&[0.0, 1.0, 0.0, 1.0]);
+        let mut rng = Rng::new(2);
+        for _ in 0..5_000 {
+            let s = t.sample(&mut rng);
+            assert!(s == 1 || s == 3, "drew zero-weight outcome {s}");
+        }
+    }
+
+    #[test]
+    fn skewed_distribution() {
+        let mut w = vec![1.0; 100];
+        w[7] = 1000.0;
+        let t = AliasTable::new(&w);
+        let emp = empirical(&t, 100_000, 3);
+        assert!((emp[7] - 1000.0 / 1099.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn unigram_alpha_flattens() {
+        // alpha=0 -> uniform regardless of counts.
+        let t = AliasTable::unigram(&[1, 100, 10_000], 0.0);
+        let emp = empirical(&t, 90_000, 4);
+        for &e in &emp {
+            assert!((e - 1.0 / 3.0).abs() < 0.01, "{emp:?}");
+        }
+        // alpha=1 -> proportional.
+        let t = AliasTable::unigram(&[1, 1, 2], 1.0);
+        let emp = empirical(&t, 80_000, 5);
+        assert!((emp[2] - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive finite")]
+    fn rejects_all_zero() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+}

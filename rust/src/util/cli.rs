@@ -1,0 +1,237 @@
+//! Tiny command-line argument parser (no clap offline).
+//!
+//! Supports the shapes the `kcore-embed` binary and the bench harness
+//! need: a subcommand word, `--key value` options, `--flag` booleans, and
+//! positional arguments. Unknown-option detection is the caller's job via
+//! [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = subcommand if it
+    /// does not start with `-`).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.command = Some(it.next().unwrap());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` ends option parsing.
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    args.options
+                        .insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's own arguments (skipping argv[0]).
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.options
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.options.get(key).cloned()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        self.mark(key);
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected an unsigned integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        self.mark(key);
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected an unsigned integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        self.mark(key);
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected a number, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list of usize, e.g. `--cores 9,17,25`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        self.mark(key);
+        match self.options.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| format!("--{key}: bad list element {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Boolean flag presence.
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on any option/flag that no `get_*` call ever looked at.
+    pub fn finish(&self) -> Result<(), String> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown option(s): {}",
+                unknown
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: a bare token right after `--flag` is consumed as its
+        // value (schema-less parsing ambiguity); positionals therefore
+        // come before flags or after `--`.
+        let a = parse("bench pos1 --table 2 --seed 42 --verbose");
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.get_usize("table", 0).unwrap(), 2);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --lr=0.025 --name=x");
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.025);
+        assert_eq!(a.get_str("name", ""), "x");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_usize("walks", 15).unwrap(), 15);
+        assert_eq!(a.get_str("graph", "cora"), "cora");
+        assert!(!a.has_flag("verbose"));
+        assert_eq!(a.opt_str("out"), None);
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse("x --quiet --n 5");
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse("x --cores 9,17,25");
+        assert_eq!(a.get_usize_list("cores", &[]).unwrap(), vec![9, 17, 25]);
+        let b = parse("x");
+        assert_eq!(b.get_usize_list("cores", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+        let b = parse("x --lr xyz");
+        assert!(b.get_f64("lr", 0.0).is_err());
+    }
+
+    #[test]
+    fn unknown_options_detected() {
+        let a = parse("x --known 1 --unknown 2");
+        let _ = a.get_usize("known", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn no_subcommand_when_leading_dash() {
+        let a = parse("--help");
+        assert_eq!(a.command, None);
+        assert!(a.has_flag("help"));
+    }
+
+    #[test]
+    fn double_dash_ends_options() {
+        let a = parse("run -- --not-an-option");
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+}

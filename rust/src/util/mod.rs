@@ -1,0 +1,15 @@
+//! Infrastructure substrates: everything the offline build cannot pull
+//! from crates.io — PRNG, alias sampling, fork-join parallelism, JSON,
+//! CLI parsing, table/plot rendering, statistics, timing, and a mini
+//! property-testing harness.
+
+pub mod alias;
+pub mod cli;
+pub mod json;
+pub mod plot;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;

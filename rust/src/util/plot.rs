@@ -1,0 +1,132 @@
+//! ASCII scatter/line plots for regenerating the paper's figures in a
+//! terminal, plus CSV series dumps for external plotting.
+
+/// A named x/y series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+    pub marker: char,
+}
+
+impl Series {
+    pub fn new(name: &str, marker: char, points: Vec<(f64, f64)>) -> Series {
+        Series {
+            name: name.to_string(),
+            points,
+            marker,
+        }
+    }
+}
+
+/// Render series onto a `width x height` character grid with simple
+/// axis labels. Good enough to eyeball the curve shapes the paper plots.
+pub fn ascii_plot(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+) -> String {
+    let pts: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    if pts.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for &(x, y) in &s.points {
+            let cx = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = s.marker;
+        }
+    }
+    let ylab_w = 10;
+    for (r, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * r as f64 / (height - 1) as f64;
+        if r % 4 == 0 {
+            out.push_str(&format!("{yv:>9.2} |"));
+        } else {
+            out.push_str(&format!("{:>9} |", ""));
+        }
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>w$}+", "", w = ylab_w));
+    out.extend(std::iter::repeat('-').take(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "{:>w$}{:<10.2}{:>r$.2}\n",
+        "",
+        xmin,
+        xmax,
+        w = ylab_w + 1,
+        r = width.saturating_sub(10)
+    ));
+    out.push_str(&format!("x: {xlabel}, y: {ylabel}\n"));
+    for s in series {
+        out.push_str(&format!("  [{}] {}\n", s.marker, s.name));
+    }
+    out
+}
+
+/// Dump series as long-form CSV: `series,x,y`.
+pub fn series_csv(series: &[Series]) -> String {
+    let mut out = String::from("series,x,y\n");
+    for s in series {
+        for &(x, y) in &s.points {
+            out.push_str(&format!("{},{x},{y}\n", s.name));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plot_contains_markers_and_legend() {
+        let s = vec![
+            Series::new("f1", 'o', vec![(1.0, 58.0), (2.0, 59.0), (3.0, 66.0)]),
+            Series::new("time", 'x', vec![(1.0, 30.0), (3.0, 7.0)]),
+        ];
+        let p = ascii_plot("Fig 2", "core", "score", &s, 40, 12);
+        assert!(p.contains('o') && p.contains('x'));
+        assert!(p.contains("[o] f1"));
+        assert!(p.contains("x: core"));
+    }
+
+    #[test]
+    fn plot_handles_degenerate_ranges() {
+        let s = vec![Series::new("const", '*', vec![(1.0, 5.0), (1.0, 5.0)])];
+        let p = ascii_plot("t", "x", "y", &s, 20, 8);
+        assert!(p.contains('*'));
+        let empty: Vec<Series> = vec![];
+        assert!(ascii_plot("t", "x", "y", &empty, 20, 8).contains("no data"));
+    }
+
+    #[test]
+    fn csv_long_form() {
+        let s = vec![Series::new("a", 'o', vec![(1.0, 2.0)])];
+        assert_eq!(series_csv(&s), "series,x,y\na,1,2\n");
+    }
+}

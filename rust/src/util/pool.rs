@@ -1,0 +1,147 @@
+//! Minimal fork-join parallelism on std::thread (no rayon offline).
+//!
+//! The walk engine and batch builder are embarrassingly parallel over
+//! nodes/chunks; scoped threads with static chunking are all we need.
+//! Thread count defaults to `std::thread::available_parallelism`.
+
+/// Number of worker threads to use by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Map `f` over `items` in parallel, preserving order.
+///
+/// `f` must be `Sync` (shared by reference across workers); each item is
+/// processed exactly once. Chunking is static: `threads` contiguous
+/// slices, which is the right shape for our workloads (per-chunk RNG
+/// streams stay deterministic regardless of scheduling).
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+
+    std::thread::scope(|scope| {
+        for (ci, (items_chunk, out_chunk)) in items
+            .chunks(chunk)
+            .zip(out.chunks_mut(chunk))
+            .enumerate()
+        {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, (item, slot)) in
+                    items_chunk.iter().zip(out_chunk.iter_mut()).enumerate()
+                {
+                    *slot = Some(f(ci * chunk + j, item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+/// Run `f(chunk_index, range)` over `threads` contiguous ranges covering
+/// `[0, n)`, collecting the per-chunk results in order.
+///
+/// This is the "give every worker its own RNG stream and output buffer"
+/// primitive the walk engine is built on.
+pub fn parallel_chunks<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, std::ops::Range<usize>) -> R + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return vec![f(0, 0..n)];
+    }
+    let chunk = n.div_ceil(threads);
+    let ranges: Vec<std::ops::Range<usize>> = (0..threads)
+        .map(|i| (i * chunk)..((i + 1) * chunk).min(n))
+        .filter(|r| !r.is_empty())
+        .collect();
+    let mut out: Vec<Option<R>> = Vec::new();
+    out.resize_with(ranges.len(), || None);
+    std::thread::scope(|scope| {
+        for (slot, (ci, range)) in out.iter_mut().zip(ranges.into_iter().enumerate()) {
+            let f = &f;
+            scope.spawn(move || {
+                *slot = Some(f(ci, range));
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order_and_values() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_single_thread_fallback() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |_, &x| x + 1), vec![2, 3, 4]);
+        let empty: Vec<i32> = vec![];
+        assert!(parallel_map(&empty, 4, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn map_indices_are_global() {
+        let items = vec![0usize; 100];
+        let out = parallel_map(&items, 7, |i, _| i);
+        assert_eq!(out, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_visits_each_item_once() {
+        let counter = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..509).collect(); // prime-ish, uneven chunks
+        parallel_map(&items, 6, |_, _| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 509);
+    }
+
+    #[test]
+    fn chunks_cover_range_exactly() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for threads in [1usize, 2, 3, 8, 200] {
+                let ranges = parallel_chunks(n, threads, |_, r| r);
+                let mut covered = vec![false; n];
+                for r in ranges {
+                    for i in r {
+                        assert!(!covered[i], "overlap at {i}");
+                        covered[i] = true;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_results_in_order() {
+        let res = parallel_chunks(100, 4, |ci, r| (ci, r.start));
+        for w in res.windows(2) {
+            assert!(w[0].1 < w[1].1);
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Minimal property-based testing harness (no proptest crate offline).
+//!
+//! Usage:
+//! ```ignore
+//! forall("core number bounded by degree", 200, 0xBEEF, |rng| {
+//!     let g = random_graph(rng);
+//!     check_property(&g)    // -> Result<(), String>
+//! });
+//! ```
+//!
+//! Each case gets a child RNG derived from (seed, case index) so a
+//! failure message pinpoints the exact case; re-running with
+//! `replay(seed, index, f)` reproduces it deterministically. Shrinking is
+//! by *size schedule* rather than generic term rewriting: generators are
+//! encouraged to read [`CaseCtx::size`], which ramps from small to large,
+//! so the first failing case is usually near-minimal already.
+
+use super::rng::Rng;
+
+/// Context handed to each property case.
+pub struct CaseCtx {
+    pub rng: Rng,
+    /// Ramp value in [0, 1]: early cases are small, later cases large.
+    pub size: f64,
+    pub index: usize,
+}
+
+impl CaseCtx {
+    /// Scale an upper bound by the ramp: early cases stay tiny.
+    pub fn scaled(&self, min: usize, max: usize) -> usize {
+        min + ((max - min) as f64 * self.size) as usize
+    }
+}
+
+/// Run `cases` random cases of the property; panic with a reproducible
+/// report on the first failure.
+pub fn forall<F>(name: &str, cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut CaseCtx) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    for index in 0..cases {
+        let mut ctx = CaseCtx {
+            rng: root.fork(index as u64),
+            size: if cases <= 1 {
+                1.0
+            } else {
+                index as f64 / (cases - 1) as f64
+            },
+            index,
+        };
+        if let Err(msg) = prop(&mut ctx) {
+            panic!(
+                "property '{name}' failed at case {index}/{cases} \
+                 (seed={seed:#x}): {msg}\n\
+                 reproduce with replay({seed:#x}, {index}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case deterministically.
+pub fn replay<F>(seed: u64, index: usize, cases: usize, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut CaseCtx) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    let mut child = root.fork(0);
+    for i in 1..=index {
+        child = root.fork(i as u64);
+    }
+    let mut ctx = CaseCtx {
+        rng: child,
+        size: if cases <= 1 {
+            1.0
+        } else {
+            index as f64 / (cases - 1) as f64
+        },
+        index,
+    };
+    prop(&mut ctx)
+}
+
+/// Assert-style helper: turn a boolean + message into the Result the
+/// property functions return.
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivial", 50, 1, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        let mut sizes = Vec::new();
+        forall("ramp", 10, 2, |ctx| {
+            sizes.push(ctx.scaled(2, 100));
+            Ok(())
+        });
+        assert_eq!(sizes[0], 2);
+        assert_eq!(*sizes.last().unwrap(), 100);
+        assert!(sizes.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing' failed at case 3")]
+    fn failure_reports_case() {
+        forall("failing", 10, 3, |ctx| {
+            ensure(ctx.index != 3, || "boom".to_string())
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_case_rng() {
+        let mut seen = Vec::new();
+        forall("collect", 5, 42, |ctx| {
+            seen.push(ctx.rng.next_u64());
+            Ok(())
+        });
+        for (i, &want) in seen.iter().enumerate() {
+            replay(42, i, 5, |ctx| {
+                let got = ctx.rng.next_u64();
+                ensure(got == want, || format!("{got} != {want}"))
+            })
+            .unwrap();
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Statistics helpers: trial aggregation (mean ± std as the paper
+//! reports), histograms, and a small PCA used to regenerate the paper's
+//! embedding-visualization figures (Fig 5/6).
+
+/// Online mean/std accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct MeanStd {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl MeanStd {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut m = Self::new();
+        for &x in xs {
+            m.push(x);
+        }
+        m
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation (n-1); 0 for fewer than 2 samples.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+/// Histogram over integer keys (e.g. nodes per core index).
+pub fn int_histogram(xs: impl IntoIterator<Item = usize>) -> Vec<(usize, usize)> {
+    let mut map = std::collections::BTreeMap::new();
+    for x in xs {
+        *map.entry(x).or_insert(0usize) += 1;
+    }
+    map.into_iter().collect()
+}
+
+/// Principal component analysis via covariance + power iteration with
+/// deflation. Returns the top `k` components (unit vectors, `dim` each)
+/// and the data projected onto them, centered.
+///
+/// Good enough for the 2-D embedding scatter plots (Fig 5/6); not a
+/// general eigensolver.
+pub struct Pca {
+    pub components: Vec<Vec<f64>>, // k x dim
+    pub explained: Vec<f64>,       // eigenvalues
+}
+
+impl Pca {
+    pub fn fit(data: &[f32], n: usize, dim: usize, k: usize) -> Pca {
+        assert_eq!(data.len(), n * dim);
+        assert!(k <= dim && n > 1);
+        // Column means.
+        let mut mean = vec![0f64; dim];
+        for row in data.chunks_exact(dim) {
+            for (m, &x) in mean.iter_mut().zip(row) {
+                *m += x as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        // Covariance matrix (dim x dim). dim <= 128 here, so O(n d^2) is fine.
+        let mut cov = vec![0f64; dim * dim];
+        for row in data.chunks_exact(dim) {
+            for i in 0..dim {
+                let di = row[i] as f64 - mean[i];
+                for j in i..dim {
+                    let dj = row[j] as f64 - mean[j];
+                    cov[i * dim + j] += di * dj;
+                }
+            }
+        }
+        for i in 0..dim {
+            for j in i..dim {
+                let v = cov[i * dim + j] / (n - 1) as f64;
+                cov[i * dim + j] = v;
+                cov[j * dim + i] = v;
+            }
+        }
+        let mut components = Vec::with_capacity(k);
+        let mut explained = Vec::with_capacity(k);
+        let mut work = cov.clone();
+        for c in 0..k {
+            let (v, lambda) = power_iteration(&work, dim, 500, 1e-12, c as u64);
+            // Deflate: work -= lambda v v^T
+            for i in 0..dim {
+                for j in 0..dim {
+                    work[i * dim + j] -= lambda * v[i] * v[j];
+                }
+            }
+            components.push(v);
+            explained.push(lambda);
+        }
+        Pca {
+            components,
+            explained,
+        }
+    }
+
+    /// Project rows of `data` (n x dim f32) onto the fitted components.
+    pub fn transform(&self, data: &[f32], n: usize, dim: usize) -> Vec<Vec<f64>> {
+        assert_eq!(data.len(), n * dim);
+        // Re-center with the projection of the mean (components are linear;
+        // centering shifts all points equally, fine for visualization).
+        let mut mean = vec![0f64; dim];
+        for row in data.chunks_exact(dim) {
+            for (m, &x) in mean.iter_mut().zip(row) {
+                *m += x as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        data.chunks_exact(dim)
+            .map(|row| {
+                self.components
+                    .iter()
+                    .map(|comp| {
+                        row.iter()
+                            .zip(comp)
+                            .zip(&mean)
+                            .map(|((&x, &c), &m)| (x as f64 - m) * c)
+                            .sum()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+fn power_iteration(
+    mat: &[f64],
+    dim: usize,
+    iters: usize,
+    tol: f64,
+    seed: u64,
+) -> (Vec<f64>, f64) {
+    let mut rng = crate::util::rng::Rng::new(0xC0FFEE ^ seed);
+    let mut v: Vec<f64> = (0..dim).map(|_| rng.gen_f64() - 0.5).collect();
+    normalize(&mut v);
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let mut w = vec![0f64; dim];
+        for i in 0..dim {
+            let row = &mat[i * dim..(i + 1) * dim];
+            w[i] = row.iter().zip(&v).map(|(&a, &b)| a * b).sum();
+        }
+        let new_lambda: f64 = v.iter().zip(&w).map(|(&a, &b)| a * b).sum();
+        let norm = normalize(&mut w);
+        if norm < 1e-300 {
+            // Matrix is (numerically) zero in the remaining subspace.
+            return (v, 0.0);
+        }
+        let delta = (new_lambda - lambda).abs();
+        v = w;
+        lambda = new_lambda;
+        if delta < tol * lambda.abs().max(1.0) {
+            break;
+        }
+    }
+    (v, lambda)
+}
+
+fn normalize(v: &mut [f64]) -> f64 {
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mean_std_basics() {
+        let m = MeanStd::from_slice(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m.mean() - 5.0).abs() < 1e-12);
+        assert!((m.std() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(m.count(), 8);
+        let single = MeanStd::from_slice(&[3.0]);
+        assert_eq!(single.std(), 0.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = int_histogram(vec![1, 2, 2, 5, 5, 5]);
+        assert_eq!(h, vec![(1, 1), (2, 2), (5, 3)]);
+    }
+
+    #[test]
+    fn pca_recovers_dominant_axis() {
+        // Points stretched along a known direction in 8-D.
+        let dim = 8;
+        let n = 500;
+        let mut rng = Rng::new(42);
+        let axis: Vec<f64> = {
+            let mut a = vec![0.0; dim];
+            a[2] = 3.0 / 5.0;
+            a[5] = 4.0 / 5.0;
+            a
+        };
+        let mut data = vec![0f32; n * dim];
+        for r in 0..n {
+            let t = rng.gen_normal() * 10.0; // large variance along axis
+            for d in 0..dim {
+                data[r * dim + d] = (t * axis[d] + rng.gen_normal() * 0.1) as f32;
+            }
+        }
+        let pca = Pca::fit(&data, n, dim, 2);
+        let c0 = &pca.components[0];
+        let dot: f64 = c0.iter().zip(&axis).map(|(a, b)| a * b).sum();
+        assert!(dot.abs() > 0.99, "dot={dot}");
+        assert!(pca.explained[0] > 50.0 * pca.explained[1]);
+        // Projection variance along PC1 >> PC2.
+        let proj = pca.transform(&data, n, dim);
+        let v1 = MeanStd::from_slice(&proj.iter().map(|p| p[0]).collect::<Vec<_>>());
+        let v2 = MeanStd::from_slice(&proj.iter().map(|p| p[1]).collect::<Vec<_>>());
+        assert!(v1.std() > 20.0 * v2.std());
+    }
+
+    #[test]
+    fn pca_components_are_orthonormal() {
+        let mut rng = Rng::new(7);
+        let (n, dim) = (200, 6);
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.gen_normal() as f32).collect();
+        let pca = Pca::fit(&data, n, dim, 3);
+        for i in 0..3 {
+            let ni: f64 = pca.components[i].iter().map(|x| x * x).sum();
+            assert!((ni - 1.0).abs() < 1e-6);
+            for j in 0..i {
+                let d: f64 = pca.components[i]
+                    .iter()
+                    .zip(&pca.components[j])
+                    .map(|(a, b)| a * b)
+                    .sum();
+                assert!(d.abs() < 1e-4, "components {i},{j} not orthogonal: {d}");
+            }
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Paper-style ASCII tables + CSV emission for the bench harness.
+//!
+//! Every experiment renders its results through [`Table`] so the output
+//! lines up with the paper's tables (model column, F1 ± std, perf drop,
+//! time breakdown, speedup).
+
+/// Column-aligned text table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with padded columns, a separator under the header, and the
+    /// title on top.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&self.title);
+            out.push('\n');
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                let cell = &cells[i];
+                line.push_str(cell);
+                let pad = widths[i].saturating_sub(cell.chars().count());
+                if i + 1 < ncols {
+                    line.extend(std::iter::repeat(' ').take(pad));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.extend(std::iter::repeat('-').take(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering (RFC-ish: quotes cells containing commas/quotes).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// `mean (± std)` cell formatting like the paper's tables.
+pub fn mean_std_cell(mean: f64, std: f64, decimals: usize) -> String {
+    format!("{mean:.decimals$} (± {std:.decimals$})")
+}
+
+/// Speedup cell like the paper (`x2.7`).
+pub fn speedup_cell(baseline: f64, this: f64) -> String {
+    if this <= 0.0 {
+        return "-".to_string();
+    }
+    format!("x{:.1}", baseline / this)
+}
+
+/// Perf-drop cell relative to a baseline F1, in percent points as the
+/// paper reports it (positive = better than baseline).
+pub fn perf_drop_cell(baseline_f1: f64, this_f1: f64) -> String {
+    let d = this_f1 - baseline_f1;
+    format!("{d:+.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Table X", &["Model", "F1", "Speedup"]);
+        t.add_row(vec!["DeepWalk".into(), "58.35 (± 1.35)".into(), "".into()]);
+        t.add_row(vec!["3-core (Dw)".into(), "59.21 (± 0.9)".into(), "x2.7".into()]);
+        let s = t.render();
+        assert!(s.contains("Table X"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5); // title, header, separator, 2 rows
+        // header and rows start their 2nd column at the same offset
+        let off = lines[1].find("F1").unwrap();
+        assert_eq!(&lines[4][off..off + 2], "59");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.add_row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.add_row(vec!["x,y".into(), "q\"uote".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n\"x,y\",\"q\"\"uote\"\n");
+    }
+
+    #[test]
+    fn cells() {
+        assert_eq!(mean_std_cell(58.351, 1.349, 2), "58.35 (± 1.35)");
+        assert_eq!(speedup_cell(37.45, 14.05), "x2.7");
+        assert_eq!(perf_drop_cell(58.35, 59.21), "+0.9");
+        assert_eq!(perf_drop_cell(71.67, 63.16), "-8.5");
+    }
+}

@@ -1,0 +1,106 @@
+//! Wall-clock timing helpers for the experiment pipeline.
+//!
+//! The paper reports a per-phase breakdown (core decomposition /
+//! propagation / embedding / total); [`PhaseTimer`] accumulates named
+//! phase durations so the bench harness can print the same columns.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named phase durations.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimer {
+    phases: BTreeMap<String, Duration>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and accrue its duration under `phase`.
+    pub fn time<R>(&mut self, phase: &str, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.add(phase, t.elapsed());
+        r
+    }
+
+    pub fn add(&mut self, phase: &str, d: Duration) {
+        *self.phases.entry(phase.to_string()).or_default() += d;
+    }
+
+    pub fn secs(&self, phase: &str) -> f64 {
+        self.phases
+            .get(phase)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.phases.values().map(|d| d.as_secs_f64()).sum()
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.phases.iter().map(|(k, v)| (k.as_str(), v.as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_phases() {
+        let mut t = PhaseTimer::new();
+        let x = t.time("work", || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(x, 42);
+        t.time("work", || std::thread::sleep(Duration::from_millis(5)));
+        t.add("other", Duration::from_millis(3));
+        assert!(t.secs("work") >= 0.009);
+        assert!(t.secs("other") >= 0.003);
+        assert!(t.secs("missing") == 0.0);
+        assert!(t.total_secs() >= t.secs("work"));
+        assert_eq!(t.phases().count(), 2);
+    }
+
+    #[test]
+    fn stopwatch_restart() {
+        let mut s = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let first = s.restart();
+        assert!(first.as_secs_f64() > 0.0);
+        assert!(s.elapsed_secs() < first.as_secs_f64() + 0.5);
+    }
+}

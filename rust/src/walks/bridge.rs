@@ -1,0 +1,208 @@
+//! Bridge walks — the paper's §4 proposed fix for disconnected k0-cores.
+//!
+//! When the initially embedded k0-core is disconnected (the Fig 6
+//! pathology), SkipGram never co-observes nodes of different components,
+//! so their relative placement is arbitrary and the propagation step
+//! stretches all variance along the inter-cloud axis. The paper suggests
+//! "generating random walks between the connected areas": we realize
+//! that by routing shortest paths between component boundary nodes
+//! through the FULL graph, contracting each path to its core nodes, and
+//! splicing short in-component random extensions on both ends. The
+//! resulting token sequences give SkipGram genuine cross-component
+//! context at a rate proportional to real graph proximity.
+
+use crate::graph::{connectivity, Graph};
+use crate::util::rng::Rng;
+
+use super::corpus::Corpus;
+use super::engine::uniform_walk;
+
+/// Telemetry from bridge-walk generation.
+#[derive(Debug, Clone, Default)]
+pub struct BridgeStats {
+    pub components: usize,
+    pub walks_added: usize,
+    pub mean_path_len: f64,
+}
+
+/// Generate `n_bridges` bridge walks over the core subgraph `core` whose
+/// nodes map to full-graph ids via `core_to_full` (new id -> old id).
+/// Walks are emitted in CORE id space so they splice directly into the
+/// core's training corpus. Returns empty output if the core is connected.
+pub fn bridge_walks(
+    full: &Graph,
+    core: &Graph,
+    core_to_full: &[u32],
+    n_bridges: usize,
+    ext_len: usize,
+    rng: &mut Rng,
+) -> (Corpus, BridgeStats) {
+    assert_eq!(core.n_nodes(), core_to_full.len());
+    let comp = connectivity::connected_components(core);
+    let n_comp = comp.iter().map(|&c| c as usize + 1).max().unwrap_or(0);
+    let mut out = Corpus::new(core.n_nodes());
+    let mut stats = BridgeStats {
+        components: n_comp,
+        ..Default::default()
+    };
+    if n_comp <= 1 || n_bridges == 0 {
+        return (out, stats);
+    }
+    // full-graph id -> core id (or MAX).
+    let mut full_to_core = vec![u32::MAX; full.n_nodes()];
+    for (new, &old) in core_to_full.iter().enumerate() {
+        full_to_core[old as usize] = new as u32;
+    }
+    // Nodes per component.
+    let mut by_comp: Vec<Vec<u32>> = vec![Vec::new(); n_comp];
+    for (v, &c) in comp.iter().enumerate() {
+        by_comp[c as usize].push(v as u32);
+    }
+
+    let mut path_len_sum = 0usize;
+    let mut ext_buf = Vec::with_capacity(ext_len);
+    for i in 0..n_bridges {
+        // Round-robin component pairs so every pair gets bridged.
+        let ca = i % n_comp;
+        let cb = (ca + 1 + (i / n_comp) % (n_comp - 1)) % n_comp;
+        let a_core = *rng.choose(&by_comp[ca]);
+        let b_core = *rng.choose(&by_comp[cb]);
+        let a_full = core_to_full[a_core as usize];
+        let b_full = core_to_full[b_core as usize];
+        let Some(path) = connectivity::bfs_path(full, a_full, b_full) else {
+            continue; // different full-graph components: nothing to bridge
+        };
+        path_len_sum += path.len();
+        // Contract to core tokens, in order.
+        let mut walk: Vec<u32> = Vec::with_capacity(ext_len * 2 + path.len());
+        // Random in-component extension before...
+        uniform_walk(core, a_core, ext_len, rng, &mut ext_buf);
+        ext_buf.reverse();
+        walk.extend_from_slice(&ext_buf[..ext_buf.len().saturating_sub(1)]);
+        walk.extend(
+            path.iter()
+                .map(|&f| full_to_core[f as usize])
+                .filter(|&c| c != u32::MAX),
+        );
+        // ...and after the bridge.
+        uniform_walk(core, b_core, ext_len, rng, &mut ext_buf);
+        walk.extend_from_slice(&ext_buf[1..]);
+        if walk.len() >= 2 {
+            out.push_walk(&walk);
+            stats.walks_added += 1;
+        }
+    }
+    if stats.walks_added > 0 {
+        stats.mean_path_len = path_len_sum as f64 / stats.walks_added as f64;
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    /// Two K4s joined only through a low-core path — the miniature Fig 6.
+    fn two_blob_graph() -> (Graph, Graph, Vec<u32>) {
+        let mut edges = Vec::new();
+        for i in 0..4u32 {
+            for j in (i + 1)..4 {
+                edges.push((i, j));
+                edges.push((i + 4, j + 4));
+            }
+        }
+        edges.push((0, 8));
+        edges.push((8, 9));
+        edges.push((9, 4));
+        let full = Graph::from_edges(10, &edges);
+        let d = crate::cores::core_decomposition(&full);
+        assert_eq!(d.degeneracy, 3);
+        let (core, map) = crate::cores::subcore::k_core_subgraph(&full, &d, 3);
+        assert!(!connectivity::is_connected(&core));
+        (full, core, map)
+    }
+
+    #[test]
+    fn bridges_connect_components() {
+        let (full, core, map) = two_blob_graph();
+        let mut rng = Rng::new(1);
+        let (corpus, stats) = bridge_walks(&full, &core, &map, 10, 4, &mut rng);
+        assert_eq!(stats.components, 2);
+        assert_eq!(stats.walks_added, 10);
+        assert!(stats.mean_path_len >= 3.0);
+        let comp = connectivity::connected_components(&core);
+        // Every bridge walk must contain tokens from BOTH components.
+        for w in corpus.walks() {
+            let mut seen = [false; 2];
+            for &t in w {
+                seen[comp[t as usize] as usize] = true;
+            }
+            assert!(seen[0] && seen[1], "walk {w:?} does not bridge");
+        }
+    }
+
+    #[test]
+    fn connected_core_yields_nothing() {
+        let g = generators::complete(6);
+        let map: Vec<u32> = (0..6).collect();
+        let mut rng = Rng::new(2);
+        let (corpus, stats) = bridge_walks(&g, &g, &map, 5, 3, &mut rng);
+        assert_eq!(stats.components, 1);
+        assert_eq!(corpus.n_walks(), 0);
+    }
+
+    #[test]
+    fn bridging_improves_cross_component_similarity() {
+        // Train SGNS with and without bridge walks on the two-blob core;
+        // with bridges, the two blobs should sit measurably closer
+        // (higher cross-component cosine).
+        use crate::embed::{batches::SgnsParams, native};
+        use crate::walks::{generate_walks, WalkParams, WalkSchedule};
+
+        let (full, core, map) = two_blob_graph();
+        let comp = connectivity::connected_components(&core);
+        let base = generate_walks(
+            &core,
+            &WalkSchedule::uniform(core.n_nodes(), 40),
+            &WalkParams {
+                walk_length: 8,
+                seed: 3,
+                threads: 1,
+            },
+        );
+        let params = SgnsParams {
+            dim: 16,
+            window: 3,
+            epochs: 3,
+            seed: 9,
+            ..Default::default()
+        };
+        let cross_sim = |emb: &crate::embed::Embedding| -> f64 {
+            let mut s = 0f64;
+            let mut n = 0f64;
+            for a in 0..core.n_nodes() as u32 {
+                for b in 0..core.n_nodes() as u32 {
+                    if comp[a as usize] != comp[b as usize] {
+                        s += emb.cosine(a, b) as f64;
+                        n += 1.0;
+                    }
+                }
+            }
+            s / n
+        };
+        let plain = native::train_native(&base, core.n_nodes(), &params);
+
+        let mut rng = Rng::new(4);
+        let (bridges, _) = bridge_walks(&full, &core, &map, 60, 4, &mut rng);
+        let mut with = base.clone();
+        with.append(&bridges);
+        let bridged = native::train_native(&with, core.n_nodes(), &params);
+
+        let (s_plain, s_bridged) = (cross_sim(&plain.w_in), cross_sim(&bridged.w_in));
+        assert!(
+            s_bridged > s_plain + 0.05,
+            "bridging did not pull clouds together: {s_plain} -> {s_bridged}"
+        );
+    }
+}

@@ -1,0 +1,119 @@
+//! CoreWalk: core-adaptive walk scheduling (the paper's §2.1).
+//!
+//! Equation 13: `n_v = max(floor(n * k_v / k_degeneracy), 1)` — nodes in
+//! denser cores (more intricate context) get more walks; the many
+//! low-core nodes get few, shrinking the SkipGram corpus drastically at
+//! small quality cost.
+
+use crate::cores::CoreDecomposition;
+
+use super::engine::WalkSchedule;
+
+/// Eq. 13 schedule. `n_max` is the paper's `n` (walks for nodes in the
+/// degeneracy core; the DeepWalk default is 15).
+pub fn corewalk_schedule(d: &CoreDecomposition, n_max: u32) -> WalkSchedule {
+    assert!(n_max >= 1);
+    let kd = d.degeneracy.max(1);
+    let counts = d
+        .core
+        .iter()
+        .map(|&k| ((n_max as u64 * k as u64) / kd as u64).max(1) as u32)
+        .collect();
+    WalkSchedule { counts }
+}
+
+/// Reduction factor vs the uniform DeepWalk schedule: paper's headline
+/// corpus shrink (also Fig 1's underlying data).
+pub fn walk_reduction(d: &CoreDecomposition, n_max: u32) -> f64 {
+    let adaptive = corewalk_schedule(d, n_max).total_walks() as f64;
+    let uniform = (d.core.len() as u64 * n_max as u64) as f64;
+    if uniform == 0.0 {
+        1.0
+    } else {
+        adaptive / uniform
+    }
+}
+
+/// Fig 1 data: (core index k, walks per node with that core index).
+pub fn walks_per_core(d: &CoreDecomposition, n_max: u32) -> Vec<(u32, u32)> {
+    let kd = d.degeneracy.max(1);
+    (0..=d.degeneracy)
+        .map(|k| (k, ((n_max as u64 * k as u64) / kd as u64).max(1) as u32))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cores::core_decomposition;
+    use crate::graph::generators;
+    use crate::util::proptest::{ensure, forall};
+
+    #[test]
+    fn formula_matches_eq13() {
+        // Synthetic decomposition: degeneracy 26, n = 15 (paper's Fig 1).
+        let d = CoreDecomposition {
+            core: vec![0, 1, 2, 13, 25, 26],
+            degeneracy: 26,
+            order: vec![],
+        };
+        let s = corewalk_schedule(&d, 15);
+        // floor(15*k/26) clamped at >= 1.
+        assert_eq!(s.counts, vec![1, 1, 1, 7, 14, 15]);
+    }
+
+    #[test]
+    fn top_core_gets_n_max() {
+        let g = generators::complete(8);
+        let d = core_decomposition(&g);
+        let s = corewalk_schedule(&d, 15);
+        assert!(s.counts.iter().all(|&c| c == 15));
+    }
+
+    #[test]
+    fn reduction_below_one_on_heterogeneous_graph() {
+        let g = generators::facebook_like(3);
+        let d = core_decomposition(&g);
+        let r = walk_reduction(&d, 15);
+        // Paper reports ~x3 speedup from CoreWalk alone on Facebook.
+        assert!(r < 0.6, "reduction only {r}");
+        assert!(r > 0.02);
+    }
+
+    #[test]
+    fn walks_per_core_is_monotone() {
+        let g = generators::facebook_like(4);
+        let d = core_decomposition(&g);
+        let w = walks_per_core(&d, 15);
+        assert_eq!(w.first().unwrap().1, 1);
+        assert_eq!(w.last().unwrap().1, 15);
+        assert!(w.windows(2).all(|p| p[0].1 <= p[1].1));
+    }
+
+    #[test]
+    fn property_bounds_and_monotonicity() {
+        forall("1 <= n_v <= n_max, monotone in core", 40, 0x57A1, |ctx| {
+            let n = ctx.scaled(5, 150);
+            let m = (2 * n).min(n * (n - 1) / 2);
+            let g = generators::erdos_renyi_gnm(n, m, &mut ctx.rng);
+            let d = core_decomposition(&g);
+            let n_max = 1 + ctx.rng.gen_index(20) as u32;
+            let s = corewalk_schedule(&d, n_max);
+            for v in 0..n {
+                ensure(
+                    (1..=n_max).contains(&s.counts[v]),
+                    || format!("n_v={} out of [1,{n_max}]", s.counts[v]),
+                )?;
+                for u in 0..n {
+                    if d.core[u] <= d.core[v] && s.counts[u] > s.counts[v] {
+                        return Err(format!(
+                            "monotonicity violated: core {} -> {} walks, core {} -> {}",
+                            d.core[u], s.counts[u], d.core[v], s.counts[v]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,302 @@
+//! Walk corpus: the flattened token stream the SkipGram model trains on.
+//!
+//! Walks are stored back-to-back in one `Vec<u32>` with an offsets array
+//! (CSR-style), so a github-scale corpus (~17M tokens) is two contiguous
+//! allocations. Pair extraction streams windows over walks without
+//! materializing the (much larger) pair list.
+
+use crate::util::rng::Rng;
+
+/// A set of random walks over nodes `0..n_nodes`.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    n_nodes: usize,
+    tokens: Vec<u32>,
+    offsets: Vec<usize>, // n_walks + 1
+}
+
+impl Corpus {
+    pub fn new(n_nodes: usize) -> Corpus {
+        Corpus {
+            n_nodes,
+            tokens: Vec::new(),
+            offsets: vec![0],
+        }
+    }
+
+    /// Build from pre-flattened parts (used by the parallel walk engine).
+    pub fn from_parts(n_nodes: usize, tokens: Vec<u32>, offsets: Vec<usize>) -> Corpus {
+        assert!(!offsets.is_empty() && offsets[0] == 0);
+        assert_eq!(*offsets.last().unwrap(), tokens.len());
+        debug_assert!(tokens.iter().all(|&t| (t as usize) < n_nodes));
+        Corpus {
+            n_nodes,
+            tokens,
+            offsets,
+        }
+    }
+
+    pub fn push_walk(&mut self, walk: &[u32]) {
+        self.tokens.extend_from_slice(walk);
+        self.offsets.push(self.tokens.len());
+    }
+
+    /// Merge another corpus (same node space) into this one.
+    pub fn append(&mut self, other: &Corpus) {
+        assert_eq!(self.n_nodes, other.n_nodes);
+        let base = self.tokens.len();
+        self.tokens.extend_from_slice(&other.tokens);
+        self.offsets
+            .extend(other.offsets[1..].iter().map(|&o| o + base));
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn n_walks(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn walk(&self, i: usize) -> &[u32] {
+        &self.tokens[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    pub fn walks(&self) -> impl Iterator<Item = &[u32]> {
+        (0..self.n_walks()).map(move |i| self.walk(i))
+    }
+
+    /// Token frequency per node (for the unigram^0.75 negative table).
+    pub fn node_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.n_nodes];
+        for &t in &self.tokens {
+            counts[t as usize] += 1;
+        }
+        counts
+    }
+
+    /// Shuffle walk order in place (DeepWalk shuffles between epochs);
+    /// tokens within a walk keep their order.
+    pub fn shuffle_walks(&mut self, rng: &mut Rng) {
+        let mut order: Vec<usize> = (0..self.n_walks()).collect();
+        rng.shuffle(&mut order);
+        let mut tokens = Vec::with_capacity(self.tokens.len());
+        let mut offsets = Vec::with_capacity(self.offsets.len());
+        offsets.push(0);
+        for &w in &order {
+            tokens.extend_from_slice(self.walk(w));
+            offsets.push(tokens.len());
+        }
+        self.tokens = tokens;
+        self.offsets = offsets;
+    }
+
+    /// Exact number of (center, context) pairs a full window-`w` sweep
+    /// emits (deterministic window, both directions).
+    pub fn exact_pair_count(&self, window: usize) -> u64 {
+        let mut total = 0u64;
+        for i in 0..self.n_walks() {
+            let l = self.offsets[i + 1] - self.offsets[i];
+            for c in 0..l {
+                total += (c.min(window) + (l - 1 - c).min(window)) as u64;
+            }
+        }
+        total
+    }
+}
+
+/// Streaming skip-gram pair generator with word2vec's *dynamic window*:
+/// for each center position a radius `r` is drawn uniformly in
+/// `1..=window`, and all tokens within `r` positions (both sides) become
+/// contexts. This both subsamples distant pairs (like gensim) and keeps
+/// the pair stream O(1) in memory.
+pub struct PairStream<'a> {
+    corpus: &'a Corpus,
+    window: usize,
+    rng: Rng,
+    walk_idx: usize,
+    center: usize, // position within walk
+    radius: usize,
+    ctx_off: isize, // current context offset in -r..=r, skipping 0
+}
+
+impl<'a> PairStream<'a> {
+    pub fn new(corpus: &'a Corpus, window: usize, rng: Rng) -> Self {
+        assert!(window >= 1);
+        let mut s = PairStream {
+            corpus,
+            window,
+            rng,
+            walk_idx: 0,
+            center: 0,
+            radius: 0,
+            ctx_off: 0,
+        };
+        s.begin_center();
+        s
+    }
+
+    fn begin_center(&mut self) {
+        // Called with (walk_idx, center) pointing at a new center token;
+        // draws its radius and resets the context cursor.
+        if self.walk_idx < self.corpus.n_walks() {
+            self.radius = 1 + self.rng.gen_index(self.window);
+            self.ctx_off = -(self.radius as isize);
+        }
+    }
+
+    fn advance_center(&mut self) {
+        loop {
+            self.center += 1;
+            if self.walk_idx >= self.corpus.n_walks() {
+                return;
+            }
+            if self.center >= self.corpus.walk(self.walk_idx).len() {
+                self.walk_idx += 1;
+                self.center = 0;
+                if self.walk_idx >= self.corpus.n_walks() {
+                    return;
+                }
+            }
+            break;
+        }
+        self.begin_center();
+    }
+}
+
+impl<'a> Iterator for PairStream<'a> {
+    type Item = (u32, u32);
+
+    fn next(&mut self) -> Option<(u32, u32)> {
+        loop {
+            if self.walk_idx >= self.corpus.n_walks() {
+                return None;
+            }
+            let walk = self.corpus.walk(self.walk_idx);
+            if walk.is_empty() {
+                self.walk_idx += 1;
+                self.center = 0;
+                if self.walk_idx < self.corpus.n_walks() {
+                    self.begin_center();
+                }
+                continue;
+            }
+            if self.ctx_off > self.radius as isize {
+                self.advance_center();
+                continue;
+            }
+            let off = self.ctx_off;
+            self.ctx_off += 1;
+            if off == 0 {
+                continue;
+            }
+            let pos = self.center as isize + off;
+            if pos < 0 || pos >= walk.len() as isize {
+                continue;
+            }
+            return Some((walk[self.center], walk[pos as usize]));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus_of(walks: &[&[u32]], n: usize) -> Corpus {
+        let mut c = Corpus::new(n);
+        for w in walks {
+            c.push_walk(w);
+        }
+        c
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let c = corpus_of(&[&[0, 1, 2], &[3, 4]], 5);
+        assert_eq!(c.n_walks(), 2);
+        assert_eq!(c.n_tokens(), 5);
+        assert_eq!(c.walk(0), &[0, 1, 2]);
+        assert_eq!(c.walk(1), &[3, 4]);
+        assert_eq!(c.node_counts(), vec![1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn append_merges() {
+        let mut a = corpus_of(&[&[0, 1]], 4);
+        let b = corpus_of(&[&[2], &[3, 3]], 4);
+        a.append(&b);
+        assert_eq!(a.n_walks(), 3);
+        assert_eq!(a.walk(2), &[3, 3]);
+        assert_eq!(a.node_counts(), vec![1, 1, 1, 2]);
+    }
+
+    #[test]
+    fn shuffle_preserves_walk_integrity() {
+        let mut rng = Rng::new(3);
+        let walks: Vec<Vec<u32>> = (0..50).map(|i| vec![i, i, i]).collect();
+        let mut c = Corpus::new(50);
+        for w in &walks {
+            c.push_walk(w);
+        }
+        c.shuffle_walks(&mut rng);
+        assert_eq!(c.n_walks(), 50);
+        let mut seen = vec![false; 50];
+        for w in c.walks() {
+            assert_eq!(w.len(), 3);
+            assert!(w.iter().all(|&t| t == w[0]));
+            assert!(!seen[w[0] as usize]);
+            seen[w[0] as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn pair_stream_covers_dynamic_windows() {
+        // With window=1 the dynamic radius is always 1: pairs are exactly
+        // adjacent tokens, both directions.
+        let c = corpus_of(&[&[0, 1, 2]], 3);
+        let pairs: Vec<(u32, u32)> =
+            PairStream::new(&c, 1, Rng::new(1)).collect();
+        let expect = vec![(0, 1), (1, 0), (1, 2), (2, 1)];
+        assert_eq!(pairs, expect);
+    }
+
+    #[test]
+    fn pair_stream_window_bounds() {
+        let c = corpus_of(&[&[0, 1, 2, 3, 4, 5, 6, 7]], 8);
+        for (center, ctx) in PairStream::new(&c, 3, Rng::new(2)) {
+            let d = (center as i64 - ctx as i64).abs();
+            assert!((1..=3).contains(&d), "pair ({center},{ctx}) distance {d}");
+        }
+    }
+
+    #[test]
+    fn pair_stream_count_matches_exact_when_window_1() {
+        let c = corpus_of(&[&[0, 1, 2], &[3], &[4, 0]], 5);
+        let n = PairStream::new(&c, 1, Rng::new(7)).count() as u64;
+        assert_eq!(n, c.exact_pair_count(1));
+    }
+
+    #[test]
+    fn pair_stream_handles_empty_and_singleton_walks() {
+        let mut c = Corpus::new(3);
+        c.push_walk(&[]);
+        c.push_walk(&[1]);
+        c.push_walk(&[0, 2]);
+        let pairs: Vec<(u32, u32)> = PairStream::new(&c, 4, Rng::new(5)).collect();
+        assert_eq!(pairs, vec![(0, 2), (2, 0)]);
+    }
+
+    #[test]
+    fn exact_pair_count_formula() {
+        // Walk of length 4, window 2:
+        // pos0: min(0,2)+min(3,2)=2 ; pos1: 1+2=3 ; pos2: 2+1=3 ; pos3: 2+0=2
+        let c = corpus_of(&[&[0, 1, 2, 3]], 4);
+        assert_eq!(c.exact_pair_count(2), 10);
+    }
+}

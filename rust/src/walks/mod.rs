@@ -1,0 +1,12 @@
+//! Random-walk engine: uniform DeepWalk walks, the paper's CoreWalk
+//! adaptive schedule (§2.1, eq. 13), node2vec biased walks, and the walk
+//! corpus / streaming skip-gram pair extraction.
+
+pub mod bridge;
+pub mod corewalk;
+pub mod corpus;
+pub mod engine;
+pub mod node2vec;
+
+pub use corpus::{Corpus, PairStream};
+pub use engine::{generate_walks, WalkParams, WalkSchedule};

@@ -1,0 +1,170 @@
+//! End-to-end integration over the REAL AOT artifacts: rust loads the
+//! HLO emitted by `make artifacts`, compiles it on the PJRT CPU client,
+//! and trains/propagates. Requires `artifacts/` to exist (the Makefile
+//! `test` target builds it first).
+
+use kcore_embed::cores::core_decomposition;
+use kcore_embed::embed::{batches::SgnsParams, native, trainer, Embedding};
+use kcore_embed::graph::generators;
+use kcore_embed::propagate::{mean, pjrt as prop_pjrt, PropagationParams};
+use kcore_embed::runtime::{default_artifacts_dir, Manifest, Runtime};
+use kcore_embed::util::rng::Rng;
+use kcore_embed::walks::{generate_walks, WalkParams, WalkSchedule};
+
+fn manifest() -> Manifest {
+    Manifest::load(&default_artifacts_dir()).expect("run `make artifacts` before cargo test")
+}
+
+fn small_params() -> SgnsParams {
+    SgnsParams {
+        dim: 128,
+        window: 3,
+        negatives: 5,
+        lr0: 0.05,
+        lr_min: 1e-4,
+        epochs: 1,
+        seed: 42,
+    }
+}
+
+#[test]
+fn sgns_artifact_trains_and_loss_decreases() {
+    let rt = Runtime::cpu().unwrap();
+    let m = manifest();
+    let g = generators::ring(64);
+    let corpus = generate_walks(
+        &g,
+        &WalkSchedule::uniform(64, 30),
+        &WalkParams {
+            walk_length: 16,
+            seed: 1,
+            threads: 2,
+        },
+    );
+    let r = trainer::train_pjrt(&rt, &m, &corpus, 64, &small_params(), 4).unwrap();
+    assert!(r.n_pairs > 10_000, "only {} pairs", r.n_pairs);
+    assert!(r.n_dispatches > 2);
+    assert!(r.loss_curve.len() >= 2);
+    let first = r.loss_curve.first().unwrap().mean_loss;
+    let last = r.loss_curve.last().unwrap().mean_loss;
+    assert!(
+        last < first * 0.9,
+        "loss did not decrease: {first} -> {last} ({:?})",
+        r.loss_curve
+    );
+    // Structure check: ring neighbours more similar than antipodes.
+    let (mut adj, mut far) = (0f64, 0f64);
+    for v in 0..64u32 {
+        adj += r.w_in.cosine(v, (v + 1) % 64) as f64;
+        far += r.w_in.cosine(v, (v + 32) % 64) as f64;
+    }
+    assert!(
+        adj / 64.0 > far / 64.0 + 0.15,
+        "adjacent {} vs antipodal {}",
+        adj / 64.0,
+        far / 64.0
+    );
+}
+
+#[test]
+fn pjrt_and_native_trainers_agree_on_quality() {
+    // Not bit-identical (different pair/negative streams), but both must
+    // learn the same structure to a comparable degree.
+    let rt = Runtime::cpu().unwrap();
+    let m = manifest();
+    let mut rng = Rng::new(9);
+    let (g, labels) = generators::stochastic_block_model(&[40, 40], 0.5, 0.02, &mut rng);
+    let corpus = generate_walks(
+        &g,
+        &WalkSchedule::uniform(g.n_nodes(), 20),
+        &WalkParams {
+            walk_length: 12,
+            seed: 2,
+            threads: 2,
+        },
+    );
+    let params = small_params();
+    let pj = trainer::train_pjrt(&rt, &m, &corpus, g.n_nodes(), &params, 0).unwrap();
+    let nat = native::train_native(&corpus, g.n_nodes(), &params);
+
+    // Within/between community cosine separation for both embeddings.
+    let sep = |e: &Embedding| -> f64 {
+        let (mut win, mut btw) = (0f64, 0f64);
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            let a = rng.gen_index(80) as u32;
+            let b = rng.gen_index(80) as u32;
+            if a == b {
+                continue;
+            }
+            let c = e.cosine(a, b) as f64;
+            if labels[a as usize] == labels[b as usize] {
+                win += c;
+            } else {
+                btw += c;
+            }
+        }
+        win - btw
+    };
+    let sep_pj = sep(&pj.w_in);
+    let sep_nat = sep(&nat.w_in);
+    assert!(sep_pj > 100.0, "pjrt separation too weak: {sep_pj}");
+    assert!(sep_nat > 100.0, "native separation too weak: {sep_nat}");
+    let ratio = sep_pj / sep_nat;
+    assert!(
+        (0.4..2.5).contains(&ratio),
+        "pjrt/native separation ratio {ratio} ({sep_pj} vs {sep_nat})"
+    );
+}
+
+#[test]
+fn prop_artifact_matches_native_propagation() {
+    let rt = Runtime::cpu().unwrap();
+    let m = manifest();
+    // K6 core + shells, small enough for one frontier chunk => exact
+    // Jacobi on both paths.
+    let mut edges = generators::complete(6).edges().collect::<Vec<_>>();
+    for v in 6..40u32 {
+        // attach each node to two earlier nodes
+        edges.push((v, v % 6));
+        edges.push((v, (v + 3) % 6));
+    }
+    let g = kcore_embed::graph::Graph::from_edges(40, &edges);
+    let d = core_decomposition(&g);
+    let k0 = d.degeneracy;
+    let core_nodes = kcore_embed::cores::subcore::k_core_nodes(&d, k0);
+    let mut rng = Rng::new(5);
+    let mut core_emb = Embedding::zeros(core_nodes.len(), 128);
+    for i in 0..core_nodes.len() as u32 {
+        let row: Vec<f32> = (0..128).map(|_| rng.gen_f32() - 0.5).collect();
+        core_emb.set_row(i, &row);
+    }
+    let pp = PropagationParams {
+        iterations: 12,
+        tolerance: 0.0, // fixed rounds on both paths for comparability
+    };
+    let (nat, _) = mean::propagate_mean(&g, &d, k0, &core_nodes, &core_emb, &pp);
+    let (dev, stats) =
+        prop_pjrt::propagate_mean_pjrt(&rt, &m, &g, &d, k0, &core_nodes, &core_emb, &pp).unwrap();
+    assert!(stats.dispatches > 0);
+    assert_eq!(stats.truncated_rows, 0);
+    let mut max_err = 0f32;
+    for v in 0..40u32 {
+        for (a, b) in nat.row(v).iter().zip(dev.row(v)) {
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+    assert!(max_err < 1e-4, "native vs pjrt propagation diverge: {max_err}");
+}
+
+#[test]
+fn manifest_covers_paper_graph_sizes() {
+    let m = manifest();
+    for n in [2708usize, 4039, 37700] {
+        let s = m.select_sgns(n).unwrap();
+        assert!(s.vocab >= n);
+        assert_eq!(s.dim, 128);
+        let p = m.select_prop(n + 1).unwrap();
+        assert!(p.vocab > n);
+    }
+}
