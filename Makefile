@@ -1,0 +1,17 @@
+# Convenience targets; everything also works as plain cargo/python calls.
+
+.PHONY: build test bench artifacts
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo bench
+
+# AOT-compile the PJRT HLO artifacts (requires the python toolchain;
+# rust falls back to --backend native without them).
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts

@@ -14,7 +14,9 @@ use kcore_embed::graph::generators;
 use kcore_embed::propagate::{propagate_mean, PropagationParams};
 use kcore_embed::runtime::{default_artifacts_dir, Manifest, Runtime};
 use kcore_embed::util::rng::Rng;
-use kcore_embed::walks::{generate_walks, WalkParams, WalkSchedule};
+use kcore_embed::walks::{
+    generate_walk_shards, generate_walks, ShardOpts, WalkParams, WalkSchedule,
+};
 
 fn bench<F: FnMut() -> u64>(name: &str, unit: &str, iters: usize, mut f: F) {
     // warmup
@@ -121,6 +123,52 @@ fn main() {
         (stats.nodes_propagated * stats.total_rounds.max(1)) as u64
     });
 
+    // L3: corpus pipeline — materialized vs streaming-sharded
+    // (DESIGN.md §Corpus-streaming). Same walks either way; the streamed
+    // path bounds resident corpus memory with a budget and spills shards
+    // to disk, and the consumer (here: a full pair sweep, the shape the
+    // BatchStream trainer drives) reads them back as a stream. Reported:
+    // throughput per path plus the peak-resident-bytes comparison on the
+    // largest synthetic graph.
+    let gh_sched = WalkSchedule::uniform(gh.n_nodes(), 5);
+    let gh_params = WalkParams {
+        walk_length: 30,
+        seed: 11,
+        threads: kcore_embed::util::pool::default_threads(),
+    };
+    let mut materialized_bytes = 0usize;
+    bench("corpus materialized github (M steps)", "M-step", 3, || {
+        let c = generate_walks(&gh, &gh_sched, &gh_params);
+        materialized_bytes = c.n_tokens() * 4 + (c.n_walks() + 1) * 8;
+        let n: u64 = kcore_embed::walks::PairStream::new(&c, 2, Rng::new(12))
+            .map(|_| 1u64)
+            .sum();
+        std::hint::black_box(n);
+        c.n_tokens() as u64
+    });
+    let budget = ShardOpts {
+        shards: 16,
+        budget_bytes: 8 << 20, // 8 MiB across all shards
+    };
+    let mut streaming_peak = 0usize;
+    let mut spilled = 0usize;
+    bench("corpus streamed+spill github (M steps)", "M-step", 3, || {
+        let s = generate_walk_shards(&gh, &gh_sched, &gh_params, &budget);
+        streaming_peak = s.stats().peak_resident_bytes;
+        spilled = s.stats().spilled_shards;
+        let n: u64 = s.pair_stream(2, Rng::new(12)).map(|_| 1u64).sum();
+        std::hint::black_box(n);
+        s.n_tokens()
+    });
+    println!(
+        "    corpus peak resident: materialized {:.1} MiB vs streamed {:.1} MiB \
+         ({:.1}x reduction, {spilled}/{} shards spilled)",
+        materialized_bytes as f64 / (1 << 20) as f64,
+        streaming_peak as f64 / (1 << 20) as f64,
+        materialized_bytes as f64 / streaming_peak.max(1) as f64,
+        budget.shards
+    );
+
     // L3: logistic regression fit (unit: sample-epochs).
     let (n, dim) = (4000usize, 256usize);
     let mut x = vec![0f32; n * dim];
@@ -154,7 +202,8 @@ fn main() {
                     seed: 6,
                     threads: 4,
                 },
-            );
+            )
+            .into_sharded();
             bench("PJRT SGNS train v1024 (M pairs)", "M-pair", 3, || {
                 let r = kcore_embed::embed::trainer::train_pjrt(
                     &rt, &manifest, &corpus2, 1000, &params, 0,

@@ -69,6 +69,14 @@ pub struct PipelineConfig {
     /// When the k0-core is disconnected, add this many bridge walks
     /// (paper §4's proposed fix, see [`crate::walks::bridge`]); 0 = off.
     pub bridge_walks: usize,
+    /// Corpus shard count for the streaming walk engine; 0 = the
+    /// thread-independent default
+    /// ([`crate::walks::DEFAULT_SHARD_COUNT`]). Part of the determinism
+    /// contract: corpora depend on this, never on `threads`.
+    pub corpus_shards: usize,
+    /// Corpus memory budget in MiB (split across shards; shards over
+    /// budget spill to disk). 0 = unbounded / fully resident.
+    pub corpus_budget_mb: usize,
 }
 
 impl Default for PipelineConfig {
@@ -85,6 +93,8 @@ impl Default for PipelineConfig {
             seed: 0,
             loss_poll: 0,
             bridge_walks: 0,
+            corpus_shards: 0,
+            corpus_budget_mb: 0,
         }
     }
 }
@@ -110,6 +120,8 @@ impl PipelineConfig {
             ("prop_tolerance", Json::num(self.propagation.tolerance as f64)),
             ("threads", Json::num(self.threads as f64)),
             ("seed", Json::num(self.seed as f64)),
+            ("corpus_shards", Json::num(self.corpus_shards as f64)),
+            ("corpus_budget_mb", Json::num(self.corpus_budget_mb as f64)),
         ];
         if let Embedder::Node2Vec { p, q } = self.embedder {
             fields.push(("p", Json::num(p)));
@@ -156,6 +168,8 @@ impl PipelineConfig {
         cfg.propagation.tolerance = get_f("prop_tolerance", cfg.propagation.tolerance as f64) as f32;
         cfg.threads = get_u("threads", cfg.threads);
         cfg.seed = get_f("seed", 0.0) as u64;
+        cfg.corpus_shards = get_u("corpus_shards", cfg.corpus_shards);
+        cfg.corpus_budget_mb = get_u("corpus_budget_mb", cfg.corpus_budget_mb);
         Ok(cfg)
     }
 
@@ -188,6 +202,20 @@ mod tests {
         assert_eq!(back.k0, cfg.k0);
         assert_eq!(back.walks_per_node, cfg.walks_per_node);
         assert_eq!(back.sgns.dim, cfg.sgns.dim);
+        assert_eq!(back.corpus_shards, cfg.corpus_shards);
+        assert_eq!(back.corpus_budget_mb, cfg.corpus_budget_mb);
+    }
+
+    #[test]
+    fn corpus_knobs_round_trip_json() {
+        let cfg = PipelineConfig {
+            corpus_shards: 32,
+            corpus_budget_mb: 64,
+            ..Default::default()
+        };
+        let back = PipelineConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.corpus_shards, 32);
+        assert_eq!(back.corpus_budget_mb, 64);
     }
 
     #[test]

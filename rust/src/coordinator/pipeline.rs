@@ -4,6 +4,12 @@
 //!
 //! Each phase is timed separately because the paper's appendix tables
 //! report the breakdown (core decomposition / propagation / embedding).
+//!
+//! Memory (DESIGN.md §Corpus-streaming): the walk corpus is produced as
+//! a [`ShardedCorpus`] and training consumes it as a stream of
+//! super-batches — the pipeline never holds the full corpus in one
+//! allocation, and with `corpus_budget_mb` set the shards spill to disk
+//! so peak corpus RSS is O(budget).
 
 use anyhow::{bail, Result};
 
@@ -14,7 +20,10 @@ use crate::graph::Graph;
 use crate::propagate::propagate_mean;
 use crate::runtime::{Manifest, Runtime};
 use crate::util::timer::PhaseTimer;
-use crate::walks::{corewalk, generate_walks, node2vec, WalkParams, WalkSchedule};
+use crate::walks::{
+    corewalk, generate_walk_shards, node2vec, CorpusShard, ShardOpts, ShardStats, ShardedCorpus,
+    WalkParams, WalkSchedule,
+};
 
 /// Phase names used in [`PhaseTimer`] (match the paper's columns).
 pub const PHASE_DECOMP: &str = "core_decomposition";
@@ -36,6 +45,9 @@ pub struct PipelineOutput {
     pub n_pairs: u64,
     /// (pairs, mean loss) checkpoints when the PJRT backend polls loss.
     pub loss_curve: Vec<trainer::LossPoint>,
+    /// Corpus residency telemetry: peak resident bytes during walk
+    /// generation and how much spilled to disk.
+    pub corpus_stats: ShardStats,
 }
 
 impl PipelineOutput {
@@ -99,19 +111,26 @@ pub fn run_pipeline(
             corewalk::corewalk_schedule(&d_target, cfg.walks_per_node)
         }
     };
-    let mut corpus = timer.time(PHASE_WALKS, || match cfg.embedder {
-        Embedder::Node2Vec { p, q } => node2vec::generate_node2vec_walks(
-            &target,
-            &schedule,
-            &node2vec::Node2VecParams {
-                p,
-                q,
-                walk_length: cfg.walk_length,
-                seed: cfg.seed ^ 0xA11CE,
-                threads: cfg.threads,
-            },
-        ),
-        _ => generate_walks(
+    let shard_opts = ShardOpts::with_budget_mb(cfg.corpus_shards, cfg.corpus_budget_mb);
+    let mut corpus: ShardedCorpus = timer.time(PHASE_WALKS, || match cfg.embedder {
+        Embedder::Node2Vec { p, q } => {
+            // node2vec walks are not shard-native yet: materialize, then
+            // re-shard so training still streams.
+            let c = node2vec::generate_node2vec_walks(
+                &target,
+                &schedule,
+                &node2vec::Node2VecParams {
+                    p,
+                    q,
+                    walk_length: cfg.walk_length,
+                    seed: cfg.seed ^ 0xA11CE,
+                    threads: cfg.threads,
+                },
+            );
+            let n_shards = shard_opts.resolve_shards(c.n_walks());
+            ShardedCorpus::from_corpus(&c, n_shards, shard_opts.budget_bytes)
+        }
+        _ => generate_walk_shards(
             &target,
             &schedule,
             &WalkParams {
@@ -119,10 +138,12 @@ pub fn run_pipeline(
                 seed: cfg.seed ^ 0xA11CE,
                 threads: cfg.threads,
             },
+            &shard_opts,
         ),
     });
 
-    // Phase 3b: bridge walks for disconnected cores (paper §4 extension).
+    // Phase 3b: bridge walks for disconnected cores (paper §4 extension),
+    // appended as one extra shard at the end of the canonical order.
     if cfg.bridge_walks > 0 {
         if let Some(map) = &core_nodes {
             let (bridges, _) = timer.time(PHASE_WALKS, || {
@@ -136,11 +157,13 @@ pub fn run_pipeline(
                     &mut rng,
                 )
             });
-            corpus.append(&bridges);
+            corpus.push_shard(CorpusShard::from_corpus(bridges));
         }
     }
+    let (n_walks, n_tokens) = (corpus.n_walks(), corpus.n_tokens());
 
-    // Phase 4: SGNS training on the chosen backend.
+    // Phase 4: SGNS training on the chosen backend — both consume the
+    // sharded corpus as a stream; the full corpus is never concatenated.
     let mut sgns = cfg.sgns.clone();
     sgns.seed = cfg.seed ^ 0x7EA1;
     let (core_embedding, n_pairs, loss_curve) = match cfg.backend {
@@ -156,11 +179,18 @@ pub fn run_pipeline(
         }
         Backend::Native => {
             let r = timer.time(PHASE_TRAIN, || {
-                native::train_native_parallel(&corpus, target.n_nodes(), &sgns, cfg.threads)
+                native::train_native_parallel_sharded(
+                    &corpus,
+                    target.n_nodes(),
+                    &sgns,
+                    cfg.threads,
+                )
             });
             (r.w_in, r.n_pairs, Vec::new())
         }
     };
+    let corpus_stats = corpus.stats();
+    drop(corpus); // release shards (and any spill files) before propagation
 
     // Phase 5: propagation back to the whole graph.
     let embedding = match (&core_nodes, k0_used) {
@@ -180,10 +210,11 @@ pub fn run_pipeline(
         degeneracy,
         k0_used,
         core_size: core_nodes.as_ref().map(|m| m.len()).unwrap_or(g.n_nodes()),
-        n_walks: corpus.n_walks() as u64,
-        n_tokens: corpus.n_tokens() as u64,
+        n_walks,
+        n_tokens,
         n_pairs,
         loss_curve,
+        corpus_stats,
         timer,
     })
 }
@@ -285,6 +316,19 @@ mod tests {
         let mut cfg = tiny_cfg();
         cfg.backend = Backend::Pjrt;
         assert!(run_pipeline(&g, &cfg, None).is_err());
+    }
+
+    #[test]
+    fn corpus_stats_reported_and_shard_knob_respected() {
+        let g = generators::holme_kim(120, 3, 0.4, &mut crate::util::rng::Rng::new(1));
+        let mut cfg = tiny_cfg();
+        cfg.corpus_shards = 4;
+        let out = run_pipeline(&g, &cfg, None).unwrap();
+        assert_eq!(out.embedding.n(), 120);
+        assert!(out.corpus_stats.peak_resident_bytes > 0);
+        // No budget set: everything stays resident.
+        assert_eq!(out.corpus_stats.spilled_shards, 0);
+        assert_eq!(out.corpus_stats.spilled_bytes, 0);
     }
 
     #[test]

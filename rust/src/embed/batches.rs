@@ -2,12 +2,18 @@
 //! super-batches the AOT-compiled SGNS step consumes, plus the linear
 //! learning-rate schedule.
 //!
+//! [`BatchStream`] is pull-based and source-agnostic: it consumes any
+//! `(center, context)` pair iterator — [`crate::walks::PairStream`] over
+//! a materialized corpus, or [`crate::walks::ShardedPairStream`] over a
+//! [`crate::walks::ShardedCorpus`], which interleaves shards
+//! deterministically and keeps peak memory O(shard)
+//! (DESIGN.md §Corpus-streaming).
+//!
 //! Layout per lane (matches python/compile/model.py):
 //!   `[valid, center, context, neg_1 .. neg_K]`
 //! Padding lanes have `valid = 0` and all ids 0 (they scatter zeros).
 
 use crate::util::rng::Rng;
-use crate::walks::{Corpus, PairStream};
 
 use super::sampler::NegativeSampler;
 
@@ -44,9 +50,32 @@ pub struct SuperBatch {
     pub n_pairs: usize,
 }
 
-/// Streams pairs from a corpus into fixed-shape super-batches.
-pub struct BatchBuilder<'a> {
-    pairs: PairStream<'a>,
+/// Streams skip-gram pairs from any pair source into fixed-shape
+/// super-batches, attaching negatives and the linear lr schedule.
+///
+/// Implements [`Iterator`] over [`SuperBatch`]es; the final batch is
+/// padded with invalid lanes.
+///
+/// ```
+/// use kcore_embed::embed::batches::{BatchStream, SgnsParams};
+/// use kcore_embed::embed::sampler::NegativeSampler;
+/// use kcore_embed::util::rng::Rng;
+/// use kcore_embed::walks::{Corpus, PairStream};
+///
+/// let mut corpus = Corpus::new(4);
+/// corpus.push_walk(&[0, 1, 2, 3]);
+/// let params = SgnsParams { window: 2, negatives: 2, ..Default::default() };
+/// let sampler = NegativeSampler::from_counts(&corpus.node_counts());
+/// let total = corpus.exact_pair_count(params.window);
+///
+/// // Any (center, context) iterator works; here: the materialized path.
+/// let pairs = PairStream::new(&corpus, params.window, Rng::new(1));
+/// let stream = BatchStream::new(pairs, &sampler, &params, 4, 2, total, 1);
+/// let n_pairs: usize = stream.map(|sb| sb.n_pairs).sum();
+/// assert_eq!(n_pairs as u64, total);
+/// ```
+pub struct BatchStream<'a, P: Iterator<Item = (u32, u32)>> {
+    pairs: P,
     sampler: &'a NegativeSampler,
     rng: Rng,
     batch: usize,
@@ -60,13 +89,14 @@ pub struct BatchBuilder<'a> {
     neg_buf: Vec<u32>,
 }
 
-impl<'a> BatchBuilder<'a> {
+impl<'a, P: Iterator<Item = (u32, u32)>> BatchStream<'a, P> {
     /// `total_pairs` drives the linear lr decay; use
     /// `corpus.exact_pair_count(window) * epochs` scaled by the dynamic
     /// window expectation (~(w+1)/2w) or just the exact count — slight
     /// over-estimates only make the decay end above `lr_min`, harmless.
+    /// `seed` feeds the negative-sampling RNG only.
     pub fn new(
-        corpus: &'a Corpus,
+        pairs: P,
         sampler: &'a NegativeSampler,
         params: &SgnsParams,
         batch: usize,
@@ -74,8 +104,8 @@ impl<'a> BatchBuilder<'a> {
         total_pairs: u64,
         seed: u64,
     ) -> Self {
-        BatchBuilder {
-            pairs: PairStream::new(corpus, params.window, Rng::new(seed ^ 0x9A1C)),
+        BatchStream {
+            pairs,
             sampler,
             rng: Rng::new(seed ^ 0x5EED),
             batch,
@@ -90,9 +120,15 @@ impl<'a> BatchBuilder<'a> {
     }
 
     /// Jump the lr schedule to `pairs_done` already-processed pairs
-    /// (multi-epoch runs hand global progress to a fresh builder).
+    /// (multi-epoch runs hand global progress to a fresh stream).
     pub fn set_progress(&mut self, pairs_done: u64) {
         self.emitted_pairs = pairs_done;
+    }
+
+    /// Pairs emitted so far (including progress set via
+    /// [`Self::set_progress`]).
+    pub fn emitted_pairs(&self) -> u64 {
+        self.emitted_pairs
     }
 
     /// Current point in the linear lr schedule.
@@ -144,10 +180,18 @@ impl<'a> BatchBuilder<'a> {
     }
 }
 
+impl<'a, P: Iterator<Item = (u32, u32)>> Iterator for BatchStream<'a, P> {
+    type Item = SuperBatch;
+
+    fn next(&mut self) -> Option<SuperBatch> {
+        self.next_super_batch()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::walks::Corpus;
+    use crate::walks::{Corpus, PairStream, ShardedCorpus};
 
     fn tiny_corpus() -> Corpus {
         let mut c = Corpus::new(6);
@@ -164,13 +208,33 @@ mod tests {
         }
     }
 
+    fn stream<'a>(
+        corpus: &'a Corpus,
+        sampler: &'a NegativeSampler,
+        p: &SgnsParams,
+        batch: usize,
+        scan: usize,
+        total: u64,
+        seed: u64,
+    ) -> BatchStream<'a, PairStream<'a>> {
+        BatchStream::new(
+            PairStream::new(corpus, p.window, crate::util::rng::Rng::new(seed ^ 0x9A1C)),
+            sampler,
+            p,
+            batch,
+            scan,
+            total,
+            seed,
+        )
+    }
+
     #[test]
     fn batches_have_layout_and_padding() {
         let corpus = tiny_corpus();
         let sampler = NegativeSampler::from_counts(&corpus.node_counts());
         let p = params();
         let total = corpus.exact_pair_count(p.window);
-        let mut bb = BatchBuilder::new(&corpus, &sampler, &p, 4, 2, total, 1);
+        let mut bb = stream(&corpus, &sampler, &p, 4, 2, total, 1);
         let lane = 3 + p.negatives;
         let mut pairs_seen = 0usize;
         let mut saw_padding = false;
@@ -198,7 +262,7 @@ mod tests {
         }
         assert!(pairs_seen > 0);
         assert!(saw_padding, "expected a padded tail batch");
-        assert_eq!(pairs_seen, bb.emitted_pairs as usize);
+        assert_eq!(pairs_seen, bb.emitted_pairs() as usize);
     }
 
     #[test]
@@ -207,7 +271,7 @@ mod tests {
         let sampler = NegativeSampler::from_counts(&corpus.node_counts());
         let p = params();
         let total = corpus.exact_pair_count(p.window);
-        let mut bb = BatchBuilder::new(&corpus, &sampler, &p, 2, 1, total, 2);
+        let mut bb = stream(&corpus, &sampler, &p, 2, 1, total, 2);
         let mut lrs = Vec::new();
         while let Some(sb) = bb.next_super_batch() {
             lrs.push(sb.lr[0]);
@@ -225,11 +289,28 @@ mod tests {
         let mut p = params();
         p.window = 1;
         let total = corpus.exact_pair_count(1);
-        let mut bb = BatchBuilder::new(&corpus, &sampler, &p, 3, 2, total, 3);
+        let mut bb = stream(&corpus, &sampler, &p, 3, 2, total, 3);
         let mut n = 0u64;
         while let Some(sb) = bb.next_super_batch() {
             n += sb.n_pairs as u64;
         }
+        assert_eq!(n, total);
+    }
+
+    #[test]
+    fn sharded_source_exhausts_exact_pair_count() {
+        // The streaming source feeds the same machinery: every pair of
+        // the sharded corpus lands in exactly one lane.
+        let corpus = tiny_corpus();
+        let sharded = ShardedCorpus::from_corpus(&corpus, 2, 0);
+        let sampler = NegativeSampler::from_counts(&sharded.node_counts());
+        let mut p = params();
+        p.window = 1;
+        let total = sharded.exact_pair_count(1);
+        assert_eq!(total, corpus.exact_pair_count(1));
+        let pairs = sharded.pair_stream(1, crate::util::rng::Rng::new(9));
+        let bb = BatchStream::new(pairs, &sampler, &p, 3, 2, total, 3);
+        let n: u64 = bb.map(|sb| sb.n_pairs as u64).sum();
         assert_eq!(n, total);
     }
 }

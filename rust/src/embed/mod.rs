@@ -1,6 +1,7 @@
 //! SkipGram-negative-sampling embedding: matrix storage, negative
-//! sampling, batch building, the PJRT-backed trainer (the hot path) and
-//! the pure-rust cross-check trainer.
+//! sampling, pull-based batch streaming ([`batches::BatchStream`] over
+//! either corpus representation), the PJRT-backed trainer (the hot
+//! path) and the pure-rust cross-check trainers.
 
 pub mod batches;
 pub mod matrix;
@@ -8,5 +9,5 @@ pub mod native;
 pub mod sampler;
 pub mod trainer;
 
-pub use batches::SgnsParams;
+pub use batches::{BatchStream, SgnsParams};
 pub use matrix::Embedding;

@@ -5,9 +5,15 @@
 //! prediction F1); (b) the word2vec-style CPU baseline the paper's
 //! DeepWalk timings correspond to; (c) a fallback when artifacts are
 //! absent. Uses word2vec's precomputed sigmoid table for speed.
+//!
+//! Both corpus representations are supported (DESIGN.md
+//! §Corpus-streaming): [`train_native`] / [`train_native_parallel`] on a
+//! materialized [`Corpus`], and [`train_native_sharded`] /
+//! [`train_native_parallel_sharded`] streaming a [`ShardedCorpus`] so
+//! peak memory stays O(shard).
 
 use crate::util::rng::Rng;
-use crate::walks::{Corpus, PairStream};
+use crate::walks::{Corpus, PairStream, ShardedCorpus};
 
 use super::batches::SgnsParams;
 use super::matrix::Embedding;
@@ -54,21 +60,29 @@ pub struct NativeTrainResult {
     pub n_pairs: u64,
 }
 
-/// Train SGNS over the corpus with the exact semantics of the L2 step
-/// (per-pair SGD, linear lr decay, unigram^0.75 negatives, context
-/// excluded from its own negatives).
-pub fn train_native(
-    corpus: &Corpus,
+/// Serial SGD over any per-epoch pair source — the shared core of
+/// [`train_native`] (materialized) and [`train_native_sharded`]
+/// (streaming). Exact semantics of the L2 step: per-pair SGD, linear lr
+/// decay, unigram^0.75 negatives, context excluded from its own
+/// negatives.
+fn train_serial_with_pairs<I, F>(
     n_nodes: usize,
     params: &SgnsParams,
-) -> NativeTrainResult {
+    counts: &[u64],
+    total_pairs: u64,
+    mut pairs_for_epoch: F,
+) -> NativeTrainResult
+where
+    I: Iterator<Item = (u32, u32)>,
+    F: FnMut(usize) -> I,
+{
     let mut rng = Rng::new(params.seed);
     let mut w_in = Embedding::word2vec_init(n_nodes, params.dim, &mut rng);
     let mut w_out = Embedding::zeros(n_nodes, params.dim);
-    let sampler = NegativeSampler::from_counts(&corpus.node_counts());
+    let sampler = NegativeSampler::from_counts(counts);
     let sig = SigmoidTable::new();
 
-    let total_pairs = corpus.exact_pair_count(params.window) * params.epochs as u64;
+    let total_pairs = total_pairs.max(1);
     let mut emitted = 0u64;
     let mut loss_sum = 0f64;
     let dim = params.dim;
@@ -76,10 +90,9 @@ pub fn train_native(
     let mut grad_h = vec![0f32; dim];
 
     for epoch in 0..params.epochs {
-        let pair_rng = Rng::new(params.seed ^ (0x9A1C + epoch as u64));
         let mut neg_rng = Rng::new(params.seed ^ (0x5EED + epoch as u64));
-        for (center, context) in PairStream::new(corpus, params.window, pair_rng) {
-            let frac = emitted as f64 / total_pairs.max(1) as f64;
+        for (center, context) in pairs_for_epoch(epoch) {
+            let frac = emitted as f64 / total_pairs as f64;
             let lr = ((params.lr0 as f64 * (1.0 - frac)).max(params.lr_min as f64)) as f32;
             sampler.sample_k(params.negatives, context, &mut neg_rng, &mut neg_buf);
 
@@ -118,18 +131,54 @@ pub fn train_native(
     }
 }
 
+/// Train SGNS over a materialized corpus (serial, deterministic).
+pub fn train_native(corpus: &Corpus, n_nodes: usize, params: &SgnsParams) -> NativeTrainResult {
+    let total_pairs = corpus.exact_pair_count(params.window) * params.epochs as u64;
+    let counts = corpus.node_counts();
+    train_serial_with_pairs(n_nodes, params, &counts, total_pairs, |epoch| {
+        PairStream::new(
+            corpus,
+            params.window,
+            Rng::new(params.seed ^ (0x9A1C + epoch as u64)),
+        )
+    })
+}
+
+/// Train SGNS streaming a sharded corpus (serial, deterministic): pairs
+/// come from the round-robin shard interleave, shards are re-streamed
+/// (from disk if spilled) each epoch, and nothing larger than one shard
+/// plus the model is ever resident.
+pub fn train_native_sharded(
+    corpus: &ShardedCorpus,
+    n_nodes: usize,
+    params: &SgnsParams,
+) -> NativeTrainResult {
+    let total_pairs = corpus.exact_pair_count(params.window) * params.epochs as u64;
+    let counts = corpus.node_counts();
+    train_serial_with_pairs(n_nodes, params, &counts, total_pairs, |epoch| {
+        corpus.pair_stream(
+            params.window,
+            Rng::new(params.seed ^ (0x9A1C + epoch as u64)),
+        )
+    })
+}
+
 // ---------------------------------------------------------------------------
 // Hogwild-parallel trainer (§Perf): the word2vec trick, made sound in
 // rust with relaxed AtomicU32 loads/stores (bit-cast f32). Racy lost
 // updates are part of hogwild's contract (SGD tolerates them); results
-// are non-deterministic across runs, so the serial `train_native`
-// remains the cross-check oracle.
+// are non-deterministic across runs, so the serial trainers remain the
+// cross-check oracles.
+//
+// Work partitioning is shard-granular: workers claim whole shards from
+// the task queue (util::pool::parallel_tasks) and stream one shard at a
+// time, so the hogwild path also keeps peak corpus memory O(shard).
 //
 // Measured on this testbed (EXPERIMENTS.md §Perf): the container exposes
 // ONE cpu core, so threads > 1 only adds overhead (atomic element ops
 // also defeat SIMD: ~1.5x slower per op than the serial slice path).
 // `threads = 1` therefore routes to the serial trainer, and the pipeline
-// default (`pool::default_threads()` = available_parallelism = 1 here)
+// default (`pool::default_threads()` = available_parallelism = 1 there)
 // picks the fast path automatically; the hogwild path exists for
 // multi-core deployments.
 // ---------------------------------------------------------------------------
@@ -146,9 +195,14 @@ fn at_store(a: &AtomicU32, v: f32) {
     a.store(v.to_bits(), Relaxed)
 }
 
-/// Train SGNS over the corpus with `threads` hogwild workers. Same
-/// objective/sampling as [`train_native`]; walk ranges are partitioned
-/// across workers, the lr schedule advances on a shared pair counter.
+/// Train SGNS over a materialized corpus with `threads` hogwild workers
+/// (compatibility wrapper: splits the corpus into per-thread resident
+/// shards and delegates to [`train_native_parallel_sharded`]).
+///
+/// The split copies the corpus, so peak memory is transiently ~2x its
+/// footprint — for large corpora generate shards directly
+/// ([`crate::walks::generate_walk_shards`]) and call the sharded
+/// trainer instead.
 pub fn train_native_parallel(
     corpus: &Corpus,
     n_nodes: usize,
@@ -159,6 +213,24 @@ pub fn train_native_parallel(
     if threads == 1 {
         return train_native(corpus, n_nodes, params);
     }
+    let sharded = ShardedCorpus::from_corpus(corpus, threads, 0);
+    train_native_parallel_sharded(&sharded, n_nodes, params, threads)
+}
+
+/// Train SGNS over a sharded corpus with `threads` hogwild workers.
+/// Same objective/sampling as [`train_native`]; shards are partitioned
+/// across workers via the task queue, the lr schedule advances on a
+/// shared pair counter.
+pub fn train_native_parallel_sharded(
+    corpus: &ShardedCorpus,
+    n_nodes: usize,
+    params: &SgnsParams,
+    threads: usize,
+) -> NativeTrainResult {
+    let threads = threads.max(1);
+    if threads == 1 {
+        return train_native_sharded(corpus, n_nodes, params);
+    }
     let dim = params.dim;
     let mut seed_rng = Rng::new(params.seed);
     let init = Embedding::word2vec_init(n_nodes, dim, &mut seed_rng);
@@ -168,22 +240,23 @@ pub fn train_native_parallel(
     let total_pairs = (corpus.exact_pair_count(params.window) * params.epochs as u64).max(1);
     let global_pairs = AtomicU64::new(0);
 
-    let worker_rngs: Vec<Rng> = (0..threads).map(|i| Rng::new(params.seed ^ (0xBEEF + i as u64))).collect();
-    let results: Vec<(f64, u64)> = crate::util::pool::parallel_chunks(
-        corpus.n_walks(),
+    let results: Vec<(f64, u64)> = crate::util::pool::parallel_tasks(
+        corpus.n_shards(),
         threads,
-        |ci, walk_range| {
+        |si| {
+            let shard = &corpus.shards()[si];
             let sig = SigmoidTable::new();
-            let mut rng = worker_rngs[ci].clone();
+            let mut rng = Rng::new(params.seed ^ (0xBEEF + si as u64));
             let mut neg_buf: Vec<u32> = Vec::with_capacity(params.negatives);
             let mut grad_h = vec![0f32; dim];
             let mut h_snap = vec![0f32; dim];
+            let mut walk: Vec<u32> = Vec::new();
             let mut loss_sum = 0f64;
             let mut local_pairs = 0u64;
             let mut lr = params.lr0;
             for _epoch in 0..params.epochs {
-                for wi in walk_range.clone() {
-                    let walk = corpus.walk(wi);
+                let mut reader = shard.reader();
+                while reader.next_walk(&mut walk) {
                     for c_pos in 0..walk.len() {
                         let radius = 1 + rng.gen_index(params.window);
                         let lo = c_pos.saturating_sub(radius);
@@ -310,7 +383,7 @@ fn ln_sigmoid(x: f32) -> f32 {
 mod tests {
     use super::*;
     use crate::graph::generators;
-    use crate::walks::{generate_walks, WalkParams, WalkSchedule};
+    use crate::walks::{generate_walk_shards, generate_walks, ShardOpts, WalkParams, WalkSchedule};
 
     fn small_params(dim: usize) -> SgnsParams {
         SgnsParams {
@@ -455,5 +528,67 @@ mod tests {
         let b = train_native(&corpus, 12, &small_params(8));
         assert_eq!(a.w_in, b.w_in);
         assert_eq!(a.n_pairs, b.n_pairs);
+    }
+
+    #[test]
+    fn sharded_serial_is_deterministic_and_learns() {
+        let n = 24;
+        let g = generators::ring(n);
+        let p = WalkParams {
+            walk_length: 12,
+            seed: 1,
+            threads: 2,
+        };
+        let sharded = || {
+            generate_walk_shards(
+                &g,
+                &WalkSchedule::uniform(n, 20),
+                &p,
+                &ShardOpts {
+                    shards: 4,
+                    budget_bytes: 0,
+                },
+            )
+        };
+        let a = train_native_sharded(&sharded(), n, &small_params(16));
+        let b = train_native_sharded(&sharded(), n, &small_params(16));
+        assert_eq!(a.w_in, b.w_in);
+        assert_eq!(a.n_pairs, b.n_pairs);
+        assert!(a.mean_loss < 4.16);
+        let (mut adj, mut far) = (0f64, 0f64);
+        for v in 0..n as u32 {
+            adj += a.w_in.cosine(v, (v + 1) % n as u32) as f64;
+            far += a.w_in.cosine(v, (v + n as u32 / 2) % n as u32) as f64;
+        }
+        assert!(
+            adj / n as f64 > far / n as f64 + 0.2,
+            "adjacent {} vs antipodal {}",
+            adj / n as f64,
+            far / n as f64
+        );
+    }
+
+    #[test]
+    fn sharded_hogwild_trains_from_spilled_shards() {
+        let n = 24;
+        let g = generators::ring(n);
+        let sharded = generate_walk_shards(
+            &g,
+            &WalkSchedule::uniform(n, 20),
+            &WalkParams {
+                walk_length: 12,
+                seed: 1,
+                threads: 2,
+            },
+            // Tiny budget: force every shard to spill to disk.
+            &ShardOpts {
+                shards: 4,
+                budget_bytes: 256,
+            },
+        );
+        assert!(sharded.stats().spilled_shards > 0, "budget should force spill");
+        let r = train_native_parallel_sharded(&sharded, n, &small_params(16), 4);
+        assert!(r.n_pairs > 1000);
+        assert!(r.mean_loss.is_finite() && r.mean_loss < 4.16);
     }
 }

@@ -1,19 +1,22 @@
 //! The PJRT-backed SGNS trainer — the request-path hot loop.
 //!
-//! Orchestration: stream skip-gram pairs from the corpus into
-//! `[S, B, 3+K]` super-batches ([`super::batches::BatchBuilder`]), upload
-//! each batch, and chain the device-resident state through the
-//! AOT-compiled step ([`crate::runtime::SgnsSession`]). Loss is polled
-//! from the on-device stats row at a configurable cadence.
+//! Orchestration: stream skip-gram pairs out of the sharded corpus
+//! ([`crate::walks::ShardedPairStream`]) into `[S, B, 3+K]` super-batches
+//! ([`super::batches::BatchStream`]), upload each batch, and chain the
+//! device-resident state through the AOT-compiled step
+//! ([`crate::runtime::SgnsSession`]). The host never materializes the
+//! corpus or the pair list — peak host memory is O(shard) + O(batch)
+//! (DESIGN.md §Corpus-streaming). Loss is polled from the on-device
+//! stats row at a configurable cadence.
 
 use anyhow::Result;
 
 use crate::runtime::{Manifest, Runtime};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
-use crate::walks::Corpus;
+use crate::walks::ShardedCorpus;
 
-use super::batches::{BatchBuilder, SgnsParams};
+use super::batches::{BatchStream, SgnsParams};
 use super::matrix::Embedding;
 use super::sampler::NegativeSampler;
 
@@ -34,13 +37,14 @@ pub struct PjrtTrainResult {
     pub train_secs: f64,
 }
 
-/// Train SGNS on the PJRT device. `loss_every` = poll the stats row every
-/// that many dispatches (0 = only at the end; each poll downloads the
-/// full state, so keep it sparse on big vocabularies).
+/// Train SGNS on the PJRT device, streaming batches from the sharded
+/// corpus. `loss_every` = poll the stats row every that many dispatches
+/// (0 = only at the end; each poll downloads the full state, so keep it
+/// sparse on big vocabularies).
 pub fn train_pjrt(
     runtime: &Runtime,
     manifest: &Manifest,
-    corpus: &Corpus,
+    corpus: &ShardedCorpus,
     n_nodes: usize,
     params: &SgnsParams,
     loss_every: u64,
@@ -73,19 +77,21 @@ pub fn train_pjrt(
     let mut last_loss_sum = 0f64;
     let mut last_loss_cnt = 0f64;
     for epoch in 0..params.epochs {
-        let mut bb = BatchBuilder::new(
-            corpus,
+        let epoch_seed = params.seed ^ (epoch as u64) << 32;
+        let pairs = corpus.pair_stream(params.window, Rng::new(epoch_seed ^ 0x9A1C));
+        let mut stream = BatchStream::new(
+            pairs,
             &sampler,
             params,
             meta.batch,
             meta.scan_steps,
             total_pairs,
-            params.seed ^ (epoch as u64) << 32,
+            epoch_seed,
         );
-        // BatchBuilder restarts its lr schedule per instance; feed it the
+        // BatchStream restarts its lr schedule per instance; feed it the
         // global progress so multi-epoch decay is continuous.
-        bb.set_progress(n_pairs);
-        while let Some(sb) = bb.next_super_batch() {
+        stream.set_progress(n_pairs);
+        while let Some(sb) = stream.next_super_batch() {
             session.step(&sb.idx, &sb.lr)?;
             n_pairs += sb.n_pairs as u64;
             if loss_every > 0 && session.steps_run() % loss_every == 0 {

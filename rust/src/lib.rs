@@ -16,7 +16,34 @@
 //! The SkipGram-negative-sampling hot path runs on an AOT-compiled
 //! XLA/PJRT executable whose inner kernel is a Pallas kernel authored in
 //! `python/compile/` — python runs only at build time (`make artifacts`);
-//! the runtime ([`runtime`]) is pure rust over the PJRT C API.
+//! the runtime ([`runtime`]) is pure rust over the PJRT C API. Offline
+//! builds link a vendored stub and fall back to the native trainer.
+//!
+//! The walk corpus is **streamed, not materialized**: the engine emits a
+//! [`walks::ShardedCorpus`] (one bounded-memory shard per worker chunk,
+//! spill-to-disk under a budget) and both trainers pull batches from it
+//! through [`embed::BatchStream`], so peak corpus memory is O(shard)
+//! rather than O(total walks) — DESIGN.md §Corpus-streaming.
+//!
+//! Module map (bottom-up):
+//!
+//! - [`util`] — RNG (xoshiro256++), thread pool ([`util::pool`], incl.
+//!   the shard task queue), JSON, CLI parsing, stats/tables/plots.
+//! - [`graph`] — CSR graphs, generators (calibrated dataset stand-ins),
+//!   metrics, connectivity, edge-list/embedding I/O.
+//! - [`cores`] — k-core decomposition and k0-core subgraph extraction.
+//! - [`walks`] — walk engine, CoreWalk schedule, node2vec, bridge
+//!   walks; [`walks::Corpus`] (materialized) and
+//!   [`walks::ShardedCorpus`] (streaming) with pair extraction.
+//! - [`embed`] — SGNS: embedding matrices, negative sampler,
+//!   [`embed::BatchStream`], PJRT trainer + native (serial/hogwild,
+//!   both corpus representations) trainers.
+//! - [`propagate`] — shell-by-shell mean propagation (native + PJRT).
+//! - [`eval`] — link prediction, node classification, logistic
+//!   regression, edge operators.
+//! - [`runtime`] — PJRT artifact manifest + execution sessions.
+//! - [`coordinator`] — pipeline orchestration, experiment runner,
+//!   config (incl. corpus shard/budget knobs), bench harness.
 //!
 //! See `DESIGN.md` for the architecture and experiment inventory, and
 //! `examples/` for runnable entry points.

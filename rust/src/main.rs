@@ -34,12 +34,19 @@ COMMANDS
   describe  (--graph NAME | --edges PATH) [--seed N]
   embed     (--graph NAME | --edges PATH) [--embedder deepwalk|corewalk|node2vec]
             [--k0 K] [--backend pjrt|native] [--walks N] [--walk-length L]
-            [--dim D] [--window W] [--epochs E] [--seed N] --out PATH
+            [--dim D] [--window W] [--epochs E] [--seed N]
+            [--shards S] [--corpus-budget-mb M] --out PATH
   eval      (--graph NAME | --edges PATH) [--remove FRAC] [--trials T]
             [--embedder ...] [--k0 K] [--cores K1,K2,...] [--backend ...]
             [--walks N] [--seed N]
   bench     --exp NAME [--trials T] [--walks N] [--backend pjrt|native]
             [--seed N] [--out-dir DIR] [--quick]
+
+Corpus streaming (embed/eval): --shards S fixes the number of corpus
+shards (0 = default 16; part of the determinism contract — corpora never
+depend on --threads), and --corpus-budget-mb M bounds resident corpus
+memory by spilling shards to disk (0 = unbounded). See DESIGN.md
+§Corpus-streaming.
 
 Run `make artifacts` once before using the pjrt backend.
 ";
@@ -122,6 +129,10 @@ fn build_config(args: &Args) -> Result<PipelineConfig> {
     cfg.sgns.dim = args.get_usize("dim", 128).map_err(anyhow::Error::msg)?;
     cfg.sgns.window = args.get_usize("window", 4).map_err(anyhow::Error::msg)?;
     cfg.sgns.epochs = args.get_usize("epochs", 1).map_err(anyhow::Error::msg)?;
+    cfg.corpus_shards = args.get_usize("shards", 0).map_err(anyhow::Error::msg)?;
+    cfg.corpus_budget_mb = args
+        .get_usize("corpus-budget-mb", 0)
+        .map_err(anyhow::Error::msg)?;
     Ok(cfg)
 }
 
@@ -184,6 +195,22 @@ fn cmd_embed(args: &Args) -> Result<()> {
     for (phase, secs) in res.timer.phases() {
         println!("  {phase}: {secs:.2}s");
     }
+    let cs = res.corpus_stats;
+    let spill_note = if cs.spilled_shards > 0 {
+        format!(
+            ", {} shards spilled ({:.1} MiB to disk)",
+            cs.spilled_shards,
+            cs.spilled_bytes as f64 / (1u64 << 20) as f64
+        )
+    } else {
+        String::new()
+    };
+    println!(
+        "corpus: {} walks, {} tokens, peak resident {:.1} MiB{spill_note}",
+        res.n_walks,
+        res.n_tokens,
+        cs.peak_resident_bytes as f64 / (1u64 << 20) as f64
+    );
     if !res.loss_curve.is_empty() {
         println!("loss curve (pairs, mean loss):");
         for p in &res.loss_curve {

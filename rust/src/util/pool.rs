@@ -82,6 +82,47 @@ where
     out.into_iter().map(|o| o.expect("worker filled slot")).collect()
 }
 
+/// Run `f(task_index)` for every task in `0..n_tasks` on a pool of
+/// `threads` workers, collecting results in task order.
+///
+/// Unlike [`parallel_chunks`], the number of tasks is independent of the
+/// number of workers: tasks are claimed from a shared atomic counter, so
+/// `n_tasks` fixed-RNG-stream shards can be processed by however many
+/// threads the host has while the result (ordered by task index) stays
+/// byte-identical. This is the primitive the sharded walk engine and the
+/// sharded hogwild trainer are built on (DESIGN.md §Corpus-streaming).
+pub fn parallel_tasks<R, F>(n_tasks: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = threads.max(1).min(n_tasks.max(1));
+    if threads <= 1 {
+        return (0..n_tasks).map(f).collect();
+    }
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n_tasks));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let (f, next, results) = (&f, &next, &results);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_tasks {
+                    break;
+                }
+                let r = f(i);
+                results.lock().expect("result lock").push((i, r));
+            });
+        }
+    });
+    let mut out = results.into_inner().expect("result lock");
+    out.sort_by_key(|&(i, _)| i);
+    debug_assert_eq!(out.len(), n_tasks);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +175,24 @@ mod tests {
                 assert!(covered.iter().all(|&c| c), "n={n} threads={threads}");
             }
         }
+    }
+
+    #[test]
+    fn tasks_return_in_index_order_any_thread_count() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let out = parallel_tasks(17, threads, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        }
+        assert!(parallel_tasks(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn tasks_run_each_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        parallel_tasks(101, 7, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 101);
     }
 
     #[test]

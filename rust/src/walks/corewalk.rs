@@ -11,6 +11,26 @@ use super::engine::WalkSchedule;
 
 /// Eq. 13 schedule. `n_max` is the paper's `n` (walks for nodes in the
 /// degeneracy core; the DeepWalk default is 15).
+///
+/// ```
+/// use kcore_embed::cores::{core_decomposition, CoreDecomposition};
+/// use kcore_embed::graph::generators;
+/// use kcore_embed::walks::corewalk::corewalk_schedule;
+///
+/// // Paper's Fig 1 shape: degeneracy 26, n = 15 — a node's walk count
+/// // is floor(15 * k_v / 26), clamped to at least 1.
+/// let d = CoreDecomposition {
+///     core: vec![0, 1, 13, 26],
+///     degeneracy: 26,
+///     order: vec![],
+/// };
+/// assert_eq!(corewalk_schedule(&d, 15).counts, vec![1, 1, 7, 15]);
+///
+/// // On a complete graph every node sits in the top core: uniform n_max.
+/// let g = generators::complete(6);
+/// let d = core_decomposition(&g);
+/// assert!(corewalk_schedule(&d, 15).counts.iter().all(|&c| c == 15));
+/// ```
 pub fn corewalk_schedule(d: &CoreDecomposition, n_max: u32) -> WalkSchedule {
     assert!(n_max >= 1);
     let kd = d.degeneracy.max(1);
@@ -24,6 +44,22 @@ pub fn corewalk_schedule(d: &CoreDecomposition, n_max: u32) -> WalkSchedule {
 
 /// Reduction factor vs the uniform DeepWalk schedule: paper's headline
 /// corpus shrink (also Fig 1's underlying data).
+///
+/// ```
+/// use kcore_embed::cores::CoreDecomposition;
+/// use kcore_embed::walks::corewalk::walk_reduction;
+///
+/// // Three shell-1 nodes at 1 walk each + one degeneracy-core node at
+/// // n_max: 8 adaptive walks vs 20 uniform ones.
+/// let d = CoreDecomposition {
+///     core: vec![1, 1, 1, 5],
+///     degeneracy: 5,
+///     order: vec![],
+/// };
+/// let r = walk_reduction(&d, 5);
+/// assert!((r - 8.0 / 20.0).abs() < 1e-12);
+/// assert!(r < 1.0, "heterogeneous cores always shrink the corpus");
+/// ```
 pub fn walk_reduction(d: &CoreDecomposition, n_max: u32) -> f64 {
     let adaptive = corewalk_schedule(d, n_max).total_walks() as f64;
     let uniform = (d.core.len() as u64 * n_max as u64) as f64;

@@ -1,9 +1,25 @@
-//! Walk corpus: the flattened token stream the SkipGram model trains on.
+//! Walk corpus: the token stream the SkipGram model trains on.
 //!
-//! Walks are stored back-to-back in one `Vec<u32>` with an offsets array
-//! (CSR-style), so a github-scale corpus (~17M tokens) is two contiguous
-//! allocations. Pair extraction streams windows over walks without
-//! materializing the (much larger) pair list.
+//! Two representations (DESIGN.md §Corpus-streaming):
+//!
+//! - [`Corpus`]: the classic fully-materialized form — walks stored
+//!   back-to-back in one `Vec<u32>` with a CSR-style offsets array. Kept
+//!   for small graphs, golden tests and as the bridge-walk builder.
+//! - [`ShardedCorpus`]: the streaming form the pipeline trains from —
+//!   one [`CorpusShard`] per worker chunk, written through a
+//!   [`ShardWriter`] that spills to disk once a memory budget is
+//!   exceeded, so peak corpus RSS is O(shard), not O(total walks).
+//!
+//! Pair extraction streams windows over walks without materializing the
+//! (much larger) pair list in either representation: [`PairStream`] over
+//! a `Corpus`, [`ShardedPairStream`] over shards (deterministic
+//! round-robin interleave, independent of thread count).
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::util::rng::Rng;
 
@@ -34,6 +50,20 @@ impl Corpus {
             tokens,
             offsets,
         }
+    }
+
+    /// Decompose into `(n_nodes, tokens, offsets)` without copying.
+    pub fn into_parts(self) -> (usize, Vec<u32>, Vec<usize>) {
+        (self.n_nodes, self.tokens, self.offsets)
+    }
+
+    /// Wrap this corpus as a single resident shard (no copy). The cheap
+    /// bridge from `Corpus`-producing walkers (node2vec, bridge walks)
+    /// into the streaming training path.
+    pub fn into_sharded(self) -> ShardedCorpus {
+        let n_nodes = self.n_nodes;
+        let shards = vec![CorpusShard::from_corpus(self)];
+        ShardedCorpus::from_shards(n_nodes, shards, ShardStats::default())
     }
 
     pub fn push_walk(&mut self, walk: &[u32]) {
@@ -98,14 +128,10 @@ impl Corpus {
     /// Exact number of (center, context) pairs a full window-`w` sweep
     /// emits (deterministic window, both directions).
     pub fn exact_pair_count(&self, window: usize) -> u64 {
-        let mut total = 0u64;
-        for i in 0..self.n_walks() {
-            let l = self.offsets[i + 1] - self.offsets[i];
-            for c in 0..l {
-                total += (c.min(window) + (l - 1 - c).min(window)) as u64;
-            }
-        }
-        total
+        self.offsets
+            .windows(2)
+            .map(|w| pairs_in_walk(w[1] - w[0], window))
+            .sum()
     }
 }
 
@@ -199,6 +225,622 @@ impl<'a> Iterator for PairStream<'a> {
                 continue;
             }
             return Some((walk[self.center], walk[pos as usize]));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming sharded corpus (DESIGN.md §Corpus-streaming)
+// ---------------------------------------------------------------------------
+
+/// Shared resident-memory gauge: tracks current and peak bytes of walk
+/// tokens held in RAM across all shard writers of one generation run.
+#[derive(Clone, Default)]
+pub struct MemGauge {
+    inner: Arc<GaugeInner>,
+}
+
+#[derive(Default)]
+struct GaugeInner {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl MemGauge {
+    fn add(&self, bytes: usize) {
+        let now = self.inner.current.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        self.inner.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    fn sub(&self, bytes: usize) {
+        self.inner.current.fetch_sub(bytes, Ordering::SeqCst);
+    }
+
+    /// High-water mark of resident corpus bytes observed so far.
+    pub fn peak_bytes(&self) -> usize {
+        self.inner.peak.load(Ordering::SeqCst)
+    }
+
+    /// Currently-resident corpus bytes.
+    pub fn current_bytes(&self) -> usize {
+        self.inner.current.load(Ordering::SeqCst)
+    }
+}
+
+/// Aggregate statistics of a sharded-corpus build.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Peak bytes of walk data resident in RAM during generation.
+    pub peak_resident_bytes: usize,
+    /// Shards that exceeded their budget and spilled to disk.
+    pub spilled_shards: usize,
+    /// Total bytes written to spill files.
+    pub spilled_bytes: u64,
+}
+
+enum ShardStorage {
+    Resident { tokens: Vec<u32>, offsets: Vec<usize> },
+    Spilled { path: PathBuf },
+}
+
+/// One bounded-memory chunk of a [`ShardedCorpus`]: either resident
+/// (tokens + CSR offsets, like [`Corpus`]) or spilled to a temp file of
+/// `[len u32][len x u32]` records. Spill files are deleted on drop.
+pub struct CorpusShard {
+    n_nodes: usize,
+    n_walks: usize,
+    n_tokens: usize,
+    /// Walk-length histogram (`len_hist[l]` walks of length `l`),
+    /// recorded at write time so pair counts never re-read spill files.
+    len_hist: Vec<u64>,
+    storage: ShardStorage,
+}
+
+/// Exact skip-gram pairs a full deterministic window-`w` sweep emits
+/// over one walk of length `l` (both directions).
+fn pairs_in_walk(l: usize, window: usize) -> u64 {
+    let mut total = 0u64;
+    for c in 0..l {
+        total += (c.min(window) + (l - 1 - c).min(window)) as u64;
+    }
+    total
+}
+
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn spill_path() -> PathBuf {
+    let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "kcore_embed_shard_{}_{seq}.bin",
+        std::process::id()
+    ))
+}
+
+impl CorpusShard {
+    /// Take ownership of a materialized corpus as one resident shard.
+    pub fn from_corpus(corpus: Corpus) -> CorpusShard {
+        let (n_nodes, tokens, offsets) = corpus.into_parts();
+        let mut len_hist = Vec::new();
+        for w in offsets.windows(2) {
+            let l = w[1] - w[0];
+            if l >= len_hist.len() {
+                len_hist.resize(l + 1, 0);
+            }
+            len_hist[l] += 1;
+        }
+        CorpusShard {
+            n_nodes,
+            n_walks: offsets.len() - 1,
+            n_tokens: tokens.len(),
+            len_hist,
+            storage: ShardStorage::Resident { tokens, offsets },
+        }
+    }
+
+    /// Exact pair count of a window-`w` sweep over this shard, from the
+    /// write-time length histogram (no I/O).
+    pub fn exact_pair_count(&self, window: usize) -> u64 {
+        self.len_hist
+            .iter()
+            .enumerate()
+            .map(|(l, &count)| pairs_in_walk(l, window) * count)
+            .sum()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn n_walks(&self) -> usize {
+        self.n_walks
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.n_tokens
+    }
+
+    /// Whether this shard's walks live on disk.
+    pub fn is_spilled(&self) -> bool {
+        matches!(self.storage, ShardStorage::Spilled { .. })
+    }
+
+    /// Bytes of walk data this shard keeps resident in RAM.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.storage {
+            ShardStorage::Resident { tokens, offsets } => {
+                tokens.len() * 4 + offsets.len() * std::mem::size_of::<usize>()
+            }
+            ShardStorage::Spilled { .. } => 0,
+        }
+    }
+
+    /// A pull-based walk reader over this shard. Spilled shards stream
+    /// from disk through a buffered reader; resident shards copy out of
+    /// their slices. Panics if a spill file vanished from under us.
+    pub fn reader(&self) -> ShardReader<'_> {
+        match &self.storage {
+            ShardStorage::Resident { tokens, offsets } => ShardReader {
+                resident: Some((tokens, offsets)),
+                next_idx: 0,
+                file: None,
+                byte_buf: Vec::new(),
+                remaining: self.n_walks,
+            },
+            ShardStorage::Spilled { path } => ShardReader {
+                resident: None,
+                next_idx: 0,
+                file: Some(std::io::BufReader::new(File::open(path).unwrap_or_else(
+                    |e| panic!("opening corpus spill file {}: {e}", path.display()),
+                ))),
+                byte_buf: Vec::new(),
+                remaining: self.n_walks,
+            },
+        }
+    }
+
+    /// Visit every walk in order.
+    pub fn for_each_walk<F: FnMut(&[u32])>(&self, mut f: F) {
+        let mut r = self.reader();
+        let mut buf = Vec::new();
+        while r.next_walk(&mut buf) {
+            f(&buf);
+        }
+    }
+}
+
+impl Drop for CorpusShard {
+    fn drop(&mut self) {
+        if let ShardStorage::Spilled { path } = &self.storage {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Streaming walk reader over one shard (see [`CorpusShard::reader`]).
+pub struct ShardReader<'a> {
+    resident: Option<(&'a [u32], &'a [usize])>,
+    next_idx: usize,
+    file: Option<std::io::BufReader<File>>,
+    /// Reused decode scratch so the per-walk hot loop never allocates.
+    byte_buf: Vec<u8>,
+    remaining: usize,
+}
+
+impl<'a> ShardReader<'a> {
+    /// Decode the next walk into `buf` (cleared first). Returns false
+    /// once the shard is exhausted; `buf` is untouched in that case.
+    pub fn next_walk(&mut self, buf: &mut Vec<u32>) -> bool {
+        if self.remaining == 0 {
+            return false;
+        }
+        self.remaining -= 1;
+        if let Some((tokens, offsets)) = self.resident {
+            let i = self.next_idx;
+            self.next_idx += 1;
+            buf.clear();
+            buf.extend_from_slice(&tokens[offsets[i]..offsets[i + 1]]);
+            return true;
+        }
+        let reader = self.file.as_mut().expect("reader has a backing store");
+        let mut len_bytes = [0u8; 4];
+        reader
+            .read_exact(&mut len_bytes)
+            .expect("reading walk length from corpus spill file");
+        let len = u32::from_le_bytes(len_bytes) as usize;
+        self.byte_buf.resize(len * 4, 0);
+        reader
+            .read_exact(&mut self.byte_buf)
+            .expect("reading walk tokens from corpus spill file");
+        buf.clear();
+        buf.extend(
+            self.byte_buf
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        true
+    }
+}
+
+/// Bounded-memory shard writer: accumulates walks in RAM and switches to
+/// an append-only spill file once `budget_bytes` (0 = unbounded) is
+/// exceeded, keeping peak residency O(budget) per shard.
+///
+/// Spill I/O failures panic with context — the walk engine's worker
+/// closures have no error channel, and a dead scratch disk is not a
+/// recoverable condition for corpus generation.
+pub struct ShardWriter {
+    n_nodes: usize,
+    budget_bytes: usize,
+    gauge: MemGauge,
+    tokens: Vec<u32>,
+    offsets: Vec<usize>,
+    n_walks: usize,
+    n_tokens: usize,
+    len_hist: Vec<u64>,
+    /// Exactly what this writer has added to `gauge` (subtracted back on
+    /// spill — must mirror `add` calls, not a recomputed size).
+    gauge_counted: usize,
+    writer: Option<BufWriter<File>>,
+    path: Option<PathBuf>,
+    spilled_bytes: u64,
+}
+
+impl ShardWriter {
+    pub fn new(n_nodes: usize, budget_bytes: usize, gauge: MemGauge) -> ShardWriter {
+        ShardWriter {
+            n_nodes,
+            budget_bytes,
+            gauge,
+            tokens: Vec::new(),
+            offsets: vec![0],
+            n_walks: 0,
+            n_tokens: 0,
+            len_hist: Vec::new(),
+            gauge_counted: 0,
+            writer: None,
+            path: None,
+            spilled_bytes: 0,
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.tokens.len() * 4 + self.offsets.len() * std::mem::size_of::<usize>()
+    }
+
+    fn write_record(writer: &mut BufWriter<File>, walk: &[u32]) -> u64 {
+        writer
+            .write_all(&(walk.len() as u32).to_le_bytes())
+            .expect("writing walk length to corpus spill file");
+        for &t in walk {
+            writer
+                .write_all(&t.to_le_bytes())
+                .expect("writing walk tokens to corpus spill file");
+        }
+        4 + walk.len() as u64 * 4
+    }
+
+    /// Migrate everything resident to the spill file and free the RAM.
+    fn spill(&mut self) {
+        let path = spill_path();
+        let file = File::create(&path)
+            .unwrap_or_else(|e| panic!("creating corpus spill file {}: {e}", path.display()));
+        let mut writer = BufWriter::new(file);
+        for i in 0..self.n_walks {
+            let walk = &self.tokens[self.offsets[i]..self.offsets[i + 1]];
+            self.spilled_bytes += Self::write_record(&mut writer, walk);
+        }
+        self.gauge.sub(self.gauge_counted);
+        self.gauge_counted = 0;
+        self.tokens = Vec::new();
+        self.offsets = Vec::new();
+        self.writer = Some(writer);
+        self.path = Some(path);
+    }
+
+    pub fn push_walk(&mut self, walk: &[u32]) {
+        debug_assert!(walk.iter().all(|&t| (t as usize) < self.n_nodes));
+        self.n_walks += 1;
+        self.n_tokens += walk.len();
+        if walk.len() >= self.len_hist.len() {
+            self.len_hist.resize(walk.len() + 1, 0);
+        }
+        self.len_hist[walk.len()] += 1;
+        if let Some(writer) = self.writer.as_mut() {
+            self.spilled_bytes += Self::write_record(writer, walk);
+            return;
+        }
+        let bytes = walk.len() * 4 + std::mem::size_of::<usize>();
+        self.gauge.add(bytes);
+        self.gauge_counted += bytes;
+        self.tokens.extend_from_slice(walk);
+        self.offsets.push(self.tokens.len());
+        if self.budget_bytes > 0 && self.resident_bytes() > self.budget_bytes {
+            self.spill();
+        }
+    }
+
+    /// Finalize into a [`CorpusShard`].
+    pub fn finish(mut self) -> CorpusShard {
+        let storage = match self.writer.take() {
+            Some(mut writer) => {
+                writer.flush().expect("flushing corpus spill file");
+                ShardStorage::Spilled {
+                    path: self.path.take().expect("spilled shard has a path"),
+                }
+            }
+            None => ShardStorage::Resident {
+                tokens: std::mem::take(&mut self.tokens),
+                offsets: std::mem::take(&mut self.offsets),
+            },
+        };
+        CorpusShard {
+            n_nodes: self.n_nodes,
+            n_walks: self.n_walks,
+            n_tokens: self.n_tokens,
+            len_hist: std::mem::take(&mut self.len_hist),
+            storage,
+        }
+    }
+
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled_bytes
+    }
+}
+
+impl Drop for ShardWriter {
+    /// A writer dropped without [`Self::finish`] (panic unwind in a
+    /// worker) must not leak its spill file; `finish` takes the path,
+    /// so finished writers are a no-op here.
+    fn drop(&mut self) {
+        if let Some(path) = &self.path {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// The streaming corpus: an ordered list of [`CorpusShard`]s over one
+/// node space. Shard order is the canonical walk order — it is fixed by
+/// the walk schedule and shard count, never by thread scheduling, which
+/// is what makes streamed training deterministic (see
+/// [`crate::walks::engine::generate_walk_shards`]).
+pub struct ShardedCorpus {
+    n_nodes: usize,
+    shards: Vec<CorpusShard>,
+    stats: ShardStats,
+}
+
+impl ShardedCorpus {
+    pub fn from_shards(
+        n_nodes: usize,
+        shards: Vec<CorpusShard>,
+        mut stats: ShardStats,
+    ) -> ShardedCorpus {
+        debug_assert!(shards.iter().all(|s| s.n_nodes == n_nodes));
+        stats.spilled_shards = shards.iter().filter(|s| s.is_spilled()).count();
+        ShardedCorpus {
+            n_nodes,
+            shards,
+            stats,
+        }
+    }
+
+    /// Split a materialized corpus into `n_shards` shards of contiguous
+    /// walks, spilling under `budget_bytes` (total, 0 = unbounded) like
+    /// the walk engine does. Copies — used by compatibility wrappers and
+    /// the not-yet-shard-native node2vec path; the walk engine writes
+    /// shards directly. The reported peak includes the source corpus,
+    /// which stays resident while the copy is made.
+    pub fn from_corpus(corpus: &Corpus, n_shards: usize, budget_bytes: usize) -> ShardedCorpus {
+        let n_walks = corpus.n_walks();
+        let n_shards = n_shards.clamp(1, n_walks.max(1));
+        let per_shard_budget = if budget_bytes == 0 {
+            0
+        } else {
+            (budget_bytes / n_shards).max(1)
+        };
+        let gauge = MemGauge::default();
+        let mut shards = Vec::new();
+        let mut spilled_bytes = 0u64;
+        // Balanced split: exactly n_shards shards, sizes differing by at
+        // most one, so shard-granular consumers (hogwild) never idle.
+        let (base, rem) = (n_walks / n_shards, n_walks % n_shards);
+        let mut lo = 0usize;
+        for s in 0..n_shards {
+            let hi = lo + base + usize::from(s < rem);
+            let mut w = ShardWriter::new(corpus.n_nodes(), per_shard_budget, gauge.clone());
+            for i in lo..hi {
+                w.push_walk(corpus.walk(i));
+            }
+            spilled_bytes += w.spilled_bytes();
+            shards.push(w.finish());
+            lo = hi;
+        }
+        let source_bytes =
+            corpus.n_tokens() * 4 + (corpus.n_walks() + 1) * std::mem::size_of::<usize>();
+        let stats = ShardStats {
+            peak_resident_bytes: source_bytes + gauge.peak_bytes(),
+            spilled_bytes,
+            ..Default::default()
+        };
+        ShardedCorpus::from_shards(corpus.n_nodes(), shards, stats)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[CorpusShard] {
+        &self.shards
+    }
+
+    pub fn stats(&self) -> ShardStats {
+        self.stats
+    }
+
+    pub fn n_walks(&self) -> u64 {
+        self.shards.iter().map(|s| s.n_walks() as u64).sum()
+    }
+
+    pub fn n_tokens(&self) -> u64 {
+        self.shards.iter().map(|s| s.n_tokens() as u64).sum()
+    }
+
+    /// Append an extra shard (e.g. bridge walks) at the end of the
+    /// canonical order, keeping the residency telemetry honest.
+    pub fn push_shard(&mut self, shard: CorpusShard) {
+        assert_eq!(shard.n_nodes, self.n_nodes, "shard node-space mismatch");
+        self.shards.push(shard);
+        self.stats.spilled_shards = self.shards.iter().filter(|s| s.is_spilled()).count();
+        let resident_now: usize = self.shards.iter().map(CorpusShard::resident_bytes).sum();
+        self.stats.peak_resident_bytes = self.stats.peak_resident_bytes.max(resident_now);
+    }
+
+    /// Token frequency per node (streams every shard once).
+    pub fn node_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.n_nodes];
+        for shard in &self.shards {
+            shard.for_each_walk(|walk| {
+                for &t in walk {
+                    counts[t as usize] += 1;
+                }
+            });
+        }
+        counts
+    }
+
+    /// Exact `(center, context)` pair count of a full window-`w` sweep
+    /// (same formula as [`Corpus::exact_pair_count`]; computed from the
+    /// shards' write-time length histograms — no spill-file I/O).
+    pub fn exact_pair_count(&self, window: usize) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.exact_pair_count(window))
+            .sum()
+    }
+
+    /// Materialize into a flat [`Corpus`] in canonical shard order
+    /// (walk-for-walk identical to what streaming consumers see shard by
+    /// shard; O(total walks) memory — test/compat use only).
+    pub fn into_corpus(self) -> Corpus {
+        let mut corpus = Corpus::new(self.n_nodes);
+        let mut buf = Vec::new();
+        for shard in &self.shards {
+            let mut r = shard.reader();
+            while r.next_walk(&mut buf) {
+                corpus.push_walk(&buf);
+            }
+        }
+        corpus
+    }
+
+    /// Streaming skip-gram pairs over all shards with the same dynamic
+    /// window as [`PairStream`]. Walks are interleaved round-robin
+    /// across shards — deterministic for a given seed and shard count,
+    /// and it de-clusters the node locality of contiguous-chunk shards,
+    /// which helps SGD the way DeepWalk's corpus shuffle does.
+    pub fn pair_stream(&self, window: usize, rng: Rng) -> ShardedPairStream<'_> {
+        ShardedPairStream::new(self, window, rng)
+    }
+}
+
+/// Deterministic round-robin pair stream over a [`ShardedCorpus`]
+/// (see [`ShardedCorpus::pair_stream`]). O(shard-count) buffered
+/// readers; never materializes pairs or whole shards.
+pub struct ShardedPairStream<'a> {
+    readers: Vec<ShardReader<'a>>,
+    done: Vec<bool>,
+    n_done: usize,
+    cursor: usize,
+    walk: Vec<u32>,
+    in_walk: bool,
+    window: usize,
+    rng: Rng,
+    center: usize,
+    radius: usize,
+    ctx_off: isize,
+}
+
+impl<'a> ShardedPairStream<'a> {
+    pub fn new(corpus: &'a ShardedCorpus, window: usize, rng: Rng) -> ShardedPairStream<'a> {
+        assert!(window >= 1);
+        let readers: Vec<ShardReader<'a>> =
+            corpus.shards.iter().map(|s| s.reader()).collect();
+        let n = readers.len();
+        ShardedPairStream {
+            readers,
+            done: vec![false; n],
+            n_done: 0,
+            cursor: 0,
+            walk: Vec::new(),
+            in_walk: false,
+            window,
+            rng,
+            center: 0,
+            radius: 0,
+            ctx_off: 0,
+        }
+    }
+
+    fn begin_center(&mut self) {
+        self.radius = 1 + self.rng.gen_index(self.window);
+        self.ctx_off = -(self.radius as isize);
+    }
+
+    /// Pull the next non-empty walk in round-robin shard order into
+    /// `self.walk`; returns false when every shard is exhausted.
+    fn pull_next_walk(&mut self) -> bool {
+        while self.n_done < self.readers.len() {
+            let i = self.cursor;
+            self.cursor = (self.cursor + 1) % self.readers.len();
+            if self.done[i] {
+                continue;
+            }
+            if self.readers[i].next_walk(&mut self.walk) {
+                if self.walk.is_empty() {
+                    continue;
+                }
+                self.center = 0;
+                self.in_walk = true;
+                self.begin_center();
+                return true;
+            }
+            self.done[i] = true;
+            self.n_done += 1;
+        }
+        false
+    }
+}
+
+impl<'a> Iterator for ShardedPairStream<'a> {
+    type Item = (u32, u32);
+
+    fn next(&mut self) -> Option<(u32, u32)> {
+        loop {
+            if !self.in_walk && !self.pull_next_walk() {
+                return None;
+            }
+            if self.ctx_off > self.radius as isize {
+                self.center += 1;
+                if self.center >= self.walk.len() {
+                    self.in_walk = false;
+                    continue;
+                }
+                self.begin_center();
+            }
+            let off = self.ctx_off;
+            self.ctx_off += 1;
+            if off == 0 {
+                continue;
+            }
+            let pos = self.center as isize + off;
+            if pos < 0 || pos >= self.walk.len() as isize {
+                continue;
+            }
+            return Some((self.walk[self.center], self.walk[pos as usize]));
         }
     }
 }
@@ -298,5 +940,108 @@ mod tests {
         // pos0: min(0,2)+min(3,2)=2 ; pos1: 1+2=3 ; pos2: 2+1=3 ; pos3: 2+0=2
         let c = corpus_of(&[&[0, 1, 2, 3]], 4);
         assert_eq!(c.exact_pair_count(2), 10);
+    }
+
+    // --- sharded corpus ---
+
+    fn collect_walks(shard: &CorpusShard) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        shard.for_each_walk(|w| out.push(w.to_vec()));
+        out
+    }
+
+    #[test]
+    fn shard_writer_spill_round_trips_walks() {
+        let walks: Vec<Vec<u32>> = (0..40u32).map(|i| vec![i % 7, i % 5, i % 3]).collect();
+        let gauge = MemGauge::default();
+        // Budget of 64 bytes: spills after a handful of walks.
+        let mut w = ShardWriter::new(7, 64, gauge.clone());
+        for walk in &walks {
+            w.push_walk(walk);
+        }
+        let shard = w.finish();
+        assert!(shard.is_spilled());
+        assert_eq!(shard.n_walks(), 40);
+        assert_eq!(shard.n_tokens(), 120);
+        assert_eq!(shard.resident_bytes(), 0);
+        assert_eq!(collect_walks(&shard), walks);
+        // Resident high-water stayed near the budget, not the corpus.
+        assert!(gauge.peak_bytes() < 200, "peak {}", gauge.peak_bytes());
+        // Reading twice works (fresh reader per pass).
+        assert_eq!(collect_walks(&shard), walks);
+    }
+
+    #[test]
+    fn shard_spill_file_removed_on_drop() {
+        let gauge = MemGauge::default();
+        let mut w = ShardWriter::new(3, 8, gauge);
+        for _ in 0..10 {
+            w.push_walk(&[0, 1, 2]);
+        }
+        let shard = w.finish();
+        let path = match &shard.storage {
+            ShardStorage::Spilled { path } => path.clone(),
+            _ => panic!("expected spill"),
+        };
+        assert!(path.exists());
+        drop(shard);
+        assert!(!path.exists(), "spill file leaked: {}", path.display());
+    }
+
+    #[test]
+    fn unbounded_writer_stays_resident() {
+        let mut w = ShardWriter::new(4, 0, MemGauge::default());
+        w.push_walk(&[0, 1]);
+        w.push_walk(&[2, 3]);
+        let shard = w.finish();
+        assert!(!shard.is_spilled());
+        assert!(shard.resident_bytes() > 0);
+        assert_eq!(collect_walks(&shard), vec![vec![0, 1], vec![2, 3]]);
+    }
+
+    #[test]
+    fn sharded_pair_stream_round_robins_and_matches_exact_count() {
+        // Two shards, window 1: pairs are adjacent tokens; round-robin
+        // order alternates walks across shards.
+        let a = corpus_of(&[&[0, 1], &[2, 3]], 6);
+        let b = corpus_of(&[&[4, 5]], 6);
+        let mut sharded = ShardedCorpus::from_corpus(&a, 1, 0);
+        sharded.push_shard(CorpusShard::from_corpus(b));
+        let pairs: Vec<(u32, u32)> = sharded.pair_stream(1, Rng::new(3)).collect();
+        // Walk order: a[0], b[0], a[1] (shard 1 exhausted after b[0]).
+        assert_eq!(
+            pairs,
+            vec![(0, 1), (1, 0), (4, 5), (5, 4), (2, 3), (3, 2)]
+        );
+        assert_eq!(pairs.len() as u64, sharded.exact_pair_count(1));
+    }
+
+    #[test]
+    fn sharded_helpers_match_materialized_corpus() {
+        let c = corpus_of(&[&[0, 1, 2], &[3], &[4, 0], &[], &[1, 1, 1, 1]], 5);
+        let sharded = ShardedCorpus::from_corpus(&c, 3, 0);
+        assert_eq!(sharded.n_shards(), 3);
+        assert_eq!(sharded.n_walks(), c.n_walks() as u64);
+        assert_eq!(sharded.n_tokens(), c.n_tokens() as u64);
+        assert_eq!(sharded.node_counts(), c.node_counts());
+        for w in [1usize, 2, 4] {
+            assert_eq!(sharded.exact_pair_count(w), c.exact_pair_count(w));
+        }
+        // Contiguous walk split: into_corpus restores the original.
+        let back = sharded.into_corpus();
+        assert_eq!(back.n_walks(), c.n_walks());
+        assert!(back.walks().zip(c.walks()).all(|(x, y)| x == y));
+    }
+
+    #[test]
+    fn into_sharded_is_single_resident_shard() {
+        let c = corpus_of(&[&[0, 1], &[1, 0]], 2);
+        let s = c.clone().into_sharded();
+        assert_eq!(s.n_shards(), 1);
+        assert!(!s.shards()[0].is_spilled());
+        assert_eq!(s.n_walks(), 2);
+        let pairs_sharded: Vec<(u32, u32)> = s.pair_stream(1, Rng::new(5)).collect();
+        let pairs_flat: Vec<(u32, u32)> = PairStream::new(&c, 1, Rng::new(5)).collect();
+        assert_eq!(pairs_sharded, pairs_flat);
     }
 }

@@ -4,16 +4,20 @@
 //! [`WalkSchedule`] — the per-node walk counts. DeepWalk uses a constant
 //! schedule; CoreWalk ([`super::corewalk`]) scales counts by core number.
 //!
-//! Parallelism: nodes are split into contiguous chunks, one worker and
-//! one forked RNG stream per chunk, so output is deterministic for a
-//! given (seed, thread-count-independent) — workers write into separate
-//! sub-corpora that are concatenated in chunk order.
+//! Parallelism and determinism (DESIGN.md §Corpus-streaming): nodes are
+//! split into `shards` contiguous chunks — a count fixed by
+//! [`ShardOpts`], NOT by the thread count — with one forked RNG stream
+//! per shard. Workers claim shards from a queue
+//! ([`pool::parallel_tasks`]) and write each one through a bounded-memory
+//! [`ShardWriter`], so the corpus is byte-identical for a given
+//! (seed, shard count) no matter how many threads ran, and peak corpus
+//! memory is O(budget) when a budget is set.
 
 use crate::graph::Graph;
 use crate::util::pool;
 use crate::util::rng::Rng;
 
-use super::corpus::Corpus;
+use super::corpus::{Corpus, MemGauge, ShardStats, ShardWriter, ShardedCorpus};
 
 /// Number of walks rooted at each node.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -73,42 +77,104 @@ pub fn uniform_walk(g: &Graph, start: u32, length: usize, rng: &mut Rng, out: &m
     }
 }
 
-/// Generate all walks of `schedule` in parallel. Walks for node `v` are
-/// contiguous; chunk order makes the corpus deterministic for a given
-/// seed and independent of thread scheduling.
-pub fn generate_walks(g: &Graph, schedule: &WalkSchedule, params: &WalkParams) -> Corpus {
+/// Default shard count: a constant (not the thread count!) so the
+/// canonical walk order — and therefore the whole training stream — is
+/// independent of how many threads the host happens to have.
+pub const DEFAULT_SHARD_COUNT: usize = 16;
+
+/// Sharding/memory knobs for [`generate_walk_shards`], surfaced through
+/// `coordinator::config::PipelineConfig` and the CLI.
+#[derive(Debug, Clone, Default)]
+pub struct ShardOpts {
+    /// Number of corpus shards; 0 = [`DEFAULT_SHARD_COUNT`]. Changing
+    /// this changes the RNG stream assignment (and hence the walks);
+    /// changing `WalkParams::threads` never does.
+    pub shards: usize,
+    /// Total corpus memory budget in bytes (split evenly across
+    /// shards); 0 = unbounded, shards stay fully resident.
+    pub budget_bytes: usize,
+}
+
+impl ShardOpts {
+    /// Budget expressed in MiB, the unit the config/CLI use.
+    pub fn with_budget_mb(shards: usize, budget_mb: usize) -> ShardOpts {
+        ShardOpts {
+            shards,
+            budget_bytes: budget_mb * (1 << 20),
+        }
+    }
+
+    /// Effective shard count for a run over `n_units` walk roots (or
+    /// walks, for re-sharding): resolves the 0-means-default knob and
+    /// clamps so no shard is guaranteed empty. The single source of the
+    /// default-resolution rule — callers must not re-derive it.
+    pub fn resolve_shards(&self, n_units: usize) -> usize {
+        let s = if self.shards == 0 {
+            DEFAULT_SHARD_COUNT
+        } else {
+            self.shards
+        };
+        s.clamp(1, n_units.max(1))
+    }
+}
+
+/// Generate the walks of `schedule` as a [`ShardedCorpus`]: one shard
+/// per contiguous node chunk, each with its own pre-forked RNG stream
+/// and bounded-memory writer. Walks for node `v` are contiguous within
+/// its shard; shard order is the canonical corpus order.
+///
+/// Determinism contract: output is a pure function of
+/// `(graph, schedule, seed, shard count)` — thread count only changes
+/// wall-clock time.
+pub fn generate_walk_shards(
+    g: &Graph,
+    schedule: &WalkSchedule,
+    params: &WalkParams,
+    opts: &ShardOpts,
+) -> ShardedCorpus {
     let n = g.n_nodes();
     assert_eq!(schedule.n_nodes(), n, "schedule/graph node count mismatch");
+    let n_shards = opts.resolve_shards(n);
     let mut seed_rng = Rng::new(params.seed);
-    // Pre-fork one RNG per chunk so chunk boundaries don't change streams.
-    let threads = params.threads.max(1);
-    let chunk_rngs: Vec<Rng> = (0..threads).map(|i| seed_rng.fork(i as u64)).collect();
+    // Pre-fork one RNG per shard so the streams are pinned to shard
+    // indices, not to whichever worker claims the shard.
+    let shard_rngs: Vec<Rng> = (0..n_shards).map(|i| seed_rng.fork(i as u64)).collect();
+    let per_shard_budget = if opts.budget_bytes == 0 {
+        0
+    } else {
+        (opts.budget_bytes / n_shards).max(1)
+    };
+    let gauge = MemGauge::default();
+    let chunk = n.div_ceil(n_shards).max(1);
 
-    let parts: Vec<Corpus> = pool::parallel_chunks(n, threads, |ci, range| {
-        let mut rng = chunk_rngs[ci].clone();
-        let est_tokens: usize = range
-            .clone()
-            .map(|v| schedule.counts[v] as usize * params.walk_length)
-            .sum();
-        let mut tokens = Vec::with_capacity(est_tokens);
-        let mut offsets = Vec::with_capacity(est_tokens / params.walk_length.max(1) + 1);
-        offsets.push(0usize);
+    let shards = pool::parallel_tasks(n_shards, params.threads.max(1), |si| {
+        let mut rng = shard_rngs[si].clone();
+        let range = (si * chunk).min(n)..((si + 1) * chunk).min(n);
+        let mut writer = ShardWriter::new(n, per_shard_budget, gauge.clone());
         let mut buf = Vec::with_capacity(params.walk_length);
         for v in range {
             for _ in 0..schedule.counts[v] {
                 uniform_walk(g, v as u32, params.walk_length, &mut rng, &mut buf);
-                tokens.extend_from_slice(&buf);
-                offsets.push(tokens.len());
+                writer.push_walk(&buf);
             }
         }
-        Corpus::from_parts(n, tokens, offsets)
+        writer
     });
+    let spilled_bytes = shards.iter().map(ShardWriter::spilled_bytes).sum();
+    let shards = shards.into_iter().map(ShardWriter::finish).collect();
+    let stats = ShardStats {
+        peak_resident_bytes: gauge.peak_bytes(),
+        spilled_bytes,
+        ..Default::default()
+    };
+    ShardedCorpus::from_shards(n, shards, stats)
+}
 
-    let mut merged = Corpus::new(n);
-    for p in &parts {
-        merged.append(p);
-    }
-    merged
+/// Generate all walks of `schedule` as one materialized [`Corpus`]
+/// (compatibility wrapper over [`generate_walk_shards`] with default
+/// shard options — same canonical walk order as the streaming path).
+pub fn generate_walks(g: &Graph, schedule: &WalkSchedule, params: &WalkParams) -> Corpus {
+    generate_walk_shards(g, schedule, params, &ShardOpts::default()).into_corpus()
 }
 
 #[cfg(test)]
@@ -177,20 +243,30 @@ mod tests {
 
     #[test]
     fn deterministic_across_thread_counts() {
-        // Same seed + chunk-pinned RNG streams: the corpus must not
-        // depend on how many threads actually ran... as long as the
-        // chunk count is the same. We fix threads and just re-run.
+        // RNG streams are pinned to shard indices (fixed count), so the
+        // corpus must be byte-identical no matter how many threads ran.
         let g = generators::holme_kim(200, 3, 0.3, &mut Rng::new(9));
         let s = WalkSchedule::uniform(200, 2);
-        let p = WalkParams {
-            walk_length: 12,
-            seed: 42,
-            threads: 4,
+        let corpus_with = |threads: usize| {
+            generate_walks(
+                &g,
+                &s,
+                &WalkParams {
+                    walk_length: 12,
+                    seed: 42,
+                    threads,
+                },
+            )
         };
-        let c1 = generate_walks(&g, &s, &p);
-        let c2 = generate_walks(&g, &s, &p);
-        assert_eq!(c1.n_tokens(), c2.n_tokens());
-        assert!(c1.walks().zip(c2.walks()).all(|(a, b)| a == b));
+        let c1 = corpus_with(1);
+        for threads in [2usize, 4, 16] {
+            let c2 = corpus_with(threads);
+            assert_eq!(c1.n_tokens(), c2.n_tokens());
+            assert!(
+                c1.walks().zip(c2.walks()).all(|(a, b)| a == b),
+                "corpus differs at threads={threads}"
+            );
+        }
     }
 
     #[test]

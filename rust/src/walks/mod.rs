@@ -1,6 +1,8 @@
 //! Random-walk engine: uniform DeepWalk walks, the paper's CoreWalk
 //! adaptive schedule (§2.1, eq. 13), node2vec biased walks, and the walk
-//! corpus / streaming skip-gram pair extraction.
+//! corpus — both the materialized [`Corpus`] and the streaming
+//! [`ShardedCorpus`] with skip-gram pair extraction over each
+//! (DESIGN.md §Corpus-streaming).
 
 pub mod bridge;
 pub mod corewalk;
@@ -8,5 +10,10 @@ pub mod corpus;
 pub mod engine;
 pub mod node2vec;
 
-pub use corpus::{Corpus, PairStream};
-pub use engine::{generate_walks, WalkParams, WalkSchedule};
+pub use corpus::{
+    Corpus, CorpusShard, PairStream, ShardStats, ShardWriter, ShardedCorpus, ShardedPairStream,
+};
+pub use engine::{
+    generate_walk_shards, generate_walks, ShardOpts, WalkParams, WalkSchedule,
+    DEFAULT_SHARD_COUNT,
+};

@@ -1,0 +1,160 @@
+//! Integration: the streaming sharded corpus pipeline's two contracts
+//! (DESIGN.md §Corpus-streaming).
+//!
+//! 1. Determinism: the streamed corpus — and everything derived from it
+//!    (pair stream, batches) — is byte-identical across thread counts,
+//!    because RNG streams are pinned to shard indices, not workers.
+//! 2. Bounded memory: under a small budget, shards spill to disk, peak
+//!    resident bytes stay near the budget, and the spilled corpus is
+//!    byte-identical to the unbounded one.
+
+use kcore_embed::embed::batches::{BatchStream, SgnsParams};
+use kcore_embed::embed::sampler::NegativeSampler;
+use kcore_embed::graph::generators;
+use kcore_embed::util::rng::Rng;
+use kcore_embed::walks::{
+    generate_walk_shards, ShardOpts, ShardedCorpus, WalkParams, WalkSchedule,
+};
+
+fn walks_of(c: &ShardedCorpus) -> Vec<Vec<u32>> {
+    let mut out = Vec::new();
+    for shard in c.shards() {
+        shard.for_each_walk(|w| out.push(w.to_vec()));
+    }
+    out
+}
+
+fn shards_with(threads: usize, budget_bytes: usize) -> ShardedCorpus {
+    let g = generators::holme_kim(300, 3, 0.4, &mut Rng::new(9));
+    let schedule = WalkSchedule::uniform(300, 4);
+    generate_walk_shards(
+        &g,
+        &schedule,
+        &WalkParams {
+            walk_length: 16,
+            seed: 42,
+            threads,
+        },
+        &ShardOpts {
+            shards: 8,
+            budget_bytes,
+        },
+    )
+}
+
+#[test]
+fn streamed_corpus_byte_identical_across_thread_counts() {
+    let reference = walks_of(&shards_with(1, 0));
+    assert!(!reference.is_empty());
+    for threads in [2usize, 8] {
+        let walks = walks_of(&shards_with(threads, 0));
+        assert_eq!(
+            walks, reference,
+            "corpus differs between threads=1 and threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn pair_and_batch_streams_identical_across_thread_counts() {
+    let p = SgnsParams {
+        window: 3,
+        negatives: 4,
+        ..Default::default()
+    };
+    let reference = shards_with(1, 0);
+    let ref_pairs: Vec<(u32, u32)> = reference.pair_stream(p.window, Rng::new(7)).collect();
+    assert!(ref_pairs.len() > 1000);
+    let sampler = NegativeSampler::from_counts(&reference.node_counts());
+    let total = reference.exact_pair_count(p.window);
+    let ref_batches: Vec<Vec<i32>> = BatchStream::new(
+        reference.pair_stream(p.window, Rng::new(7)),
+        &sampler,
+        &p,
+        32,
+        4,
+        total,
+        11,
+    )
+    .map(|sb| sb.idx)
+    .collect();
+
+    for threads in [2usize, 8] {
+        let other = shards_with(threads, 0);
+        let pairs: Vec<(u32, u32)> = other.pair_stream(p.window, Rng::new(7)).collect();
+        assert_eq!(pairs, ref_pairs, "pair stream differs at threads={threads}");
+        let batches: Vec<Vec<i32>> = BatchStream::new(
+            other.pair_stream(p.window, Rng::new(7)),
+            &sampler,
+            &p,
+            32,
+            4,
+            total,
+            11,
+        )
+        .map(|sb| sb.idx)
+        .collect();
+        assert_eq!(batches, ref_batches, "batches differ at threads={threads}");
+    }
+}
+
+#[test]
+fn small_budget_spills_with_bounded_residency_and_identical_walks() {
+    let unbounded = shards_with(4, 0);
+    let materialized_bytes = unbounded.stats().peak_resident_bytes;
+    assert!(materialized_bytes > 0);
+
+    // ~4 KiB across 8 shards: far below the ~75 KiB corpus, so every
+    // shard must spill.
+    let budget = 4096usize;
+    let bounded = shards_with(4, budget);
+    let stats = bounded.stats();
+    assert!(
+        stats.spilled_shards > 0,
+        "no shard spilled under a {budget}-byte budget"
+    );
+    assert!(stats.spilled_bytes > 0);
+    // Peak residency: per-shard budget + one walk of slack per shard,
+    // way below the fully-resident corpus.
+    assert!(
+        stats.peak_resident_bytes < materialized_bytes / 2,
+        "peak {} not bounded vs materialized {}",
+        stats.peak_resident_bytes,
+        materialized_bytes
+    );
+
+    // Spilling must not change a single token.
+    assert_eq!(walks_of(&bounded), walks_of(&unbounded));
+    assert_eq!(bounded.n_walks(), unbounded.n_walks());
+    assert_eq!(bounded.n_tokens(), unbounded.n_tokens());
+
+    // Derived quantities stream correctly off disk too.
+    assert_eq!(bounded.node_counts(), unbounded.node_counts());
+    assert_eq!(bounded.exact_pair_count(3), unbounded.exact_pair_count(3));
+    let a: Vec<(u32, u32)> = bounded.pair_stream(3, Rng::new(5)).collect();
+    let b: Vec<(u32, u32)> = unbounded.pair_stream(3, Rng::new(5)).collect();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn materialized_wrapper_matches_streamed_canonical_order() {
+    let streamed = walks_of(&shards_with(3, 0));
+    let g = generators::holme_kim(300, 3, 0.4, &mut Rng::new(9));
+    let corpus = kcore_embed::walks::generate_walks(
+        &g,
+        &WalkSchedule::uniform(300, 4),
+        &WalkParams {
+            walk_length: 16,
+            seed: 42,
+            threads: 5,
+        },
+    );
+    // generate_walks uses the default shard count (16), so walk CONTENTS
+    // per node may differ from the 8-shard run; but the roots must agree
+    // walk-for-walk with any sharding (schedule order is canonical).
+    let shards8 = shards_with(1, 0);
+    assert_eq!(corpus.n_walks() as u64, shards8.n_walks());
+    let streamed_roots: Vec<u32> = streamed.iter().map(|w| w[0]).collect();
+    let wrapper_roots: Vec<u32> = corpus.walks().map(|w| w[0]).collect();
+    assert_eq!(wrapper_roots, streamed_roots);
+}

@@ -1,0 +1,234 @@
+//! Offline drop-in subset of the `anyhow` error crate.
+//!
+//! The offline build cannot fetch crates.io, so this vendored shim
+//! provides the API surface `kcore-embed` actually uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait, [`anyhow!`], [`bail!`]
+//! and [`ensure!`]. Semantics follow upstream anyhow where it matters:
+//!
+//! - `{}` displays the outermost message (the most recent context);
+//! - `{:#}` displays the whole chain, outermost first, `": "`-joined;
+//! - `{:?}` displays the outermost message plus a `Caused by:` list;
+//! - any `std::error::Error + Send + Sync + 'static` converts via `?`.
+//!
+//! Unlike upstream, the original error value is not retained — only its
+//! rendered message — so `downcast` is intentionally absent.
+
+use std::fmt;
+
+/// Error type: a message plus a chain of context frames.
+///
+/// Frames are stored innermost-first; `frames.last()` is the outermost
+/// (most recently attached) context.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            frames: vec![message.to_string()],
+        }
+    }
+
+    /// Attach an outer context frame (consuming form used by `Context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.frames.push(context.to_string());
+        self
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.frames.first().map(String::as_str).unwrap_or("")
+    }
+
+    /// Context frames, outermost first (like `anyhow::Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().rev().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain outermost-first.
+            for (i, frame) in self.frames.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{frame}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.frames.last().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.last().map(String::as_str).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in self.frames.iter().rev().skip(1) {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes this blanket conversion coherent (same trick as upstream).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // Render the source chain into frames so context is not lost.
+        let mut frames = Vec::new();
+        let mut source: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = source {
+            frames.push(s.to_string());
+            source = s.source();
+        }
+        frames.reverse(); // innermost first
+        frames.push(e.to_string());
+        Error { frames }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T, E> {
+    /// Wrap the error with an outer context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_and_alternate_shows_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("file missing"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", inner().unwrap_err()), "file missing");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let n = 3;
+        let e = anyhow!("bad count {n}");
+        assert_eq!(format!("{e}"), "bad count 3");
+        let e = anyhow!("bad {} of {}", 1, 2);
+        assert_eq!(format!("{e}"), "bad 1 of 2");
+
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 10 {
+                bail!("x too large: {x}");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too large: 11");
+    }
+
+    #[test]
+    fn with_context_and_option_context() {
+        let e = Err::<(), _>(io_err())
+            .with_context(|| format!("opening {}", "a.txt"))
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening a.txt: file missing");
+        let e = None::<u32>.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+}

@@ -1,0 +1,147 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate links the PJRT C API and is unavailable in the offline
+//! build environment, so this stub keeps the whole `kcore_embed::runtime`
+//! layer compiling with identical type signatures. Every constructor
+//! fails with [`Error::unavailable`], which the callers surface as "run
+//! with `--backend native`" guidance; the native trainer/propagator are
+//! the offline defaults (DESIGN.md §Runtime).
+//!
+//! Swapping in the real bindings is a one-line change in
+//! `rust/Cargo.toml` (point the `xla` dependency at the real crate); no
+//! source file references this stub by name.
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' opaque error.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT/XLA runtime is not available in this build \
+             (offline xla stub); use the native backend or link the real \
+             xla crate in rust/Cargo.toml"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types accepted by device buffers / literals.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+
+/// Parsed HLO module (stub: never constructible).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always fails in the stub.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("parsing HLO {path}")))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("creating PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compiling computation"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("uploading host buffer"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed argument buffers; returns per-device output
+    /// buffer lists.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("executing"))
+    }
+}
+
+/// Device-resident buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("downloading buffer"))
+    }
+}
+
+/// Host-side literal (downloaded tensor).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("literal to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_with_guidance() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("native"), "error should point at the native backend: {msg}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
