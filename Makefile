@@ -1,6 +1,6 @@
 # Convenience targets; everything also works as plain cargo/python calls.
 
-.PHONY: build test bench artifacts
+.PHONY: build test bench artifacts smoke
 
 build:
 	cd rust && cargo build --release
@@ -15,3 +15,20 @@ bench:
 # rust falls back to --backend native without them).
 artifacts:
 	cd python && python -m compile.aot --out ../artifacts
+
+# Serving smoke: train a tiny embedding, export the binary artifact,
+# verify the mmap and in-memory query paths agree, exercise the
+# quantized scan and the batch `serve` front-end. CI runs exactly this
+# target — extend it here, not in ci.yml.
+smoke: build
+	cd rust && ./target/release/kcore-embed embed --graph cora \
+	  --backend native --walks 2 --walk-length 10 --dim 32 \
+	  --out /tmp/smoke_emb.tsv --store /tmp/smoke_emb.kce
+	cd rust && ./target/release/kcore-embed query --store /tmp/smoke_emb.kce \
+	  --node 0 --top-k 5 | tee /tmp/smoke_nn.txt
+	cd rust && ./target/release/kcore-embed query --store /tmp/smoke_emb.kce \
+	  --node 0 --top-k 5 --in-memory | diff - /tmp/smoke_nn.txt
+	cd rust && ./target/release/kcore-embed query --store /tmp/smoke_emb.kce \
+	  --node 0 --top-k 5 --quantized
+	printf 'nn 0 5\nnn 1 3\n' | \
+	  ./rust/target/release/kcore-embed serve --store /tmp/smoke_emb.kce

@@ -149,6 +149,7 @@ fn main() {
     let budget = ShardOpts {
         shards: 16,
         budget_bytes: 8 << 20, // 8 MiB across all shards
+        ..Default::default()
     };
     let mut streaming_peak = 0usize;
     let mut spilled = 0usize;
@@ -168,6 +169,41 @@ fn main() {
         materialized_bytes as f64 / streaming_peak.max(1) as f64,
         budget.shards
     );
+
+    // Serve: top-k scan kernels over a resident store (unit: scored
+    // rows). Exact blocked scan vs the 8-bit quantized candidate scan
+    // with exact re-rank (DESIGN.md §Serving).
+    {
+        use kcore_embed::serve::{EmbeddingStore, Metric, TopKIndex, TopKParams};
+        let (sn, sdim) = (50_000usize, 128usize);
+        let mut sr = Rng::new(8);
+        let vecs: Vec<f32> = (0..sn * sdim).map(|_| sr.gen_f32() * 2.0 - 1.0).collect();
+        let store = EmbeddingStore::from_parts(vecs, sn, sdim, vec![0; sn]);
+        let params = TopKParams {
+            threads: kcore_embed::util::pool::default_threads(),
+            ..Default::default()
+        };
+        let idx = TopKIndex::build_quantized(&store, params);
+        let queries: Vec<u32> = (0..8).map(|i| i * 601).collect();
+        bench("serve exact top-10 scan (M rows)", "M-row", 3, || {
+            let mut acc = 0u32;
+            for &q in &queries {
+                let hits = idx.top_k_node(&store, q, 10, Metric::Cosine);
+                acc ^= hits[0].0;
+            }
+            std::hint::black_box(acc);
+            (sn * queries.len()) as u64
+        });
+        bench("serve quantized top-10 scan (M rows)", "M-row", 3, || {
+            let mut acc = 0u32;
+            for &q in &queries {
+                let hits = idx.top_k_node_quantized(&store, q, 10, Metric::Cosine);
+                acc ^= hits[0].0;
+            }
+            std::hint::black_box(acc);
+            (sn * queries.len()) as u64
+        });
+    }
 
     // L3: logistic regression fit (unit: sample-epochs).
     let (n, dim) = (4000usize, 256usize);

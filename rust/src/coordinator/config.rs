@@ -77,6 +77,14 @@ pub struct PipelineConfig {
     /// Corpus memory budget in MiB (split across shards; shards over
     /// budget spill to disk). 0 = unbounded / fully resident.
     pub corpus_budget_mb: usize,
+    /// Directory for corpus spill files; None = the OS temp dir.
+    /// Deployments point this at a dedicated scratch disk so spill
+    /// traffic never competes with the system volume.
+    pub spill_dir: Option<std::path::PathBuf>,
+    /// After training (and propagation), export the embedding + core
+    /// numbers as a binary serving artifact ([`crate::serve::store`])
+    /// at this path. None = no export.
+    pub export_store: Option<std::path::PathBuf>,
 }
 
 impl Default for PipelineConfig {
@@ -95,6 +103,8 @@ impl Default for PipelineConfig {
             bridge_walks: 0,
             corpus_shards: 0,
             corpus_budget_mb: 0,
+            spill_dir: None,
+            export_store: None,
         }
     }
 }
@@ -122,6 +132,20 @@ impl PipelineConfig {
             ("seed", Json::num(self.seed as f64)),
             ("corpus_shards", Json::num(self.corpus_shards as f64)),
             ("corpus_budget_mb", Json::num(self.corpus_budget_mb as f64)),
+            (
+                "spill_dir",
+                self.spill_dir
+                    .as_ref()
+                    .map(|p| Json::str(&p.to_string_lossy()))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "export_store",
+                self.export_store
+                    .as_ref()
+                    .map(|p| Json::str(&p.to_string_lossy()))
+                    .unwrap_or(Json::Null),
+            ),
         ];
         if let Embedder::Node2Vec { p, q } = self.embedder {
             fields.push(("p", Json::num(p)));
@@ -170,6 +194,14 @@ impl PipelineConfig {
         cfg.seed = get_f("seed", 0.0) as u64;
         cfg.corpus_shards = get_u("corpus_shards", cfg.corpus_shards);
         cfg.corpus_budget_mb = get_u("corpus_budget_mb", cfg.corpus_budget_mb);
+        cfg.spill_dir = j
+            .get("spill_dir")
+            .and_then(Json::as_str)
+            .map(std::path::PathBuf::from);
+        cfg.export_store = j
+            .get("export_store")
+            .and_then(Json::as_str)
+            .map(std::path::PathBuf::from);
         Ok(cfg)
     }
 
@@ -211,11 +243,19 @@ mod tests {
         let cfg = PipelineConfig {
             corpus_shards: 32,
             corpus_budget_mb: 64,
+            spill_dir: Some(std::path::PathBuf::from("/scratch/corpus")),
+            export_store: Some(std::path::PathBuf::from("out/emb.kce")),
             ..Default::default()
         };
         let back = PipelineConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.corpus_shards, 32);
         assert_eq!(back.corpus_budget_mb, 64);
+        assert_eq!(back.spill_dir, cfg.spill_dir);
+        assert_eq!(back.export_store, cfg.export_store);
+        // Defaults stay None through a round trip.
+        let d = PipelineConfig::from_json(&PipelineConfig::default().to_json()).unwrap();
+        assert_eq!(d.spill_dir, None);
+        assert_eq!(d.export_store, None);
     }
 
     #[test]

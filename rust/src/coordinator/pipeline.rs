@@ -30,6 +30,8 @@ pub const PHASE_DECOMP: &str = "core_decomposition";
 pub const PHASE_WALKS: &str = "walks";
 pub const PHASE_TRAIN: &str = "train";
 pub const PHASE_PROP: &str = "propagation";
+/// Serving-artifact export (only when `export_store` is set).
+pub const PHASE_EXPORT: &str = "export";
 
 /// Everything a pipeline run produces.
 pub struct PipelineOutput {
@@ -111,7 +113,8 @@ pub fn run_pipeline(
             corewalk::corewalk_schedule(&d_target, cfg.walks_per_node)
         }
     };
-    let shard_opts = ShardOpts::with_budget_mb(cfg.corpus_shards, cfg.corpus_budget_mb);
+    let mut shard_opts = ShardOpts::with_budget_mb(cfg.corpus_shards, cfg.corpus_budget_mb);
+    shard_opts.spill_dir = cfg.spill_dir.clone();
     let mut corpus: ShardedCorpus = timer.time(PHASE_WALKS, || match cfg.embedder {
         Embedder::Node2Vec { p, q } => {
             // node2vec walks are not shard-native yet: materialize, then
@@ -128,7 +131,12 @@ pub fn run_pipeline(
                 },
             );
             let n_shards = shard_opts.resolve_shards(c.n_walks());
-            ShardedCorpus::from_corpus(&c, n_shards, shard_opts.budget_bytes)
+            ShardedCorpus::from_corpus(
+                &c,
+                n_shards,
+                shard_opts.budget_bytes,
+                shard_opts.spill_dir.as_deref(),
+            )
         }
         _ => generate_walk_shards(
             &target,
@@ -204,6 +212,30 @@ pub fn run_pipeline(
         }
         _ => core_embedding,
     };
+
+    // Phase 6: export the serving artifact — the full-graph embedding
+    // plus per-node core numbers, so the query tier never re-decomposes
+    // (crate::serve::store). Reuses the phase-1 decomposition when the
+    // run computed one.
+    if let Some(path) = &cfg.export_store {
+        let full_decomp;
+        let cores: &[u32] = match &decomp {
+            Some(d) => &d.core,
+            None => {
+                full_decomp = timer.time(PHASE_DECOMP, || core_decomposition(g));
+                &full_decomp.core
+            }
+        };
+        timer.time(PHASE_EXPORT, || {
+            crate::serve::store::write_store(
+                path,
+                embedding.data(),
+                embedding.n(),
+                embedding.dim(),
+                Some(cores),
+            )
+        })?;
+    }
 
     Ok(PipelineOutput {
         embedding,
@@ -329,6 +361,31 @@ mod tests {
         // No budget set: everything stays resident.
         assert_eq!(out.corpus_stats.spilled_shards, 0);
         assert_eq!(out.corpus_stats.spilled_bytes, 0);
+    }
+
+    #[test]
+    fn export_store_writes_loadable_artifact() {
+        let g = generators::holme_kim(80, 3, 0.4, &mut crate::util::rng::Rng::new(2));
+        let path = std::env::temp_dir().join(format!(
+            "kcore_embed_pipeline_export_{}.kce",
+            std::process::id()
+        ));
+        let mut cfg = tiny_cfg();
+        cfg.export_store = Some(path.clone());
+        let out = run_pipeline(&g, &cfg, None).unwrap();
+        assert!(out.timer.secs(PHASE_EXPORT) > 0.0);
+        let store = crate::serve::EmbeddingStore::open_in_memory(&path).unwrap();
+        assert_eq!(store.n(), 80);
+        assert_eq!(store.dim(), cfg.sgns.dim);
+        assert!(store.has_cores());
+        // Core table matches a fresh decomposition of the input graph.
+        let d = core_decomposition(&g);
+        assert_eq!(store.cores(), &d.core[..]);
+        // Rows are the pipeline's embedding, bit for bit.
+        for v in 0..80u32 {
+            assert_eq!(store.row(v), out.embedding.row(v));
+        }
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Render experiment rows as the paper's tables (model, F1 ± std, perf
-//! drop, per-phase breakdown, total ± std, speedup).
+//! drop, per-phase breakdown, total ± std, speedup), plus the serving
+//! tier's per-batch latency-percentile table.
 
 use crate::coordinator::experiment::RowResult;
+use crate::serve::query::BatchReport;
 use crate::util::table::{mean_std_cell, perf_drop_cell, speedup_cell, Table};
 
 /// Full appendix-style table (Tables 5-10 layout; the main-text tables
@@ -48,6 +50,52 @@ fn row_cells(r: &RowResult, baseline: Option<&RowResult>) -> Vec<String> {
     ]
 }
 
+/// Serving telemetry table: one row per executed batch plus an `all`
+/// summary row over every request (nearest-rank percentiles, µs).
+pub fn render_latency_table(title: &str, reports: &[BatchReport]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "Batch",
+            "Requests",
+            "p50 (us)",
+            "p90 (us)",
+            "p99 (us)",
+            "max (us)",
+            "Total (ms)",
+        ],
+    );
+    for r in reports {
+        t.add_row(vec![
+            r.batch.to_string(),
+            r.n_requests.to_string(),
+            format!("{:.1}", r.p50_us),
+            format!("{:.1}", r.p90_us),
+            format!("{:.1}", r.p99_us),
+            format!("{:.1}", r.max_us),
+            format!("{:.2}", r.total_ms),
+        ]);
+    }
+    if reports.len() > 1 {
+        // Aggregate row: percentile-of-percentiles is not a percentile,
+        // so summarize with worst-case values and total volume instead.
+        let total_req: usize = reports.iter().map(|r| r.n_requests).sum();
+        let worst = |f: fn(&BatchReport) -> f64| {
+            reports.iter().map(f).fold(0f64, f64::max)
+        };
+        t.add_row(vec![
+            "all (worst)".to_string(),
+            total_req.to_string(),
+            format!("{:.1}", worst(|r| r.p50_us)),
+            format!("{:.1}", worst(|r| r.p90_us)),
+            format!("{:.1}", worst(|r| r.p99_us)),
+            format!("{:.1}", worst(|r| r.max_us)),
+            format!("{:.2}", reports.iter().map(|r| r.total_ms).sum::<f64>()),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,5 +129,28 @@ mod tests {
         assert!(s.contains("-2.0") || s.contains("-1.9"), "{s}");
         let csv = t.to_csv();
         assert!(csv.lines().count() == 4);
+    }
+
+    #[test]
+    fn latency_table_rows_and_summary() {
+        let rep = |batch: usize, n: usize, p50: f64| BatchReport {
+            batch,
+            n_requests: n,
+            p50_us: p50,
+            p90_us: p50 * 2.0,
+            p99_us: p50 * 3.0,
+            max_us: p50 * 4.0,
+            total_ms: 1.5,
+        };
+        let t = render_latency_table("Serve latency", &[rep(1, 64, 100.0), rep(2, 10, 250.0)]);
+        assert_eq!(t.n_rows(), 3); // 2 batches + worst-case summary
+        let s = t.render();
+        assert!(s.contains("Serve latency"));
+        assert!(s.contains("p99"));
+        assert!(s.contains("74")); // 64 + 10 total requests
+        assert!(s.contains("250.0")); // worst p50 carried into summary
+        // Single batch: no summary row.
+        let t1 = render_latency_table("one", &[rep(1, 5, 10.0)]);
+        assert_eq!(t1.n_rows(), 1);
     }
 }

@@ -302,7 +302,7 @@ mod tests {
         // The streaming source feeds the same machinery: every pair of
         // the sharded corpus lands in exactly one lane.
         let corpus = tiny_corpus();
-        let sharded = ShardedCorpus::from_corpus(&corpus, 2, 0);
+        let sharded = ShardedCorpus::from_corpus(&corpus, 2, 0, None);
         let sampler = NegativeSampler::from_counts(&sharded.node_counts());
         let mut p = params();
         p.window = 1;

@@ -7,10 +7,13 @@
 //! absent. Uses word2vec's precomputed sigmoid table for speed.
 //!
 //! Both corpus representations are supported (DESIGN.md
-//! §Corpus-streaming): [`train_native`] / [`train_native_parallel`] on a
-//! materialized [`Corpus`], and [`train_native_sharded`] /
-//! [`train_native_parallel_sharded`] streaming a [`ShardedCorpus`] so
-//! peak memory stays O(shard).
+//! §Corpus-streaming): [`train_native`] on a materialized [`Corpus`],
+//! and [`train_native_sharded`] / [`train_native_parallel_sharded`]
+//! streaming a [`ShardedCorpus`] so peak memory stays O(shard). The
+//! parallel path is sharded-only on purpose: wrapping a materialized
+//! corpus used to copy it into shards (~2x transient memory), so
+//! callers shard at generation time (`generate_walk_shards`) or bridge
+//! zero-copy via [`Corpus::into_sharded`].
 
 use crate::util::rng::Rng;
 use crate::walks::{Corpus, PairStream, ShardedCorpus};
@@ -193,28 +196,6 @@ fn at_load(a: &AtomicU32) -> f32 {
 #[inline]
 fn at_store(a: &AtomicU32, v: f32) {
     a.store(v.to_bits(), Relaxed)
-}
-
-/// Train SGNS over a materialized corpus with `threads` hogwild workers
-/// (compatibility wrapper: splits the corpus into per-thread resident
-/// shards and delegates to [`train_native_parallel_sharded`]).
-///
-/// The split copies the corpus, so peak memory is transiently ~2x its
-/// footprint — for large corpora generate shards directly
-/// ([`crate::walks::generate_walk_shards`]) and call the sharded
-/// trainer instead.
-pub fn train_native_parallel(
-    corpus: &Corpus,
-    n_nodes: usize,
-    params: &SgnsParams,
-    threads: usize,
-) -> NativeTrainResult {
-    let threads = threads.max(1);
-    if threads == 1 {
-        return train_native(corpus, n_nodes, params);
-    }
-    let sharded = ShardedCorpus::from_corpus(corpus, threads, 0);
-    train_native_parallel_sharded(&sharded, n_nodes, params, threads)
 }
 
 /// Train SGNS over a sharded corpus with `threads` hogwild workers.
@@ -464,19 +445,28 @@ mod tests {
 
     #[test]
     fn parallel_matches_serial_quality() {
+        // Hogwild consumes shards straight from the walk engine — no
+        // materialize-then-reshard copy anywhere in this path.
         let n = 24;
         let g = generators::ring(n);
-        let corpus = generate_walks(
+        let walk_params = WalkParams {
+            walk_length: 12,
+            seed: 1,
+            threads: 2,
+        };
+        let schedule = WalkSchedule::uniform(n, 20);
+        let corpus = generate_walks(&g, &schedule, &walk_params);
+        let sharded = generate_walk_shards(
             &g,
-            &WalkSchedule::uniform(n, 20),
-            &WalkParams {
-                walk_length: 12,
-                seed: 1,
-                threads: 2,
+            &schedule,
+            &walk_params,
+            &ShardOpts {
+                shards: 4,
+                ..Default::default()
             },
         );
         let serial = train_native(&corpus, n, &small_params(16));
-        let par = train_native_parallel(&corpus, n, &small_params(16), 4);
+        let par = train_native_parallel_sharded(&sharded, n, &small_params(16), 4);
         // Similar pair throughput (same dynamic-window distribution).
         let ratio = par.n_pairs as f64 / serial.n_pairs as f64;
         assert!((0.8..1.2).contains(&ratio), "pair ratio {ratio}");
@@ -497,6 +487,9 @@ mod tests {
 
     #[test]
     fn parallel_single_thread_is_serial() {
+        // threads=1 routes the sharded parallel entry point to the
+        // serial streaming trainer; via the zero-copy into_sharded
+        // bridge that must bit-match training on the flat corpus.
         let g = generators::ring(12);
         let corpus = generate_walks(
             &g,
@@ -508,7 +501,8 @@ mod tests {
             },
         );
         let a = train_native(&corpus, 12, &small_params(8));
-        let b = train_native_parallel(&corpus, 12, &small_params(8), 1);
+        let sharded = corpus.into_sharded();
+        let b = train_native_parallel_sharded(&sharded, 12, &small_params(8), 1);
         assert_eq!(a.w_in, b.w_in);
     }
 
@@ -546,7 +540,7 @@ mod tests {
                 &p,
                 &ShardOpts {
                     shards: 4,
-                    budget_bytes: 0,
+                    ..Default::default()
                 },
             )
         };
@@ -584,6 +578,7 @@ mod tests {
             &ShardOpts {
                 shards: 4,
                 budget_bytes: 256,
+                ..Default::default()
             },
         );
         assert!(sharded.stats().spilled_shards > 0, "budget should force spill");

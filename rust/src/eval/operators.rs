@@ -54,9 +54,13 @@ impl EdgeOp {
         }
     }
 
-    /// Append the feature vector for pair (u, v) to `out`.
-    pub fn extend_features(&self, emb: &Embedding, u: u32, v: u32, out: &mut Vec<f32>) {
-        let (a, b) = (emb.row(u), emb.row(v));
+    /// Append the feature vector for the node-vector pair `(a, b)` to
+    /// `out`. Works on raw row slices so callers that do not hold an
+    /// [`Embedding`] — e.g. the serving tier's mmap-backed
+    /// [`crate::serve::store::EmbeddingStore`] — reuse the exact same
+    /// operator definitions as evaluation.
+    pub fn extend_features_rows(&self, a: &[f32], b: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(a.len(), b.len());
         match self {
             EdgeOp::Concat => {
                 out.extend_from_slice(a);
@@ -67,6 +71,11 @@ impl EdgeOp {
             EdgeOp::L1 => out.extend(a.iter().zip(b).map(|(&x, &y)| (x - y).abs())),
             EdgeOp::L2 => out.extend(a.iter().zip(b).map(|(&x, &y)| (x - y) * (x - y))),
         }
+    }
+
+    /// Append the feature vector for pair (u, v) to `out`.
+    pub fn extend_features(&self, emb: &Embedding, u: u32, v: u32, out: &mut Vec<f32>) {
+        self.extend_features_rows(emb.row(u), emb.row(v), out);
     }
 
     /// Feature matrix for a pair list (row-major).
@@ -127,6 +136,18 @@ mod tests {
             let uv = op.pair_features(&e, &[(0, 1)]);
             let vu = op.pair_features(&e, &[(1, 0)]);
             assert_eq!(uv, vu, "{op:?} not symmetric");
+        }
+    }
+
+    #[test]
+    fn row_slice_api_matches_embedding_api() {
+        let e = emb();
+        for op in EdgeOp::ALL {
+            let mut via_emb = Vec::new();
+            op.extend_features(&e, 0, 1, &mut via_emb);
+            let mut via_rows = Vec::new();
+            op.extend_features_rows(e.row(0), e.row(1), &mut via_rows);
+            assert_eq!(via_emb, via_rows, "{op:?}");
         }
     }
 

@@ -41,6 +41,9 @@
 //! - [`propagate`] — shell-by-shell mean propagation (native + PJRT).
 //! - [`eval`] — link prediction, node classification, logistic
 //!   regression, edge operators.
+//! - [`serve`] — the post-training tier: versioned embedding artifact
+//!   (mmap-loaded), blocked top-k similarity scans (exact + 8-bit
+//!   quantized), link-prediction scoring, batched query service.
 //! - [`runtime`] — PJRT artifact manifest + execution sessions.
 //! - [`coordinator`] — pipeline orchestration, experiment runner,
 //!   config (incl. corpus shard/budget knobs), bench harness.
@@ -55,5 +58,6 @@ pub mod eval;
 pub mod graph;
 pub mod propagate;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod walks;

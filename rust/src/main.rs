@@ -4,7 +4,11 @@
 //!   generate   synthesize a dataset stand-in and save the edge list
 //!   describe   structural summary + core decomposition of a graph
 //!   embed      run the embedding pipeline, save embeddings as TSV
+//!              (and optionally a binary serving artifact, --store)
 //!   eval       full link-prediction experiment (trials, mean ± std)
+//!   serve      answer batched neighbor/edge-score requests against an
+//!              exported artifact, reporting latency percentiles
+//!   query      one-shot top-k / edge-score lookup against an artifact
 //!   bench      regenerate a paper table/figure (table1..table10, fig1..fig6,
 //!              coredist, all)
 //!
@@ -17,11 +21,16 @@ use anyhow::{bail, Context, Result};
 
 use kcore_embed::coordinator::bench::{run_bench, BenchOpts, BENCH_NAMES};
 use kcore_embed::coordinator::experiment::Experiment;
-use kcore_embed::coordinator::report::render_table;
+use kcore_embed::coordinator::report::{render_latency_table, render_table};
 use kcore_embed::coordinator::{run_pipeline, Backend, Embedder, PipelineConfig};
 use kcore_embed::cores::{core_decomposition, subcore};
+use kcore_embed::eval::EdgeOp;
 use kcore_embed::graph::{generators, io, metrics, Graph};
 use kcore_embed::runtime::{default_artifacts_dir, Manifest, Runtime};
+use kcore_embed::serve::{
+    EdgeScorer, EdgeScorerParams, EmbeddingStore, Metric, QueryService, Request, Response,
+    ServeOpts, TopKParams,
+};
 use kcore_embed::util::cli::Args;
 
 const USAGE: &str = "\
@@ -35,18 +44,34 @@ COMMANDS
   embed     (--graph NAME | --edges PATH) [--embedder deepwalk|corewalk|node2vec]
             [--k0 K] [--backend pjrt|native] [--walks N] [--walk-length L]
             [--dim D] [--window W] [--epochs E] [--seed N]
-            [--shards S] [--corpus-budget-mb M] --out PATH
+            [--shards S] [--corpus-budget-mb M] [--spill-dir DIR]
+            [--store ARTIFACT] --out PATH
   eval      (--graph NAME | --edges PATH) [--remove FRAC] [--trials T]
             [--embedder ...] [--k0 K] [--cores K1,K2,...] [--backend ...]
             [--walks N] [--seed N]
+  serve     --store ARTIFACT [--requests FILE] [--metric dot|cosine]
+            [--quantized] [--batch N] [--top-k K] [--in-memory]
+            [--threads N] [(--graph NAME | --edges PATH) [--op OP]]
+  query     --store ARTIFACT (--node V [--top-k K] | --edge U,V)
+            [--metric dot|cosine] [--quantized] [--in-memory]
+            [(--graph NAME | --edges PATH) [--op OP]]
   bench     --exp NAME [--trials T] [--walks N] [--backend pjrt|native]
             [--seed N] [--out-dir DIR] [--quick]
 
 Corpus streaming (embed/eval): --shards S fixes the number of corpus
 shards (0 = default 16; part of the determinism contract — corpora never
-depend on --threads), and --corpus-budget-mb M bounds resident corpus
-memory by spilling shards to disk (0 = unbounded). See DESIGN.md
+depend on --threads), --corpus-budget-mb M bounds resident corpus memory
+by spilling shards to disk (0 = unbounded), and --spill-dir points spill
+files at a dedicated scratch disk (default: OS temp dir). See DESIGN.md
 §Corpus-streaming.
+
+Serving (DESIGN.md §Serving): `embed --store` exports a versioned binary
+artifact (embedding + core numbers, checksummed); `serve`/`query` mmap
+it back (--in-memory opts out) and scan it exactly or via the 8-bit
+quantized fast path (--quantized, exact re-rank). `serve` reads request
+lines ('nn NODE K' | 'edge U V') from --requests or stdin and prints a
+per-batch latency-percentile table; edge scoring needs the serving
+graph (--graph/--edges) to fit its logistic model at startup.
 
 Run `make artifacts` once before using the pjrt backend.
 ";
@@ -69,6 +94,8 @@ fn main() {
         "describe" => cmd_describe(&args),
         "embed" => cmd_embed(&args),
         "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "query" => cmd_query(&args),
         "bench" => cmd_bench(&args),
         other => Err(anyhow::anyhow!("unknown command {other:?}\n{USAGE}")),
     };
@@ -79,12 +106,23 @@ fn main() {
 }
 
 fn load_graph(args: &Args) -> Result<Graph> {
+    match maybe_load_graph(args)? {
+        Some(g) => Ok(g),
+        None => bail!("specify exactly one of --graph or --edges"),
+    }
+}
+
+/// Like [`load_graph`], but absent `--graph`/`--edges` is not an error
+/// (serve/query only need a graph when edge scoring is requested).
+fn maybe_load_graph(args: &Args) -> Result<Option<Graph>> {
     let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
     match (args.opt_str("graph"), args.opt_str("edges")) {
         (Some(name), None) => generators::by_name(&name, seed)
+            .map(Some)
             .ok_or_else(|| anyhow::anyhow!("unknown graph {name:?} (cora|facebook|github)")),
-        (None, Some(path)) => io::load_edge_list(Path::new(&path), None),
-        _ => bail!("specify exactly one of --graph or --edges"),
+        (None, Some(path)) => io::load_edge_list(Path::new(&path), None).map(Some),
+        (None, None) => Ok(None),
+        _ => bail!("specify at most one of --graph or --edges"),
     }
 }
 
@@ -133,6 +171,7 @@ fn build_config(args: &Args) -> Result<PipelineConfig> {
     cfg.corpus_budget_mb = args
         .get_usize("corpus-budget-mb", 0)
         .map_err(anyhow::Error::msg)?;
+    cfg.spill_dir = args.opt_str("spill-dir").map(PathBuf::from);
     Ok(cfg)
 }
 
@@ -176,7 +215,8 @@ fn cmd_describe(args: &Args) -> Result<()> {
 
 fn cmd_embed(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
-    let cfg = build_config(args)?;
+    let mut cfg = build_config(args)?;
+    cfg.export_store = args.opt_str("store").map(PathBuf::from);
     let out = args
         .opt_str("out")
         .ok_or_else(|| anyhow::anyhow!("--out required"))?;
@@ -224,6 +264,9 @@ fn cmd_embed(args: &Args) -> Result<()> {
         Path::new(&out),
     )?;
     println!("wrote {out}");
+    if let Some(store) = &cfg.export_store {
+        println!("wrote serving artifact {}", store.display());
+    }
     Ok(())
 }
 
@@ -270,6 +313,200 @@ fn cmd_eval(args: &Args) -> Result<()> {
         &rows,
     );
     print!("{}", t.render());
+    Ok(())
+}
+
+/// Load an exported artifact per the shared `--store`/`--in-memory`
+/// flags (mmap is the default: O(1) resident startup).
+fn load_store(args: &Args) -> Result<EmbeddingStore> {
+    let path = args
+        .opt_str("store")
+        .ok_or_else(|| anyhow::anyhow!("--store required"))?;
+    let path = Path::new(&path);
+    if args.has_flag("in-memory") {
+        EmbeddingStore::open_in_memory(path)
+    } else {
+        EmbeddingStore::open_mmap(path)
+    }
+}
+
+fn parse_metric(args: &Args) -> Result<Metric> {
+    let name = args.get_str("metric", "cosine");
+    Metric::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown metric {name:?} (dot|cosine)"))
+}
+
+fn parse_edge_op(args: &Args) -> Result<EdgeOp> {
+    let name = args.get_str("op", "hadamard");
+    EdgeOp::by_name(&name).ok_or_else(|| {
+        anyhow::anyhow!("unknown operator {name:?} (concat|average|hadamard|l1|l2)")
+    })
+}
+
+/// Fit the edge scorer when a serving graph was supplied.
+fn maybe_scorer(
+    graph: Option<&Graph>,
+    store: &EmbeddingStore,
+    op: EdgeOp,
+    seed: u64,
+) -> Result<Option<EdgeScorer>> {
+    match graph {
+        None => Ok(None),
+        Some(g) => Ok(Some(EdgeScorer::fit(
+            g,
+            store,
+            &EdgeScorerParams {
+                op,
+                seed,
+                ..Default::default()
+            },
+        )?)),
+    }
+}
+
+fn print_response(r: &Response) {
+    match r {
+        Response::Neighbors { node, hits } => {
+            let cells: Vec<String> =
+                hits.iter().map(|(v, s)| format!("{v}:{s:.4}")).collect();
+            println!("nn {node} -> {}", cells.join(" "));
+        }
+        Response::EdgeScore { u, v, p } => println!("edge {u} {v} -> {p:.4}"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let graph = maybe_load_graph(args)?;
+    let metric = parse_metric(args)?;
+    let op = parse_edge_op(args)?;
+    let quantized = args.has_flag("quantized");
+    let batch = args.get_usize("batch", 64).map_err(anyhow::Error::msg)?;
+    let default_k = args.get_usize("top-k", 10).map_err(anyhow::Error::msg)?;
+    let threads = args
+        .get_usize("threads", kcore_embed::util::pool::default_threads())
+        .map_err(anyhow::Error::msg)?;
+    let requests_path = args.opt_str("requests");
+    let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+    let store = load_store(args)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    eprintln!(
+        "store: {} nodes x {} dims, cores {}, {} view{}",
+        store.n(),
+        store.dim(),
+        if store.has_cores() { "present" } else { "absent" },
+        if store.is_mmap() { "mmap" } else { "in-memory" },
+        if quantized { ", 8-bit quantized scan" } else { "" },
+    );
+    let scorer = maybe_scorer(graph.as_ref(), &store, op, seed)?;
+    let has_scorer = scorer.is_some();
+    let opts = ServeOpts {
+        metric,
+        quantized,
+        batch,
+        topk: TopKParams {
+            threads,
+            ..Default::default()
+        },
+    };
+    let mut svc = QueryService::new(store, opts);
+    if let Some(s) = scorer {
+        svc = svc.with_scorer(s);
+    }
+    if has_scorer {
+        eprintln!("edge scorer: fitted ({} operator)", op.name());
+    }
+
+    let text = match requests_path {
+        Some(p) => std::fs::read_to_string(&p).with_context(|| format!("reading {p}"))?,
+        None => {
+            let mut buf = String::new();
+            std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)?;
+            buf
+        }
+    };
+    let mut requests = Vec::new();
+    for line in text.lines() {
+        // Bare `nn NODE` lines pick up the --top-k default.
+        let line = line.trim();
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let expanded;
+        let line = if toks.len() == 2 && toks[0] == "nn" {
+            expanded = format!("{line} {default_k}");
+            &expanded
+        } else {
+            line
+        };
+        if let Some(req) = Request::parse(line)? {
+            requests.push(req);
+        }
+    }
+    if requests.is_empty() {
+        bail!("no requests (expected 'nn NODE [K]' / 'edge U V' lines)");
+    }
+    let (responses, reports) = svc.run_all(&requests)?;
+    for r in &responses {
+        print_response(r);
+    }
+    let table = render_latency_table(
+        &format!(
+            "Serve latency, {} requests in {} batches (batch size {batch})",
+            requests.len(),
+            reports.len()
+        ),
+        &reports,
+    );
+    eprint!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let graph = maybe_load_graph(args)?;
+    let metric = parse_metric(args)?;
+    let op = parse_edge_op(args)?;
+    let quantized = args.has_flag("quantized");
+    let k = args.get_usize("top-k", 10).map_err(anyhow::Error::msg)?;
+    let node = match args.get_usize("node", usize::MAX).map_err(anyhow::Error::msg)? {
+        usize::MAX => None,
+        v => Some(
+            u32::try_from(v).map_err(|_| anyhow::anyhow!("--node {v} exceeds u32 range"))?,
+        ),
+    };
+    let edge = args.opt_u32_pair("edge").map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+    let store = load_store(args)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let mut requests = Vec::new();
+    if let Some(v) = node {
+        requests.push(Request::Neighbors { node: v, k });
+    }
+    if let Some((u, v)) = edge {
+        requests.push(Request::EdgeScore { u, v });
+    }
+    if requests.is_empty() {
+        bail!("specify --node V and/or --edge U,V");
+    }
+    let scorer = if edge.is_some() {
+        let g = graph.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("--edge scoring needs the serving graph (--graph or --edges)")
+        })?;
+        maybe_scorer(Some(g), &store, op, seed)?
+    } else {
+        None
+    };
+    let opts = ServeOpts {
+        metric,
+        quantized,
+        ..Default::default()
+    };
+    let mut svc = QueryService::new(store, opts);
+    if let Some(s) = scorer {
+        svc = svc.with_scorer(s);
+    }
+    let (responses, _) = svc.run_all(&requests)?;
+    for r in &responses {
+        print_response(r);
+    }
     Ok(())
 }
 

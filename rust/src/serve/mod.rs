@@ -1,0 +1,26 @@
+//! The serving subsystem: what happens to an embedding *after*
+//! training (DESIGN.md §Serving).
+//!
+//! The pipeline exports a versioned binary artifact ([`store`]), the
+//! query tier mmaps it back with O(1) resident startup cost, and two
+//! engines answer the paper's downstream workloads against it:
+//! cache-blocked top-k similarity scans with an optional 8-bit
+//! quantized fast path ([`topk`]) and logistic link-prediction scoring
+//! over the shared `eval::operators` edge features ([`linkpred`]).
+//! [`query`] batches mixed requests and reports per-batch latency
+//! percentiles.
+//!
+//! Layering: `serve` sits above `embed`/`eval` (it consumes trained
+//! tables and reuses evaluation operators) and below `coordinator`
+//! (the pipeline's export step and the CLI `serve`/`query` subcommands
+//! drive it).
+
+pub mod linkpred;
+pub mod query;
+pub mod store;
+pub mod topk;
+
+pub use linkpred::{EdgeScorer, EdgeScorerParams};
+pub use query::{BatchReport, QueryService, Request, Response, ServeOpts};
+pub use store::{write_store, EmbeddingStore};
+pub use topk::{Metric, TopKIndex, TopKParams};

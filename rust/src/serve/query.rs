@@ -1,0 +1,325 @@
+//! The request layer: batched neighbor / edge-score queries over one
+//! loaded artifact, with per-batch latency telemetry.
+//!
+//! A [`QueryService`] owns the store, the top-k index and (optionally)
+//! a fitted [`EdgeScorer`], and executes mixed request batches. Each
+//! request is timed individually; a batch returns a [`BatchReport`]
+//! with nearest-rank p50/p90/p99/max latencies which
+//! `coordinator::report::render_latency_table` turns into the usual
+//! paper-style table. The CLI `serve` subcommand is a thin file/stdin
+//! front-end over this module; tests drive it directly.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::util::stats::percentile;
+
+use super::linkpred::EdgeScorer;
+use super::store::EmbeddingStore;
+use super::topk::{Hit, Metric, TopKIndex, TopKParams};
+
+/// One serving request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Top-`k` nearest neighbours of `node`.
+    Neighbors { node: u32, k: usize },
+    /// P(edge) for the candidate pair `(u, v)`.
+    EdgeScore { u: u32, v: u32 },
+}
+
+impl Request {
+    /// Parse the `serve` wire format: `nn NODE K` or `edge U V`
+    /// (whitespace-separated, `#` starts a comment line).
+    pub fn parse(line: &str) -> Result<Option<Request>> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(None);
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let req = match toks.as_slice() {
+            ["nn", node, k] => Request::Neighbors {
+                node: node.parse().map_err(|_| anyhow::anyhow!("bad node id {node:?}"))?,
+                k: k.parse().map_err(|_| anyhow::anyhow!("bad k {k:?}"))?,
+            },
+            ["edge", u, v] => Request::EdgeScore {
+                u: u.parse().map_err(|_| anyhow::anyhow!("bad node id {u:?}"))?,
+                v: v.parse().map_err(|_| anyhow::anyhow!("bad node id {v:?}"))?,
+            },
+            _ => bail!("bad request line {line:?} (expected 'nn NODE K' or 'edge U V')"),
+        };
+        Ok(Some(req))
+    }
+}
+
+/// Answer to one [`Request`], in request order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Neighbors { node: u32, hits: Vec<Hit> },
+    EdgeScore { u: u32, v: u32, p: f64 },
+}
+
+/// Latency percentiles of one executed batch (microseconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchReport {
+    pub batch: usize,
+    pub n_requests: usize,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    pub total_ms: f64,
+}
+
+/// Service-level options.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    pub metric: Metric,
+    /// Use the 8-bit quantized scan (exact re-rank) for neighbor
+    /// queries.
+    pub quantized: bool,
+    /// Requests per batch when draining a request stream.
+    pub batch: usize,
+    pub topk: TopKParams,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            metric: Metric::Cosine,
+            quantized: false,
+            batch: 64,
+            topk: TopKParams::default(),
+        }
+    }
+}
+
+/// A ready-to-serve artifact: store + scan index + optional edge model.
+pub struct QueryService {
+    store: EmbeddingStore,
+    /// Built on the first neighbor request (a norm pass — and the
+    /// quantized table copy, when enabled — touches every row; an
+    /// edge-score-only workload over an mmap'd store should keep its
+    /// O(1)-resident startup).
+    index: std::sync::OnceLock<TopKIndex>,
+    scorer: Option<EdgeScorer>,
+    opts: ServeOpts,
+    batches_run: usize,
+}
+
+impl QueryService {
+    /// Build from a loaded store. The scan index (and quantized table,
+    /// when `opts.quantized` asks for one) is built lazily on the first
+    /// neighbor request.
+    pub fn new(store: EmbeddingStore, opts: ServeOpts) -> QueryService {
+        QueryService {
+            store,
+            index: std::sync::OnceLock::new(),
+            scorer: None,
+            opts,
+            batches_run: 0,
+        }
+    }
+
+    fn index(&self) -> &TopKIndex {
+        self.index.get_or_init(|| {
+            if self.opts.quantized {
+                TopKIndex::build_quantized(&self.store, self.opts.topk.clone())
+            } else {
+                TopKIndex::build(&self.store, self.opts.topk.clone())
+            }
+        })
+    }
+
+    /// Attach a fitted edge scorer (enables [`Request::EdgeScore`]).
+    pub fn with_scorer(mut self, scorer: EdgeScorer) -> QueryService {
+        self.scorer = Some(scorer);
+        self
+    }
+
+    pub fn store(&self) -> &EmbeddingStore {
+        &self.store
+    }
+
+    pub fn has_scorer(&self) -> bool {
+        self.scorer.is_some()
+    }
+
+    /// Execute one request.
+    pub fn execute(&self, req: &Request) -> Result<Response> {
+        match *req {
+            Request::Neighbors { node, k } => {
+                if node as usize >= self.store.n() {
+                    bail!("node {node} out of range (store has {} rows)", self.store.n());
+                }
+                let index = self.index();
+                let hits = if self.opts.quantized {
+                    index.top_k_node_quantized(&self.store, node, k, self.opts.metric)
+                } else {
+                    index.top_k_node(&self.store, node, k, self.opts.metric)
+                };
+                Ok(Response::Neighbors { node, hits })
+            }
+            Request::EdgeScore { u, v } => {
+                let n = self.store.n();
+                if u as usize >= n || v as usize >= n {
+                    bail!("edge ({u}, {v}) out of range (store has {n} rows)");
+                }
+                let scorer = self.scorer.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "edge-score requests need a fitted model (serve with --edges/--graph)"
+                    )
+                })?;
+                Ok(Response::EdgeScore {
+                    u,
+                    v,
+                    p: scorer.score(&self.store, u, v),
+                })
+            }
+        }
+    }
+
+    /// Execute a batch in order, timing each request; returns the
+    /// responses plus the batch's latency percentiles.
+    pub fn run_batch(&mut self, requests: &[Request]) -> Result<(Vec<Response>, BatchReport)> {
+        // Warm the lazy scan index outside the request timers: one-time
+        // index construction must not masquerade as first-request
+        // serving latency in the percentile report.
+        if requests
+            .iter()
+            .any(|r| matches!(r, Request::Neighbors { .. }))
+        {
+            self.index();
+        }
+        let t_batch = Instant::now();
+        let mut responses = Vec::with_capacity(requests.len());
+        let mut lat_us: Vec<f64> = Vec::with_capacity(requests.len());
+        for req in requests {
+            let t0 = Instant::now();
+            responses.push(self.execute(req)?);
+            lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        self.batches_run += 1;
+        let report = BatchReport {
+            batch: self.batches_run,
+            n_requests: requests.len(),
+            p50_us: percentile(&lat_us, 0.50),
+            p90_us: percentile(&lat_us, 0.90),
+            p99_us: percentile(&lat_us, 0.99),
+            max_us: lat_us.last().copied().unwrap_or(0.0),
+            total_ms: t_batch.elapsed().as_secs_f64() * 1e3,
+        };
+        Ok((responses, report))
+    }
+
+    /// Drain a request stream in `opts.batch`-sized batches.
+    pub fn run_all(&mut self, requests: &[Request]) -> Result<(Vec<Response>, Vec<BatchReport>)> {
+        let batch = self.opts.batch.max(1);
+        let mut responses = Vec::with_capacity(requests.len());
+        let mut reports = Vec::new();
+        for chunk in requests.chunks(batch) {
+            let (mut rs, rep) = self.run_batch(chunk)?;
+            responses.append(&mut rs);
+            reports.push(rep);
+        }
+        Ok((responses, reports))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn service(n: usize, dim: usize, quantized: bool) -> QueryService {
+        let mut rng = Rng::new(13);
+        let vecs: Vec<f32> = (0..n * dim).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        let store = EmbeddingStore::from_parts(vecs, n, dim, vec![0; n]);
+        QueryService::new(
+            store,
+            ServeOpts {
+                quantized,
+                batch: 4,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn parses_request_lines() {
+        assert_eq!(
+            Request::parse("nn 12 5").unwrap(),
+            Some(Request::Neighbors { node: 12, k: 5 })
+        );
+        assert_eq!(
+            Request::parse("  edge 3 9 ").unwrap(),
+            Some(Request::EdgeScore { u: 3, v: 9 })
+        );
+        assert_eq!(Request::parse("# comment").unwrap(), None);
+        assert_eq!(Request::parse("").unwrap(), None);
+        assert!(Request::parse("nn twelve 5").is_err());
+        assert!(Request::parse("nope").is_err());
+    }
+
+    #[test]
+    fn neighbor_requests_answered_in_order_with_reports() {
+        let mut svc = service(60, 8, false);
+        let reqs: Vec<Request> = (0..10)
+            .map(|i| Request::Neighbors { node: i, k: 3 })
+            .collect();
+        let (responses, reports) = svc.run_all(&reqs).unwrap();
+        assert_eq!(responses.len(), 10);
+        for (i, r) in responses.iter().enumerate() {
+            match r {
+                Response::Neighbors { node, hits } => {
+                    assert_eq!(*node, i as u32);
+                    assert_eq!(hits.len(), 3);
+                    assert!(hits.iter().all(|&(v, _)| v != i as u32));
+                }
+                _ => panic!("wrong response kind"),
+            }
+        }
+        // 10 requests, batch size 4 -> 3 batches, percentiles ordered.
+        assert_eq!(reports.len(), 3);
+        assert_eq!(reports[0].n_requests, 4);
+        assert_eq!(reports[2].n_requests, 2);
+        for rep in &reports {
+            assert!(rep.p50_us <= rep.p90_us && rep.p90_us <= rep.p99_us);
+            assert!(rep.p99_us <= rep.max_us);
+            assert!(rep.total_ms >= 0.0);
+        }
+        assert_eq!(reports[1].batch, 2);
+    }
+
+    #[test]
+    fn quantized_service_serves_same_api() {
+        let mut svc = service(120, 16, true);
+        let (responses, _) = svc
+            .run_all(&[Request::Neighbors { node: 5, k: 7 }])
+            .unwrap();
+        match &responses[0] {
+            Response::Neighbors { hits, .. } => assert_eq!(hits.len(), 7),
+            _ => panic!("wrong response kind"),
+        }
+    }
+
+    #[test]
+    fn index_is_lazy_until_first_neighbor_request() {
+        let svc = service(30, 4, true);
+        assert!(svc.index.get().is_none(), "index built eagerly");
+        let _ = svc.execute(&Request::Neighbors { node: 0, k: 3 }).unwrap();
+        assert!(svc.index.get().is_some());
+    }
+
+    #[test]
+    fn errors_are_explicit() {
+        let mut svc = service(10, 4, false);
+        // Out-of-range node.
+        assert!(svc
+            .run_batch(&[Request::Neighbors { node: 99, k: 2 }])
+            .is_err());
+        // Edge scoring without a model.
+        assert!(svc.run_batch(&[Request::EdgeScore { u: 0, v: 1 }]).is_err());
+    }
+}

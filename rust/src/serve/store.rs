@@ -1,0 +1,586 @@
+//! Versioned binary embedding artifact + zero-copy mmap loader.
+//!
+//! The pipeline trains embeddings; this is how they leave the process
+//! (DESIGN.md §Serving). One file holds everything the query layer
+//! needs: the node count, dimension, the per-node **core numbers** (so
+//! the serving tier can gate or rank by structural importance without
+//! re-decomposing the graph) and the row-major f32 embedding table.
+//!
+//! Layout (all little-endian, fixed 40-byte header):
+//!
+//! ```text
+//! offset  size        field
+//! 0       8           magic  b"KCEMBED\0"
+//! 8       4           format version (currently 1)
+//! 12      4           dim (u32)
+//! 16      8           n_nodes (u64)
+//! 24      4           flags (bit 0: core table is meaningful)
+//! 28      4           reserved (0)
+//! 32      8           FNV-1a 64 checksum of the payload
+//! 40      n*4         core numbers (u32 per node; zeros when absent)
+//! 40+n*4  n*dim*4     embedding rows (f32, row-major)
+//! ```
+//!
+//! Every section stays 4-byte aligned, so the mmap view can hand out
+//! `&[f32]` row slices straight into the page cache: loading a
+//! multi-million-node table is O(1) resident memory and the OS pages
+//! rows in on demand. [`EmbeddingStore::open_in_memory`] is the
+//! portable fallback (and the checksum-verifying path); both views are
+//! value-identical (`tests/serve.rs` asserts it).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// File magic (8 bytes).
+pub const MAGIC: [u8; 8] = *b"KCEMBED\0";
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Fixed header size in bytes (multiple of 4 to keep f32 alignment).
+pub const HEADER_BYTES: usize = 40;
+/// Flag bit: the core-number table carries real decomposition output.
+pub const FLAG_HAS_CORES: u32 = 1;
+
+/// Incremental FNV-1a 64-bit — cheap, dependency-free integrity check
+/// for the payload (not cryptographic). Incremental so writers and
+/// verifiers can stream the table instead of materializing byte copies.
+struct Fnv1a64(u64);
+
+impl Fnv1a64 {
+    fn new() -> Fnv1a64 {
+        Fnv1a64(0xcbf29ce484222325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn fnv1a64(chunks: &[&[u8]]) -> u64 {
+    let mut h = Fnv1a64::new();
+    for chunk in chunks {
+        h.update(chunk);
+    }
+    h.finish()
+}
+
+/// Checksum of a (cores, rows) payload without materializing LE copies.
+fn payload_checksum(cores: &[u32], vecs: &[f32]) -> u64 {
+    let mut h = Fnv1a64::new();
+    for &c in cores {
+        h.update(&c.to_le_bytes());
+    }
+    for &x in vecs {
+        h.update(&x.to_le_bytes());
+    }
+    h.finish()
+}
+
+/// Write an embedding artifact. `cores` must be one core number per
+/// node when present; absent cores are stored as zeros with the flag
+/// cleared so loaders can tell "no decomposition" from "all-zero".
+///
+/// Streams: one checksum pass plus one buffered write pass over the
+/// table — no transient byte copy of the (potentially multi-GiB) rows.
+pub fn write_store(
+    path: &Path,
+    data: &[f32],
+    n_nodes: usize,
+    dim: usize,
+    cores: Option<&[u32]>,
+) -> Result<()> {
+    assert_eq!(data.len(), n_nodes * dim, "embedding shape mismatch");
+    if let Some(c) = cores {
+        assert_eq!(c.len(), n_nodes, "core table length mismatch");
+    }
+    let zero_cores: Vec<u32>;
+    let core_slice: &[u32] = match cores {
+        Some(c) => c,
+        None => {
+            zero_cores = vec![0u32; n_nodes];
+            &zero_cores
+        }
+    };
+    let checksum = payload_checksum(core_slice, data);
+
+    let mut header = Vec::with_capacity(HEADER_BYTES);
+    header.extend_from_slice(&MAGIC);
+    header.extend_from_slice(&VERSION.to_le_bytes());
+    header.extend_from_slice(&(dim as u32).to_le_bytes());
+    header.extend_from_slice(&(n_nodes as u64).to_le_bytes());
+    let flags = if cores.is_some() { FLAG_HAS_CORES } else { 0 };
+    header.extend_from_slice(&flags.to_le_bytes());
+    header.extend_from_slice(&0u32.to_le_bytes());
+    header.extend_from_slice(&checksum.to_le_bytes());
+    debug_assert_eq!(header.len(), HEADER_BYTES);
+
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating embedding store {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(&header)?;
+    for &c in core_slice {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    for &x in data {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Parsed header of an embedding store file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreHeader {
+    pub version: u32,
+    pub dim: usize,
+    pub n_nodes: usize,
+    pub flags: u32,
+    pub checksum: u64,
+}
+
+impl StoreHeader {
+    fn parse(bytes: &[u8]) -> Result<StoreHeader> {
+        if bytes.len() < HEADER_BYTES {
+            bail!("embedding store truncated: {} header bytes", bytes.len());
+        }
+        if bytes[..8] != MAGIC {
+            bail!("not an embedding store (bad magic)");
+        }
+        let rd_u32 = |o: usize| u32::from_le_bytes([bytes[o], bytes[o + 1], bytes[o + 2], bytes[o + 3]]);
+        let rd_u64 = |o: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&bytes[o..o + 8]);
+            u64::from_le_bytes(b)
+        };
+        let version = rd_u32(8);
+        if version != VERSION {
+            bail!("embedding store version {version} unsupported (expected {VERSION})");
+        }
+        let header = StoreHeader {
+            version,
+            dim: rd_u32(12) as usize,
+            n_nodes: rd_u64(16) as usize,
+            flags: rd_u32(24),
+            checksum: rd_u64(32),
+        };
+        // Overflow-checked size derivation: a corrupt/crafted header
+        // must fail here, not wrap and sail past the file-length check
+        // into out-of-bounds reads.
+        if header.checked_file_bytes().is_none() {
+            bail!(
+                "embedding store header implies an impossible size ({} nodes x {} dims)",
+                header.n_nodes,
+                header.dim
+            );
+        }
+        Ok(header)
+    }
+
+    fn core_bytes(&self) -> usize {
+        self.n_nodes * 4
+    }
+
+    fn checked_file_bytes(&self) -> Option<usize> {
+        let core = self.n_nodes.checked_mul(4)?;
+        let vecs = self.n_nodes.checked_mul(self.dim)?.checked_mul(4)?;
+        HEADER_BYTES.checked_add(core)?.checked_add(vecs)
+    }
+
+    /// Total file size the header implies. Only valid after
+    /// [`Self::parse`] accepted the header (overflow checked there).
+    fn file_bytes(&self) -> usize {
+        self.checked_file_bytes()
+            .expect("header sizes validated at parse")
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    //! Raw mmap bindings: std already links libc on unix, so a pair of
+    //! `extern "C"` declarations is all the "dependency" we need — no
+    //! crates, per the offline-build constraint.
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub fn map_failed(p: *mut c_void) -> bool {
+        p as isize == -1 || p.is_null()
+    }
+}
+
+enum Backing {
+    /// Read-only private file mapping; rows are served straight from the
+    /// page cache. Unmapped on drop.
+    #[cfg(unix)]
+    Mmap { ptr: *const u8, len: usize },
+    /// Fully decoded copy (portable fallback + checksum-verified path).
+    Owned { cores: Vec<u32>, vecs: Vec<f32> },
+}
+
+// SAFETY: the mmap backing is PROT_READ/MAP_PRIVATE — immutable for the
+// lifetime of the mapping — so sharing the view across threads is sound.
+unsafe impl Send for Backing {}
+unsafe impl Sync for Backing {}
+
+impl Drop for Backing {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mmap { ptr, len } = *self {
+            unsafe {
+                sys::munmap(ptr as *mut std::os::raw::c_void, len);
+            }
+        }
+    }
+}
+
+/// A loaded embedding artifact: the read side of [`write_store`].
+///
+/// Two load paths with identical observable values:
+/// - [`open_mmap`](EmbeddingStore::open_mmap): zero-copy view over the
+///   file (unix), O(1) resident memory at startup;
+/// - [`open_in_memory`](EmbeddingStore::open_in_memory): decode into
+///   owned vectors, verifying the payload checksum.
+pub struct EmbeddingStore {
+    header: StoreHeader,
+    backing: Backing,
+}
+
+impl EmbeddingStore {
+    /// Map the artifact read-only. Header and file size are validated;
+    /// payload bytes are *not* read (that is the point) — call
+    /// [`verify`](Self::verify) to force a full checksum pass.
+    #[cfg(unix)]
+    pub fn open_mmap(path: &Path) -> Result<EmbeddingStore> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening embedding store {}", path.display()))?;
+        let mut head = [0u8; HEADER_BYTES];
+        {
+            let mut f = &file;
+            f.read_exact(&mut head)
+                .with_context(|| format!("reading store header {}", path.display()))?;
+        }
+        let header = StoreHeader::parse(&head)?;
+        let file_len = file.metadata()?.len() as usize;
+        if file_len != header.file_bytes() {
+            bail!(
+                "embedding store {} has {} bytes, header implies {}",
+                path.display(),
+                file_len,
+                header.file_bytes()
+            );
+        }
+        if header.n_nodes == 0 {
+            // Zero-length payloads cannot be mapped; serve an empty view.
+            return Ok(EmbeddingStore {
+                header,
+                backing: Backing::Owned {
+                    cores: Vec::new(),
+                    vecs: Vec::new(),
+                },
+            });
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                file_len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if sys::map_failed(ptr) {
+            bail!("mmap of {} failed", path.display());
+        }
+        Ok(EmbeddingStore {
+            header,
+            backing: Backing::Mmap {
+                ptr: ptr as *const u8,
+                len: file_len,
+            },
+        })
+    }
+
+    /// Portable stand-in on non-unix hosts: decodes the file instead.
+    #[cfg(not(unix))]
+    pub fn open_mmap(path: &Path) -> Result<EmbeddingStore> {
+        Self::open_in_memory(path)
+    }
+
+    /// Decode the whole artifact into owned vectors, verifying the
+    /// payload checksum.
+    pub fn open_in_memory(path: &Path) -> Result<EmbeddingStore> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading embedding store {}", path.display()))?;
+        let header = StoreHeader::parse(&bytes)?;
+        if bytes.len() != header.file_bytes() {
+            bail!(
+                "embedding store {} has {} bytes, header implies {}",
+                path.display(),
+                bytes.len(),
+                header.file_bytes()
+            );
+        }
+        let payload = &bytes[HEADER_BYTES..];
+        let got = fnv1a64(&[payload]);
+        if got != header.checksum {
+            bail!(
+                "embedding store {} checksum mismatch: file says {:#x}, payload hashes to {got:#x}",
+                path.display(),
+                header.checksum
+            );
+        }
+        let (core_raw, vec_raw) = payload.split_at(header.core_bytes());
+        let cores: Vec<u32> = core_raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let vecs: Vec<f32> = vec_raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(EmbeddingStore {
+            header,
+            backing: Backing::Owned { cores, vecs },
+        })
+    }
+
+    /// Wrap already-resident data (bench/test construction; no file).
+    pub fn from_parts(vecs: Vec<f32>, n_nodes: usize, dim: usize, cores: Vec<u32>) -> EmbeddingStore {
+        assert_eq!(vecs.len(), n_nodes * dim);
+        assert_eq!(cores.len(), n_nodes);
+        let checksum = payload_checksum(&cores, &vecs);
+        EmbeddingStore {
+            header: StoreHeader {
+                version: VERSION,
+                dim,
+                n_nodes,
+                flags: FLAG_HAS_CORES,
+                checksum,
+            },
+            backing: Backing::Owned { cores, vecs },
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.header.n_nodes
+    }
+
+    pub fn dim(&self) -> usize {
+        self.header.dim
+    }
+
+    pub fn header(&self) -> StoreHeader {
+        self.header
+    }
+
+    /// Whether the core table carries real decomposition output.
+    pub fn has_cores(&self) -> bool {
+        self.header.flags & FLAG_HAS_CORES != 0
+    }
+
+    /// True when rows are served from a file mapping rather than RAM.
+    pub fn is_mmap(&self) -> bool {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mmap { .. } => true,
+            Backing::Owned { .. } => false,
+        }
+    }
+
+    /// Core number of every node.
+    pub fn cores(&self) -> &[u32] {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mmap { ptr, .. } => unsafe {
+                // Alignment: mmap is page-aligned and HEADER_BYTES is a
+                // multiple of 4.
+                std::slice::from_raw_parts(
+                    ptr.add(HEADER_BYTES) as *const u32,
+                    self.header.n_nodes,
+                )
+            },
+            Backing::Owned { cores, .. } => cores,
+        }
+    }
+
+    /// Embedding row of node `v`. Panics when `v` is out of range —
+    /// the mmap backing must never turn a bad id into an out-of-bounds
+    /// read (the Owned backing would panic via slice indexing anyway).
+    #[inline]
+    pub fn row(&self, v: u32) -> &[f32] {
+        assert!(
+            (v as usize) < self.header.n_nodes,
+            "node {v} out of range (store has {} rows)",
+            self.header.n_nodes
+        );
+        let d = self.header.dim;
+        let start = v as usize * d;
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mmap { ptr, .. } => unsafe {
+                std::slice::from_raw_parts(
+                    ptr.add(HEADER_BYTES + self.header.core_bytes() + start * 4) as *const f32,
+                    d,
+                )
+            },
+            Backing::Owned { vecs, .. } => &vecs[start..start + d],
+        }
+    }
+
+    /// Force a full payload read and compare against the header
+    /// checksum (the mmap open skips this by design).
+    pub fn verify(&self) -> Result<()> {
+        let got = match &self.backing {
+            #[cfg(unix)]
+            Backing::Mmap { ptr, len } => unsafe {
+                let payload =
+                    std::slice::from_raw_parts(ptr.add(HEADER_BYTES), len - HEADER_BYTES);
+                fnv1a64(&[payload])
+            },
+            Backing::Owned { cores, vecs } => payload_checksum(cores, vecs),
+        };
+        if got != self.header.checksum {
+            bail!(
+                "embedding store checksum mismatch: header {:#x}, payload {got:#x}",
+                self.header.checksum
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("kcore_embed_store_{name}_{}", std::process::id()));
+        p
+    }
+
+    fn sample(n: usize, dim: usize) -> (Vec<f32>, Vec<u32>) {
+        let data: Vec<f32> = (0..n * dim).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        let cores: Vec<u32> = (0..n as u32).map(|v| v % 7).collect();
+        (data, cores)
+    }
+
+    #[test]
+    fn header_round_trip_and_accessors() {
+        let (data, cores) = sample(9, 5);
+        let p = tmp("hdr.kce");
+        write_store(&p, &data, 9, 5, Some(&cores)).unwrap();
+        let s = EmbeddingStore::open_in_memory(&p).unwrap();
+        assert_eq!(s.n(), 9);
+        assert_eq!(s.dim(), 5);
+        assert!(s.has_cores());
+        assert_eq!(s.cores(), &cores[..]);
+        for v in 0..9u32 {
+            assert_eq!(s.row(v), &data[v as usize * 5..(v as usize + 1) * 5]);
+        }
+        s.verify().unwrap();
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn mmap_view_matches_written_bytes() {
+        let (data, cores) = sample(17, 8);
+        let p = tmp("mmap.kce");
+        write_store(&p, &data, 17, 8, Some(&cores)).unwrap();
+        let s = EmbeddingStore::open_mmap(&p).unwrap();
+        assert_eq!(s.n(), 17);
+        assert_eq!(s.dim(), 8);
+        assert_eq!(s.cores(), &cores[..]);
+        for v in 0..17u32 {
+            assert_eq!(s.row(v), &data[v as usize * 8..(v as usize + 1) * 8]);
+        }
+        s.verify().unwrap();
+        drop(s);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn missing_cores_flagged() {
+        let (data, _) = sample(4, 3);
+        let p = tmp("nocores.kce");
+        write_store(&p, &data, 4, 3, None).unwrap();
+        let s = EmbeddingStore::open_in_memory(&p).unwrap();
+        assert!(!s.has_cores());
+        assert_eq!(s.cores(), &[0, 0, 0, 0]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let (data, cores) = sample(6, 4);
+        let p = tmp("corrupt.kce");
+        write_store(&p, &data, 6, 4, Some(&cores)).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(EmbeddingStore::open_in_memory(&p).is_err());
+        // mmap open defers payload checks, but verify() catches it.
+        let s = EmbeddingStore::open_mmap(&p).unwrap();
+        assert!(s.verify().is_err());
+        drop(s);
+        // Truncation is caught by both.
+        bytes.truncate(bytes.len() - 4);
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(EmbeddingStore::open_mmap(&p).is_err());
+        assert!(EmbeddingStore::open_in_memory(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn overflowing_header_sizes_rejected() {
+        let (data, cores) = sample(4, 3);
+        let p = tmp("overflow.kce");
+        write_store(&p, &data, 4, 3, Some(&cores)).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // n_nodes = 2^62: size arithmetic must bail, not wrap.
+        bytes[16..24].copy_from_slice(&(1u64 << 62).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(EmbeddingStore::open_mmap(&p).is_err());
+        assert!(EmbeddingStore::open_in_memory(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_row_panics() {
+        let s = EmbeddingStore::from_parts(vec![0.0; 8], 2, 4, vec![0; 2]);
+        let _ = s.row(2);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("magic.kce");
+        std::fs::write(&p, b"definitely not an embedding store, sorry").unwrap();
+        assert!(EmbeddingStore::open_in_memory(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,562 @@
+//! Blocked top-k similarity scans over an [`EmbeddingStore`].
+//!
+//! The exact path streams the table in cache-sized row blocks, fanning
+//! blocks out across workers through [`pool::parallel_tasks`] — the
+//! same shard-queue primitive the walk engine uses — and keeps one
+//! small per-block candidate buffer, so a scan touches each embedding
+//! row exactly once and allocates O(k) per block.
+//!
+//! The quantized fast path is scalar 8-bit quantization (per-row
+//! min/scale, codes in `u8`): the scan scores `code·code` integer dot
+//! products (4x less memory traffic than f32 rows), keeps an
+//! oversampled candidate pool, and re-ranks the pool with **exact**
+//! f32 scores. Results are approximate only in which rows reach the
+//! pool; the reported scores are always exact. `tests/serve.rs` holds
+//! the recall@10 >= 0.95 property against the exact scan.
+
+use crate::util::pool;
+
+use super::store::EmbeddingStore;
+
+/// Similarity used for ranking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Raw inner product.
+    Dot,
+    /// Inner product over L2 norms (zero vectors score 0).
+    Cosine,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Dot => "dot",
+            Metric::Cosine => "cosine",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Metric> {
+        match name {
+            "dot" => Some(Metric::Dot),
+            "cosine" => Some(Metric::Cosine),
+            _ => None,
+        }
+    }
+}
+
+/// Tuning knobs for [`TopKIndex`].
+#[derive(Debug, Clone)]
+pub struct TopKParams {
+    /// Rows per scan block (the unit of worker fan-out). 4096 rows of a
+    /// 128-dim f32 table is ~2 MiB — roughly an L2's worth of streaming.
+    pub block: usize,
+    /// Worker threads for the scan.
+    pub threads: usize,
+    /// Quantized path: candidates kept per query = `k * oversample`
+    /// before the exact re-rank. Higher = better recall, slower.
+    pub oversample: usize,
+}
+
+impl Default for TopKParams {
+    fn default() -> Self {
+        TopKParams {
+            block: 4096,
+            threads: pool::default_threads(),
+            oversample: 8,
+        }
+    }
+}
+
+/// One scored hit: `(node, exact score)`.
+pub type Hit = (u32, f32);
+
+/// Derived scan state over a store: per-row L2 norms (for cosine) and,
+/// optionally, the 8-bit quantized table. Does not borrow the store —
+/// every query passes it back in, so a service can own both.
+pub struct TopKIndex {
+    params: TopKParams,
+    norms: Vec<f32>,
+    quant: Option<QuantizedTable>,
+}
+
+impl TopKIndex {
+    /// Build the exact-scan index (norm pass only).
+    pub fn build(store: &EmbeddingStore, params: TopKParams) -> TopKIndex {
+        let n = store.n();
+        let threads = params.threads.max(1);
+        let block = params.block.max(1);
+        let n_blocks = n.div_ceil(block.max(1)).max(1);
+        let norm_chunks = pool::parallel_tasks(n_blocks, threads, |bi| {
+            let lo = bi * block;
+            let hi = ((bi + 1) * block).min(n);
+            let mut out = Vec::with_capacity(hi.saturating_sub(lo));
+            for v in lo..hi {
+                let r = store.row(v as u32);
+                out.push(dot(r, r).sqrt());
+            }
+            out
+        });
+        let norms = norm_chunks.concat();
+        TopKIndex {
+            params,
+            norms,
+            quant: None,
+        }
+    }
+
+    /// Build the index plus the 8-bit quantized table.
+    pub fn build_quantized(store: &EmbeddingStore, params: TopKParams) -> TopKIndex {
+        let mut idx = TopKIndex::build(store, params);
+        idx.quant = Some(QuantizedTable::build(store));
+        idx
+    }
+
+    pub fn has_quantized(&self) -> bool {
+        self.quant.is_some()
+    }
+
+    pub fn params(&self) -> &TopKParams {
+        &self.params
+    }
+
+    /// Exact blocked scan: top `k` rows by `metric` against `query`,
+    /// excluding `exclude` (the query node itself, usually).
+    pub fn top_k(
+        &self,
+        store: &EmbeddingStore,
+        query: &[f32],
+        k: usize,
+        metric: Metric,
+        exclude: Option<u32>,
+    ) -> Vec<Hit> {
+        assert_eq!(query.len(), store.dim(), "query dimension mismatch");
+        let n = store.n();
+        if n == 0 || k == 0 {
+            return Vec::new();
+        }
+        let qnorm = dot(query, query).sqrt();
+        let block = self.params.block.max(1);
+        let n_blocks = n.div_ceil(block);
+        let per_block: Vec<Vec<Hit>> =
+            pool::parallel_tasks(n_blocks, self.params.threads.max(1), |bi| {
+                let lo = bi * block;
+                let hi = ((bi + 1) * block).min(n);
+                let mut top = TopBuf::new(k);
+                for v in lo..hi {
+                    let v = v as u32;
+                    if exclude == Some(v) {
+                        continue;
+                    }
+                    let s = self.score(store, query, qnorm, v, metric);
+                    top.offer(v, s);
+                }
+                top.into_sorted()
+            });
+        merge_topk(per_block, k)
+    }
+
+    /// Top `k` neighbours of node `v` (excludes `v` itself).
+    pub fn top_k_node(&self, store: &EmbeddingStore, v: u32, k: usize, metric: Metric) -> Vec<Hit> {
+        // The row may live in the mmap; copy it out so the scan closure
+        // does not hold two store borrows with different lifetimes.
+        let query: Vec<f32> = store.row(v).to_vec();
+        self.top_k(store, &query, k, metric, Some(v))
+    }
+
+    /// Quantized fast path: integer-dot scan for a `k * oversample`
+    /// candidate pool, then exact re-rank. Falls back to the exact scan
+    /// when no quantized table was built.
+    pub fn top_k_quantized(
+        &self,
+        store: &EmbeddingStore,
+        query: &[f32],
+        k: usize,
+        metric: Metric,
+        exclude: Option<u32>,
+    ) -> Vec<Hit> {
+        let quant = match &self.quant {
+            Some(q) => q,
+            None => return self.top_k(store, query, k, metric, exclude),
+        };
+        assert_eq!(query.len(), store.dim(), "query dimension mismatch");
+        let n = store.n();
+        if n == 0 || k == 0 {
+            return Vec::new();
+        }
+        let pool_k = (k * self.params.oversample.max(1)).max(k).min(n);
+        let cq = quant.encode_query(query);
+        let qnorm = dot(query, query).sqrt();
+        let block = self.params.block.max(1);
+        let n_blocks = n.div_ceil(block);
+        let per_block: Vec<Vec<Hit>> =
+            pool::parallel_tasks(n_blocks, self.params.threads.max(1), |bi| {
+                let lo = bi * block;
+                let hi = ((bi + 1) * block).min(n);
+                let mut top = TopBuf::new(pool_k);
+                for v in lo..hi {
+                    let v = v as u32;
+                    if exclude == Some(v) {
+                        continue;
+                    }
+                    let approx = quant.approx_dot(v, &cq);
+                    let s = match metric {
+                        Metric::Dot => approx,
+                        Metric::Cosine => {
+                            let d = self.norms[v as usize] * qnorm;
+                            if d == 0.0 {
+                                0.0
+                            } else {
+                                approx / d
+                            }
+                        }
+                    };
+                    top.offer(v, s);
+                }
+                top.into_sorted()
+            });
+        let candidates = merge_topk(per_block, pool_k);
+        // Exact re-rank of the pool: scores reported are never approximate.
+        let mut exact: Vec<Hit> = candidates
+            .into_iter()
+            .map(|(v, _)| (v, self.score(store, query, qnorm, v, metric)))
+            .collect();
+        sort_hits(&mut exact);
+        exact.truncate(k);
+        exact
+    }
+
+    /// Quantized neighbours of node `v` (exact-re-ranked).
+    pub fn top_k_node_quantized(
+        &self,
+        store: &EmbeddingStore,
+        v: u32,
+        k: usize,
+        metric: Metric,
+    ) -> Vec<Hit> {
+        let query: Vec<f32> = store.row(v).to_vec();
+        self.top_k_quantized(store, &query, k, metric, Some(v))
+    }
+
+    #[inline]
+    fn score(
+        &self,
+        store: &EmbeddingStore,
+        query: &[f32],
+        qnorm: f32,
+        v: u32,
+        metric: Metric,
+    ) -> f32 {
+        let d = dot(query, store.row(v));
+        match metric {
+            Metric::Dot => d,
+            Metric::Cosine => {
+                let nn = self.norms[v as usize] * qnorm;
+                if nn == 0.0 {
+                    0.0
+                } else {
+                    d / nn
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    crate::embed::matrix::dot(a, b)
+}
+
+/// Deterministic hit order: score descending, node id ascending on ties
+/// — identical for the mmap and in-memory views of the same artifact.
+fn sort_hits(hits: &mut [Hit]) {
+    hits.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.0.cmp(&b.0))
+    });
+}
+
+fn merge_topk(per_block: Vec<Vec<Hit>>, k: usize) -> Vec<Hit> {
+    let mut all: Vec<Hit> = per_block.concat();
+    sort_hits(&mut all);
+    all.truncate(k);
+    all
+}
+
+/// Bounded candidate buffer: keeps the best `k` of everything offered.
+/// Plain vec + threshold — for the k's a serving tier uses (10..1000)
+/// this beats a heap on branch predictability.
+struct TopBuf {
+    k: usize,
+    hits: Vec<Hit>,
+    /// Current worst kept score once the buffer is full.
+    floor: f32,
+}
+
+impl TopBuf {
+    fn new(k: usize) -> TopBuf {
+        TopBuf {
+            k,
+            hits: Vec::with_capacity(2 * k + 1),
+            floor: f32::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    fn offer(&mut self, v: u32, s: f32) {
+        if self.hits.len() >= self.k && s <= self.floor {
+            return;
+        }
+        self.hits.push((v, s));
+        if self.hits.len() >= 2 * self.k {
+            self.shrink();
+        }
+    }
+
+    fn shrink(&mut self) {
+        sort_hits(&mut self.hits);
+        self.hits.truncate(self.k);
+        self.floor = self.hits.last().map(|h| h.1).unwrap_or(f32::NEG_INFINITY);
+    }
+
+    fn into_sorted(mut self) -> Vec<Hit> {
+        sort_hits(&mut self.hits);
+        self.hits.truncate(self.k);
+        self.hits
+    }
+}
+
+/// Scalar 8-bit quantization of the whole table: per-row `min` and
+/// `scale` with codes `c` such that `x ~= min + scale * c`.
+///
+/// The approximate dot between row codes `c` and query codes `d`
+/// (query quantized the same way) expands to four terms:
+///
+/// ```text
+/// x.y ~= dim*rmin*qmin + rmin*qs*sum(d) + qmin*rs*sum(c) + rs*qs*sum(c*d)
+/// ```
+///
+/// `sum(c)` is precomputed per row, `sum(d)` once per query, and the
+/// hot loop is a pure `u8 x u8 -> u32` multiply-accumulate.
+pub struct QuantizedTable {
+    dim: usize,
+    codes: Vec<u8>,     // n * dim
+    row_min: Vec<f32>,  // n
+    row_scale: Vec<f32>, // n
+    row_code_sum: Vec<u32>, // n
+}
+
+/// A query encoded against its own min/scale.
+pub struct EncodedQuery {
+    codes: Vec<u8>,
+    min: f32,
+    scale: f32,
+    code_sum: u32,
+}
+
+fn quantize_into(row: &[f32], codes: &mut [u8]) -> (f32, f32, u32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in row {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        // Degenerate (empty or non-finite) row: encode as zeros.
+        codes.iter_mut().for_each(|c| *c = 0);
+        return (0.0, 0.0, 0);
+    }
+    let scale = (hi - lo) / 255.0;
+    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    let mut sum = 0u32;
+    for (c, &x) in codes.iter_mut().zip(row) {
+        let q = ((x - lo) * inv + 0.5) as u32;
+        let q = q.min(255) as u8;
+        *c = q;
+        sum += q as u32;
+    }
+    (lo, scale, sum)
+}
+
+impl QuantizedTable {
+    pub fn build(store: &EmbeddingStore) -> QuantizedTable {
+        let (n, dim) = (store.n(), store.dim());
+        let mut codes = vec![0u8; n * dim];
+        let mut row_min = vec![0f32; n];
+        let mut row_scale = vec![0f32; n];
+        let mut row_code_sum = vec![0u32; n];
+        for v in 0..n {
+            let (lo, scale, sum) =
+                quantize_into(store.row(v as u32), &mut codes[v * dim..(v + 1) * dim]);
+            row_min[v] = lo;
+            row_scale[v] = scale;
+            row_code_sum[v] = sum;
+        }
+        QuantizedTable {
+            dim,
+            codes,
+            row_min,
+            row_scale,
+            row_code_sum,
+        }
+    }
+
+    /// Bytes the quantized table keeps resident (vs `4x` for f32 rows).
+    pub fn resident_bytes(&self) -> usize {
+        self.codes.len() + self.row_min.len() * 12
+    }
+
+    pub fn encode_query(&self, query: &[f32]) -> EncodedQuery {
+        assert_eq!(query.len(), self.dim);
+        let mut codes = vec![0u8; self.dim];
+        let (min, scale, code_sum) = quantize_into(query, &mut codes);
+        EncodedQuery {
+            codes,
+            min,
+            scale,
+            code_sum,
+        }
+    }
+
+    /// Approximate `row(v) . query` from codes only (no f32 row touch).
+    #[inline]
+    pub fn approx_dot(&self, v: u32, q: &EncodedQuery) -> f32 {
+        let v = v as usize;
+        let row = &self.codes[v * self.dim..(v + 1) * self.dim];
+        let mut acc = 0u32;
+        for (&c, &d) in row.iter().zip(&q.codes) {
+            acc += c as u32 * d as u32;
+        }
+        let (rmin, rs) = (self.row_min[v], self.row_scale[v]);
+        self.dim as f32 * rmin * q.min
+            + rmin * q.scale * q.code_sum as f32
+            + q.min * rs * self.row_code_sum[v] as f32
+            + rs * q.scale * acc as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_store(n: usize, dim: usize, seed: u64) -> EmbeddingStore {
+        let mut rng = Rng::new(seed);
+        let vecs: Vec<f32> = (0..n * dim).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        EmbeddingStore::from_parts(vecs, n, dim, vec![0; n])
+    }
+
+    fn brute_force(store: &EmbeddingStore, q: u32, k: usize, metric: Metric) -> Vec<Hit> {
+        let query: Vec<f32> = store.row(q).to_vec();
+        let qn = dot(&query, &query).sqrt();
+        let mut hits: Vec<Hit> = (0..store.n() as u32)
+            .filter(|&v| v != q)
+            .map(|v| {
+                let d = dot(&query, store.row(v));
+                let s = match metric {
+                    Metric::Dot => d,
+                    Metric::Cosine => {
+                        let r = store.row(v);
+                        let nn = dot(r, r).sqrt() * qn;
+                        if nn == 0.0 {
+                            0.0
+                        } else {
+                            d / nn
+                        }
+                    }
+                };
+                (v, s)
+            })
+            .collect();
+        sort_hits(&mut hits);
+        hits.truncate(k);
+        hits
+    }
+
+    #[test]
+    fn exact_scan_matches_brute_force() {
+        let store = random_store(300, 12, 3);
+        // Block smaller than n so the merge path is exercised.
+        let idx = TopKIndex::build(
+            &store,
+            TopKParams {
+                block: 64,
+                threads: 4,
+                ..Default::default()
+            },
+        );
+        for metric in [Metric::Dot, Metric::Cosine] {
+            for q in [0u32, 7, 299] {
+                let got = idx.top_k_node(&store, q, 10, metric);
+                let want = brute_force(&store, q, 10, metric);
+                assert_eq!(got, want, "metric {metric:?} query {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn excluded_node_never_returned_and_k_clamps() {
+        let store = random_store(20, 4, 5);
+        let idx = TopKIndex::build(&store, TopKParams::default());
+        let hits = idx.top_k_node(&store, 3, 50, Metric::Cosine);
+        assert_eq!(hits.len(), 19); // n - 1, despite k = 50
+        assert!(hits.iter().all(|&(v, _)| v != 3));
+        assert!(hits.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn quantization_round_trips_within_tolerance() {
+        let store = random_store(50, 16, 9);
+        let quant = QuantizedTable::build(&store);
+        let mut rng = Rng::new(1);
+        let query: Vec<f32> = (0..16).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        let cq = quant.encode_query(&query);
+        for v in 0..50u32 {
+            let exact = dot(&query, store.row(v));
+            let approx = quant.approx_dot(v, &cq);
+            // Per-element error <= (row_scale + q_scale)/2; dims are small
+            // and values in [-1, 1], so the dot error stays well under 0.1.
+            assert!(
+                (exact - approx).abs() < 0.1,
+                "v={v}: exact {exact} vs approx {approx}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_path_reports_exact_scores() {
+        let store = random_store(200, 8, 11);
+        let idx = TopKIndex::build_quantized(
+            &store,
+            TopKParams {
+                block: 32,
+                threads: 2,
+                oversample: 8,
+            },
+        );
+        let exact = idx.top_k_node(&store, 0, 5, Metric::Dot);
+        let fast = idx.top_k_node_quantized(&store, 0, 5, Metric::Dot);
+        // Scores of any node the fast path returns must equal the exact
+        // scan's score for that node (re-rank is exact by construction).
+        for &(v, s) in &fast {
+            let es = dot(store.row(0), store.row(v));
+            assert_eq!(s, es, "node {v} score not exact");
+        }
+        // And with oversample 8 on 200 random nodes the sets agree.
+        let fast_ids: Vec<u32> = fast.iter().map(|h| h.0).collect();
+        let exact_ids: Vec<u32> = exact.iter().map(|h| h.0).collect();
+        assert_eq!(fast_ids, exact_ids);
+    }
+
+    #[test]
+    fn constant_rows_quantize_safely() {
+        let vecs = vec![0.5f32; 6 * 4];
+        let store = EmbeddingStore::from_parts(vecs, 6, 4, vec![0; 6]);
+        let quant = QuantizedTable::build(&store);
+        let cq = quant.encode_query(&[0.5, 0.5, 0.5, 0.5]);
+        for v in 0..6u32 {
+            let approx = quant.approx_dot(v, &cq);
+            assert!((approx - 1.0).abs() < 1e-5, "approx {approx}");
+        }
+    }
+}

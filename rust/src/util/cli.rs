@@ -124,6 +124,28 @@ impl Args {
         }
     }
 
+    /// Optional `--key U,V` node-id pair (e.g. `--edge 3,17`).
+    pub fn opt_u32_pair(&self, key: &str) -> Result<Option<(u32, u32)>, String> {
+        self.mark(key);
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let (a, b) = v
+                    .split_once(',')
+                    .ok_or_else(|| format!("--{key}: expected U,V, got {v:?}"))?;
+                let pa = a
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("--{key}: bad node id {a:?}"))?;
+                let pb = b
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("--{key}: bad node id {b:?}"))?;
+                Ok(Some((pa, pb)))
+            }
+        }
+    }
+
     /// Boolean flag presence.
     pub fn has_flag(&self, key: &str) -> bool {
         self.mark(key);
@@ -205,6 +227,18 @@ mod tests {
         assert_eq!(a.get_usize_list("cores", &[]).unwrap(), vec![9, 17, 25]);
         let b = parse("x");
         assert_eq!(b.get_usize_list("cores", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn u32_pair() {
+        let a = parse("x --edge 3,17");
+        assert_eq!(a.opt_u32_pair("edge").unwrap(), Some((3, 17)));
+        let b = parse("x");
+        assert_eq!(b.opt_u32_pair("edge").unwrap(), None);
+        let c = parse("x --edge 3");
+        assert!(c.opt_u32_pair("edge").is_err());
+        let d = parse("x --edge a,b");
+        assert!(d.opt_u32_pair("edge").is_err());
     }
 
     #[test]

@@ -133,6 +133,19 @@ impl Corpus {
             .map(|w| pairs_in_walk(w[1] - w[0], window))
             .sum()
     }
+
+    /// A walk reader over this corpus's resident slices — the zero-copy
+    /// bridge that lets [`PairStream`] run on the shared
+    /// [`ShardedPairStream`] state machine without sharding anything.
+    pub fn reader(&self) -> ShardReader<'_> {
+        ShardReader {
+            resident: Some((&self.tokens, &self.offsets)),
+            next_idx: 0,
+            file: None,
+            byte_buf: Vec::new(),
+            remaining: self.n_walks(),
+        }
+    }
 }
 
 /// Streaming skip-gram pair generator with word2vec's *dynamic window*:
@@ -140,92 +153,29 @@ impl Corpus {
 /// `1..=window`, and all tokens within `r` positions (both sides) become
 /// contexts. This both subsamples distant pairs (like gensim) and keeps
 /// the pair stream O(1) in memory.
+///
+/// There is exactly **one** dynamic-window state machine in the crate:
+/// [`ShardedPairStream`]. This type is the materialized-corpus face of
+/// it — a single zero-copy [`Corpus::reader`] fed into the shared
+/// machine — so the two corpus representations cannot drift apart.
 pub struct PairStream<'a> {
-    corpus: &'a Corpus,
-    window: usize,
-    rng: Rng,
-    walk_idx: usize,
-    center: usize, // position within walk
-    radius: usize,
-    ctx_off: isize, // current context offset in -r..=r, skipping 0
+    inner: ShardedPairStream<'a>,
 }
 
 impl<'a> PairStream<'a> {
     pub fn new(corpus: &'a Corpus, window: usize, rng: Rng) -> Self {
-        assert!(window >= 1);
-        let mut s = PairStream {
-            corpus,
-            window,
-            rng,
-            walk_idx: 0,
-            center: 0,
-            radius: 0,
-            ctx_off: 0,
-        };
-        s.begin_center();
-        s
-    }
-
-    fn begin_center(&mut self) {
-        // Called with (walk_idx, center) pointing at a new center token;
-        // draws its radius and resets the context cursor.
-        if self.walk_idx < self.corpus.n_walks() {
-            self.radius = 1 + self.rng.gen_index(self.window);
-            self.ctx_off = -(self.radius as isize);
+        PairStream {
+            inner: ShardedPairStream::from_readers(vec![corpus.reader()], window, rng),
         }
-    }
-
-    fn advance_center(&mut self) {
-        loop {
-            self.center += 1;
-            if self.walk_idx >= self.corpus.n_walks() {
-                return;
-            }
-            if self.center >= self.corpus.walk(self.walk_idx).len() {
-                self.walk_idx += 1;
-                self.center = 0;
-                if self.walk_idx >= self.corpus.n_walks() {
-                    return;
-                }
-            }
-            break;
-        }
-        self.begin_center();
     }
 }
 
 impl<'a> Iterator for PairStream<'a> {
     type Item = (u32, u32);
 
+    #[inline]
     fn next(&mut self) -> Option<(u32, u32)> {
-        loop {
-            if self.walk_idx >= self.corpus.n_walks() {
-                return None;
-            }
-            let walk = self.corpus.walk(self.walk_idx);
-            if walk.is_empty() {
-                self.walk_idx += 1;
-                self.center = 0;
-                if self.walk_idx < self.corpus.n_walks() {
-                    self.begin_center();
-                }
-                continue;
-            }
-            if self.ctx_off > self.radius as isize {
-                self.advance_center();
-                continue;
-            }
-            let off = self.ctx_off;
-            self.ctx_off += 1;
-            if off == 0 {
-                continue;
-            }
-            let pos = self.center as isize + off;
-            if pos < 0 || pos >= walk.len() as isize {
-                continue;
-            }
-            return Some((walk[self.center], walk[pos as usize]));
-        }
+        self.inner.next()
     }
 }
 
@@ -308,9 +258,15 @@ fn pairs_in_walk(l: usize, window: usize) -> u64 {
 
 static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
 
-fn spill_path() -> PathBuf {
+/// Next spill-file path inside `dir` (None = the OS temp dir; the
+/// `--spill-dir` knob routes deployments to a dedicated scratch disk).
+fn spill_path(dir: Option<&std::path::Path>) -> PathBuf {
     let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
-    std::env::temp_dir().join(format!(
+    let base = match dir {
+        Some(d) => d.to_path_buf(),
+        None => std::env::temp_dir(),
+    };
+    base.join(format!(
         "kcore_embed_shard_{}_{seq}.bin",
         std::process::id()
     ))
@@ -482,11 +438,24 @@ pub struct ShardWriter {
     gauge_counted: usize,
     writer: Option<BufWriter<File>>,
     path: Option<PathBuf>,
+    spill_dir: Option<PathBuf>,
     spilled_bytes: u64,
 }
 
 impl ShardWriter {
+    /// Writer spilling (if ever) into the OS temp dir.
     pub fn new(n_nodes: usize, budget_bytes: usize, gauge: MemGauge) -> ShardWriter {
+        ShardWriter::new_in(n_nodes, budget_bytes, gauge, None)
+    }
+
+    /// Writer spilling into `spill_dir` (None = OS temp dir) — the
+    /// `--spill-dir` knob for dedicated scratch disks.
+    pub fn new_in(
+        n_nodes: usize,
+        budget_bytes: usize,
+        gauge: MemGauge,
+        spill_dir: Option<PathBuf>,
+    ) -> ShardWriter {
         ShardWriter {
             n_nodes,
             budget_bytes,
@@ -499,6 +468,7 @@ impl ShardWriter {
             gauge_counted: 0,
             writer: None,
             path: None,
+            spill_dir,
             spilled_bytes: 0,
         }
     }
@@ -521,7 +491,7 @@ impl ShardWriter {
 
     /// Migrate everything resident to the spill file and free the RAM.
     fn spill(&mut self) {
-        let path = spill_path();
+        let path = spill_path(self.spill_dir.as_deref());
         let file = File::create(&path)
             .unwrap_or_else(|e| panic!("creating corpus spill file {}: {e}", path.display()));
         let mut writer = BufWriter::new(file);
@@ -625,12 +595,18 @@ impl ShardedCorpus {
     }
 
     /// Split a materialized corpus into `n_shards` shards of contiguous
-    /// walks, spilling under `budget_bytes` (total, 0 = unbounded) like
-    /// the walk engine does. Copies — used by compatibility wrappers and
-    /// the not-yet-shard-native node2vec path; the walk engine writes
+    /// walks, spilling under `budget_bytes` (total, 0 = unbounded, into
+    /// `spill_dir`, None = OS temp dir) like the walk engine does.
+    /// Copies — used by compatibility wrappers and the
+    /// not-yet-shard-native node2vec path; the walk engine writes
     /// shards directly. The reported peak includes the source corpus,
     /// which stays resident while the copy is made.
-    pub fn from_corpus(corpus: &Corpus, n_shards: usize, budget_bytes: usize) -> ShardedCorpus {
+    pub fn from_corpus(
+        corpus: &Corpus,
+        n_shards: usize,
+        budget_bytes: usize,
+        spill_dir: Option<&std::path::Path>,
+    ) -> ShardedCorpus {
         let n_walks = corpus.n_walks();
         let n_shards = n_shards.clamp(1, n_walks.max(1));
         let per_shard_budget = if budget_bytes == 0 {
@@ -647,7 +623,12 @@ impl ShardedCorpus {
         let mut lo = 0usize;
         for s in 0..n_shards {
             let hi = lo + base + usize::from(s < rem);
-            let mut w = ShardWriter::new(corpus.n_nodes(), per_shard_budget, gauge.clone());
+            let mut w = ShardWriter::new_in(
+                corpus.n_nodes(),
+                per_shard_budget,
+                gauge.clone(),
+                spill_dir.map(|d| d.to_path_buf()),
+            );
             for i in lo..hi {
                 w.push_walk(corpus.walk(i));
             }
@@ -766,9 +747,22 @@ pub struct ShardedPairStream<'a> {
 
 impl<'a> ShardedPairStream<'a> {
     pub fn new(corpus: &'a ShardedCorpus, window: usize, rng: Rng) -> ShardedPairStream<'a> {
+        ShardedPairStream::from_readers(
+            corpus.shards.iter().map(|s| s.reader()).collect(),
+            window,
+            rng,
+        )
+    }
+
+    /// Build over explicit walk readers (round-robin in reader order).
+    /// [`PairStream`] uses this with a single [`Corpus::reader`]; it is
+    /// the one constructor that owns the dynamic-window state.
+    pub fn from_readers(
+        readers: Vec<ShardReader<'a>>,
+        window: usize,
+        rng: Rng,
+    ) -> ShardedPairStream<'a> {
         assert!(window >= 1);
-        let readers: Vec<ShardReader<'a>> =
-            corpus.shards.iter().map(|s| s.reader()).collect();
         let n = readers.len();
         ShardedPairStream {
             readers,
@@ -989,6 +983,30 @@ mod tests {
     }
 
     #[test]
+    fn spill_dir_knob_places_spill_files() {
+        let dir = std::env::temp_dir().join(format!(
+            "kcore_embed_spilldir_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = ShardWriter::new_in(3, 8, MemGauge::default(), Some(dir.clone()));
+        for _ in 0..10 {
+            w.push_walk(&[0, 1, 2]);
+        }
+        let shard = w.finish();
+        assert!(shard.is_spilled());
+        let path = match &shard.storage {
+            ShardStorage::Spilled { path } => path.clone(),
+            _ => panic!("expected spill"),
+        };
+        assert_eq!(path.parent(), Some(dir.as_path()));
+        assert_eq!(collect_walks(&shard), vec![vec![0u32, 1, 2]; 10]);
+        drop(shard);
+        assert!(!path.exists());
+        std::fs::remove_dir(&dir).unwrap();
+    }
+
+    #[test]
     fn unbounded_writer_stays_resident() {
         let mut w = ShardWriter::new(4, 0, MemGauge::default());
         w.push_walk(&[0, 1]);
@@ -1005,7 +1023,7 @@ mod tests {
         // order alternates walks across shards.
         let a = corpus_of(&[&[0, 1], &[2, 3]], 6);
         let b = corpus_of(&[&[4, 5]], 6);
-        let mut sharded = ShardedCorpus::from_corpus(&a, 1, 0);
+        let mut sharded = ShardedCorpus::from_corpus(&a, 1, 0, None);
         sharded.push_shard(CorpusShard::from_corpus(b));
         let pairs: Vec<(u32, u32)> = sharded.pair_stream(1, Rng::new(3)).collect();
         // Walk order: a[0], b[0], a[1] (shard 1 exhausted after b[0]).
@@ -1019,7 +1037,7 @@ mod tests {
     #[test]
     fn sharded_helpers_match_materialized_corpus() {
         let c = corpus_of(&[&[0, 1, 2], &[3], &[4, 0], &[], &[1, 1, 1, 1]], 5);
-        let sharded = ShardedCorpus::from_corpus(&c, 3, 0);
+        let sharded = ShardedCorpus::from_corpus(&c, 3, 0, None);
         assert_eq!(sharded.n_shards(), 3);
         assert_eq!(sharded.n_walks(), c.n_walks() as u64);
         assert_eq!(sharded.n_tokens(), c.n_tokens() as u64);

@@ -93,6 +93,11 @@ pub struct ShardOpts {
     /// Total corpus memory budget in bytes (split evenly across
     /// shards); 0 = unbounded, shards stay fully resident.
     pub budget_bytes: usize,
+    /// Directory for spill files (CLI `--spill-dir`, config
+    /// `spill_dir`); None = the OS temp dir. Deployments with a
+    /// dedicated scratch disk point this at it so corpus spill I/O
+    /// stays off the system volume.
+    pub spill_dir: Option<std::path::PathBuf>,
 }
 
 impl ShardOpts {
@@ -101,6 +106,7 @@ impl ShardOpts {
         ShardOpts {
             shards,
             budget_bytes: budget_mb * (1 << 20),
+            spill_dir: None,
         }
     }
 
@@ -150,7 +156,8 @@ pub fn generate_walk_shards(
     let shards = pool::parallel_tasks(n_shards, params.threads.max(1), |si| {
         let mut rng = shard_rngs[si].clone();
         let range = (si * chunk).min(n)..((si + 1) * chunk).min(n);
-        let mut writer = ShardWriter::new(n, per_shard_budget, gauge.clone());
+        let mut writer =
+            ShardWriter::new_in(n, per_shard_budget, gauge.clone(), opts.spill_dir.clone());
         let mut buf = Vec::with_capacity(params.walk_length);
         for v in range {
             for _ in 0..schedule.counts[v] {

@@ -94,7 +94,7 @@ fn pjrt_and_native_trainers_agree_on_quality() {
         },
     );
     let params = small_params();
-    let sharded = kcore_embed::walks::ShardedCorpus::from_corpus(&corpus, 4, 0);
+    let sharded = kcore_embed::walks::ShardedCorpus::from_corpus(&corpus, 4, 0, None);
     let pj = trainer::train_pjrt(&rt, &m, &sharded, g.n_nodes(), &params, 0).unwrap();
     let nat = native::train_native(&corpus, g.n_nodes(), &params);
 

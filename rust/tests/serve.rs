@@ -1,0 +1,242 @@
+//! Integration: the serving subsystem's three contracts (ISSUE 2 /
+//! DESIGN.md §Serving).
+//!
+//! 1. Round trip: write -> mmap-load returns byte-identical rows, core
+//!    numbers and header, and the mmap and in-memory views agree.
+//! 2. Equivalence: top-k answers are identical between the mmap and
+//!    in-memory load paths (exact and quantized).
+//! 3. Recall: the 8-bit quantized fast path reaches recall@10 >= 0.95
+//!    against the exact scan — as a property over random clustered
+//!    tables and on an embedding actually trained on a generated
+//!    benchmark graph.
+
+use kcore_embed::coordinator::{run_pipeline, Backend, PipelineConfig};
+use kcore_embed::graph::generators;
+use kcore_embed::serve::{
+    write_store, EmbeddingStore, Metric, QueryService, Request, Response, ServeOpts, TopKIndex,
+    TopKParams,
+};
+use kcore_embed::util::proptest::{ensure, forall};
+use kcore_embed::util::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("kcore_embed_serve_it_{name}_{}", std::process::id()));
+    p
+}
+
+fn random_table(n: usize, dim: usize, rng: &mut Rng) -> (Vec<f32>, Vec<u32>) {
+    let vecs: Vec<f32> = (0..n * dim).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+    let cores: Vec<u32> = (0..n).map(|v| (v % 13) as u32).collect();
+    (vecs, cores)
+}
+
+#[test]
+fn write_then_mmap_load_is_byte_identical() {
+    let (n, dim) = (257, 24);
+    let mut rng = Rng::new(41);
+    let (vecs, cores) = random_table(n, dim, &mut rng);
+    let path = tmp("roundtrip.kce");
+    write_store(&path, &vecs, n, dim, Some(&cores)).unwrap();
+
+    let mm = EmbeddingStore::open_mmap(&path).unwrap();
+    let im = EmbeddingStore::open_in_memory(&path).unwrap();
+    assert!(mm.is_mmap(), "unix mmap path should be taken in CI");
+    assert!(!im.is_mmap());
+    assert_eq!(mm.header(), im.header());
+    assert_eq!((mm.n(), mm.dim()), (n, dim));
+    assert_eq!(mm.cores(), &cores[..]);
+    assert_eq!(im.cores(), &cores[..]);
+    for v in 0..n as u32 {
+        let want = &vecs[v as usize * dim..(v as usize + 1) * dim];
+        // Bit-exact, not approximately equal: compare the raw bits.
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(mm.row(v)), bits(want), "mmap row {v}");
+        assert_eq!(bits(im.row(v)), bits(want), "in-memory row {v}");
+    }
+    mm.verify().unwrap();
+    im.verify().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn mmap_and_in_memory_views_answer_identically() {
+    let (n, dim) = (400, 16);
+    let mut rng = Rng::new(42);
+    let (vecs, cores) = random_table(n, dim, &mut rng);
+    let path = tmp("views.kce");
+    write_store(&path, &vecs, n, dim, Some(&cores)).unwrap();
+
+    let mm = EmbeddingStore::open_mmap(&path).unwrap();
+    let im = EmbeddingStore::open_in_memory(&path).unwrap();
+    let params = TopKParams {
+        block: 64, // force multi-block merges
+        threads: 4,
+        ..Default::default()
+    };
+    let idx_mm = TopKIndex::build_quantized(&mm, params.clone());
+    let idx_im = TopKIndex::build_quantized(&im, params);
+    for metric in [Metric::Dot, Metric::Cosine] {
+        for q in [0u32, 57, 399] {
+            let a = idx_mm.top_k_node(&mm, q, 10, metric);
+            let b = idx_im.top_k_node(&im, q, 10, metric);
+            assert_eq!(a, b, "exact scan differs (metric {metric:?}, query {q})");
+            let aq = idx_mm.top_k_node_quantized(&mm, q, 10, metric);
+            let bq = idx_im.top_k_node_quantized(&im, q, 10, metric);
+            assert_eq!(
+                aq, bq,
+                "quantized scan differs (metric {metric:?}, query {q})"
+            );
+        }
+    }
+    drop((idx_mm, idx_im, mm, im));
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// recall@10 of the quantized path for `queries` nodes, averaged.
+fn avg_recall_at_10(store: &EmbeddingStore, idx: &TopKIndex, queries: &[u32]) -> f64 {
+    let mut total = 0f64;
+    for &q in queries {
+        let exact = idx.top_k_node(store, q, 10, Metric::Cosine);
+        let fast = idx.top_k_node_quantized(store, q, 10, Metric::Cosine);
+        let exact_ids: std::collections::HashSet<u32> =
+            exact.iter().map(|h| h.0).collect();
+        let hit = fast.iter().filter(|h| exact_ids.contains(&h.0)).count();
+        total += hit as f64 / exact.len().max(1) as f64;
+    }
+    total / queries.len() as f64
+}
+
+#[test]
+fn quantized_recall_property_on_clustered_tables() {
+    // Clustered tables are the shape trained embeddings take (that is
+    // the whole point of training); the quantized scan must keep
+    // recall@10 >= 0.95 across sizes, dims and cluster counts.
+    forall("quantized top-k recall@10 >= 0.95", 12, 0x5E21E, |ctx| {
+        let n = ctx.scaled(60, 400);
+        let dim = 16 + ctx.rng.gen_index(2) * 8; // 16 or 24
+        // Keep every cluster comfortably inside the k*oversample = 80
+        // candidate pool, so recall is decided by the candidate scan's
+        // cluster separation, not by pool overflow.
+        let n_clusters = (n / 40).max(2);
+        let mut centers = vec![0f32; n_clusters * dim];
+        for c in centers.iter_mut() {
+            *c = (ctx.rng.gen_normal() * 1.5) as f32;
+        }
+        let mut vecs = vec![0f32; n * dim];
+        for v in 0..n {
+            let c = ctx.rng.gen_index(n_clusters);
+            for d in 0..dim {
+                vecs[v * dim + d] =
+                    centers[c * dim + d] + (ctx.rng.gen_normal() * 0.1) as f32;
+            }
+        }
+        let store = EmbeddingStore::from_parts(vecs, n, dim, vec![0; n]);
+        let idx = TopKIndex::build_quantized(
+            &store,
+            TopKParams {
+                block: 128,
+                threads: 2,
+                oversample: 8,
+            },
+        );
+        let queries: Vec<u32> = (0..n as u32).step_by((n / 20).max(1)).collect();
+        let recall = avg_recall_at_10(&store, &idx, &queries);
+        ensure(recall >= 0.95, || {
+            format!("recall@10 {recall} < 0.95 (n={n}, dim={dim}, clusters={n_clusters})")
+        })
+    });
+}
+
+#[test]
+fn quantized_recall_on_trained_benchmark_graph() {
+    // End to end on a generated benchmark graph: train with the native
+    // backend, export, reload via mmap, and hold the ISSUE acceptance
+    // bar — quantized recall@10 >= 0.95 vs the exact scan.
+    let g = generators::holme_kim(300, 4, 0.4, &mut Rng::new(6));
+    let cfg = PipelineConfig {
+        backend: Backend::Native,
+        walks_per_node: 6,
+        walk_length: 12,
+        sgns: kcore_embed::embed::SgnsParams {
+            dim: 32,
+            window: 3,
+            ..Default::default()
+        },
+        threads: 2,
+        seed: 19,
+        ..Default::default()
+    };
+    let out = run_pipeline(&g, &cfg, None).unwrap();
+    let path = tmp("trained.kce");
+    write_store(
+        &path,
+        out.embedding.data(),
+        out.embedding.n(),
+        out.embedding.dim(),
+        None,
+    )
+    .unwrap();
+    let store = EmbeddingStore::open_mmap(&path).unwrap();
+    let idx = TopKIndex::build_quantized(&store, TopKParams::default());
+    let queries: Vec<u32> = (0..300u32).step_by(3).collect();
+    let recall = avg_recall_at_10(&store, &idx, &queries);
+    assert!(recall >= 0.95, "trained-embedding recall@10 {recall} < 0.95");
+    drop((idx, store));
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn pipeline_export_to_query_service_end_to_end() {
+    // The full serving story: pipeline exports the artifact (with core
+    // numbers), the service mmaps it and answers a mixed batch.
+    let g = generators::facebook_like(5);
+    let path = tmp("e2e.kce");
+    let cfg = PipelineConfig {
+        backend: Backend::Native,
+        walks_per_node: 2,
+        walk_length: 8,
+        k0: Some(25),
+        sgns: kcore_embed::embed::SgnsParams {
+            dim: 16,
+            window: 2,
+            ..Default::default()
+        },
+        threads: 2,
+        seed: 3,
+        export_store: Some(path.clone()),
+        ..Default::default()
+    };
+    let out = run_pipeline(&g, &cfg, None).unwrap();
+    let store = EmbeddingStore::open_mmap(&path).unwrap();
+    assert_eq!(store.n(), g.n_nodes());
+    assert!(store.has_cores());
+    assert_eq!(
+        store.cores().iter().map(|&c| c as u64).max(),
+        Some(out.degeneracy as u64)
+    );
+    let mut svc = QueryService::new(
+        store,
+        ServeOpts {
+            quantized: true,
+            batch: 8,
+            ..Default::default()
+        },
+    );
+    let reqs: Vec<Request> = (0..20u32)
+        .map(|v| Request::Neighbors { node: v * 7, k: 5 })
+        .collect();
+    let (responses, reports) = svc.run_all(&reqs).unwrap();
+    assert_eq!(responses.len(), 20);
+    assert_eq!(reports.len(), 3); // 8 + 8 + 4
+    for r in &responses {
+        match r {
+            Response::Neighbors { hits, node } => {
+                assert_eq!(hits.len(), 5);
+                assert!(hits.iter().all(|(v, s)| v != node && s.is_finite()));
+            }
+            _ => panic!("unexpected response kind"),
+        }
+    }
+    std::fs::remove_file(&path).unwrap();
+}

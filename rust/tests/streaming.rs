@@ -38,6 +38,7 @@ fn shards_with(threads: usize, budget_bytes: usize) -> ShardedCorpus {
         &ShardOpts {
             shards: 8,
             budget_bytes,
+            ..Default::default()
         },
     )
 }
