@@ -18,12 +18,19 @@ artifacts:
 
 # Serving smoke: train a tiny embedding, export the binary artifact,
 # verify the mmap and in-memory query paths agree, exercise the
-# quantized scan and the batch `serve` front-end. CI runs exactly this
-# target — extend it here, not in ci.yml.
+# quantized scan and the batch `serve` front-end. Also trains via the
+# shard-native node2vec walker under a 1 MiB corpus budget and asserts
+# the spill path actually executed (grep for the spill report). CI runs
+# exactly this target — extend it here, not in ci.yml.
 smoke: build
 	cd rust && ./target/release/kcore-embed embed --graph cora \
 	  --backend native --walks 2 --walk-length 10 --dim 32 \
 	  --out /tmp/smoke_emb.tsv --store /tmp/smoke_emb.kce
+	cd rust && ./target/release/kcore-embed embed --graph cora \
+	  --embedder node2vec --p 0.5 --q 2.0 --backend native \
+	  --walks 8 --walk-length 30 --dim 32 --shards 8 --corpus-budget-mb 1 \
+	  --out /tmp/smoke_n2v.tsv > /tmp/smoke_n2v.log
+	grep "shards spilled" /tmp/smoke_n2v.log
 	cd rust && ./target/release/kcore-embed query --store /tmp/smoke_emb.kce \
 	  --node 0 --top-k 5 | tee /tmp/smoke_nn.txt
 	cd rust && ./target/release/kcore-embed query --store /tmp/smoke_emb.kce \

@@ -15,7 +15,8 @@ use kcore_embed::propagate::{propagate_mean, PropagationParams};
 use kcore_embed::runtime::{default_artifacts_dir, Manifest, Runtime};
 use kcore_embed::util::rng::Rng;
 use kcore_embed::walks::{
-    generate_walk_shards, generate_walks, ShardOpts, WalkParams, WalkSchedule,
+    generate_node2vec_shards, generate_node2vec_walks, generate_walk_shards, generate_walks,
+    Node2VecParams, ShardOpts, WalkParams, WalkSchedule,
 };
 
 fn bench<F: FnMut() -> u64>(name: &str, unit: &str, iters: usize, mut f: F) {
@@ -167,6 +168,44 @@ fn main() {
         materialized_bytes as f64 / (1 << 20) as f64,
         streaming_peak as f64 / (1 << 20) as f64,
         materialized_bytes as f64 / streaming_peak.max(1) as f64,
+        budget.shards
+    );
+
+    // L3: node2vec — the materializing wrapper (shard-native walks +
+    // the into_corpus copy, i.e. what the compat API costs) vs the
+    // shard-native path under a budget. Like the uniform pair above,
+    // the headline is the peak-resident-bytes comparison; the steps/s
+    // delta prices the materialization copy the pipeline no longer
+    // pays.
+    let n2v = Node2VecParams {
+        p: 0.5,
+        q: 2.0,
+        walk_length: 30,
+        seed: 11,
+        threads: kcore_embed::util::pool::default_threads(),
+    };
+    let mut n2v_materialized_bytes = 0usize;
+    bench("node2vec materialized github (M steps)", "M-step", 3, || {
+        let c = generate_node2vec_walks(&gh, &gh_sched, &n2v);
+        n2v_materialized_bytes = c.n_tokens() * 4 + (c.n_walks() + 1) * 8;
+        std::hint::black_box(c.walk(0)[0]);
+        c.n_tokens() as u64
+    });
+    let mut n2v_peak = 0usize;
+    let mut n2v_spilled = 0usize;
+    bench("node2vec shard-native github (M steps)", "M-step", 3, || {
+        let s = generate_node2vec_shards(&gh, &gh_sched, &n2v, &budget);
+        n2v_peak = s.stats().peak_resident_bytes;
+        n2v_spilled = s.stats().spilled_shards;
+        std::hint::black_box(s.n_walks());
+        s.n_tokens()
+    });
+    println!(
+        "    node2vec peak resident: materialized {:.1} MiB vs shard-native {:.1} MiB \
+         ({:.1}x reduction, {n2v_spilled}/{} shards spilled)",
+        n2v_materialized_bytes as f64 / (1 << 20) as f64,
+        n2v_peak as f64 / (1 << 20) as f64,
+        n2v_materialized_bytes as f64 / n2v_peak.max(1) as f64,
         budget.shards
     );
 

@@ -6,6 +6,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::embed::SgnsParams;
 use crate::propagate::PropagationParams;
 use crate::util::json::Json;
+use crate::walks::Node2VecParams;
 
 /// Which walk scheduler/walker produces the corpus.
 #[derive(Debug, Clone, PartialEq)]
@@ -110,6 +111,29 @@ impl Default for PipelineConfig {
 }
 
 impl PipelineConfig {
+    /// Check the invariants the walkers rely on — `walk_length` at
+    /// least 1, and for node2vec the `p`/`q` rules of
+    /// [`Node2VecParams::validate`] (delegated, so there is one source
+    /// of truth). Called by [`Self::from_json`], the CLI builder, and
+    /// [`crate::coordinator::run_pipeline`], so bad values fail at
+    /// parse time with a real error instead of going infinite mid-walk.
+    pub fn validate(&self) -> Result<()> {
+        if self.walk_length == 0 {
+            bail!("walk_length must be at least 1");
+        }
+        if let Embedder::Node2Vec { p, q } = self.embedder {
+            let n2v = Node2VecParams {
+                p,
+                q,
+                walk_length: self.walk_length,
+                seed: self.seed,
+                threads: self.threads.max(1),
+            };
+            n2v.validate().map_err(|e| anyhow!(e))?;
+        }
+        Ok(())
+    }
+
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
             ("embedder", Json::str(self.embedder.name())),
@@ -202,6 +226,7 @@ impl PipelineConfig {
             .get("export_store")
             .and_then(Json::as_str)
             .map(std::path::PathBuf::from);
+        cfg.validate()?;
         Ok(cfg)
     }
 
@@ -290,6 +315,25 @@ mod tests {
         assert!(PipelineConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"backend": "tpu"}"#).unwrap();
         assert!(PipelineConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_degenerate_walk_params() {
+        for bad in [
+            r#"{"embedder": "node2vec", "p": 0}"#,
+            r#"{"embedder": "node2vec", "p": -0.5}"#,
+            r#"{"embedder": "node2vec", "q": 0}"#,
+            r#"{"embedder": "node2vec", "q": -2.0}"#,
+            r#"{"walk_length": 0}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(PipelineConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+        // The happy path still parses.
+        let j = Json::parse(r#"{"embedder": "node2vec", "p": 0.25, "q": 4}"#).unwrap();
+        let cfg = PipelineConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.embedder, Embedder::Node2Vec { p: 0.25, q: 4.0 });
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

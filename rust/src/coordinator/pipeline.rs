@@ -70,6 +70,10 @@ pub fn run_pipeline(
     cfg: &PipelineConfig,
     runtime: Option<(&Runtime, &Manifest)>,
 ) -> Result<PipelineOutput> {
+    // Fail fast on configs the samplers cannot honor (p/q <= 0,
+    // zero-length walks) — config/CLI parsing validates too, but tests
+    // and library callers construct `PipelineConfig` directly.
+    cfg.validate()?;
     let mut timer = PhaseTimer::new();
 
     // Phase 1: core decomposition (needed by CoreWalk scheduling and/or
@@ -116,28 +120,21 @@ pub fn run_pipeline(
     let mut shard_opts = ShardOpts::with_budget_mb(cfg.corpus_shards, cfg.corpus_budget_mb);
     shard_opts.spill_dir = cfg.spill_dir.clone();
     let mut corpus: ShardedCorpus = timer.time(PHASE_WALKS, || match cfg.embedder {
-        Embedder::Node2Vec { p, q } => {
-            // node2vec walks are not shard-native yet: materialize, then
-            // re-shard so training still streams.
-            let c = node2vec::generate_node2vec_walks(
-                &target,
-                &schedule,
-                &node2vec::Node2VecParams {
-                    p,
-                    q,
-                    walk_length: cfg.walk_length,
-                    seed: cfg.seed ^ 0xA11CE,
-                    threads: cfg.threads,
-                },
-            );
-            let n_shards = shard_opts.resolve_shards(c.n_walks());
-            ShardedCorpus::from_corpus(
-                &c,
-                n_shards,
-                shard_opts.budget_bytes,
-                shard_opts.spill_dir.as_deref(),
-            )
-        }
+        // Both walkers are shard-native: walks stream straight through
+        // bounded-memory ShardWriters — no materialized corpus, no
+        // re-shard copy, peak corpus RSS O(budget) either way.
+        Embedder::Node2Vec { p, q } => node2vec::generate_node2vec_shards(
+            &target,
+            &schedule,
+            &node2vec::Node2VecParams {
+                p,
+                q,
+                walk_length: cfg.walk_length,
+                seed: cfg.seed ^ 0xA11CE,
+                threads: cfg.threads,
+            },
+            &shard_opts,
+        ),
         _ => generate_walk_shards(
             &target,
             &schedule,
@@ -396,5 +393,47 @@ mod tests {
         let out = run_pipeline(&g, &cfg, None).unwrap();
         assert_eq!(out.embedding.n(), 60);
         assert!(out.n_pairs > 0);
+    }
+
+    #[test]
+    fn node2vec_pipeline_spills_within_budget() {
+        // The acceptance contract for shard-native node2vec: under
+        // `--embedder node2vec --corpus-budget-mb 1` the MemGauge peak
+        // stays within the budget (plus one in-flight walk per shard)
+        // and shards spill — no full-corpus materialization anywhere on
+        // the pipeline path.
+        let g = generators::holme_kim(600, 3, 0.3, &mut crate::util::rng::Rng::new(6));
+        let mut cfg = tiny_cfg();
+        cfg.embedder = Embedder::Node2Vec { p: 0.5, q: 2.0 };
+        cfg.walks_per_node = 20;
+        cfg.walk_length = 30;
+        cfg.corpus_budget_mb = 1;
+        let out = run_pipeline(&g, &cfg, None).unwrap();
+        // ~600*20*30*4 bytes = ~1.4 MiB of tokens against a 1 MiB budget.
+        assert!(out.n_tokens * 4 > 1 << 20, "corpus too small to exercise spill");
+        let stats = out.corpus_stats;
+        assert!(stats.spilled_shards > 0, "no shard spilled: {stats:?}");
+        assert!(stats.spilled_bytes > 0);
+        let budget = 1usize << 20;
+        assert!(
+            stats.peak_resident_bytes <= budget + 16 * 1024,
+            "peak {} exceeds budget {budget}",
+            stats.peak_resident_bytes
+        );
+        assert_eq!(out.embedding.n(), 600);
+        assert!(out.n_pairs > 0);
+    }
+
+    #[test]
+    fn invalid_configs_rejected_before_running() {
+        let g = generators::ring(10);
+        let mut cfg = tiny_cfg();
+        cfg.embedder = Embedder::Node2Vec { p: 0.0, q: 1.0 };
+        assert!(run_pipeline(&g, &cfg, None).is_err());
+        cfg.embedder = Embedder::Node2Vec { p: 1.0, q: -2.0 };
+        assert!(run_pipeline(&g, &cfg, None).is_err());
+        cfg.embedder = Embedder::DeepWalk;
+        cfg.walk_length = 0;
+        assert!(run_pipeline(&g, &cfg, None).is_err());
     }
 }

@@ -42,6 +42,7 @@ COMMANDS
   generate  --graph NAME [--seed N] --out PATH
   describe  (--graph NAME | --edges PATH) [--seed N]
   embed     (--graph NAME | --edges PATH) [--embedder deepwalk|corewalk|node2vec]
+            [--p P] [--q Q] (node2vec bias knobs; must be positive finite)
             [--k0 K] [--backend pjrt|native] [--walks N] [--walk-length L]
             [--dim D] [--window W] [--epochs E] [--seed N]
             [--shards S] [--corpus-budget-mb M] [--spill-dir DIR]
@@ -172,6 +173,9 @@ fn build_config(args: &Args) -> Result<PipelineConfig> {
         .get_usize("corpus-budget-mb", 0)
         .map_err(anyhow::Error::msg)?;
     cfg.spill_dir = args.opt_str("spill-dir").map(PathBuf::from);
+    // Reject degenerate walk parameters (node2vec p/q <= 0, zero-length
+    // walks) here at parse time, not deep inside the walk engine.
+    cfg.validate()?;
     Ok(cfg)
 }
 

@@ -58,8 +58,8 @@ impl Corpus {
     }
 
     /// Wrap this corpus as a single resident shard (no copy). The cheap
-    /// bridge from `Corpus`-producing walkers (node2vec, bridge walks)
-    /// into the streaming training path.
+    /// bridge from `Corpus`-producing builders (bridge walks, test
+    /// fixtures) into the streaming training path.
     pub fn into_sharded(self) -> ShardedCorpus {
         let n_nodes = self.n_nodes;
         let shards = vec![CorpusShard::from_corpus(self)];
@@ -597,9 +597,12 @@ impl ShardedCorpus {
     /// Split a materialized corpus into `n_shards` shards of contiguous
     /// walks, spilling under `budget_bytes` (total, 0 = unbounded, into
     /// `spill_dir`, None = OS temp dir) like the walk engine does.
-    /// Copies — used by compatibility wrappers and the
-    /// not-yet-shard-native node2vec path; the walk engine writes
-    /// shards directly. The reported peak includes the source corpus,
+    ///
+    /// **Test/compat only.** This path copies: every production walker
+    /// (uniform and node2vec both) now writes shards directly through
+    /// the engine's scaffolding, so nothing on the pipeline path calls
+    /// this. It survives for tests that need a `ShardedCorpus` from
+    /// hand-built walks. The reported peak includes the source corpus,
     /// which stays resident while the copy is made.
     pub fn from_corpus(
         corpus: &Corpus,

@@ -124,6 +124,69 @@ impl ShardOpts {
     }
 }
 
+/// Shared scaffolding for sharded walk generation: resolves the shard
+/// count, pre-forks one RNG stream per *shard index* (never per
+/// worker), splits the node space into contiguous chunks, and runs the
+/// schedule through bounded-memory [`ShardWriter`]s on the
+/// [`pool::parallel_tasks`] queue. `make_walker(shard_index)` builds
+/// the per-shard walk closure `(root, rng, out)`.
+///
+/// Everything that makes the determinism contract hold — output a pure
+/// function of `(walker, schedule, seed, shard count)`, byte-identical
+/// across thread counts — lives here once, shared by the uniform and
+/// node2vec engines.
+pub(crate) fn generate_shards_with<W, F>(
+    n_nodes: usize,
+    schedule: &WalkSchedule,
+    seed: u64,
+    threads: usize,
+    walk_capacity: usize,
+    opts: &ShardOpts,
+    make_walker: F,
+) -> ShardedCorpus
+where
+    W: FnMut(u32, &mut Rng, &mut Vec<u32>),
+    F: Fn(usize) -> W + Sync,
+{
+    assert_eq!(schedule.n_nodes(), n_nodes, "schedule/graph node count mismatch");
+    let n_shards = opts.resolve_shards(n_nodes);
+    let mut seed_rng = Rng::new(seed);
+    // Pre-fork one RNG per shard so the streams are pinned to shard
+    // indices, not to whichever worker claims the shard.
+    let shard_rngs: Vec<Rng> = (0..n_shards).map(|i| seed_rng.fork(i as u64)).collect();
+    let per_shard_budget = if opts.budget_bytes == 0 {
+        0
+    } else {
+        (opts.budget_bytes / n_shards).max(1)
+    };
+    let gauge = MemGauge::default();
+    let chunk = n_nodes.div_ceil(n_shards).max(1);
+
+    let shards = pool::parallel_tasks(n_shards, threads.max(1), |si| {
+        let mut rng = shard_rngs[si].clone();
+        let mut walker = make_walker(si);
+        let range = (si * chunk).min(n_nodes)..((si + 1) * chunk).min(n_nodes);
+        let mut writer =
+            ShardWriter::new_in(n_nodes, per_shard_budget, gauge.clone(), opts.spill_dir.clone());
+        let mut buf = Vec::with_capacity(walk_capacity);
+        for v in range {
+            for _ in 0..schedule.counts[v] {
+                walker(v as u32, &mut rng, &mut buf);
+                writer.push_walk(&buf);
+            }
+        }
+        writer
+    });
+    let spilled_bytes = shards.iter().map(ShardWriter::spilled_bytes).sum();
+    let shards = shards.into_iter().map(ShardWriter::finish).collect();
+    let stats = ShardStats {
+        peak_resident_bytes: gauge.peak_bytes(),
+        spilled_bytes,
+        ..Default::default()
+    };
+    ShardedCorpus::from_shards(n_nodes, shards, stats)
+}
+
 /// Generate the walks of `schedule` as a [`ShardedCorpus`]: one shard
 /// per contiguous node chunk, each with its own pre-forked RNG stream
 /// and bounded-memory writer. Walks for node `v` are contiguous within
@@ -138,43 +201,18 @@ pub fn generate_walk_shards(
     params: &WalkParams,
     opts: &ShardOpts,
 ) -> ShardedCorpus {
-    let n = g.n_nodes();
-    assert_eq!(schedule.n_nodes(), n, "schedule/graph node count mismatch");
-    let n_shards = opts.resolve_shards(n);
-    let mut seed_rng = Rng::new(params.seed);
-    // Pre-fork one RNG per shard so the streams are pinned to shard
-    // indices, not to whichever worker claims the shard.
-    let shard_rngs: Vec<Rng> = (0..n_shards).map(|i| seed_rng.fork(i as u64)).collect();
-    let per_shard_budget = if opts.budget_bytes == 0 {
-        0
-    } else {
-        (opts.budget_bytes / n_shards).max(1)
-    };
-    let gauge = MemGauge::default();
-    let chunk = n.div_ceil(n_shards).max(1);
-
-    let shards = pool::parallel_tasks(n_shards, params.threads.max(1), |si| {
-        let mut rng = shard_rngs[si].clone();
-        let range = (si * chunk).min(n)..((si + 1) * chunk).min(n);
-        let mut writer =
-            ShardWriter::new_in(n, per_shard_budget, gauge.clone(), opts.spill_dir.clone());
-        let mut buf = Vec::with_capacity(params.walk_length);
-        for v in range {
-            for _ in 0..schedule.counts[v] {
-                uniform_walk(g, v as u32, params.walk_length, &mut rng, &mut buf);
-                writer.push_walk(&buf);
-            }
-        }
-        writer
-    });
-    let spilled_bytes = shards.iter().map(ShardWriter::spilled_bytes).sum();
-    let shards = shards.into_iter().map(ShardWriter::finish).collect();
-    let stats = ShardStats {
-        peak_resident_bytes: gauge.peak_bytes(),
-        spilled_bytes,
-        ..Default::default()
-    };
-    ShardedCorpus::from_shards(n, shards, stats)
+    generate_shards_with(
+        g.n_nodes(),
+        schedule,
+        params.seed,
+        params.threads,
+        params.walk_length,
+        opts,
+        |_si| {
+            let length = params.walk_length;
+            move |v: u32, rng: &mut Rng, out: &mut Vec<u32>| uniform_walk(g, v, length, rng, out)
+        },
+    )
 }
 
 /// Generate all walks of `schedule` as one materialized [`Corpus`]

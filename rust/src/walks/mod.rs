@@ -2,7 +2,9 @@
 //! adaptive schedule (§2.1, eq. 13), node2vec biased walks, and the walk
 //! corpus — both the materialized [`Corpus`] and the streaming
 //! [`ShardedCorpus`] with skip-gram pair extraction over each
-//! (DESIGN.md §Corpus-streaming).
+//! (DESIGN.md §Corpus-streaming). Both walkers — uniform and node2vec —
+//! are shard-native: they write through the same bounded-memory
+//! [`ShardWriter`] scaffolding under the same determinism contract.
 
 pub mod bridge;
 pub mod corewalk;
@@ -16,4 +18,7 @@ pub use corpus::{
 pub use engine::{
     generate_walk_shards, generate_walks, ShardOpts, WalkParams, WalkSchedule,
     DEFAULT_SHARD_COUNT,
+};
+pub use node2vec::{
+    generate_node2vec_shards, generate_node2vec_walks, Node2VecParams, Node2VecWalker,
 };

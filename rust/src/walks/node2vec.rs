@@ -4,17 +4,43 @@
 //! as an alternative walker so CoreWalk scheduling composes with biased
 //! walks too (an extension the paper's §4 suggests exploring).
 //!
-//! Implementation: rejection sampling instead of per-edge alias tables —
-//! O(1) expected per step with zero preprocessing memory, exact with
-//! respect to the unnormalized weights (1/p for returning, 1 for
-//! triangle-closing, 1/q for exploring).
+//! Shard-native (DESIGN.md §Corpus-streaming):
+//! [`generate_node2vec_shards`] writes biased walks straight through the
+//! engine's bounded-memory shard scaffolding — same determinism contract
+//! as the uniform engine (corpus a pure function of `(graph, schedule,
+//! seed, shard count)`), same spill-to-disk budget, no materialized
+//! corpus and no re-shard copy. [`generate_node2vec_walks`] survives as
+//! a thin materializing wrapper over it.
+//!
+//! Sampling the second-order hop is the hot path ([`Node2VecWalker`]):
+//!
+//! - rejection sampling by default — O(1) expected per step with zero
+//!   preprocessing memory, exact with respect to the unnormalized
+//!   weights (1/p returning, 1 triangle-closing, 1/q exploring);
+//! - the `prev` neighbour row rides along from the previous step, so
+//!   the `has_edge(cand, prev)` membership test probes an
+//!   already-resident sorted slice (linear scan for short rows,
+//!   galloping binary search for long ones) instead of re-walking the
+//!   CSR offsets every rejection attempt;
+//! - when the parameters make rejection degenerate (acceptance bound
+//!   `min(1, 1/q) / max(1/p, 1, 1/q)` under 1/4 — the return weight
+//!   covers at most one candidate, so it caps `w_max` but not the
+//!   floor), hops switch to
+//!   exact O(degree) sampling over weights computed by a two-pointer
+//!   sweep of the two sorted rows: hub rows get a per-`(cur, prev)`
+//!   alias table cached (bounded) per shard walker, short rows and
+//!   cache overflow take a single cumulative-weight draw — so extreme
+//!   but valid p/q can never make a hop loop unboundedly.
+
+use std::collections::HashMap;
 
 use crate::graph::Graph;
+use crate::util::alias::AliasTable;
 use crate::util::pool;
 use crate::util::rng::Rng;
 
-use super::corpus::Corpus;
-use super::engine::WalkSchedule;
+use super::corpus::{Corpus, ShardedCorpus};
+use super::engine::{generate_shards_with, ShardOpts, WalkSchedule};
 
 /// Node2vec parameters. `p` = return parameter (small p -> backtracky),
 /// `q` = in-out parameter (small q -> DFS-like exploration).
@@ -39,8 +65,234 @@ impl Default for Node2VecParams {
     }
 }
 
-/// One biased walk. The first step is uniform; subsequent steps weight
-/// candidate `x` by 1/p if x == prev, 1 if x ~ prev, 1/q otherwise.
+impl Node2VecParams {
+    /// Check the invariants the samplers rely on: `p` and `q` strictly
+    /// positive and finite (so the 1/p and 1/q weights are usable),
+    /// walks at least one token long. Config/CLI parsing calls this so
+    /// bad values fail at parse time instead of going infinite
+    /// mid-walk; the generators re-check and panic.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.p > 0.0 && self.p.is_finite()) {
+            return Err(format!("node2vec p must be a positive finite number, got {}", self.p));
+        }
+        if !(self.q > 0.0 && self.q.is_finite()) {
+            return Err(format!("node2vec q must be a positive finite number, got {}", self.q));
+        }
+        if self.walk_length == 0 {
+            return Err("node2vec walk_length must be at least 1".to_string());
+        }
+        Ok(())
+    }
+}
+
+/// Degree at or above which a degenerate transition switches from
+/// rejection sampling to the alias-table fast path.
+const HUB_DEGREE: usize = 64;
+
+/// Acceptance-probability bound below which rejection sampling counts
+/// as degenerate (expected attempts per hop exceed its reciprocal).
+const DEGENERATE_ACCEPTANCE: f64 = 0.25;
+
+/// Cap on total cached alias entries per shard walker (~12 bytes each,
+/// so a ~200 KiB ceiling per shard). The cache is walker scratch — it
+/// lives outside the corpus [`super::corpus::MemGauge`]; this cap is
+/// what keeps the total at shards x ~200 KiB, small beside the corpus
+/// budgets it rides along with. Once full, degenerate hops fall back
+/// to exact cumulative-weight draws (no table build).
+const MAX_CACHED_ENTRIES: usize = 1 << 14;
+
+/// Rows up to this length are membership-probed by linear scan (cache
+/// resident, branch-predictable); longer rows gallop.
+const LINEAR_PROBE_LEN: usize = 32;
+
+/// Membership probe into a sorted neighbour row. Short rows scan
+/// linearly; long rows use galloping (exponential) search to bound a
+/// window, then binary-search inside it — probes near the front of a
+/// high-degree row touch fewer cache lines than a full binary search.
+#[inline]
+fn sorted_contains(row: &[u32], x: u32) -> bool {
+    if row.len() <= LINEAR_PROBE_LEN {
+        return row.contains(&x);
+    }
+    let mut hi = 1usize;
+    while hi < row.len() && row[hi - 1] < x {
+        hi <<= 1;
+    }
+    let lo = hi >> 1;
+    let hi = hi.min(row.len());
+    row[lo..hi].binary_search(&x).is_ok()
+}
+
+/// Reusable second-order hop sampler: owns the per-walk hot-path state
+/// — the carried `prev` neighbour row, the scratch weight buffer, and a
+/// bounded per-`(cur, prev)` alias-table cache for hub transitions
+/// where rejection sampling degenerates.
+///
+/// Which sampling path a hop takes depends only on `(p, q,
+/// degree(cur))` and the walker's cache state — and one walker serves
+/// exactly one shard, so that state evolves deterministically along
+/// the shard's canonical walk sequence, never with thread scheduling.
+/// The corpus determinism contract is preserved.
+pub struct Node2VecWalker<'g> {
+    g: &'g Graph,
+    w_return: f64,
+    w_common: f64,
+    w_explore: f64,
+    w_max: f64,
+    degenerate: bool,
+    weight_buf: Vec<f64>,
+    alias_cache: HashMap<(u32, u32), AliasTable>,
+    cached_entries: usize,
+}
+
+impl<'g> Node2VecWalker<'g> {
+    /// Build a walker for `g`. Panics on invalid parameters (see
+    /// [`Node2VecParams::validate`]).
+    pub fn new(g: &'g Graph, params: &Node2VecParams) -> Node2VecWalker<'g> {
+        if let Err(e) = params.validate() {
+            panic!("invalid Node2VecParams: {e}");
+        }
+        let w_return = 1.0 / params.p;
+        let w_common = 1.0;
+        let w_explore = 1.0 / params.q;
+        let w_max = w_return.max(w_common).max(w_explore);
+        // Worst-case mean acceptance over a row: w_return weights at
+        // most one candidate (prev), so a tiny w_return is caught in
+        // w_max but must not drag down the floor — only the two
+        // weights that can cover a whole row do.
+        let w_floor = w_common.min(w_explore);
+        Node2VecWalker {
+            g,
+            w_return,
+            w_common,
+            w_explore,
+            w_max,
+            degenerate: w_floor / w_max < DEGENERATE_ACCEPTANCE,
+            weight_buf: Vec::new(),
+            alias_cache: HashMap::new(),
+            cached_entries: 0,
+        }
+    }
+
+    /// Weights of every `cur` neighbour given `prev`: one two-pointer
+    /// sweep over the two sorted rows (O(d_cur + d_prev) total, no
+    /// per-candidate binary searches).
+    fn fill_weights(&mut self, nbrs: &[u32], prev: u32, prev_nbrs: &[u32]) {
+        self.weight_buf.clear();
+        self.weight_buf.reserve(nbrs.len());
+        let mut j = 0usize;
+        for &x in nbrs {
+            while j < prev_nbrs.len() && prev_nbrs[j] < x {
+                j += 1;
+            }
+            let w = if x == prev {
+                self.w_return
+            } else if j < prev_nbrs.len() && prev_nbrs[j] == x {
+                self.w_common
+            } else {
+                self.w_explore
+            };
+            self.weight_buf.push(w);
+        }
+    }
+
+    /// Sample the hop out of `cur` (row `nbrs`) given `prev` (row
+    /// `prev_nbrs`). Non-degenerate parameters use rejection sampling
+    /// (O(1) expected draws). Degenerate parameters always sample
+    /// exactly in O(d) — hub rows through a cached alias table while
+    /// cache space remains, everything else through one
+    /// cumulative-weight draw — so a hop never loops unboundedly, no
+    /// matter how extreme (but valid) p and q are. All paths are exact
+    /// for the unnormalized node2vec weights.
+    fn sample_step(
+        &mut self,
+        cur: u32,
+        nbrs: &[u32],
+        prev: u32,
+        prev_nbrs: &[u32],
+        rng: &mut Rng,
+    ) -> u32 {
+        if self.degenerate {
+            if nbrs.len() >= HUB_DEGREE {
+                if let Some(t) = self.alias_cache.get(&(cur, prev)) {
+                    return nbrs[t.sample(rng) as usize];
+                }
+                if self.cached_entries + nbrs.len() <= MAX_CACHED_ENTRIES {
+                    self.fill_weights(nbrs, prev, prev_nbrs);
+                    let table = AliasTable::new(&self.weight_buf);
+                    let next = nbrs[table.sample(rng) as usize];
+                    self.cached_entries += nbrs.len();
+                    self.alias_cache.insert((cur, prev), table);
+                    return next;
+                }
+            }
+            // Short row, or the cache is full: one exact
+            // cumulative-weight draw — O(d), no table built for a
+            // single sample.
+            self.fill_weights(nbrs, prev, prev_nbrs);
+            let total: f64 = self.weight_buf.iter().sum();
+            let mut target = rng.gen_f64() * total;
+            for (i, &w) in self.weight_buf.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    return nbrs[i];
+                }
+            }
+            return *nbrs.last().expect("non-empty neighbour row");
+        }
+        loop {
+            let cand = nbrs[rng.gen_index(nbrs.len())];
+            let w = if cand == prev {
+                self.w_return
+            } else if sorted_contains(prev_nbrs, cand) {
+                self.w_common
+            } else {
+                self.w_explore
+            };
+            if rng.gen_f64() * self.w_max <= w {
+                return cand;
+            }
+        }
+    }
+
+    /// One biased walk rooted at `start`, written into `out` (cleared
+    /// first). The first step is uniform; subsequent steps weight
+    /// candidate `x` by 1/p if x == prev, 1 if x ~ prev, 1/q otherwise.
+    /// Stops early at nodes with no neighbours.
+    pub fn walk(&mut self, start: u32, walk_length: usize, rng: &mut Rng, out: &mut Vec<u32>) {
+        out.clear();
+        out.push(start);
+        if walk_length <= 1 {
+            return;
+        }
+        let mut prev = start;
+        let mut prev_nbrs = self.g.neighbors(start);
+        if prev_nbrs.is_empty() {
+            return;
+        }
+        let mut cur = prev_nbrs[rng.gen_index(prev_nbrs.len())];
+        out.push(cur);
+        // `nbrs` is hoisted across all rejection attempts of a step and
+        // then becomes the next step's `prev_nbrs` — each CSR row is
+        // fetched exactly once per visit.
+        let mut nbrs = self.g.neighbors(cur);
+        while out.len() < walk_length {
+            if nbrs.is_empty() {
+                break;
+            }
+            let next = self.sample_step(cur, nbrs, prev, prev_nbrs, rng);
+            prev = cur;
+            prev_nbrs = nbrs;
+            cur = next;
+            nbrs = self.g.neighbors(cur);
+            out.push(cur);
+        }
+    }
+}
+
+/// One biased walk (compatibility entry point; builds a throwaway
+/// [`Node2VecWalker`] — schedule-scale callers should hold a walker so
+/// the alias cache persists across walks).
 pub fn node2vec_walk(
     g: &Graph,
     start: u32,
@@ -48,76 +300,54 @@ pub fn node2vec_walk(
     rng: &mut Rng,
     out: &mut Vec<u32>,
 ) {
-    out.clear();
-    out.push(start);
-    if params.walk_length == 1 {
-        return;
-    }
-    let nbrs = g.neighbors(start);
-    if nbrs.is_empty() {
-        return;
-    }
-    let mut prev = start;
-    let mut cur = nbrs[rng.gen_index(nbrs.len())];
-    out.push(cur);
-    let w_return = 1.0 / params.p;
-    let w_common = 1.0;
-    let w_explore = 1.0 / params.q;
-    let w_max = w_return.max(w_common).max(w_explore);
-    while out.len() < params.walk_length {
-        let nbrs = g.neighbors(cur);
-        if nbrs.is_empty() {
-            break;
-        }
-        // Rejection-sample the next hop.
-        let next = loop {
-            let cand = nbrs[rng.gen_index(nbrs.len())];
-            let w = if cand == prev {
-                w_return
-            } else if g.has_edge(cand, prev) {
-                w_common
-            } else {
-                w_explore
-            };
-            if rng.gen_f64() * w_max <= w {
-                break cand;
-            }
-        };
-        prev = cur;
-        cur = next;
-        out.push(cur);
-    }
+    Node2VecWalker::new(g, params).walk(start, params.walk_length, rng, out);
 }
 
-/// Generate node2vec walks for a whole schedule, in parallel (same
-/// chunking/determinism contract as [`super::engine::generate_walks`]).
+/// Generate the biased walks of `schedule` as a [`ShardedCorpus`],
+/// written directly through the engine's bounded-memory shard
+/// scaffolding — mirror of
+/// [`super::engine::generate_walk_shards`], including its determinism
+/// contract: output is a pure function of
+/// `(graph, schedule, p, q, seed, shard count)`; thread count only
+/// changes wall-clock time. Peak resident corpus memory is O(budget)
+/// when [`ShardOpts::budget_bytes`] is set (the walkers' alias caches
+/// are separate bounded scratch, `MAX_CACHED_ENTRIES` per shard).
+///
+/// Panics on invalid parameters (see [`Node2VecParams::validate`]).
+pub fn generate_node2vec_shards(
+    g: &Graph,
+    schedule: &WalkSchedule,
+    params: &Node2VecParams,
+    opts: &ShardOpts,
+) -> ShardedCorpus {
+    if let Err(e) = params.validate() {
+        panic!("invalid Node2VecParams: {e}");
+    }
+    let walk_length = params.walk_length;
+    generate_shards_with(
+        g.n_nodes(),
+        schedule,
+        params.seed,
+        params.threads,
+        walk_length,
+        opts,
+        |_si| {
+            let mut walker = Node2VecWalker::new(g, params);
+            move |v: u32, rng: &mut Rng, out: &mut Vec<u32>| walker.walk(v, walk_length, rng, out)
+        },
+    )
+}
+
+/// Generate node2vec walks as one materialized [`Corpus`]
+/// (compatibility wrapper over [`generate_node2vec_shards`] with
+/// default shard options — same canonical walk order as the streaming
+/// path, no per-thread merge).
 pub fn generate_node2vec_walks(
     g: &Graph,
     schedule: &WalkSchedule,
     params: &Node2VecParams,
 ) -> Corpus {
-    let n = g.n_nodes();
-    assert_eq!(schedule.n_nodes(), n);
-    let mut seed_rng = Rng::new(params.seed);
-    let threads = params.threads.max(1);
-    let chunk_rngs: Vec<Rng> = (0..threads).map(|i| seed_rng.fork(i as u64)).collect();
-    let parts: Vec<Corpus> = pool::parallel_chunks(n, threads, |ci, range| {
-        let mut rng = chunk_rngs[ci].clone();
-        let mut part = Corpus::new(n);
-        let mut buf = Vec::with_capacity(params.walk_length);
-        for v in range {
-            for _ in 0..schedule.counts[v] {
-                node2vec_walk(g, v as u32, params, &mut rng, &mut buf);
-                part.push_walk(&buf);
-            }
-        }
-        part
-    });
-    let mut merged = Corpus::new(n);
-    for p in &parts {
-        merged.append(p);
-    }
-    merged
+    generate_node2vec_shards(g, schedule, params, &ShardOpts::default()).into_corpus()
 }
 
 #[cfg(test)]
@@ -136,6 +366,63 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_degenerate_params() {
+        assert!(Node2VecParams::default().validate().is_ok());
+        let cases = [
+            (0.0, 1.0, 30usize),
+            (-1.0, 1.0, 30),
+            (1.0, 0.0, 30),
+            (1.0, -2.0, 30),
+            (1.0, 1.0, 0),
+            (f64::INFINITY, 1.0, 30),
+            (1.0, f64::NAN, 30),
+        ];
+        for (p, q, walk_length) in cases {
+            let bad = Node2VecParams {
+                p,
+                q,
+                walk_length,
+                seed: 0,
+                threads: 1,
+            };
+            assert!(bad.validate().is_err(), "accepted p={p} q={q} len={walk_length}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid Node2VecParams")]
+    fn generate_panics_on_invalid_params() {
+        let g = generators::ring(10);
+        let bad = Node2VecParams {
+            p: 0.0,
+            ..Default::default()
+        };
+        generate_node2vec_shards(&g, &WalkSchedule::uniform(10, 1), &bad, &ShardOpts::default());
+    }
+
+    #[test]
+    fn sorted_contains_agrees_with_binary_search() {
+        // Short, long, and galloping-boundary rows.
+        let rows: Vec<Vec<u32>> = vec![
+            vec![],
+            vec![5],
+            (0..30).map(|i| i * 3).collect(),
+            (0..100).map(|i| i * 2 + 1).collect(),
+            (0..1000).map(|i| i * 7).collect(),
+        ];
+        for row in &rows {
+            for x in 0..7005u32 {
+                assert_eq!(
+                    sorted_contains(row, x),
+                    row.binary_search(&x).is_ok(),
+                    "row len {} x {x}",
+                    row.len()
+                );
+            }
+        }
+    }
+
+    #[test]
     fn walks_follow_edges() {
         let g = generators::holme_kim(100, 3, 0.5, &mut Rng::new(1));
         let c = generate_node2vec_walks(&g, &WalkSchedule::uniform(100, 2), &params(0.5, 2.0, 3));
@@ -144,6 +431,47 @@ mod tests {
             for pair in w.windows(2) {
                 assert!(g.has_edge(pair[0], pair[1]));
             }
+        }
+    }
+
+    #[test]
+    fn degenerate_hub_alias_path_follows_edges_and_stays_uniform() {
+        // Star: hub degree 100 (>= HUB_DEGREE) and p = q = 8 puts the
+        // acceptance bound at 1/8 < DEGENERATE_ACCEPTANCE, so hub hops
+        // take the alias fast path. With no leaf-leaf edges every
+        // transition weight ties (1/8), so leaf visits are uniform.
+        let edges: Vec<(u32, u32)> = (1..=100u32).map(|v| (0, v)).collect();
+        let g = Graph::from_edges(101, &edges);
+        let mut counts = vec![0u32; 101];
+        counts[0] = 400;
+        let schedule = WalkSchedule { counts };
+        let pr = Node2VecParams {
+            p: 8.0,
+            q: 8.0,
+            walk_length: 40,
+            seed: 5,
+            threads: 2,
+        };
+        let c = generate_node2vec_walks(&g, &schedule, &pr);
+        assert_eq!(c.n_walks(), 400);
+        let mut visits = vec![0u64; 101];
+        for w in c.walks() {
+            for pair in w.windows(2) {
+                assert!(g.has_edge(pair[0], pair[1]));
+            }
+            for &t in w {
+                visits[t as usize] += 1;
+            }
+        }
+        let leaf_total: u64 = visits[1..].iter().sum();
+        let mean = leaf_total as f64 / 100.0;
+        assert!(mean > 20.0, "too few leaf visits: {leaf_total}");
+        for (v, &n) in visits.iter().enumerate().skip(1) {
+            let n = n as f64;
+            assert!(
+                n > mean / 4.0 && n < mean * 3.0,
+                "leaf {v} visited {n} times vs mean {mean}"
+            );
         }
     }
 

@@ -13,7 +13,8 @@ use kcore_embed::embed::sampler::NegativeSampler;
 use kcore_embed::graph::generators;
 use kcore_embed::util::rng::Rng;
 use kcore_embed::walks::{
-    generate_walk_shards, ShardOpts, ShardedCorpus, WalkParams, WalkSchedule,
+    generate_node2vec_shards, generate_node2vec_walks, generate_walk_shards, Node2VecParams,
+    ShardOpts, ShardedCorpus, WalkParams, WalkSchedule,
 };
 
 fn walks_of(c: &ShardedCorpus) -> Vec<Vec<u32>> {
@@ -135,6 +136,98 @@ fn small_budget_spills_with_bounded_residency_and_identical_walks() {
     let a: Vec<(u32, u32)> = bounded.pair_stream(3, Rng::new(5)).collect();
     let b: Vec<(u32, u32)> = unbounded.pair_stream(3, Rng::new(5)).collect();
     assert_eq!(a, b);
+}
+
+// --- node2vec: the biased walker runs through the same shard
+// scaffolding and must honor the same two contracts ---
+
+fn n2v_params(threads: usize) -> Node2VecParams {
+    Node2VecParams {
+        p: 0.5,
+        q: 2.0,
+        walk_length: 16,
+        seed: 42,
+        threads,
+    }
+}
+
+fn n2v_shards_with(threads: usize, budget_bytes: usize) -> ShardedCorpus {
+    let g = generators::holme_kim(300, 3, 0.4, &mut Rng::new(9));
+    let schedule = WalkSchedule::uniform(300, 4);
+    generate_node2vec_shards(
+        &g,
+        &schedule,
+        &n2v_params(threads),
+        &ShardOpts {
+            shards: 8,
+            budget_bytes,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn node2vec_corpus_byte_identical_across_thread_counts() {
+    let reference = walks_of(&n2v_shards_with(1, 0));
+    assert!(!reference.is_empty());
+    for threads in [2usize, 8] {
+        let walks = walks_of(&n2v_shards_with(threads, 0));
+        assert_eq!(
+            walks, reference,
+            "node2vec corpus differs between threads=1 and threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn node2vec_small_budget_spills_with_bounded_residency() {
+    let unbounded = n2v_shards_with(4, 0);
+    let resident_bytes = unbounded.stats().peak_resident_bytes;
+    assert!(resident_bytes > 0);
+
+    // ~4 KiB across 8 shards: far below the corpus, so shards spill.
+    let budget = 4096usize;
+    let bounded = n2v_shards_with(4, budget);
+    let stats = bounded.stats();
+    assert!(
+        stats.spilled_shards > 0,
+        "no shard spilled under a {budget}-byte budget"
+    );
+    assert!(stats.spilled_bytes > 0);
+    // MemGauge peak stays within the budget plus one in-flight walk of
+    // slack per shard (a writer only notices the overrun after the push
+    // that caused it).
+    let slack = 8 * (16 * 4 + std::mem::size_of::<usize>() + 64);
+    assert!(
+        stats.peak_resident_bytes <= budget + slack,
+        "peak {} exceeds budget {budget} + slack {slack}",
+        stats.peak_resident_bytes
+    );
+    assert!(stats.peak_resident_bytes < resident_bytes / 2);
+
+    // Spilling must not change a single token.
+    assert_eq!(walks_of(&bounded), walks_of(&unbounded));
+    assert_eq!(bounded.n_walks(), unbounded.n_walks());
+    assert_eq!(bounded.n_tokens(), unbounded.n_tokens());
+    assert_eq!(bounded.node_counts(), unbounded.node_counts());
+    let a: Vec<(u32, u32)> = bounded.pair_stream(3, Rng::new(5)).collect();
+    let b: Vec<(u32, u32)> = unbounded.pair_stream(3, Rng::new(5)).collect();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn node2vec_wrapper_byte_identical_to_sharded_output() {
+    // The materializing wrapper is a thin shell over the sharded
+    // generator (default shard count), so its corpus must match the
+    // sharded walks token for token — across different thread counts.
+    let g = generators::holme_kim(300, 3, 0.4, &mut Rng::new(9));
+    let schedule = WalkSchedule::uniform(300, 4);
+    let corpus = generate_node2vec_walks(&g, &schedule, &n2v_params(3));
+    let sharded = generate_node2vec_shards(&g, &schedule, &n2v_params(1), &ShardOpts::default());
+    assert_eq!(corpus.n_walks() as u64, sharded.n_walks());
+    assert_eq!(corpus.n_tokens() as u64, sharded.n_tokens());
+    let flat: Vec<Vec<u32>> = corpus.walks().map(|w| w.to_vec()).collect();
+    assert_eq!(flat, walks_of(&sharded));
 }
 
 #[test]
