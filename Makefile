@@ -20,7 +20,10 @@ artifacts:
 # verify the mmap and in-memory query paths agree, exercise the
 # quantized scan and the batch `serve` front-end. Also trains via the
 # shard-native node2vec walker under a 1 MiB corpus budget and asserts
-# the spill path actually executed (grep for the spill report). CI runs
+# the spill path actually executed (grep for the spill report), then
+# runs the persistent daemon: serve --listen on a unix socket, query
+# over it, hot-swap via a re-export with --notify (answers must
+# change), stats, and a graceful shutdown with exit code 0. CI runs
 # exactly this target — extend it here, not in ci.yml.
 smoke: build
 	cd rust && ./target/release/kcore-embed embed --graph cora \
@@ -39,3 +42,30 @@ smoke: build
 	  --node 0 --top-k 5 --quantized
 	printf 'nn 0 5\nnn 1 3\n' | \
 	  ./rust/target/release/kcore-embed serve --store /tmp/smoke_emb.kce
+	set -e; \
+	  rm -f /tmp/smoke_daemon.sock; \
+	  ./rust/target/release/kcore-embed serve --store /tmp/smoke_emb.kce \
+	    --listen /tmp/smoke_daemon.sock & DPID=$$!; \
+	  trap 'kill $$DPID 2>/dev/null || true' EXIT; \
+	  for i in $$(seq 100); do \
+	    [ -S /tmp/smoke_daemon.sock ] && break; sleep 0.1; \
+	  done; \
+	  [ -S /tmp/smoke_daemon.sock ]; \
+	  ./rust/target/release/kcore-embed query --connect /tmp/smoke_daemon.sock \
+	    --node 0 --top-k 5 > /tmp/smoke_daemon_a.txt; \
+	  cat /tmp/smoke_daemon_a.txt; \
+	  ./rust/target/release/kcore-embed embed --graph cora --backend native \
+	    --walks 3 --walk-length 10 --dim 32 --seed 99 \
+	    --out /tmp/smoke_emb2.tsv --store /tmp/smoke_emb2.kce \
+	    --notify /tmp/smoke_daemon.sock; \
+	  ./rust/target/release/kcore-embed query --connect /tmp/smoke_daemon.sock \
+	    --node 0 --top-k 5 > /tmp/smoke_daemon_b.txt; \
+	  cat /tmp/smoke_daemon_b.txt; \
+	  if diff -q /tmp/smoke_daemon_a.txt /tmp/smoke_daemon_b.txt; then \
+	    echo "hot-swap did not change answers" >&2; exit 1; \
+	  fi; \
+	  ./rust/target/release/kcore-embed query --connect /tmp/smoke_daemon.sock \
+	    --control stats; \
+	  ./rust/target/release/kcore-embed query --connect /tmp/smoke_daemon.sock \
+	    --control shutdown; \
+	  wait $$DPID

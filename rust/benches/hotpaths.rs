@@ -211,9 +211,15 @@ fn main() {
 
     // Serve: top-k scan kernels over a resident store (unit: scored
     // rows). Exact blocked scan vs the 8-bit quantized candidate scan
-    // with exact re-rank (DESIGN.md §Serving).
+    // with exact re-rank, both behind the ScanIndex strategy trait,
+    // plus the SQ8 code-layout comparison: row-major (lanes=1) vs the
+    // lane-interleaved layout the serving default uses — the scan
+    // reads interleaved codes strictly sequentially per group
+    // (DESIGN.md §Serving).
     {
-        use kcore_embed::serve::{EmbeddingStore, Metric, TopKIndex, TopKParams};
+        use kcore_embed::serve::{
+            EmbeddingStore, ExactScan, Metric, QuantizedScan, ScanIndex, TopKParams,
+        };
         let (sn, sdim) = (50_000usize, 128usize);
         let mut sr = Rng::new(8);
         let vecs: Vec<f32> = (0..sn * sdim).map(|_| sr.gen_f32() * 2.0 - 1.0).collect();
@@ -222,12 +228,14 @@ fn main() {
             threads: kcore_embed::util::pool::default_threads(),
             ..Default::default()
         };
-        let idx = TopKIndex::build_quantized(&store, params);
+        let exact = ExactScan::build(&store, params.clone());
+        let quant = QuantizedScan::build(&store, params.clone());
+        let quant_rm = QuantizedScan::build_with_lanes(&store, params, 1);
         let queries: Vec<u32> = (0..8).map(|i| i * 601).collect();
         bench("serve exact top-10 scan (M rows)", "M-row", 3, || {
             let mut acc = 0u32;
             for &q in &queries {
-                let hits = idx.top_k_node(&store, q, 10, Metric::Cosine);
+                let hits = exact.top_k_node(&store, q, 10, Metric::Cosine);
                 acc ^= hits[0].0;
             }
             std::hint::black_box(acc);
@@ -236,12 +244,38 @@ fn main() {
         bench("serve quantized top-10 scan (M rows)", "M-row", 3, || {
             let mut acc = 0u32;
             for &q in &queries {
-                let hits = idx.top_k_node_quantized(&store, q, 10, Metric::Cosine);
+                let hits = quant.top_k_node(&store, q, 10, Metric::Cosine);
                 acc ^= hits[0].0;
             }
             std::hint::black_box(acc);
             (sn * queries.len()) as u64
         });
+        // Same scan, codes/s headline: each scanned row reads `dim`
+        // u8 codes, so codes/s = rows/s * dim.
+        bench("SQ8 scan row-major codes (M codes)", "M-code", 3, || {
+            let mut acc = 0u32;
+            for &q in &queries {
+                let hits = quant_rm.top_k_node(&store, q, 10, Metric::Cosine);
+                acc ^= hits[0].0;
+            }
+            std::hint::black_box(acc);
+            (sn * sdim * queries.len()) as u64
+        });
+        bench("SQ8 scan interleaved codes (M codes)", "M-code", 3, || {
+            let mut acc = 0u32;
+            for &q in &queries {
+                let hits = quant.top_k_node(&store, q, 10, Metric::Cosine);
+                acc ^= hits[0].0;
+            }
+            std::hint::black_box(acc);
+            (sn * sdim * queries.len()) as u64
+        });
+        println!(
+            "    SQ8 code layout: lanes {} interleaved vs row-major, \
+             resident {:.1} MiB",
+            quant.table().lanes(),
+            quant.table().resident_bytes() as f64 / (1 << 20) as f64
+        );
     }
 
     // L3: logistic regression fit (unit: sample-epochs).

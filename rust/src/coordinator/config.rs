@@ -86,6 +86,11 @@ pub struct PipelineConfig {
     /// numbers as a binary serving artifact ([`crate::serve::store`])
     /// at this path. None = no export.
     pub export_store: Option<std::path::PathBuf>,
+    /// After exporting, tell the serving daemon listening on this
+    /// Unix-domain socket to hot-swap to the fresh artifact
+    /// ([`crate::serve::server::notify_swap`]). Requires
+    /// `export_store`. None = no notification.
+    pub notify_daemon: Option<std::path::PathBuf>,
 }
 
 impl Default for PipelineConfig {
@@ -106,6 +111,7 @@ impl Default for PipelineConfig {
             corpus_budget_mb: 0,
             spill_dir: None,
             export_store: None,
+            notify_daemon: None,
         }
     }
 }
@@ -120,6 +126,9 @@ impl PipelineConfig {
     pub fn validate(&self) -> Result<()> {
         if self.walk_length == 0 {
             bail!("walk_length must be at least 1");
+        }
+        if self.notify_daemon.is_some() && self.export_store.is_none() {
+            bail!("notify_daemon requires export_store (nothing to swap to otherwise)");
         }
         if let Embedder::Node2Vec { p, q } = self.embedder {
             let n2v = Node2VecParams {
@@ -166,6 +175,13 @@ impl PipelineConfig {
             (
                 "export_store",
                 self.export_store
+                    .as_ref()
+                    .map(|p| Json::str(&p.to_string_lossy()))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "notify_daemon",
+                self.notify_daemon
                     .as_ref()
                     .map(|p| Json::str(&p.to_string_lossy()))
                     .unwrap_or(Json::Null),
@@ -226,6 +242,10 @@ impl PipelineConfig {
             .get("export_store")
             .and_then(Json::as_str)
             .map(std::path::PathBuf::from);
+        cfg.notify_daemon = j
+            .get("notify_daemon")
+            .and_then(Json::as_str)
+            .map(std::path::PathBuf::from);
         cfg.validate()?;
         Ok(cfg)
     }
@@ -270,6 +290,7 @@ mod tests {
             corpus_budget_mb: 64,
             spill_dir: Some(std::path::PathBuf::from("/scratch/corpus")),
             export_store: Some(std::path::PathBuf::from("out/emb.kce")),
+            notify_daemon: Some(std::path::PathBuf::from("/run/kcore.sock")),
             ..Default::default()
         };
         let back = PipelineConfig::from_json(&cfg.to_json()).unwrap();
@@ -277,10 +298,28 @@ mod tests {
         assert_eq!(back.corpus_budget_mb, 64);
         assert_eq!(back.spill_dir, cfg.spill_dir);
         assert_eq!(back.export_store, cfg.export_store);
+        assert_eq!(back.notify_daemon, cfg.notify_daemon);
         // Defaults stay None through a round trip.
         let d = PipelineConfig::from_json(&PipelineConfig::default().to_json()).unwrap();
         assert_eq!(d.spill_dir, None);
         assert_eq!(d.export_store, None);
+        assert_eq!(d.notify_daemon, None);
+    }
+
+    #[test]
+    fn notify_without_export_rejected() {
+        let cfg = PipelineConfig {
+            notify_daemon: Some(std::path::PathBuf::from("/run/kcore.sock")),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        let j = Json::parse(r#"{"notify_daemon": "/run/kcore.sock"}"#).unwrap();
+        assert!(PipelineConfig::from_json(&j).is_err());
+        let j = Json::parse(
+            r#"{"notify_daemon": "/run/kcore.sock", "export_store": "emb.kce"}"#,
+        )
+        .unwrap();
+        assert!(PipelineConfig::from_json(&j).is_ok());
     }
 
     #[test]

@@ -50,6 +50,9 @@ pub struct PipelineOutput {
     /// Corpus residency telemetry: peak resident bytes during walk
     /// generation and how much spilled to disk.
     pub corpus_stats: ShardStats,
+    /// Acknowledgement line from the serving daemon when
+    /// `notify_daemon` asked the export step to trigger a hot-swap.
+    pub daemon_ack: Option<String>,
 }
 
 impl PipelineOutput {
@@ -234,6 +237,23 @@ pub fn run_pipeline(
         })?;
     }
 
+    // Phase 6b: signal a running serving daemon to hot-swap to the
+    // artifact just exported (validated above: notify needs export).
+    // Non-fatal on failure: a down daemon must not discard a completed
+    // training run — the caller still gets its embedding and artifact.
+    // (`make smoke` still hard-fails a broken notify path: the daemon's
+    // answers would not change after the re-export.)
+    let daemon_ack = match (&cfg.notify_daemon, &cfg.export_store) {
+        (Some(sock), Some(path)) => match crate::serve::server::notify_swap(sock, path) {
+            Ok(ack) => Some(ack),
+            Err(e) => {
+                eprintln!("warning: serving daemon at {} not notified: {e:#}", sock.display());
+                None
+            }
+        },
+        _ => None,
+    };
+
     Ok(PipelineOutput {
         embedding,
         degeneracy,
@@ -244,6 +264,7 @@ pub fn run_pipeline(
         n_pairs,
         loss_curve,
         corpus_stats,
+        daemon_ack,
         timer,
     })
 }
@@ -422,6 +443,28 @@ mod tests {
         );
         assert_eq!(out.embedding.n(), 600);
         assert!(out.n_pairs > 0);
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn notify_daemon_without_export_fails_but_dead_daemon_is_nonfatal() {
+        let g = generators::ring(10);
+        let mut cfg = tiny_cfg();
+        cfg.notify_daemon = Some(std::path::PathBuf::from("/tmp/kcore_no_daemon_here.sock"));
+        // No export_store: rejected at validation, before any work.
+        assert!(run_pipeline(&g, &cfg, None).is_err());
+        // With an export but nothing listening: the run must still
+        // succeed and keep its outputs — a down daemon costs only the
+        // notification (warned, ack absent).
+        let path = std::env::temp_dir().join(format!(
+            "kcore_embed_pipeline_notify_{}.kce",
+            std::process::id()
+        ));
+        cfg.export_store = Some(path.clone());
+        let out = run_pipeline(&g, &cfg, None).unwrap();
+        assert_eq!(out.daemon_ack, None);
+        assert!(path.exists(), "export should land even when notify fails");
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -42,8 +42,11 @@
 //! - [`eval`] — link prediction, node classification, logistic
 //!   regression, edge operators.
 //! - [`serve`] — the post-training tier: versioned embedding artifact
-//!   (mmap-loaded), blocked top-k similarity scans (exact + 8-bit
-//!   quantized), link-prediction scoring, batched query service.
+//!   (mmap-loaded), blocked top-k similarity scans behind the
+//!   `ScanIndex` strategy trait (exact + lane-interleaved 8-bit
+//!   quantized), link-prediction scoring, batched query service, and
+//!   the persistent unix-socket daemon with hot-swappable artifact
+//!   generations.
 //! - [`runtime`] — PJRT artifact manifest + execution sessions.
 //! - [`coordinator`] — pipeline orchestration, experiment runner,
 //!   config (incl. corpus shard/budget knobs), bench harness.

@@ -7,8 +7,10 @@
 //!              (and optionally a binary serving artifact, --store)
 //!   eval       full link-prediction experiment (trials, mean ± std)
 //!   serve      answer batched neighbor/edge-score requests against an
-//!              exported artifact, reporting latency percentiles
+//!              exported artifact (or, with --listen, run the
+//!              persistent hot-swappable daemon on a unix socket)
 //!   query      one-shot top-k / edge-score lookup against an artifact
+//!              (or, with --connect, against a running daemon)
 //!   bench      regenerate a paper table/figure (table1..table10, fig1..fig6,
 //!              coredist, all)
 //!
@@ -16,6 +18,7 @@
 //! stand-ins, see DESIGN.md §Substitutions) or `--edges <path>`.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -28,8 +31,9 @@ use kcore_embed::eval::EdgeOp;
 use kcore_embed::graph::{generators, io, metrics, Graph};
 use kcore_embed::runtime::{default_artifacts_dir, Manifest, Runtime};
 use kcore_embed::serve::{
-    EdgeScorer, EdgeScorerParams, EmbeddingStore, Metric, QueryService, Request, Response,
-    ServeOpts, TopKParams,
+    client_exchange, notify_swap, run_server, ClientMsg, EdgeScorer, EdgeScorerParams,
+    EmbeddingStore, GenerationOpts, GenerationStore, Metric, QueryService, Request, Response,
+    ServeOpts, ServerOpts, TopKParams,
 };
 use kcore_embed::util::cli::Args;
 
@@ -46,16 +50,19 @@ COMMANDS
             [--k0 K] [--backend pjrt|native] [--walks N] [--walk-length L]
             [--dim D] [--window W] [--epochs E] [--seed N]
             [--shards S] [--corpus-budget-mb M] [--spill-dir DIR]
-            [--store ARTIFACT] --out PATH
+            [--store ARTIFACT [--notify SOCKET]] --out PATH
   eval      (--graph NAME | --edges PATH) [--remove FRAC] [--trials T]
             [--embedder ...] [--k0 K] [--cores K1,K2,...] [--backend ...]
             [--walks N] [--seed N]
   serve     --store ARTIFACT [--requests FILE] [--metric dot|cosine]
             [--quantized] [--batch N] [--top-k K] [--in-memory]
             [--threads N] [(--graph NAME | --edges PATH) [--op OP]]
+            [--listen SOCKET]   (persistent daemon mode)
   query     --store ARTIFACT (--node V [--top-k K] | --edge U,V)
             [--metric dot|cosine] [--quantized] [--in-memory]
             [(--graph NAME | --edges PATH) [--op OP]]
+  query     --connect SOCKET (--node V [--top-k K] | --edge U,V |
+            --control swap --store ARTIFACT | --control stats|shutdown)
   bench     --exp NAME [--trials T] [--walks N] [--backend pjrt|native]
             [--seed N] [--out-dir DIR] [--quick]
 
@@ -73,6 +80,12 @@ quantized fast path (--quantized, exact re-rank). `serve` reads request
 lines ('nn NODE K' | 'edge U V') from --requests or stdin and prints a
 per-batch latency-percentile table; edge scoring needs the serving
 graph (--graph/--edges) to fit its logistic model at startup.
+
+Daemon mode: `serve --listen SOCK` keeps serving on a unix socket and
+hot-swaps artifact generations without downtime — re-exports over the
+watched path are picked up automatically, `embed --notify SOCK` pushes
+a swap after export, and `query --connect SOCK` sends queries or the
+swap/stats/shutdown control verbs.
 
 Run `make artifacts` once before using the pjrt backend.
 ";
@@ -221,6 +234,8 @@ fn cmd_embed(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
     let mut cfg = build_config(args)?;
     cfg.export_store = args.opt_str("store").map(PathBuf::from);
+    cfg.notify_daemon = args.opt_str("notify").map(PathBuf::from);
+    cfg.validate()?; // --notify without --store is a usage error
     let out = args
         .opt_str("out")
         .ok_or_else(|| anyhow::anyhow!("--out required"))?;
@@ -270,6 +285,9 @@ fn cmd_embed(args: &Args) -> Result<()> {
     println!("wrote {out}");
     if let Some(store) = &cfg.export_store {
         println!("wrote serving artifact {}", store.display());
+    }
+    if let Some(ack) = &res.daemon_ack {
+        println!("daemon swap: {ack}");
     }
     Ok(())
 }
@@ -390,6 +408,59 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map_err(anyhow::Error::msg)?;
     let requests_path = args.opt_str("requests");
     let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+    if let Some(sock) = args.opt_str("listen") {
+        // Persistent daemon mode: generations + unix-socket loop.
+        if requests_path.is_some() {
+            bail!("--requests is batch-mode only; daemon clients send requests over the socket");
+        }
+        if args.opt_str("top-k").is_some() {
+            bail!("--top-k is batch-mode only; daemon clients pass k per 'nn NODE K' request");
+        }
+        let store_path = args
+            .opt_str("store")
+            .ok_or_else(|| anyhow::anyhow!("--store required"))?;
+        let in_memory = args.has_flag("in-memory");
+        args.finish().map_err(anyhow::Error::msg)?;
+        let opts = GenerationOpts {
+            serve: ServeOpts {
+                metric,
+                quantized,
+                batch,
+                topk: TopKParams {
+                    threads,
+                    ..Default::default()
+                },
+            },
+            op,
+            seed,
+            in_memory,
+        };
+        let has_graph = graph.is_some();
+        let gens = GenerationStore::open(Path::new(&store_path), graph, opts)?;
+        let gen = gens.current();
+        eprintln!(
+            "daemon: {} from {}, edge scorer {}, listening on {sock}",
+            gen.stats_line(),
+            store_path,
+            if has_graph { "fitted" } else { "absent" },
+        );
+        // Thread budget: --threads controls one scan's fan-out; the
+        // batch-level fan-out fills whatever cores remain, so nested
+        // pool::parallel_tasks never oversubscribes threads*batch.
+        let cores = kcore_embed::util::pool::default_threads();
+        let server_opts = ServerOpts {
+            socket: PathBuf::from(&sock),
+            batch_threads: (cores / threads.max(1)).max(1),
+        };
+        let stats = run_server(Arc::new(gens), &server_opts)?;
+        eprintln!(
+            "daemon: clean shutdown after {} connections, {} requests, {} swaps",
+            stats.connections,
+            stats.requests,
+            stats.swaps
+        );
+        return Ok(());
+    }
     let store = load_store(args)?;
     args.finish().map_err(anyhow::Error::msg)?;
 
@@ -463,7 +534,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `query --connect`: drive a running daemon over its unix socket.
+fn cmd_query_connect(args: &Args, sock: &Path) -> Result<()> {
+    let control = args.opt_str("control");
+    let k = args.get_usize("top-k", 10).map_err(anyhow::Error::msg)?;
+    let node = match args.get_usize("node", usize::MAX).map_err(anyhow::Error::msg)? {
+        usize::MAX => None,
+        v => Some(
+            u32::try_from(v).map_err(|_| anyhow::anyhow!("--node {v} exceeds u32 range"))?,
+        ),
+    };
+    let edge = args.opt_u32_pair("edge").map_err(anyhow::Error::msg)?;
+    let store = args.opt_str("store");
+    args.finish().map_err(anyhow::Error::msg)?;
+    let lines: Vec<String> = match control.as_deref() {
+        Some("swap") => {
+            let p = store
+                .ok_or_else(|| anyhow::anyhow!("--control swap needs --store ARTIFACT"))?;
+            println!("{}", notify_swap(sock, Path::new(&p))?);
+            return Ok(());
+        }
+        Some("stats") => vec![ClientMsg::Stats.encode()],
+        Some("shutdown") => vec![ClientMsg::Shutdown.encode()],
+        Some(x) => bail!("unknown --control {x:?} (swap|stats|shutdown)"),
+        None => {
+            let mut ls = Vec::new();
+            if let Some(v) = node {
+                ls.push(ClientMsg::Query(Request::Neighbors { node: v, k }).encode());
+            }
+            if let Some((u, v)) = edge {
+                ls.push(ClientMsg::Query(Request::EdgeScore { u, v }).encode());
+            }
+            if ls.is_empty() {
+                bail!("specify --node V and/or --edge U,V (or --control swap|stats|shutdown)");
+            }
+            ls
+        }
+    };
+    for reply in client_exchange(sock, &lines)? {
+        println!("{reply}");
+    }
+    Ok(())
+}
+
 fn cmd_query(args: &Args) -> Result<()> {
+    if let Some(sock) = args.opt_str("connect") {
+        return cmd_query_connect(args, Path::new(&sock));
+    }
     let graph = maybe_load_graph(args)?;
     let metric = parse_metric(args)?;
     let op = parse_edge_op(args)?;

@@ -1,0 +1,422 @@
+//! Artifact generations and atomic hot-swap (DESIGN.md §Serving).
+//!
+//! A [`Generation`] is one fully-loaded serving unit: the
+//! [`EmbeddingStore`], its [`ScanIndex`] strategy and (optionally) a
+//! fitted [`EdgeScorer`], plus per-generation latency counters. A
+//! [`GenerationStore`] owns the *current* generation behind an
+//! `RwLock<Arc<..>>` and publishes successors atomically:
+//!
+//! - **Readers never block on a swap.** A request batch grabs one
+//!   `Arc<Generation>` up front and answers the whole batch from it;
+//!   the store's read lock is held only for the pointer clone.
+//! - **Swaps pay their cost before publishing.** The new store is
+//!   opened, the scan index built and the edge scorer refit *outside*
+//!   the locks; only the pointer swap happens under the write lock, so
+//!   in-flight queries never observe a half-built generation.
+//! - **Old generations retire themselves.** The previous `Arc` drops
+//!   when its last in-flight batch finishes — no epochs to manage
+//!   beyond `Arc`'s refcount.
+//!
+//! The store also *watches* an artifact path:
+//! [`GenerationStore::maybe_reload`] re-reads the 40-byte header and
+//! publishes a new generation when the `(n, dim, checksum)` identity
+//! changed — the cheap poll the daemon runs per accepted connection.
+//! `write_store` renames artifacts into place atomically, so the
+//! watcher never loads a torn file.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::eval::operators::EdgeOp;
+use crate::graph::Graph;
+
+use super::linkpred::{EdgeScorer, EdgeScorerParams};
+use super::query::{execute_with, Request, Response, ServeOpts};
+use super::store::{read_header, EmbeddingStore, StoreHeader};
+use super::topk::{build_scan_index, Metric, ScanIndex};
+
+/// How every generation of a [`GenerationStore`] is loaded and served.
+#[derive(Debug, Clone)]
+pub struct GenerationOpts {
+    pub serve: ServeOpts,
+    /// Edge-feature operator for the scorer refit on swap.
+    pub op: EdgeOp,
+    /// Seed for the scorer refit.
+    pub seed: u64,
+    /// Load via the checksum-verifying in-memory path instead of mmap.
+    pub in_memory: bool,
+}
+
+impl Default for GenerationOpts {
+    fn default() -> Self {
+        GenerationOpts {
+            serve: ServeOpts::default(),
+            op: EdgeOp::Hadamard,
+            seed: 0,
+            in_memory: false,
+        }
+    }
+}
+
+/// One immutable, fully-loaded artifact generation.
+pub struct Generation {
+    seq: u64,
+    path: PathBuf,
+    header: StoreHeader,
+    metric: Metric,
+    store: EmbeddingStore,
+    scan: Box<dyn ScanIndex>,
+    scorer: Option<EdgeScorer>,
+    // Per-generation latency telemetry (microseconds).
+    queries: AtomicU64,
+    total_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Generation {
+    /// Load a generation: open the store, build the scan index
+    /// eagerly (a daemon must pay index cost at swap time, not on the
+    /// first post-swap request) and refit the edge scorer when a
+    /// serving graph is present.
+    fn load(
+        path: &Path,
+        seq: u64,
+        opts: &GenerationOpts,
+        graph: Option<&Graph>,
+    ) -> Result<Generation> {
+        let header = read_header(path)?;
+        let store = if opts.in_memory {
+            EmbeddingStore::open_in_memory(path)?
+        } else {
+            EmbeddingStore::open_mmap(path)?
+        };
+        let scan = build_scan_index(&store, opts.serve.topk.clone(), opts.serve.quantized);
+        let scorer = match graph {
+            None => None,
+            Some(g) => Some(
+                EdgeScorer::fit(
+                    g,
+                    &store,
+                    &EdgeScorerParams {
+                        op: opts.op,
+                        seed: opts.seed,
+                        ..Default::default()
+                    },
+                )
+                .with_context(|| format!("refitting edge scorer for {}", path.display()))?,
+            ),
+        };
+        Ok(Generation {
+            seq,
+            path: path.to_path_buf(),
+            header,
+            metric: opts.serve.metric,
+            store,
+            scan,
+            scorer,
+            queries: AtomicU64::new(0),
+            total_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        })
+    }
+
+    /// Execute one request against this generation, recording its
+    /// latency in the generation's counters.
+    pub fn execute(&self, req: &Request) -> Result<Response> {
+        let t0 = Instant::now();
+        let out = execute_with(
+            &self.store,
+            Some(self.scan.as_ref()),
+            self.scorer.as_ref(),
+            self.metric,
+            req,
+        );
+        let us = t0.elapsed().as_micros() as u64;
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.total_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+        out
+    }
+
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn store(&self) -> &EmbeddingStore {
+        &self.store
+    }
+
+    pub fn strategy(&self) -> &'static str {
+        self.scan.strategy()
+    }
+
+    pub fn has_scorer(&self) -> bool {
+        self.scorer.is_some()
+    }
+
+    pub fn queries_served(&self) -> u64 {
+        self.queries.load(Ordering::Relaxed)
+    }
+
+    /// One-line latency/identity summary (the `stats` verb's payload).
+    pub fn stats_line(&self) -> String {
+        let q = self.queries.load(Ordering::Relaxed);
+        let total = self.total_us.load(Ordering::Relaxed);
+        let mean = if q > 0 { total as f64 / q as f64 } else { 0.0 };
+        format!(
+            "gen {} strategy {} store {}x{} queries {} mean_us {:.1} max_us {}",
+            self.seq,
+            self.scan.strategy(),
+            self.store.n(),
+            self.store.dim(),
+            q,
+            mean,
+            self.max_us.load(Ordering::Relaxed)
+        )
+    }
+}
+
+/// The daemon's generation holder: current generation + watched path.
+pub struct GenerationStore {
+    opts: GenerationOpts,
+    /// Serving graph for scorer refits; carried across swaps.
+    graph: Option<Graph>,
+    /// Artifact path checked by [`Self::maybe_reload`]; follows the
+    /// most recent explicit `swap PATH`.
+    watch: Mutex<PathBuf>,
+    current: RwLock<Arc<Generation>>,
+    /// Serializes load+publish so concurrent `swap`s cannot interleave
+    /// (readers are never behind this lock).
+    swap_lock: Mutex<()>,
+    next_seq: AtomicU64,
+    swaps: AtomicU64,
+}
+
+impl GenerationStore {
+    /// Load generation 1 from `path` and start watching it.
+    pub fn open(
+        path: &Path,
+        graph: Option<Graph>,
+        opts: GenerationOpts,
+    ) -> Result<GenerationStore> {
+        let first = Generation::load(path, 1, &opts, graph.as_ref())
+            .with_context(|| format!("loading initial generation from {}", path.display()))?;
+        Ok(GenerationStore {
+            opts,
+            graph,
+            watch: Mutex::new(path.to_path_buf()),
+            current: RwLock::new(Arc::new(first)),
+            swap_lock: Mutex::new(()),
+            next_seq: AtomicU64::new(2),
+            swaps: AtomicU64::new(0),
+        })
+    }
+
+    /// The generation requests should be answered from, as an owning
+    /// handle: callers keep answering from it even if a swap publishes
+    /// a successor mid-batch.
+    pub fn current(&self) -> Arc<Generation> {
+        self.current.read().expect("generation lock").clone()
+    }
+
+    /// Completed swaps (generation publishes after the first load).
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// The artifact path [`Self::maybe_reload`] polls.
+    pub fn watched_path(&self) -> PathBuf {
+        self.watch.lock().expect("watch lock").clone()
+    }
+
+    /// Load `path` (or reload the watched path) and publish it as the
+    /// next generation. The old generation keeps serving until the
+    /// publish and drops with its last in-flight batch. Swapping to
+    /// the artifact already being served is a no-op returning the
+    /// current generation.
+    pub fn swap_to(&self, path: Option<&Path>) -> Result<Arc<Generation>> {
+        let path = match path {
+            Some(p) => p.to_path_buf(),
+            None => self.watched_path(),
+        };
+        let gen = self
+            .publish(path, false)?
+            .expect("unconditional swap always yields a generation");
+        Ok(gen)
+    }
+
+    /// Poll the watched artifact: if its header identity `(n, dim,
+    /// checksum)` differs from the current generation's, load and
+    /// publish it. `Ok(None)` when nothing changed. Errors (missing or
+    /// torn file, failed load) leave the current generation serving.
+    ///
+    /// The no-change fast path never touches the swap lock, so the
+    /// daemon's per-connection poll cannot stall behind an in-flight
+    /// swap; `publish` re-checks under the lock before loading.
+    pub fn maybe_reload(&self) -> Result<Option<Arc<Generation>>> {
+        let watch = self.watched_path();
+        let head = read_header(&watch)
+            .with_context(|| format!("checking watched artifact {}", watch.display()))?;
+        {
+            let cur = self.current();
+            if cur.path == watch && cur.header == head {
+                return Ok(None);
+            }
+        }
+        self.publish(watch, true)
+    }
+
+    fn publish(&self, path: PathBuf, only_if_changed: bool) -> Result<Option<Arc<Generation>>> {
+        let _guard = if only_if_changed {
+            // Watch-triggered reloads must never queue behind an
+            // in-flight swap: if someone is already loading, keep
+            // serving the current generation and let them publish.
+            match self.swap_lock.try_lock() {
+                Ok(g) => g,
+                Err(_) => return Ok(None),
+            }
+        } else {
+            self.swap_lock.lock().expect("swap lock")
+        };
+        if only_if_changed && self.watched_path() != path {
+            // An explicit swap retargeted the watch while this poll
+            // was in flight; reloading the captured path now would
+            // silently revert that swap.
+            return Ok(None);
+        }
+        let head = read_header(&path)
+            .with_context(|| format!("checking artifact {}", path.display()))?;
+        let cur = self.current();
+        if cur.path == path && cur.header == head {
+            // Already serving this exact artifact. Skipping also keeps
+            // the notify-over-watched-path flow from building the same
+            // generation twice (watch poll, then swap verb).
+            return Ok(if only_if_changed { None } else { Some(cur) });
+        }
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let gen = Arc::new(Generation::load(&path, seq, &self.opts, self.graph.as_ref())?);
+        *self.watch.lock().expect("watch lock") = path;
+        *self.current.write().expect("generation lock") = gen.clone();
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(gen))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::store::write_store;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("kcore_embed_gen_{name}_{}", std::process::id()));
+        p
+    }
+
+    fn write_artifact(path: &Path, n: usize, dim: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let vecs: Vec<f32> = (0..n * dim).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        write_store(path, &vecs, n, dim, None).unwrap();
+    }
+
+    #[test]
+    fn swap_publishes_new_generation_old_arc_keeps_serving() {
+        let a = tmp("swap_a.kce");
+        let b = tmp("swap_b.kce");
+        write_artifact(&a, 50, 8, 1);
+        write_artifact(&b, 50, 8, 2);
+        let gens = GenerationStore::open(&a, None, GenerationOpts::default()).unwrap();
+        let gen1 = gens.current();
+        assert_eq!(gen1.seq(), 1);
+        let req = Request::Neighbors { node: 0, k: 5 };
+        let before = gen1.execute(&req).unwrap();
+
+        let gen2 = gens.swap_to(Some(&b)).unwrap();
+        assert_eq!(gen2.seq(), 2);
+        assert_eq!(gens.current().seq(), 2);
+        assert_eq!(gens.swaps(), 1);
+        assert_eq!(gens.watched_path(), b);
+        // Different artifact, different answers.
+        let after = gens.current().execute(&req).unwrap();
+        assert_ne!(before, after);
+        // The retired generation still answers identically for holders.
+        assert_eq!(gen1.execute(&req).unwrap(), before);
+        assert_eq!(gen1.queries_served(), 2);
+
+        std::fs::remove_file(&a).unwrap();
+        std::fs::remove_file(&b).unwrap();
+    }
+
+    #[test]
+    fn maybe_reload_fires_only_on_changed_artifact() {
+        let p = tmp("watch.kce");
+        write_artifact(&p, 40, 4, 3);
+        let gens = GenerationStore::open(&p, None, GenerationOpts::default()).unwrap();
+        assert!(gens.maybe_reload().unwrap().is_none(), "unchanged artifact reloaded");
+        // Overwrite with different content (atomic rename inside).
+        write_artifact(&p, 40, 4, 4);
+        let reloaded = gens.maybe_reload().unwrap();
+        assert_eq!(reloaded.expect("changed artifact not reloaded").seq(), 2);
+        assert!(gens.maybe_reload().unwrap().is_none());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn swap_to_identical_artifact_is_a_noop() {
+        let p = tmp("noop.kce");
+        write_artifact(&p, 20, 4, 9);
+        let gens = GenerationStore::open(&p, None, GenerationOpts::default()).unwrap();
+        // Explicit swap to what is already served: no rebuild, no
+        // counter bump — the notify-over-watched-path flow relies on
+        // this after the watch poll already published the re-export.
+        let gen = gens.swap_to(None).unwrap();
+        assert_eq!(gen.seq(), 1, "identical artifact was rebuilt");
+        assert_eq!(gens.swaps(), 0);
+        let gen = gens.swap_to(Some(&p)).unwrap();
+        assert_eq!(gen.seq(), 1);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn failed_swap_keeps_current_generation() {
+        let p = tmp("fail.kce");
+        write_artifact(&p, 30, 4, 5);
+        let gens = GenerationStore::open(&p, None, GenerationOpts::default()).unwrap();
+        let missing = Path::new("/no/such/dir/x.kce");
+        assert!(gens.swap_to(Some(missing)).is_err());
+        assert_eq!(gens.current().seq(), 1);
+        // And the watch path did not move to the broken target.
+        assert_eq!(gens.watched_path(), p);
+        let req = Request::Neighbors { node: 1, k: 3 };
+        assert!(gens.current().execute(&req).is_ok());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn stats_line_reports_identity_and_counts() {
+        let p = tmp("stats.kce");
+        write_artifact(&p, 25, 6, 7);
+        let opts = GenerationOpts {
+            serve: ServeOpts {
+                quantized: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let gens = GenerationStore::open(&p, None, opts).unwrap();
+        let gen = gens.current();
+        gen.execute(&Request::Neighbors { node: 0, k: 2 }).unwrap();
+        let line = gen.stats_line();
+        assert!(line.starts_with("gen 1 strategy quantized store 25x6 queries 1"), "{line}");
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,26 +1,40 @@
 //! The serving subsystem: what happens to an embedding *after*
 //! training (DESIGN.md §Serving).
 //!
-//! The pipeline exports a versioned binary artifact ([`store`]), the
-//! query tier mmaps it back with O(1) resident startup cost, and two
-//! engines answer the paper's downstream workloads against it:
-//! cache-blocked top-k similarity scans with an optional 8-bit
-//! quantized fast path ([`topk`]) and logistic link-prediction scoring
-//! over the shared `eval::operators` edge features ([`linkpred`]).
-//! [`query`] batches mixed requests and reports per-batch latency
-//! percentiles.
+//! The pipeline exports a versioned binary artifact ([`store`],
+//! atomically renamed into place), the query tier mmaps it back with
+//! O(1) resident startup cost, and the engines answer the paper's
+//! downstream workloads against it: cache-blocked top-k similarity
+//! scans behind the [`ScanIndex`] strategy trait — exact, or 8-bit
+//! quantized with a lane-interleaved code layout ([`topk`]) — and
+//! logistic link-prediction scoring over the shared `eval::operators`
+//! edge features ([`linkpred`]). [`query`] batches mixed requests and
+//! reports per-batch latency percentiles.
+//!
+//! On top of the one-shot tier sits the **persistent daemon**:
+//! [`generation`] holds hot-swappable artifact generations (Arc-epoch
+//! publish, readers never block, watched-path reload), [`protocol`]
+//! defines the line protocol plus `swap`/`stats`/`shutdown` control
+//! verbs, and [`server`] runs the Unix-domain-socket serve loop the
+//! CLI exposes as `serve --listen` / `query --connect`.
 //!
 //! Layering: `serve` sits above `embed`/`eval` (it consumes trained
 //! tables and reuses evaluation operators) and below `coordinator`
-//! (the pipeline's export step and the CLI `serve`/`query` subcommands
-//! drive it).
+//! (the pipeline's export step can signal a running daemon to swap,
+//! and the CLI `serve`/`query` subcommands drive both tiers).
 
+pub mod generation;
 pub mod linkpred;
+pub mod protocol;
 pub mod query;
+pub mod server;
 pub mod store;
 pub mod topk;
 
+pub use generation::{Generation, GenerationOpts, GenerationStore};
 pub use linkpred::{EdgeScorer, EdgeScorerParams};
+pub use protocol::ClientMsg;
 pub use query::{BatchReport, QueryService, Request, Response, ServeOpts};
-pub use store::{write_store, EmbeddingStore};
-pub use topk::{Metric, TopKIndex, TopKParams};
+pub use server::{client_exchange, notify_swap, run_server, ServerOpts, ServerStats};
+pub use store::{read_header, write_store, EmbeddingStore, StoreHeader};
+pub use topk::{build_scan_index, ExactScan, Metric, QuantizedScan, ScanIndex, TopKParams};

@@ -1,0 +1,218 @@
+//! Line protocol of the serving daemon (DESIGN.md §Serving).
+//!
+//! One message per line, UTF-8, whitespace-separated tokens. Client to
+//! server, a line is either a data request — the same `nn NODE K` /
+//! `edge U V` grammar [`Request::parse`] has always accepted, plus `#`
+//! comments — or one of three control verbs:
+//!
+//! ```text
+//! swap [PATH]   load PATH (or re-check the watched artifact) and
+//!               publish it as the next generation
+//! stats         one-line counters of the current generation + server
+//! shutdown      stop accepting connections and exit the serve loop
+//! ```
+//!
+//! A **blank line** flushes the pending request batch (the server also
+//! flushes before any control verb and at EOF), so interactive clients
+//! get answers without closing the connection.
+//!
+//! Server to client, each request is answered by exactly one line:
+//! `nn NODE V:SCORE ...`, `edge U V P`, or `err MESSAGE`. Scores use
+//! Rust's shortest round-trip float formatting, so
+//! [`parse_response`]`(`[`encode_response`]`(r)) == r` exactly — the
+//! round-trip property tests in `tests/daemon.rs` pin this. Control
+//! verbs are answered with a free-form `ok ...` / `stats ...` / `err
+//! ...` line.
+//!
+//! `swap` treats everything after the verb (trimmed) as the path, so
+//! artifact paths with interior whitespace work; the CLI sends
+//! canonicalized absolute paths so the daemon's cwd never matters.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use super::query::{Request, Response};
+
+/// One parsed client line: a data request or a control verb.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClientMsg {
+    Query(Request),
+    /// Load a new artifact generation; `None` re-checks the watched
+    /// path.
+    Swap(Option<PathBuf>),
+    Stats,
+    Shutdown,
+}
+
+impl ClientMsg {
+    /// Parse one client line. `Ok(None)` for blank/comment lines.
+    pub fn parse(line: &str) -> Result<Option<ClientMsg>> {
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            return Ok(None);
+        }
+        // `swap` takes the whole rest of the line as its path, so
+        // artifact paths containing whitespace survive the wire.
+        if let Some(rest) = trimmed.strip_prefix("swap") {
+            if rest.is_empty() {
+                return Ok(Some(ClientMsg::Swap(None)));
+            }
+            // `trimmed` has no trailing whitespace, so `rest` is a
+            // non-empty path once the separator is stripped.
+            if rest.starts_with(char::is_whitespace) {
+                return Ok(Some(ClientMsg::Swap(Some(PathBuf::from(rest.trim_start())))));
+            }
+        }
+        let toks: Vec<&str> = trimmed.split_whitespace().collect();
+        match toks.as_slice() {
+            ["stats"] => Ok(Some(ClientMsg::Stats)),
+            ["stats", ..] => bail!("stats takes no arguments"),
+            ["shutdown"] => Ok(Some(ClientMsg::Shutdown)),
+            ["shutdown", ..] => bail!("shutdown takes no arguments"),
+            _ => Ok(Request::parse(trimmed)?.map(ClientMsg::Query)),
+        }
+    }
+
+    /// The wire line for this message (no trailing newline).
+    pub fn encode(&self) -> String {
+        match self {
+            ClientMsg::Query(Request::Neighbors { node, k }) => format!("nn {node} {k}"),
+            ClientMsg::Query(Request::EdgeScore { u, v }) => format!("edge {u} {v}"),
+            ClientMsg::Swap(None) => "swap".to_string(),
+            ClientMsg::Swap(Some(p)) => format!("swap {}", p.display()),
+            ClientMsg::Stats => "stats".to_string(),
+            ClientMsg::Shutdown => "shutdown".to_string(),
+        }
+    }
+}
+
+/// Encode a response as one wire line (no trailing newline). Floats
+/// use `{}` — the shortest representation that parses back to the
+/// exact same value — so encode/parse round-trips bit for bit.
+pub fn encode_response(r: &Response) -> String {
+    match r {
+        Response::Neighbors { node, hits } => {
+            let mut s = format!("nn {node}");
+            for (v, score) in hits {
+                s.push_str(&format!(" {v}:{score}"));
+            }
+            s
+        }
+        Response::EdgeScore { u, v, p } => format!("edge {u} {v} {p}"),
+    }
+}
+
+/// Encode a per-request failure as one wire line.
+pub fn encode_error(e: &anyhow::Error) -> String {
+    // Keep the protocol line-oriented whatever the message contains.
+    let msg = format!("{e:#}").replace('\n', " ");
+    format!("err {msg}")
+}
+
+/// Parse a server response line back into a [`Response`]. `err` lines
+/// surface as errors carrying the server's message.
+pub fn parse_response(line: &str) -> Result<Response> {
+    let trimmed = line.trim();
+    let toks: Vec<&str> = trimmed.split_whitespace().collect();
+    match toks.as_slice() {
+        ["nn", node, hits @ ..] => {
+            let node = node
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad node id {node:?}"))?;
+            let mut parsed = Vec::with_capacity(hits.len());
+            for h in hits {
+                let (v, s) = h
+                    .split_once(':')
+                    .ok_or_else(|| anyhow::anyhow!("bad hit {h:?} (expected V:SCORE)"))?;
+                let v = v.parse().map_err(|_| anyhow::anyhow!("bad hit node {v:?}"))?;
+                let s = s.parse().map_err(|_| anyhow::anyhow!("bad hit score {s:?}"))?;
+                parsed.push((v, s));
+            }
+            Ok(Response::Neighbors { node, hits: parsed })
+        }
+        ["edge", u, v, p] => Ok(Response::EdgeScore {
+            u: u.parse().map_err(|_| anyhow::anyhow!("bad node id {u:?}"))?,
+            v: v.parse().map_err(|_| anyhow::anyhow!("bad node id {v:?}"))?,
+            p: p.parse().map_err(|_| anyhow::anyhow!("bad probability {p:?}"))?,
+        }),
+        ["err", ..] => bail!("server error: {}", trimmed.strip_prefix("err ").unwrap_or("")),
+        _ => bail!("bad response line {trimmed:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_verbs_parse_and_encode() {
+        for (line, msg) in [
+            ("swap", ClientMsg::Swap(None)),
+            ("swap /x/emb.kce", ClientMsg::Swap(Some(PathBuf::from("/x/emb.kce")))),
+            ("stats", ClientMsg::Stats),
+            ("shutdown", ClientMsg::Shutdown),
+            ("nn 3 10", ClientMsg::Query(Request::Neighbors { node: 3, k: 10 })),
+            ("edge 1 2", ClientMsg::Query(Request::EdgeScore { u: 1, v: 2 })),
+        ] {
+            let parsed = ClientMsg::parse(line).unwrap().unwrap();
+            assert_eq!(parsed, msg, "line {line:?}");
+            assert_eq!(ClientMsg::parse(&msg.encode()).unwrap().unwrap(), msg);
+        }
+        assert_eq!(ClientMsg::parse("").unwrap(), None);
+        assert_eq!(ClientMsg::parse("# hi").unwrap(), None);
+        // swap takes the rest of the line: interior whitespace survives.
+        let spacey = ClientMsg::Swap(Some(PathBuf::from("/x/my graphs/emb.kce")));
+        let parsed = ClientMsg::parse("swap /x/my graphs/emb.kce").unwrap();
+        assert_eq!(parsed, Some(spacey.clone()));
+        assert_eq!(ClientMsg::parse(&spacey.encode()).unwrap(), Some(spacey));
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        for bad in [
+            "stats now",
+            "shutdown -f",
+            "nn 3",
+            "nn 3 4 5",
+            "nn x 5",
+            "edge 1",
+            "frobnicate",
+        ] {
+            assert!(ClientMsg::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        for bad in ["", "nn x", "nn 3 nohit", "nn 3 5:x", "edge 1 2", "ok swap 2"] {
+            assert!(parse_response(bad).is_err(), "accepted response {bad:?}");
+        }
+    }
+
+    #[test]
+    fn responses_round_trip_exactly() {
+        let r = Response::Neighbors {
+            node: 7,
+            hits: vec![(1, 0.25f32), (2, -1.5e-8), (3, f32::INFINITY)],
+        };
+        assert_eq!(parse_response(&encode_response(&r)).unwrap(), r);
+        let r = Response::EdgeScore {
+            u: 9,
+            v: 11,
+            p: 0.123456789012345,
+        };
+        assert_eq!(parse_response(&encode_response(&r)).unwrap(), r);
+        // Empty hit lists survive too (k = 0 or empty store).
+        let r = Response::Neighbors {
+            node: 0,
+            hits: vec![],
+        };
+        assert_eq!(parse_response(&encode_response(&r)).unwrap(), r);
+    }
+
+    #[test]
+    fn error_lines_are_single_line_and_surface_on_parse() {
+        let e = anyhow::anyhow!("boom\nwith newline");
+        let line = encode_error(&e);
+        assert!(!line.contains('\n'));
+        let err = parse_response(&line).unwrap_err();
+        assert!(format!("{err}").contains("boom"));
+    }
+}

@@ -1,13 +1,17 @@
 //! The request layer: batched neighbor / edge-score queries over one
 //! loaded artifact, with per-batch latency telemetry.
 //!
-//! A [`QueryService`] owns the store, the top-k index and (optionally)
-//! a fitted [`EdgeScorer`], and executes mixed request batches. Each
-//! request is timed individually; a batch returns a [`BatchReport`]
-//! with nearest-rank p50/p90/p99/max latencies which
-//! `coordinator::report::render_latency_table` turns into the usual
-//! paper-style table. The CLI `serve` subcommand is a thin file/stdin
-//! front-end over this module; tests drive it directly.
+//! A [`QueryService`] owns the store, a boxed [`ScanIndex`] strategy
+//! and (optionally) a fitted [`EdgeScorer`], and executes mixed request
+//! batches. The scan strategy is chosen once (at the first neighbor
+//! request) and the execution path never branches on it again — the
+//! daemon's [`super::generation::Generation`] shares the same
+//! [`execute_with`] core. Each request is timed individually; a batch
+//! returns a [`BatchReport`] with nearest-rank p50/p90/p99/max
+//! latencies which `coordinator::report::render_latency_table` turns
+//! into the usual paper-style table. The CLI `serve` subcommand is a
+//! thin file/stdin front-end over this module; the persistent daemon
+//! lives in [`super::server`]; tests drive both directly.
 
 use std::time::Instant;
 
@@ -17,7 +21,7 @@ use crate::util::stats::percentile;
 
 use super::linkpred::EdgeScorer;
 use super::store::EmbeddingStore;
-use super::topk::{Hit, Metric, TopKIndex, TopKParams};
+use super::topk::{build_scan_index, Hit, Metric, ScanIndex, TopKParams};
 
 /// One serving request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -29,7 +33,7 @@ pub enum Request {
 }
 
 impl Request {
-    /// Parse the `serve` wire format: `nn NODE K` or `edge U V`
+    /// Parse the wire format: `nn NODE K` or `edge U V`
     /// (whitespace-separated, `#` starts a comment line).
     pub fn parse(line: &str) -> Result<Option<Request>> {
         let line = line.trim();
@@ -94,23 +98,68 @@ impl Default for ServeOpts {
     }
 }
 
-/// A ready-to-serve artifact: store + scan index + optional edge model.
+/// Execute one request against a store + scan strategy + optional edge
+/// model. This is the single execution core shared by [`QueryService`]
+/// (lazy scan build) and the daemon's generations (eager scan build):
+/// both answer byte-identically for the same artifact and options.
+///
+/// `scan` is only consulted for neighbor requests, so edge-score-only
+/// callers may pass `None` without paying for an index build.
+pub(crate) fn execute_with(
+    store: &EmbeddingStore,
+    scan: Option<&dyn ScanIndex>,
+    scorer: Option<&EdgeScorer>,
+    metric: Metric,
+    req: &Request,
+) -> Result<Response> {
+    match *req {
+        Request::Neighbors { node, k } => {
+            if node as usize >= store.n() {
+                bail!("node {node} out of range (store has {} rows)", store.n());
+            }
+            let Some(scan) = scan else {
+                bail!("neighbor requests need a scan index");
+            };
+            let hits = scan.top_k_node(store, node, k, metric);
+            Ok(Response::Neighbors { node, hits })
+        }
+        Request::EdgeScore { u, v } => {
+            let n = store.n();
+            if u as usize >= n || v as usize >= n {
+                bail!("edge ({u}, {v}) out of range (store has {n} rows)");
+            }
+            let scorer = scorer.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "edge-score requests need a fitted model (serve with --edges/--graph)"
+                )
+            })?;
+            Ok(Response::EdgeScore {
+                u,
+                v,
+                p: scorer.score(store, u, v),
+            })
+        }
+    }
+}
+
+/// A ready-to-serve artifact: store + scan strategy + optional edge
+/// model.
 pub struct QueryService {
     store: EmbeddingStore,
     /// Built on the first neighbor request (a norm pass — and the
     /// quantized table copy, when enabled — touches every row; an
     /// edge-score-only workload over an mmap'd store should keep its
     /// O(1)-resident startup).
-    index: std::sync::OnceLock<TopKIndex>,
+    index: std::sync::OnceLock<Box<dyn ScanIndex>>,
     scorer: Option<EdgeScorer>,
     opts: ServeOpts,
     batches_run: usize,
 }
 
 impl QueryService {
-    /// Build from a loaded store. The scan index (and quantized table,
-    /// when `opts.quantized` asks for one) is built lazily on the first
-    /// neighbor request.
+    /// Build from a loaded store. The scan strategy (exact, or
+    /// quantized when `opts.quantized` asks for one) is built lazily on
+    /// the first neighbor request.
     pub fn new(store: EmbeddingStore, opts: ServeOpts) -> QueryService {
         QueryService {
             store,
@@ -121,14 +170,12 @@ impl QueryService {
         }
     }
 
-    fn index(&self) -> &TopKIndex {
-        self.index.get_or_init(|| {
-            if self.opts.quantized {
-                TopKIndex::build_quantized(&self.store, self.opts.topk.clone())
-            } else {
-                TopKIndex::build(&self.store, self.opts.topk.clone())
-            }
-        })
+    fn index(&self) -> &dyn ScanIndex {
+        self.index
+            .get_or_init(|| {
+                build_scan_index(&self.store, self.opts.topk.clone(), self.opts.quantized)
+            })
+            .as_ref()
     }
 
     /// Attach a fitted edge scorer (enables [`Request::EdgeScore`]).
@@ -147,36 +194,19 @@ impl QueryService {
 
     /// Execute one request.
     pub fn execute(&self, req: &Request) -> Result<Response> {
-        match *req {
-            Request::Neighbors { node, k } => {
+        // Range-check before touching the lazy index: a bad node id
+        // must not trigger the O(n*dim) norm/quantization build that
+        // `execute_with` would only reject afterwards.
+        let scan = match *req {
+            Request::Neighbors { node, .. } => {
                 if node as usize >= self.store.n() {
                     bail!("node {node} out of range (store has {} rows)", self.store.n());
                 }
-                let index = self.index();
-                let hits = if self.opts.quantized {
-                    index.top_k_node_quantized(&self.store, node, k, self.opts.metric)
-                } else {
-                    index.top_k_node(&self.store, node, k, self.opts.metric)
-                };
-                Ok(Response::Neighbors { node, hits })
+                Some(self.index())
             }
-            Request::EdgeScore { u, v } => {
-                let n = self.store.n();
-                if u as usize >= n || v as usize >= n {
-                    bail!("edge ({u}, {v}) out of range (store has {n} rows)");
-                }
-                let scorer = self.scorer.as_ref().ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "edge-score requests need a fitted model (serve with --edges/--graph)"
-                    )
-                })?;
-                Ok(Response::EdgeScore {
-                    u,
-                    v,
-                    p: scorer.score(&self.store, u, v),
-                })
-            }
-        }
+            Request::EdgeScore { .. } => None,
+        };
+        execute_with(&self.store, scan, self.scorer.as_ref(), self.opts.metric, req)
     }
 
     /// Execute a batch in order, timing each request; returns the
@@ -184,11 +214,14 @@ impl QueryService {
     pub fn run_batch(&mut self, requests: &[Request]) -> Result<(Vec<Response>, BatchReport)> {
         // Warm the lazy scan index outside the request timers: one-time
         // index construction must not masquerade as first-request
-        // serving latency in the percentile report.
-        if requests
-            .iter()
-            .any(|r| matches!(r, Request::Neighbors { .. }))
-        {
+        // serving latency in the percentile report. Only a valid
+        // neighbor request warrants the build — an all-invalid batch
+        // errors without paying for an index.
+        let warms = |r: &Request| match *r {
+            Request::Neighbors { node, .. } => (node as usize) < self.store.n(),
+            Request::EdgeScore { .. } => false,
+        };
+        if requests.iter().any(warms) {
             self.index();
         }
         let t_batch = Instant::now();
@@ -305,11 +338,14 @@ mod tests {
     }
 
     #[test]
-    fn index_is_lazy_until_first_neighbor_request() {
+    fn index_is_lazy_and_strategy_follows_opts() {
         let svc = service(30, 4, true);
         assert!(svc.index.get().is_none(), "index built eagerly");
         let _ = svc.execute(&Request::Neighbors { node: 0, k: 3 }).unwrap();
-        assert!(svc.index.get().is_some());
+        assert_eq!(svc.index.get().map(|i| i.strategy()), Some("quantized"));
+        let svc = service(30, 4, false);
+        let _ = svc.execute(&Request::Neighbors { node: 0, k: 3 }).unwrap();
+        assert_eq!(svc.index.get().map(|i| i.strategy()), Some("exact"));
     }
 
     #[test]
@@ -319,6 +355,8 @@ mod tests {
         assert!(svc
             .run_batch(&[Request::Neighbors { node: 99, k: 2 }])
             .is_err());
+        // ... and rejecting it must not have paid for an index build.
+        assert!(svc.index.get().is_none(), "invalid request built the index");
         // Edge scoring without a model.
         assert!(svc.run_batch(&[Request::EdgeScore { u: 0, v: 1 }]).is_err());
     }

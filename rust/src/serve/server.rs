@@ -1,0 +1,365 @@
+//! The persistent serving daemon: a Unix-domain-socket loop over a
+//! [`GenerationStore`] (std-only — no async runtime or HTTP stack is
+//! available offline, and a line protocol over a local socket is all
+//! the ROADMAP's "persistent server loop" needs to stand up).
+//!
+//! ```text
+//! embed --store A --notify S ─┐ swap A          ┌─ query --connect S
+//!                             ▼                 ▼
+//!                    [daemon: run_server on socket S]
+//!                       │ per connection (own thread): maybe_reload
+//!                       │ (header watch), batch lines, control verbs
+//!                       ▼
+//!                GenerationStore ── Arc<Generation> per batch
+//! ```
+//!
+//! Concurrency shape: one thread per connection; each **batch** (the
+//! lines queued up to a blank line / control verb / EOF) grabs one
+//! `Arc<Generation>` and fans its requests over
+//! [`pool::parallel_tasks`], so answers come back in request order, a
+//! hot-swap never blocks readers, and no batch mixes generations. The
+//! watched-path poll runs at the start of each connection's handler —
+//! never on the acceptor thread — and skips (try-lock) when a swap is
+//! already in flight, so neither accepts nor other connections stall
+//! behind a generation build. `shutdown` stops the accept loop (a
+//! self-connection wakes the blocked `accept`), half-closes in-flight
+//! connections so idle readers see EOF and flush their pending
+//! batches, joins them, and removes the socket file; [`run_server`]
+//! then returns its counters, so a clean daemon exits 0 — `make
+//! smoke` checks exactly that.
+//!
+//! The client side lives here too: [`client_exchange`] (one
+//! request/response exchange over a fresh connection) and
+//! [`notify_swap`] (what `embed --notify` and `query --control swap`
+//! send), so the daemon and its clients cannot drift apart.
+
+use std::path::PathBuf;
+
+use crate::util::pool;
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct ServerOpts {
+    /// Unix-domain socket path to listen on. Created on bind (a stale
+    /// file from a dead daemon is replaced), removed on shutdown.
+    pub socket: PathBuf,
+    /// Worker threads fanning each request batch (each request's scan
+    /// additionally fans blocks per its own `TopKParams::threads`).
+    pub batch_threads: usize,
+}
+
+impl ServerOpts {
+    pub fn new(socket: PathBuf) -> ServerOpts {
+        ServerOpts {
+            socket,
+            batch_threads: pool::default_threads(),
+        }
+    }
+}
+
+/// Lifetime counters a finished daemon reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    pub connections: u64,
+    pub requests: u64,
+    pub swaps: u64,
+}
+
+#[cfg(unix)]
+mod imp {
+    use std::collections::HashMap;
+    use std::io::{BufRead, BufReader, BufWriter, Write};
+    use std::os::unix::net::{UnixListener, UnixStream};
+    use std::path::{Path, PathBuf};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    use anyhow::{bail, Context, Result};
+
+    use crate::serve::generation::GenerationStore;
+    use crate::serve::protocol::{self, ClientMsg};
+    use crate::serve::query::Request;
+    use crate::util::pool;
+
+    use super::{ServerOpts, ServerStats};
+
+    struct Ctl {
+        socket: PathBuf,
+        shutdown: AtomicBool,
+        connections: AtomicU64,
+        requests: AtomicU64,
+        /// Live connections by id, so shutdown can half-close readers
+        /// that are idle-blocked in a read and would otherwise hang
+        /// the final join forever. Handlers remove their own entry.
+        conns: Mutex<HashMap<u64, UnixStream>>,
+    }
+
+    impl Ctl {
+        fn begin_shutdown(&self) {
+            self.shutdown.store(true, Ordering::SeqCst);
+            // The acceptor blocks in accept(); a throwaway connection
+            // wakes it so it can observe the flag and stop. It then
+            // half-closes the registered connections itself — every
+            // accepted stream is registered before the next accept, so
+            // none can be missed.
+            let _ = UnixStream::connect(&self.socket);
+        }
+    }
+
+    /// Serve until a `shutdown` verb arrives. Blocks the calling
+    /// thread; returns the daemon's lifetime counters on clean exit.
+    pub fn run_server(gens: Arc<GenerationStore>, opts: &ServerOpts) -> Result<ServerStats> {
+        if let Ok(meta) = std::fs::symlink_metadata(&opts.socket) {
+            // Replace a stale socket from a dead daemon, but never
+            // delete a non-socket (a typo'd --listen must not destroy
+            // a data file) and never hijack a live daemon: stealing
+            // the path would strand it unreachable (its shutdown verb
+            // could no longer arrive).
+            use std::os::unix::fs::FileTypeExt;
+            if !meta.file_type().is_socket() {
+                bail!(
+                    "{} exists and is not a socket; refusing to replace it",
+                    opts.socket.display()
+                );
+            }
+            if UnixStream::connect(&opts.socket).is_ok() {
+                bail!("a daemon is already listening on {}", opts.socket.display());
+            }
+            std::fs::remove_file(&opts.socket)
+                .with_context(|| format!("replacing stale socket {}", opts.socket.display()))?;
+        }
+        let listener = UnixListener::bind(&opts.socket)
+            .with_context(|| format!("binding daemon socket {}", opts.socket.display()))?;
+        let ctl = Arc::new(Ctl {
+            socket: opts.socket.clone(),
+            shutdown: AtomicBool::new(false),
+            connections: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            conns: Mutex::new(HashMap::new()),
+        });
+        let mut next_conn_id = 0u64;
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        for stream in listener.incoming() {
+            if ctl.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            // Reap finished connection threads so a long-lived daemon
+            // does not accumulate one JoinHandle per connection ever
+            // served.
+            handles.retain(|h| !h.is_finished());
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("serve: accept failed: {e}");
+                    continue;
+                }
+            };
+            ctl.connections.fetch_add(1, Ordering::Relaxed);
+            let conn_id = next_conn_id;
+            next_conn_id += 1;
+            if let Ok(clone) = stream.try_clone() {
+                let mut conns = ctl.conns.lock().expect("conn registry");
+                conns.insert(conn_id, clone);
+            }
+            let gens = Arc::clone(&gens);
+            let ctl = Arc::clone(&ctl);
+            let threads = opts.batch_threads;
+            handles.push(std::thread::spawn(move || {
+                if let Err(e) = handle_conn(stream, &gens, &ctl, threads) {
+                    eprintln!("serve: connection error: {e:#}");
+                }
+                ctl.conns.lock().expect("conn registry").remove(&conn_id);
+            }));
+        }
+        // Graceful: flush what in-flight connections have queued, then
+        // wait for them. Half-closing the read side unblocks handlers
+        // whose client went idle without disconnecting (they see EOF,
+        // flush pending responses and return) — without it one wedged
+        // client would hang the join below forever.
+        for conn in ctl.conns.lock().expect("conn registry").values() {
+            let _ = conn.shutdown(std::net::Shutdown::Read);
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&opts.socket);
+        Ok(ServerStats {
+            connections: ctl.connections.load(Ordering::Relaxed),
+            requests: ctl.requests.load(Ordering::Relaxed),
+            swaps: gens.swaps(),
+        })
+    }
+
+    /// Answer the queued batch from one generation snapshot, in
+    /// request order, errors as per-line `err` responses.
+    fn flush_batch(
+        pending: &mut Vec<Request>,
+        gens: &GenerationStore,
+        ctl: &Ctl,
+        threads: usize,
+        w: &mut BufWriter<UnixStream>,
+    ) -> Result<()> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let gen = gens.current();
+        let results =
+            pool::parallel_tasks(pending.len(), threads.max(1), |i| gen.execute(&pending[i]));
+        for r in &results {
+            match r {
+                Ok(resp) => writeln!(w, "{}", protocol::encode_response(resp))?,
+                Err(e) => writeln!(w, "{}", protocol::encode_error(e))?,
+            }
+        }
+        w.flush()?;
+        ctl.requests.fetch_add(pending.len() as u64, Ordering::Relaxed);
+        pending.clear();
+        Ok(())
+    }
+
+    fn handle_conn(
+        stream: UnixStream,
+        gens: &GenerationStore,
+        ctl: &Ctl,
+        threads: usize,
+    ) -> Result<()> {
+        // Per-connection watch poll, on this handler thread so the
+        // acceptor never stalls behind a generation build: a
+        // re-exported artifact becomes the serving generation without
+        // any verb. Errors (torn/missing file) and a swap already in
+        // flight (the reload try-locks) keep the current generation.
+        match gens.maybe_reload() {
+            Ok(Some(gen)) => {
+                eprintln!("serve: watched artifact changed, now {}", gen.stats_line());
+            }
+            Ok(None) => {}
+            Err(e) => {
+                eprintln!("serve: watch check failed: {e:#} (keeping current generation)");
+            }
+        }
+        let reader = BufReader::new(stream.try_clone().context("cloning connection stream")?);
+        let mut w = BufWriter::new(stream);
+        let mut pending: Vec<Request> = Vec::new();
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
+                continue;
+            }
+            match ClientMsg::parse(&line) {
+                Ok(None) => {}
+                Ok(Some(ClientMsg::Query(req))) => pending.push(req),
+                Ok(Some(msg)) => {
+                    // Control verbs act on a consistent point in the
+                    // stream: drain queued requests first.
+                    flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
+                    match msg {
+                        ClientMsg::Swap(path) => match gens.swap_to(path.as_deref()) {
+                            Ok(gen) => writeln!(
+                                w,
+                                "ok swap gen {} store {}x{} {}",
+                                gen.seq(),
+                                gen.store().n(),
+                                gen.store().dim(),
+                                gen.strategy()
+                            )?,
+                            Err(e) => writeln!(w, "{}", protocol::encode_error(&e))?,
+                        },
+                        ClientMsg::Stats => {
+                            let gen = gens.current();
+                            writeln!(
+                                w,
+                                "stats {} connections {} requests {} swaps {}",
+                                gen.stats_line(),
+                                ctl.connections.load(Ordering::Relaxed),
+                                ctl.requests.load(Ordering::Relaxed),
+                                gens.swaps()
+                            )?;
+                        }
+                        ClientMsg::Shutdown => {
+                            writeln!(w, "ok shutdown")?;
+                            w.flush()?;
+                            ctl.begin_shutdown();
+                            return Ok(());
+                        }
+                        ClientMsg::Query(_) => unreachable!("queries queue above"),
+                    }
+                    w.flush()?;
+                }
+                Err(e) => {
+                    // Malformed line: report and keep the connection.
+                    writeln!(w, "{}", protocol::encode_error(&e))?;
+                    w.flush()?;
+                }
+            }
+        }
+        // EOF flushes whatever is still pending.
+        flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
+        Ok(())
+    }
+
+    /// Client side of one connection: send `lines`, half-close, read
+    /// every reply line. Each call is one fresh connection.
+    pub fn client_exchange(socket: &Path, lines: &[String]) -> Result<Vec<String>> {
+        let stream = UnixStream::connect(socket)
+            .with_context(|| format!("connecting to serving daemon at {}", socket.display()))?;
+        let mut w = BufWriter::new(stream.try_clone().context("cloning connection stream")?);
+        for line in lines {
+            writeln!(w, "{line}")?;
+        }
+        w.flush()?;
+        stream.shutdown(std::net::Shutdown::Write)?;
+        let mut out = Vec::new();
+        for line in BufReader::new(stream).lines() {
+            out.push(line?);
+        }
+        Ok(out)
+    }
+
+    /// Tell a running daemon to hot-swap to `artifact`; returns the
+    /// daemon's acknowledgement line. Used by `embed --notify` (the
+    /// pipeline's export step) and `query --control swap`.
+    pub fn notify_swap(socket: &Path, artifact: &Path) -> Result<String> {
+        // The daemon resolves relative paths against *its* cwd; send an
+        // absolute path so the caller's cwd never matters.
+        let artifact = artifact
+            .canonicalize()
+            .with_context(|| format!("resolving artifact path {}", artifact.display()))?;
+        let replies = client_exchange(socket, &[format!("swap {}", artifact.display())])?;
+        let reply = replies
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("daemon closed the connection without replying"))?;
+        if reply.starts_with("err") {
+            bail!("daemon refused swap: {reply}");
+        }
+        Ok(reply)
+    }
+}
+
+#[cfg(unix)]
+pub use imp::{client_exchange, notify_swap, run_server};
+
+#[cfg(not(unix))]
+pub fn run_server(
+    _gens: std::sync::Arc<super::generation::GenerationStore>,
+    _opts: &ServerOpts,
+) -> anyhow::Result<ServerStats> {
+    anyhow::bail!("the serving daemon needs unix-domain sockets (unix-only)")
+}
+
+#[cfg(not(unix))]
+pub fn client_exchange(
+    _socket: &std::path::Path,
+    _lines: &[String],
+) -> anyhow::Result<Vec<String>> {
+    anyhow::bail!("daemon clients need unix-domain sockets (unix-only)")
+}
+
+#[cfg(not(unix))]
+pub fn notify_swap(
+    _socket: &std::path::Path,
+    _artifact: &std::path::Path,
+) -> anyhow::Result<String> {
+    anyhow::bail!("daemon clients need unix-domain sockets (unix-only)")
+}

@@ -90,6 +90,13 @@ fn payload_checksum(cores: &[u32], vecs: &[f32]) -> u64 {
 ///
 /// Streams: one checksum pass plus one buffered write pass over the
 /// table — no transient byte copy of the (potentially multi-GiB) rows.
+///
+/// The write is staged to a writer-unique `<path>.tmp.<pid>.<seq>`
+/// sibling and renamed into place, so publication is atomic on POSIX:
+/// a serving daemon watching the path
+/// ([`super::generation::GenerationStore`]) sees either the old
+/// artifact or the complete new one, never a torn file — even when
+/// exporters race on the same path.
 pub fn write_store(
     path: &Path,
     data: &[f32],
@@ -122,18 +129,57 @@ pub fn write_store(
     header.extend_from_slice(&checksum.to_le_bytes());
     debug_assert_eq!(header.len(), HEADER_BYTES);
 
-    let file = std::fs::File::create(path)
-        .with_context(|| format!("creating embedding store {}", path.display()))?;
+    // Stage under a writer-unique name: concurrent exporters (other
+    // processes or other threads of this one) must never interleave
+    // into one staging file and rename torn bytes into place.
+    static STAGE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let stamp = STAGE.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(format!(".tmp.{}.{stamp}", std::process::id()));
+    let tmp = std::path::PathBuf::from(tmp_name);
+    let result = stage_and_publish(&tmp, path, &header, core_slice, data);
+    if result.is_err() {
+        // Do not strand a (possibly multi-GiB) staging file next to
+        // the artifact when the write or rename fails — e.g. ENOSPC.
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+fn stage_and_publish(
+    tmp: &Path,
+    path: &Path,
+    header: &[u8],
+    cores: &[u32],
+    data: &[f32],
+) -> Result<()> {
+    let file = std::fs::File::create(tmp)
+        .with_context(|| format!("creating embedding store {}", tmp.display()))?;
     let mut w = std::io::BufWriter::new(file);
-    w.write_all(&header)?;
-    for &c in core_slice {
+    w.write_all(header)?;
+    for &c in cores {
         w.write_all(&c.to_le_bytes())?;
     }
     for &x in data {
         w.write_all(&x.to_le_bytes())?;
     }
     w.flush()?;
+    drop(w);
+    std::fs::rename(tmp, path)
+        .with_context(|| format!("publishing embedding store {}", path.display()))?;
     Ok(())
+}
+
+/// Read and validate just the 40-byte header of an artifact — the
+/// cheap "did the file change?" probe the daemon's generation watcher
+/// polls (`n_nodes`/`dim`/`checksum` identify a payload).
+pub fn read_header(path: &Path) -> Result<StoreHeader> {
+    let mut file = std::fs::File::open(path)
+        .with_context(|| format!("opening embedding store {}", path.display()))?;
+    let mut head = [0u8; HEADER_BYTES];
+    file.read_exact(&mut head)
+        .with_context(|| format!("reading store header {}", path.display()))?;
+    StoreHeader::parse(&head)
 }
 
 /// Parsed header of an embedding store file.
@@ -574,6 +620,52 @@ mod tests {
     fn out_of_range_row_panics() {
         let s = EmbeddingStore::from_parts(vec![0.0; 8], 2, 4, vec![0; 2]);
         let _ = s.row(2);
+    }
+
+    #[test]
+    fn write_publishes_atomically_and_header_peeks() {
+        let (data, cores) = sample(5, 3);
+        let p = tmp("atomic.kce");
+        write_store(&p, &data, 5, 3, Some(&cores)).unwrap();
+        // No staging file may be left behind (they are renamed away).
+        let dir = p.parent().unwrap();
+        let base = format!("{}.tmp", p.file_name().unwrap().to_string_lossy());
+        let leftover = std::fs::read_dir(dir).unwrap().any(|e| {
+            let name = e.unwrap().file_name();
+            name.to_string_lossy().starts_with(&base)
+        });
+        assert!(!leftover, "staging file left behind");
+        // Header peek agrees with the full loaders without reading the
+        // payload.
+        let h = read_header(&p).unwrap();
+        let full = EmbeddingStore::open_in_memory(&p).unwrap();
+        assert_eq!(h, full.header());
+        // Re-export with different content changes the checksum the
+        // watcher keys on.
+        let (data2, cores2) = sample(5, 3);
+        let data2: Vec<f32> = data2.iter().map(|x| x + 1.0).collect();
+        write_store(&p, &data2, 5, 3, Some(&cores2)).unwrap();
+        let h2 = read_header(&p).unwrap();
+        assert_ne!(h.checksum, h2.checksum);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn failed_publish_cleans_up_staging_file() {
+        // Renaming a file over an existing directory fails (EISDIR)
+        // after the payload was staged — the staging file must go.
+        let dir_target = tmp("publish_dir.kce");
+        std::fs::create_dir_all(&dir_target).unwrap();
+        let (data, cores) = sample(4, 3);
+        assert!(write_store(&dir_target, &data, 4, 3, Some(&cores)).is_err());
+        let parent = dir_target.parent().unwrap();
+        let base = format!("{}.tmp", dir_target.file_name().unwrap().to_string_lossy());
+        let leftover = std::fs::read_dir(parent).unwrap().any(|e| {
+            let name = e.unwrap().file_name();
+            name.to_string_lossy().starts_with(&base)
+        });
+        assert!(!leftover, "failed export left a staging file behind");
+        std::fs::remove_dir_all(&dir_target).unwrap();
     }
 
     #[test]

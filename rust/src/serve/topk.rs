@@ -1,18 +1,31 @@
-//! Blocked top-k similarity scans over an [`EmbeddingStore`].
+//! Blocked top-k similarity scans over an [`EmbeddingStore`], behind
+//! the [`ScanIndex`] strategy trait.
 //!
-//! The exact path streams the table in cache-sized row blocks, fanning
-//! blocks out across workers through [`pool::parallel_tasks`] — the
-//! same shard-queue primitive the walk engine uses — and keeps one
-//! small per-block candidate buffer, so a scan touches each embedding
-//! row exactly once and allocates O(k) per block.
+//! Two strategies implement the trait:
 //!
-//! The quantized fast path is scalar 8-bit quantization (per-row
-//! min/scale, codes in `u8`): the scan scores `code·code` integer dot
-//! products (4x less memory traffic than f32 rows), keeps an
-//! oversampled candidate pool, and re-ranks the pool with **exact**
-//! f32 scores. Results are approximate only in which rows reach the
-//! pool; the reported scores are always exact. `tests/serve.rs` holds
-//! the recall@10 >= 0.95 property against the exact scan.
+//! - [`ExactScan`] streams the table in cache-sized row blocks, fanning
+//!   blocks out across workers through [`pool::parallel_tasks`] — the
+//!   same shard-queue primitive the walk engine uses — and keeps one
+//!   small per-block candidate buffer, so a scan touches each embedding
+//!   row exactly once and allocates O(k) per block.
+//! - [`QuantizedScan`] is scalar 8-bit quantization (per-row min/scale,
+//!   codes in `u8`): the scan scores `code·code` integer dot products
+//!   (4x less memory traffic than f32 rows), keeps an oversampled
+//!   candidate pool, and re-ranks the pool with **exact** f32 scores.
+//!   Results are approximate only in which rows reach the pool; the
+//!   reported scores are always exact. Codes are stored
+//!   **lane-interleaved per group** (see [`QuantizedTable`]) so the
+//!   candidate scan reads them strictly sequentially. `tests/serve.rs`
+//!   holds the recall@10 >= 0.95 property against the exact scan.
+//!
+//! Callers that pick a strategy at runtime (the query service, the
+//! serving daemon's generations) hold a `Box<dyn ScanIndex>` from
+//! [`build_scan_index`] and never branch on the strategy again.
+//!
+//! Determinism: hits are ordered by `(score desc, node id asc)` using
+//! [`f32::total_cmp`], and blocked selection under that total order is
+//! exact, so results are byte-identical across `threads` and `block`
+//! settings (pinned by `determinism_across_threads_and_blocks` below).
 
 use crate::util::pool;
 
@@ -44,7 +57,7 @@ impl Metric {
     }
 }
 
-/// Tuning knobs for [`TopKIndex`].
+/// Tuning knobs for the scan strategies.
 #[derive(Debug, Clone)]
 pub struct TopKParams {
     /// Rows per scan block (the unit of worker fan-out). 4096 rows of a
@@ -70,22 +83,63 @@ impl Default for TopKParams {
 /// One scored hit: `(node, exact score)`.
 pub type Hit = (u32, f32);
 
-/// Derived scan state over a store: per-row L2 norms (for cosine) and,
-/// optionally, the 8-bit quantized table. Does not borrow the store —
-/// every query passes it back in, so a service can own both.
-pub struct TopKIndex {
-    params: TopKParams,
-    norms: Vec<f32>,
-    quant: Option<QuantizedTable>,
+/// A top-k scan strategy over a store. Implementations do not borrow
+/// the store — every query passes it back in, so a service can own
+/// both — and must be deterministic: the same `(store, query, k,
+/// metric, exclude)` yields byte-identical hits regardless of thread
+/// count or block size.
+pub trait ScanIndex: Send + Sync {
+    /// Strategy name for logs and stats ("exact" | "quantized").
+    fn strategy(&self) -> &'static str;
+
+    fn params(&self) -> &TopKParams;
+
+    /// Top `k` rows by `metric` against `query`, excluding `exclude`
+    /// (the query node itself, usually). Scores are always exact.
+    fn top_k(
+        &self,
+        store: &EmbeddingStore,
+        query: &[f32],
+        k: usize,
+        metric: Metric,
+        exclude: Option<u32>,
+    ) -> Vec<Hit>;
+
+    /// Top `k` neighbours of node `v` (excludes `v` itself).
+    fn top_k_node(&self, store: &EmbeddingStore, v: u32, k: usize, metric: Metric) -> Vec<Hit> {
+        // The row may live in the mmap; copy it out so the scan closure
+        // does not hold two store borrows with different lifetimes.
+        let query: Vec<f32> = store.row(v).to_vec();
+        self.top_k(store, &query, k, metric, Some(v))
+    }
 }
 
-impl TopKIndex {
-    /// Build the exact-scan index (norm pass only).
-    pub fn build(store: &EmbeddingStore, params: TopKParams) -> TopKIndex {
+/// Build the strategy a service asked for, as a trait object.
+pub fn build_scan_index(
+    store: &EmbeddingStore,
+    params: TopKParams,
+    quantized: bool,
+) -> Box<dyn ScanIndex> {
+    if quantized {
+        Box::new(QuantizedScan::build(store, params))
+    } else {
+        Box::new(ExactScan::build(store, params))
+    }
+}
+
+/// Exact blocked scan: per-row L2 norms (for cosine) plus the scan
+/// parameters. The norm pass touches every row once at build time.
+pub struct ExactScan {
+    params: TopKParams,
+    norms: Vec<f32>,
+}
+
+impl ExactScan {
+    pub fn build(store: &EmbeddingStore, params: TopKParams) -> ExactScan {
         let n = store.n();
         let threads = params.threads.max(1);
         let block = params.block.max(1);
-        let n_blocks = n.div_ceil(block.max(1)).max(1);
+        let n_blocks = n.div_ceil(block).max(1);
         let norm_chunks = pool::parallel_tasks(n_blocks, threads, |bi| {
             let lo = bi * block;
             let hi = ((bi + 1) * block).min(n);
@@ -97,31 +151,43 @@ impl TopKIndex {
             out
         });
         let norms = norm_chunks.concat();
-        TopKIndex {
-            params,
-            norms,
-            quant: None,
+        ExactScan { params, norms }
+    }
+
+    #[inline]
+    fn score(
+        &self,
+        store: &EmbeddingStore,
+        query: &[f32],
+        qnorm: f32,
+        v: u32,
+        metric: Metric,
+    ) -> f32 {
+        let d = dot(query, store.row(v));
+        match metric {
+            Metric::Dot => d,
+            Metric::Cosine => {
+                let nn = self.norms[v as usize] * qnorm;
+                if nn == 0.0 {
+                    0.0
+                } else {
+                    d / nn
+                }
+            }
         }
     }
+}
 
-    /// Build the index plus the 8-bit quantized table.
-    pub fn build_quantized(store: &EmbeddingStore, params: TopKParams) -> TopKIndex {
-        let mut idx = TopKIndex::build(store, params);
-        idx.quant = Some(QuantizedTable::build(store));
-        idx
+impl ScanIndex for ExactScan {
+    fn strategy(&self) -> &'static str {
+        "exact"
     }
 
-    pub fn has_quantized(&self) -> bool {
-        self.quant.is_some()
-    }
-
-    pub fn params(&self) -> &TopKParams {
+    fn params(&self) -> &TopKParams {
         &self.params
     }
 
-    /// Exact blocked scan: top `k` rows by `metric` against `query`,
-    /// excluding `exclude` (the query node itself, usually).
-    pub fn top_k(
+    fn top_k(
         &self,
         store: &EmbeddingStore,
         query: &[f32],
@@ -154,19 +220,48 @@ impl TopKIndex {
             });
         merge_topk(per_block, k)
     }
+}
 
-    /// Top `k` neighbours of node `v` (excludes `v` itself).
-    pub fn top_k_node(&self, store: &EmbeddingStore, v: u32, k: usize, metric: Metric) -> Vec<Hit> {
-        // The row may live in the mmap; copy it out so the scan closure
-        // does not hold two store borrows with different lifetimes.
-        let query: Vec<f32> = store.row(v).to_vec();
-        self.top_k(store, &query, k, metric, Some(v))
+/// Quantized candidate scan + exact re-rank. Owns an [`ExactScan`] for
+/// the norms and the re-rank scoring.
+pub struct QuantizedScan {
+    exact: ExactScan,
+    quant: QuantizedTable,
+}
+
+impl QuantizedScan {
+    pub fn build(store: &EmbeddingStore, params: TopKParams) -> QuantizedScan {
+        QuantizedScan::build_with_lanes(store, params, DEFAULT_LANES)
     }
 
-    /// Quantized fast path: integer-dot scan for a `k * oversample`
-    /// candidate pool, then exact re-rank. Falls back to the exact scan
-    /// when no quantized table was built.
-    pub fn top_k_quantized(
+    /// Build with an explicit interleave width (`lanes == 1` is the
+    /// row-major layout; the hotpaths bench compares the two).
+    pub fn build_with_lanes(
+        store: &EmbeddingStore,
+        params: TopKParams,
+        lanes: usize,
+    ) -> QuantizedScan {
+        QuantizedScan {
+            exact: ExactScan::build(store, params),
+            quant: QuantizedTable::build_with_lanes(store, lanes),
+        }
+    }
+
+    pub fn table(&self) -> &QuantizedTable {
+        &self.quant
+    }
+}
+
+impl ScanIndex for QuantizedScan {
+    fn strategy(&self) -> &'static str {
+        "quantized"
+    }
+
+    fn params(&self) -> &TopKParams {
+        &self.exact.params
+    }
+
+    fn top_k(
         &self,
         store: &EmbeddingStore,
         query: &[f32],
@@ -174,35 +269,41 @@ impl TopKIndex {
         metric: Metric,
         exclude: Option<u32>,
     ) -> Vec<Hit> {
-        let quant = match &self.quant {
-            Some(q) => q,
-            None => return self.top_k(store, query, k, metric, exclude),
-        };
         assert_eq!(query.len(), store.dim(), "query dimension mismatch");
         let n = store.n();
         if n == 0 || k == 0 {
             return Vec::new();
         }
-        let pool_k = (k * self.params.oversample.max(1)).max(k).min(n);
-        let cq = quant.encode_query(query);
+        let params = &self.exact.params;
+        let pool_k = (k * params.oversample.max(1)).max(k).min(n);
+        let cq = self.quant.encode_query(query);
         let qnorm = dot(query, query).sqrt();
-        let block = self.params.block.max(1);
+        let lanes = self.quant.lanes();
+        let threads = params.threads.max(1);
+        // Scan blocks aligned to the interleave groups, so every group
+        // is scored by exactly one task and the code reads within a
+        // task are strictly sequential.
+        let block = params.block.max(1).div_ceil(lanes) * lanes;
         let n_blocks = n.div_ceil(block);
-        let per_block: Vec<Vec<Hit>> =
-            pool::parallel_tasks(n_blocks, self.params.threads.max(1), |bi| {
-                let lo = bi * block;
-                let hi = ((bi + 1) * block).min(n);
-                let mut top = TopBuf::new(pool_k);
-                for v in lo..hi {
+        let per_block: Vec<Vec<Hit>> = pool::parallel_tasks(n_blocks, threads, |bi| {
+            let lo = bi * block;
+            let hi = ((bi + 1) * block).min(n);
+            let mut top = TopBuf::new(pool_k);
+            let mut code_dots = vec![0u32; lanes];
+            let mut gs = lo;
+            while gs < hi {
+                self.quant.code_dots_group(gs, &cq, &mut code_dots);
+                let ge = (gs + lanes).min(hi);
+                for (l, v) in (gs..ge).enumerate() {
                     let v = v as u32;
                     if exclude == Some(v) {
                         continue;
                     }
-                    let approx = quant.approx_dot(v, &cq);
+                    let approx = self.quant.approx_from_code_dot(v, code_dots[l], &cq);
                     let s = match metric {
                         Metric::Dot => approx,
                         Metric::Cosine => {
-                            let d = self.norms[v as usize] * qnorm;
+                            let d = self.exact.norms[v as usize] * qnorm;
                             if d == 0.0 {
                                 0.0
                             } else {
@@ -212,52 +313,19 @@ impl TopKIndex {
                     };
                     top.offer(v, s);
                 }
-                top.into_sorted()
-            });
+                gs += lanes;
+            }
+            top.into_sorted()
+        });
         let candidates = merge_topk(per_block, pool_k);
         // Exact re-rank of the pool: scores reported are never approximate.
         let mut exact: Vec<Hit> = candidates
             .into_iter()
-            .map(|(v, _)| (v, self.score(store, query, qnorm, v, metric)))
+            .map(|(v, _)| (v, self.exact.score(store, query, qnorm, v, metric)))
             .collect();
         sort_hits(&mut exact);
         exact.truncate(k);
         exact
-    }
-
-    /// Quantized neighbours of node `v` (exact-re-ranked).
-    pub fn top_k_node_quantized(
-        &self,
-        store: &EmbeddingStore,
-        v: u32,
-        k: usize,
-        metric: Metric,
-    ) -> Vec<Hit> {
-        let query: Vec<f32> = store.row(v).to_vec();
-        self.top_k_quantized(store, &query, k, metric, Some(v))
-    }
-
-    #[inline]
-    fn score(
-        &self,
-        store: &EmbeddingStore,
-        query: &[f32],
-        qnorm: f32,
-        v: u32,
-        metric: Metric,
-    ) -> f32 {
-        let d = dot(query, store.row(v));
-        match metric {
-            Metric::Dot => d,
-            Metric::Cosine => {
-                let nn = self.norms[v as usize] * qnorm;
-                if nn == 0.0 {
-                    0.0
-                } else {
-                    d / nn
-                }
-            }
-        }
     }
 }
 
@@ -266,14 +334,12 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
     crate::embed::matrix::dot(a, b)
 }
 
-/// Deterministic hit order: score descending, node id ascending on ties
-/// — identical for the mmap and in-memory views of the same artifact.
+/// Deterministic hit order: score descending (via [`f32::total_cmp`],
+/// so even NaN scores order reproducibly), node id ascending on ties —
+/// identical for the mmap and in-memory views of the same artifact and
+/// across every `threads`/`block` setting.
 fn sort_hits(hits: &mut [Hit]) {
-    hits.sort_by(|a, b| {
-        b.1.partial_cmp(&a.1)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then_with(|| a.0.cmp(&b.0))
-    });
+    hits.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
 }
 
 fn merge_topk(per_block: Vec<Vec<Hit>>, k: usize) -> Vec<Hit> {
@@ -286,6 +352,10 @@ fn merge_topk(per_block: Vec<Vec<Hit>>, k: usize) -> Vec<Hit> {
 /// Bounded candidate buffer: keeps the best `k` of everything offered.
 /// Plain vec + threshold — for the k's a serving tier uses (10..1000)
 /// this beats a heap on branch predictability.
+///
+/// Tie discipline: rows are offered in ascending id order, so a
+/// candidate tying the floor always loses under `(score desc, id asc)`
+/// — dropping it keeps blocked selection exact under the total order.
 struct TopBuf {
     k: usize,
     hits: Vec<Hit>,
@@ -326,6 +396,11 @@ impl TopBuf {
     }
 }
 
+/// Default interleave width: 16 rows per group keeps the group chunk
+/// (`16 * dim` bytes) inside L1 for serving-sized dims while giving the
+/// compiler 16 independent accumulators to vectorize over.
+pub const DEFAULT_LANES: usize = 16;
+
 /// Scalar 8-bit quantization of the whole table: per-row `min` and
 /// `scale` with codes `c` such that `x ~= min + scale * c`.
 ///
@@ -338,11 +413,21 @@ impl TopBuf {
 ///
 /// `sum(c)` is precomputed per row, `sum(d)` once per query, and the
 /// hot loop is a pure `u8 x u8 -> u32` multiply-accumulate.
+///
+/// Layout: codes are stored **lane-interleaved** in groups of `lanes`
+/// rows. Group `g` owns rows `[g*lanes, (g+1)*lanes)` as a contiguous
+/// `lanes * dim` chunk, dimension-major: byte `g*lanes*dim + d*lanes +
+/// l` is dimension `d` of row `g*lanes + l`. Scoring a whole group
+/// against a query therefore reads the chunk front to back — strictly
+/// sequential — while keeping `lanes` independent accumulators hot
+/// (`lanes == 1` degenerates to the row-major layout). Rows past `n`
+/// in the final group are zero padding and never scored.
 pub struct QuantizedTable {
     dim: usize,
-    codes: Vec<u8>,     // n * dim
-    row_min: Vec<f32>,  // n
-    row_scale: Vec<f32>, // n
+    lanes: usize,
+    codes: Vec<u8>, // ceil(n/lanes) groups of lanes*dim bytes
+    row_min: Vec<f32>,      // n
+    row_scale: Vec<f32>,    // n
     row_code_sum: Vec<u32>, // n
 }
 
@@ -380,25 +465,42 @@ fn quantize_into(row: &[f32], codes: &mut [u8]) -> (f32, f32, u32) {
 
 impl QuantizedTable {
     pub fn build(store: &EmbeddingStore) -> QuantizedTable {
+        QuantizedTable::build_with_lanes(store, DEFAULT_LANES)
+    }
+
+    pub fn build_with_lanes(store: &EmbeddingStore, lanes: usize) -> QuantizedTable {
         let (n, dim) = (store.n(), store.dim());
-        let mut codes = vec![0u8; n * dim];
+        let lanes = lanes.max(1);
+        let groups = n.div_ceil(lanes);
+        let mut codes = vec![0u8; groups * lanes * dim];
         let mut row_min = vec![0f32; n];
         let mut row_scale = vec![0f32; n];
         let mut row_code_sum = vec![0u32; n];
+        let mut scratch = vec![0u8; dim];
         for v in 0..n {
-            let (lo, scale, sum) =
-                quantize_into(store.row(v as u32), &mut codes[v * dim..(v + 1) * dim]);
+            let (lo, scale, sum) = quantize_into(store.row(v as u32), &mut scratch);
+            let base = (v / lanes) * lanes * dim;
+            let lane = v % lanes;
+            for (d, &c) in scratch.iter().enumerate() {
+                codes[base + d * lanes + lane] = c;
+            }
             row_min[v] = lo;
             row_scale[v] = scale;
             row_code_sum[v] = sum;
         }
         QuantizedTable {
             dim,
+            lanes,
             codes,
             row_min,
             row_scale,
             row_code_sum,
         }
+    }
+
+    /// Interleave width (rows per group; 1 = row-major).
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 
     /// Bytes the quantized table keeps resident (vs `4x` for f32 rows).
@@ -418,20 +520,47 @@ impl QuantizedTable {
         }
     }
 
-    /// Approximate `row(v) . query` from codes only (no f32 row touch).
-    #[inline]
-    pub fn approx_dot(&self, v: u32, q: &EncodedQuery) -> f32 {
-        let v = v as usize;
-        let row = &self.codes[v * self.dim..(v + 1) * self.dim];
-        let mut acc = 0u32;
-        for (&c, &d) in row.iter().zip(&q.codes) {
-            acc += c as u32 * d as u32;
+    /// `sum(c*d)` for every row of the group starting at `group_start`
+    /// (must be a multiple of `lanes`), written into `out[..lanes]`.
+    /// One strictly sequential pass over the group's code chunk.
+    pub fn code_dots_group(&self, group_start: usize, q: &EncodedQuery, out: &mut [u32]) {
+        debug_assert_eq!(group_start % self.lanes, 0);
+        debug_assert!(out.len() >= self.lanes);
+        let base = group_start * self.dim; // == group index * lanes * dim
+        out[..self.lanes].fill(0);
+        for (d, &qd) in q.codes.iter().enumerate() {
+            let qd = qd as u32;
+            let lane_codes = &self.codes[base + d * self.lanes..base + (d + 1) * self.lanes];
+            for (acc, &c) in out[..self.lanes].iter_mut().zip(lane_codes) {
+                *acc += qd * c as u32;
+            }
         }
+    }
+
+    /// Expand a precomputed `sum(c*d)` into the approximate dot.
+    #[inline]
+    pub fn approx_from_code_dot(&self, v: u32, code_dot: u32, q: &EncodedQuery) -> f32 {
+        let v = v as usize;
         let (rmin, rs) = (self.row_min[v], self.row_scale[v]);
         self.dim as f32 * rmin * q.min
             + rmin * q.scale * q.code_sum as f32
             + q.min * rs * self.row_code_sum[v] as f32
-            + rs * q.scale * acc as f32
+            + rs * q.scale * code_dot as f32
+    }
+
+    /// Approximate `row(v) . query` from codes only (no f32 row touch).
+    /// Single-row strided read — the scan hot path uses
+    /// [`Self::code_dots_group`] instead.
+    #[inline]
+    pub fn approx_dot(&self, v: u32, q: &EncodedQuery) -> f32 {
+        let vi = v as usize;
+        let base = (vi / self.lanes) * self.lanes * self.dim;
+        let lane = vi % self.lanes;
+        let mut acc = 0u32;
+        for (d, &qd) in q.codes.iter().enumerate() {
+            acc += self.codes[base + d * self.lanes + lane] as u32 * qd as u32;
+        }
+        self.approx_from_code_dot(v, acc, q)
     }
 }
 
@@ -443,6 +572,21 @@ mod tests {
     fn random_store(n: usize, dim: usize, seed: u64) -> EmbeddingStore {
         let mut rng = Rng::new(seed);
         let vecs: Vec<f32> = (0..n * dim).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        EmbeddingStore::from_parts(vecs, n, dim, vec![0; n])
+    }
+
+    /// A store with heavy exact score ties: every row is one of `k`
+    /// distinct prototype vectors.
+    fn tied_store(n: usize, dim: usize, prototypes: usize, seed: u64) -> EmbeddingStore {
+        let mut rng = Rng::new(seed);
+        let protos: Vec<f32> = (0..prototypes * dim)
+            .map(|_| rng.gen_f32() * 2.0 - 1.0)
+            .collect();
+        let mut vecs = vec![0f32; n * dim];
+        for v in 0..n {
+            let p = rng.gen_index(prototypes);
+            vecs[v * dim..(v + 1) * dim].copy_from_slice(&protos[p * dim..(p + 1) * dim]);
+        }
         EmbeddingStore::from_parts(vecs, n, dim, vec![0; n])
     }
 
@@ -477,7 +621,7 @@ mod tests {
     fn exact_scan_matches_brute_force() {
         let store = random_store(300, 12, 3);
         // Block smaller than n so the merge path is exercised.
-        let idx = TopKIndex::build(
+        let idx = ExactScan::build(
             &store,
             TopKParams {
                 block: 64,
@@ -497,11 +641,70 @@ mod tests {
     #[test]
     fn excluded_node_never_returned_and_k_clamps() {
         let store = random_store(20, 4, 5);
-        let idx = TopKIndex::build(&store, TopKParams::default());
+        let idx = ExactScan::build(&store, TopKParams::default());
         let hits = idx.top_k_node(&store, 3, 50, Metric::Cosine);
         assert_eq!(hits.len(), 19); // n - 1, despite k = 50
         assert!(hits.iter().all(|&(v, _)| v != 3));
         assert!(hits.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn determinism_across_threads_and_blocks() {
+        // Heavy ties (20 prototype rows over 300 nodes) are the case
+        // where sloppy tie-breaking would let `threads` or `block`
+        // leak into the answer; results must be byte-identical to the
+        // single-thread whole-table reference for every combination.
+        let store = tied_store(300, 8, 20, 7);
+        let reference = ExactScan::build(
+            &store,
+            TopKParams {
+                block: 300,
+                threads: 1,
+                ..Default::default()
+            },
+        );
+        let reference_q = QuantizedScan::build(
+            &store,
+            TopKParams {
+                block: 300,
+                threads: 1,
+                ..Default::default()
+            },
+        );
+        for metric in [Metric::Dot, Metric::Cosine] {
+            for q in [0u32, 33, 299] {
+                let want = reference.top_k_node(&store, q, 12, metric);
+                let want_q = reference_q.top_k_node(&store, q, 12, metric);
+                for threads in [1usize, 2, 8] {
+                    for block in [7usize, 64, 4096] {
+                        let params = TopKParams {
+                            block,
+                            threads,
+                            ..Default::default()
+                        };
+                        let ctx = format!(
+                            "threads={threads}, block={block}, metric={metric:?}, q={q}"
+                        );
+                        let idx = ExactScan::build(&store, params.clone());
+                        let got = idx.top_k_node(&store, q, 12, metric);
+                        assert_eq!(got, want, "exact differs ({ctx})");
+                        let idx_q = QuantizedScan::build(&store, params);
+                        let got_q = idx_q.top_k_node(&store, q, 12, metric);
+                        assert_eq!(got_q, want_q, "quantized differs ({ctx})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tie_scores_break_by_node_id() {
+        // Four identical rows: every hit ties, so order must be id asc.
+        let store = tied_store(40, 6, 1, 9);
+        let idx = ExactScan::build(&store, TopKParams::default());
+        let hits = idx.top_k_node(&store, 5, 10, Metric::Dot);
+        let ids: Vec<u32> = hits.iter().map(|h| h.0).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 6, 7, 8, 9, 10]);
     }
 
     #[test]
@@ -524,18 +727,64 @@ mod tests {
     }
 
     #[test]
+    fn interleaved_layout_matches_row_major() {
+        // Same codes, same integer sums — the interleave is pure
+        // layout, so every lane width must agree bit for bit, and the
+        // group path must agree with the strided single-row path.
+        let store = random_store(123, 24, 4); // n deliberately not a lane multiple
+        let mut rng = Rng::new(2);
+        let query: Vec<f32> = (0..24).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        let row_major = QuantizedTable::build_with_lanes(&store, 1);
+        for lanes in [1usize, 4, 16] {
+            let t = QuantizedTable::build_with_lanes(&store, lanes);
+            let cq = t.encode_query(&query);
+            let cq_rm = row_major.encode_query(&query);
+            let mut dots = vec![0u32; lanes];
+            let mut gs = 0usize;
+            while gs < 123 {
+                t.code_dots_group(gs, &cq, &mut dots);
+                for l in 0..lanes.min(123 - gs) {
+                    let v = (gs + l) as u32;
+                    let via_group = t.approx_from_code_dot(v, dots[l], &cq);
+                    assert_eq!(via_group.to_bits(), t.approx_dot(v, &cq).to_bits());
+                    assert_eq!(via_group.to_bits(), row_major.approx_dot(v, &cq_rm).to_bits());
+                }
+                gs += lanes;
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_scan_results_match_row_major_scan() {
+        let store = random_store(500, 16, 12);
+        let params = TopKParams {
+            block: 60, // deliberately not a lane multiple: scan must realign
+            threads: 3,
+            oversample: 8,
+        };
+        let rm = QuantizedScan::build_with_lanes(&store, params.clone(), 1);
+        let il = QuantizedScan::build_with_lanes(&store, params, 16);
+        for q in [0u32, 250, 499] {
+            assert_eq!(
+                rm.top_k_node(&store, q, 10, Metric::Cosine),
+                il.top_k_node(&store, q, 10, Metric::Cosine),
+                "lane layouts disagree at query {q}"
+            );
+        }
+    }
+
+    #[test]
     fn quantized_path_reports_exact_scores() {
         let store = random_store(200, 8, 11);
-        let idx = TopKIndex::build_quantized(
-            &store,
-            TopKParams {
-                block: 32,
-                threads: 2,
-                oversample: 8,
-            },
-        );
-        let exact = idx.top_k_node(&store, 0, 5, Metric::Dot);
-        let fast = idx.top_k_node_quantized(&store, 0, 5, Metric::Dot);
+        let params = TopKParams {
+            block: 32,
+            threads: 2,
+            oversample: 8,
+        };
+        let exact_idx = ExactScan::build(&store, params.clone());
+        let idx = QuantizedScan::build(&store, params);
+        let exact = exact_idx.top_k_node(&store, 0, 5, Metric::Dot);
+        let fast = idx.top_k_node(&store, 0, 5, Metric::Dot);
         // Scores of any node the fast path returns must equal the exact
         // scan's score for that node (re-rank is exact by construction).
         for &(v, s) in &fast {
@@ -558,5 +807,24 @@ mod tests {
             let approx = quant.approx_dot(v, &cq);
             assert!((approx - 1.0).abs() < 1e-5, "approx {approx}");
         }
+    }
+
+    #[test]
+    fn trait_object_dispatch_matches_concrete() {
+        let store = random_store(150, 8, 21);
+        let params = TopKParams {
+            block: 32,
+            threads: 2,
+            oversample: 8,
+        };
+        let exact: Box<dyn ScanIndex> = build_scan_index(&store, params.clone(), false);
+        let quant: Box<dyn ScanIndex> = build_scan_index(&store, params.clone(), true);
+        assert_eq!(exact.strategy(), "exact");
+        assert_eq!(quant.strategy(), "quantized");
+        let concrete = ExactScan::build(&store, params);
+        assert_eq!(
+            exact.top_k_node(&store, 3, 7, Metric::Cosine),
+            concrete.top_k_node(&store, 3, 7, Metric::Cosine)
+        );
     }
 }

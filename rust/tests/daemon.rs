@@ -1,0 +1,287 @@
+//! Integration: the persistent serving daemon (ISSUE 4 / DESIGN.md
+//! §Serving).
+//!
+//! 1. Protocol: `Request`/`Response` and the control verbs round-trip
+//!    through the wire format bit-exactly; malformed lines are
+//!    rejected without killing the connection.
+//! 2. Hot-swap: a daemon serving generation N answers a second
+//!    client's queries from generation N+1 after `swap`, the watched
+//!    path picks up re-exports without any verb, and concurrent
+//!    clients see no failed or blocked requests during transitions.
+//! 3. Lifecycle: `stats` reports the live generation, `shutdown` stops
+//!    the loop, removes the socket and returns clean counters.
+
+#![cfg(unix)]
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use kcore_embed::serve::protocol::{encode_response, parse_response};
+use kcore_embed::serve::{
+    client_exchange, notify_swap, run_server, write_store, ClientMsg, EmbeddingStore, ExactScan,
+    GenerationOpts, GenerationStore, Metric, Request, Response, ScanIndex, ServerOpts, ServerStats,
+    TopKParams,
+};
+use kcore_embed::util::proptest::{ensure, forall};
+use kcore_embed::util::rng::Rng;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("kcore_embed_daemon_{name}_{}", std::process::id()));
+    p
+}
+
+fn write_artifact(path: &Path, n: usize, dim: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let vecs: Vec<f32> = (0..n * dim).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+    write_store(path, &vecs, n, dim, None).unwrap();
+}
+
+/// The wire line the daemon must answer `nn node k` with, computed
+/// independently through the exact scan over a fresh mmap of `path`.
+fn expected_nn(path: &Path, node: u32, k: usize) -> String {
+    let store = EmbeddingStore::open_mmap(path).unwrap();
+    let idx = ExactScan::build(&store, TopKParams::default());
+    let hits = idx.top_k_node(&store, node, k, Metric::Cosine);
+    encode_response(&Response::Neighbors { node, hits })
+}
+
+fn start_daemon(store: &Path, sock: PathBuf) -> thread::JoinHandle<ServerStats> {
+    let gens = GenerationStore::open(store, None, GenerationOpts::default()).unwrap();
+    let gens = Arc::new(gens);
+    thread::spawn(move || run_server(gens, &ServerOpts::new(sock)).unwrap())
+}
+
+fn wait_for_socket(sock: &Path) {
+    for _ in 0..500 {
+        if sock.exists() {
+            return;
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    panic!("daemon socket {} never appeared", sock.display());
+}
+
+fn lines(strs: &[&str]) -> Vec<String> {
+    strs.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn client_messages_round_trip() {
+    forall("client message round trip", 40, 0xC11E, |ctx| {
+        let msg = match ctx.rng.gen_index(5) {
+            0 => ClientMsg::Query(Request::Neighbors {
+                node: ctx.rng.gen_index(1_000_000) as u32,
+                k: ctx.rng.gen_index(1000),
+            }),
+            1 => ClientMsg::Query(Request::EdgeScore {
+                u: ctx.rng.gen_index(1_000_000) as u32,
+                v: ctx.rng.gen_index(1_000_000) as u32,
+            }),
+            2 => ClientMsg::Swap(Some(PathBuf::from(format!(
+                "/tmp/gen_{}.kce",
+                ctx.rng.gen_index(100)
+            )))),
+            3 => ClientMsg::Stats,
+            _ => ClientMsg::Shutdown,
+        };
+        let parsed = ClientMsg::parse(&msg.encode())
+            .map_err(|e| format!("{e:#}"))?
+            .ok_or_else(|| "encoded message parsed as blank".to_string())?;
+        ensure(parsed == msg, || format!("{msg:?} round-tripped to {parsed:?}"))
+    });
+}
+
+#[test]
+fn responses_round_trip_bit_exactly() {
+    forall("response round trip", 60, 0x0E5B, |ctx| {
+        let resp = if ctx.rng.gen_index(2) == 0 {
+            let n_hits = ctx.rng.gen_index(6);
+            let hits: Vec<(u32, f32)> = (0..n_hits)
+                .map(|i| {
+                    let mag = 10f32.powi(ctx.rng.gen_index(9) as i32 - 4);
+                    (i as u32 * 3 + 1, (ctx.rng.gen_f32() * 2.0 - 1.0) * mag)
+                })
+                .collect();
+            Response::Neighbors {
+                node: ctx.rng.gen_index(10_000) as u32,
+                hits,
+            }
+        } else {
+            Response::EdgeScore {
+                u: ctx.rng.gen_index(10_000) as u32,
+                v: ctx.rng.gen_index(10_000) as u32,
+                p: ctx.rng.gen_f32() as f64,
+            }
+        };
+        let line = encode_response(&resp);
+        let back = parse_response(&line).map_err(|e| format!("{e:#}"))?;
+        ensure(back == resp, || format!("{resp:?} -> {line:?} -> {back:?}"))
+    });
+}
+
+#[test]
+fn malformed_lines_rejected_by_parser() {
+    for bad in ["stats now", "nn 1", "nn a 5", "edge 1", "huh"] {
+        assert!(ClientMsg::parse(bad).is_err(), "accepted {bad:?}");
+    }
+    for bad in ["", "nope", "nn x", "nn 3 1:notafloat"] {
+        assert!(parse_response(bad).is_err(), "accepted response {bad:?}");
+    }
+}
+
+#[test]
+fn daemon_hot_swaps_and_shuts_down_cleanly() {
+    let a = tmp("e2e_a.kce");
+    let b = tmp("e2e_b.kce");
+    let sock = tmp("e2e.sock");
+    write_artifact(&a, 80, 8, 1);
+    write_artifact(&b, 80, 8, 2);
+    let expected_a0 = expected_nn(&a, 0, 5);
+    let expected_a1 = expected_nn(&a, 1, 5);
+    let expected_b0 = expected_nn(&b, 0, 5);
+    assert_ne!(expected_a0, expected_b0, "artifacts too similar to test a swap");
+
+    let daemon = start_daemon(&a, sock.clone());
+    wait_for_socket(&sock);
+
+    // One connection, two batches split by a blank-line flush.
+    let replies = client_exchange(&sock, &lines(&["nn 0 5", "", "nn 1 5"])).unwrap();
+    assert_eq!(replies, vec![expected_a0.clone(), expected_a1]);
+
+    // A malformed line answers `err` and keeps the connection usable.
+    let replies = client_exchange(&sock, &lines(&["bogus", "nn 0 5"])).unwrap();
+    assert_eq!(replies.len(), 2);
+    assert!(replies[0].starts_with("err "), "{}", replies[0]);
+    assert_eq!(replies[1], expected_a0);
+
+    // Out-of-range requests fail per-line, not per-connection.
+    let replies = client_exchange(&sock, &lines(&["nn 999 3"])).unwrap();
+    assert!(replies[0].starts_with("err "), "{}", replies[0]);
+
+    // Hot-swap to artifact B (notify_swap canonicalizes the path).
+    let ack = notify_swap(&sock, &b).unwrap();
+    assert!(ack.starts_with("ok swap gen 2 store 80x8 exact"), "{ack}");
+
+    // A second client now answers from generation 2.
+    let replies = client_exchange(&sock, &lines(&["nn 0 5"])).unwrap();
+    assert_eq!(replies, vec![expected_b0]);
+
+    let replies = client_exchange(&sock, &lines(&["stats"])).unwrap();
+    assert!(replies[0].starts_with("stats gen 2"), "{}", replies[0]);
+    assert!(replies[0].contains("swaps 1"), "{}", replies[0]);
+
+    let replies = client_exchange(&sock, &lines(&["shutdown"])).unwrap();
+    assert_eq!(replies, vec!["ok shutdown".to_string()]);
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.swaps, 1);
+    // nn x5 (4 in-range + 1 out-of-range) across the exchanges above.
+    assert_eq!(stats.requests, 5);
+    assert!(stats.connections >= 6);
+    assert!(!sock.exists(), "socket file not removed on shutdown");
+
+    std::fs::remove_file(&a).unwrap();
+    std::fs::remove_file(&b).unwrap();
+}
+
+#[test]
+fn watched_reexport_is_picked_up_without_a_verb() {
+    let p = tmp("watch.kce");
+    let sock = tmp("watch.sock");
+    write_artifact(&p, 50, 6, 3);
+    let expected_old = expected_nn(&p, 2, 4);
+
+    let daemon = start_daemon(&p, sock.clone());
+    wait_for_socket(&sock);
+    let replies = client_exchange(&sock, &lines(&["nn 2 4"])).unwrap();
+    assert_eq!(replies, vec![expected_old.clone()]);
+
+    // Re-export over the watched path (atomic rename inside): the next
+    // accepted connection reloads before answering.
+    write_artifact(&p, 50, 6, 4);
+    let expected_new = expected_nn(&p, 2, 4);
+    assert_ne!(expected_old, expected_new);
+    let replies = client_exchange(&sock, &lines(&["nn 2 4"])).unwrap();
+    assert_eq!(replies, vec![expected_new]);
+
+    let replies = client_exchange(&sock, &lines(&["stats"])).unwrap();
+    assert!(replies[0].starts_with("stats gen 2"), "{}", replies[0]);
+    client_exchange(&sock, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.swaps, 1);
+    std::fs::remove_file(&p).unwrap();
+}
+
+#[test]
+fn concurrent_clients_never_fail_or_block_across_swaps() {
+    let a = tmp("conc_a.kce");
+    let b = tmp("conc_b.kce");
+    let sock = tmp("conc.sock");
+    let (n, dim, k) = (60usize, 6usize, 4usize);
+    write_artifact(&a, n, dim, 5);
+    write_artifact(&b, n, dim, 6);
+    // Every answer must match one of the two generations exactly.
+    let expected_a: Vec<String> = (0..n as u32).map(|v| expected_nn(&a, v, k)).collect();
+    let expected_b: Vec<String> = (0..n as u32).map(|v| expected_nn(&b, v, k)).collect();
+
+    let daemon = start_daemon(&a, sock.clone());
+    wait_for_socket(&sock);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for w in 0..4usize {
+        let sock = sock.clone();
+        let stop = Arc::clone(&stop);
+        let expected_a = expected_a.clone();
+        let expected_b = expected_b.clone();
+        workers.push(thread::spawn(move || -> (u64, Vec<String>) {
+            let mut ok = 0u64;
+            let mut failures = Vec::new();
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let node = (w * 17 + i * 7) % n;
+                i += 1;
+                let sent = format!("nn {node} {k}");
+                match client_exchange(&sock, std::slice::from_ref(&sent)) {
+                    Err(e) => failures.push(format!("exchange failed: {e:#}")),
+                    Ok(replies) => {
+                        let matches_either = replies.len() == 1
+                            && (replies[0] == expected_a[node] || replies[0] == expected_b[node]);
+                        if matches_either {
+                            ok += 1;
+                        } else {
+                            failures.push(format!("unexpected reply set {replies:?}"));
+                        }
+                    }
+                }
+            }
+            (ok, failures)
+        }));
+    }
+
+    // Swap back and forth while the clients hammer the socket.
+    for round in 0..6 {
+        thread::sleep(Duration::from_millis(30));
+        let target = if round % 2 == 0 { &b } else { &a };
+        let ack = notify_swap(&sock, target).unwrap();
+        assert!(ack.starts_with("ok swap gen"), "{ack}");
+    }
+    thread::sleep(Duration::from_millis(30));
+    stop.store(true, Ordering::Relaxed);
+    let mut total_ok = 0u64;
+    for wkr in workers {
+        let (ok, failures) = wkr.join().unwrap();
+        assert!(failures.is_empty(), "client failures during swaps: {failures:?}");
+        assert!(ok > 0, "a client never completed a request");
+        total_ok += ok;
+    }
+    client_exchange(&sock, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.swaps, 6);
+    assert_eq!(stats.requests, total_ok);
+    std::fs::remove_file(&a).unwrap();
+    std::fs::remove_file(&b).unwrap();
+}

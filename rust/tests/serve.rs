@@ -13,8 +13,8 @@
 use kcore_embed::coordinator::{run_pipeline, Backend, PipelineConfig};
 use kcore_embed::graph::generators;
 use kcore_embed::serve::{
-    write_store, EmbeddingStore, Metric, QueryService, Request, Response, ServeOpts, TopKIndex,
-    TopKParams,
+    build_scan_index, write_store, EmbeddingStore, ExactScan, Metric, QuantizedScan, QueryService,
+    Request, Response, ScanIndex, ServeOpts, TopKParams,
 };
 use kcore_embed::util::proptest::{ensure, forall};
 use kcore_embed::util::rng::Rng;
@@ -60,7 +60,7 @@ fn write_then_mmap_load_is_byte_identical() {
 }
 
 #[test]
-fn mmap_and_in_memory_views_answer_identically() {
+fn mmap_and_in_memory_views_answer_identically_through_scan_index() {
     let (n, dim) = (400, 16);
     let mut rng = Rng::new(42);
     let (vecs, cores) = random_table(n, dim, &mut rng);
@@ -74,31 +74,39 @@ fn mmap_and_in_memory_views_answer_identically() {
         threads: 4,
         ..Default::default()
     };
-    let idx_mm = TopKIndex::build_quantized(&mm, params.clone());
-    let idx_im = TopKIndex::build_quantized(&im, params);
-    for metric in [Metric::Dot, Metric::Cosine] {
-        for q in [0u32, 57, 399] {
-            let a = idx_mm.top_k_node(&mm, q, 10, metric);
-            let b = idx_im.top_k_node(&im, q, 10, metric);
-            assert_eq!(a, b, "exact scan differs (metric {metric:?}, query {q})");
-            let aq = idx_mm.top_k_node_quantized(&mm, q, 10, metric);
-            let bq = idx_im.top_k_node_quantized(&im, q, 10, metric);
-            assert_eq!(
-                aq, bq,
-                "quantized scan differs (metric {metric:?}, query {q})"
-            );
+    // Both strategies as trait objects — the shape QueryService and
+    // the daemon's generations actually hold them in.
+    for quantized in [false, true] {
+        let idx_mm: Box<dyn ScanIndex> = build_scan_index(&mm, params.clone(), quantized);
+        let idx_im: Box<dyn ScanIndex> = build_scan_index(&im, params.clone(), quantized);
+        assert_eq!(idx_mm.strategy(), idx_im.strategy());
+        for metric in [Metric::Dot, Metric::Cosine] {
+            for q in [0u32, 57, 399] {
+                let a = idx_mm.top_k_node(&mm, q, 10, metric);
+                let b = idx_im.top_k_node(&im, q, 10, metric);
+                assert_eq!(
+                    a, b,
+                    "{} scan differs (metric {metric:?}, query {q})",
+                    idx_mm.strategy()
+                );
+            }
         }
     }
-    drop((idx_mm, idx_im, mm, im));
+    drop((mm, im));
     std::fs::remove_file(&path).unwrap();
 }
 
 /// recall@10 of the quantized path for `queries` nodes, averaged.
-fn avg_recall_at_10(store: &EmbeddingStore, idx: &TopKIndex, queries: &[u32]) -> f64 {
+fn avg_recall_at_10(
+    store: &EmbeddingStore,
+    exact_idx: &ExactScan,
+    fast_idx: &QuantizedScan,
+    queries: &[u32],
+) -> f64 {
     let mut total = 0f64;
     for &q in queries {
-        let exact = idx.top_k_node(store, q, 10, Metric::Cosine);
-        let fast = idx.top_k_node_quantized(store, q, 10, Metric::Cosine);
+        let exact = exact_idx.top_k_node(store, q, 10, Metric::Cosine);
+        let fast = fast_idx.top_k_node(store, q, 10, Metric::Cosine);
         let exact_ids: std::collections::HashSet<u32> =
             exact.iter().map(|h| h.0).collect();
         let hit = fast.iter().filter(|h| exact_ids.contains(&h.0)).count();
@@ -132,16 +140,15 @@ fn quantized_recall_property_on_clustered_tables() {
             }
         }
         let store = EmbeddingStore::from_parts(vecs, n, dim, vec![0; n]);
-        let idx = TopKIndex::build_quantized(
-            &store,
-            TopKParams {
-                block: 128,
-                threads: 2,
-                oversample: 8,
-            },
-        );
+        let params = TopKParams {
+            block: 128,
+            threads: 2,
+            oversample: 8,
+        };
+        let exact_idx = ExactScan::build(&store, params.clone());
+        let fast_idx = QuantizedScan::build(&store, params);
         let queries: Vec<u32> = (0..n as u32).step_by((n / 20).max(1)).collect();
-        let recall = avg_recall_at_10(&store, &idx, &queries);
+        let recall = avg_recall_at_10(&store, &exact_idx, &fast_idx, &queries);
         ensure(recall >= 0.95, || {
             format!("recall@10 {recall} < 0.95 (n={n}, dim={dim}, clusters={n_clusters})")
         })
@@ -178,11 +185,12 @@ fn quantized_recall_on_trained_benchmark_graph() {
     )
     .unwrap();
     let store = EmbeddingStore::open_mmap(&path).unwrap();
-    let idx = TopKIndex::build_quantized(&store, TopKParams::default());
+    let exact_idx = ExactScan::build(&store, TopKParams::default());
+    let fast_idx = QuantizedScan::build(&store, TopKParams::default());
     let queries: Vec<u32> = (0..300u32).step_by(3).collect();
-    let recall = avg_recall_at_10(&store, &idx, &queries);
+    let recall = avg_recall_at_10(&store, &exact_idx, &fast_idx, &queries);
     assert!(recall >= 0.95, "trained-embedding recall@10 {recall} < 0.95");
-    drop((idx, store));
+    drop((exact_idx, fast_idx, store));
     std::fs::remove_file(&path).unwrap();
 }
 
