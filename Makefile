@@ -1,6 +1,6 @@
 # Convenience targets; everything also works as plain cargo/python calls.
 
-.PHONY: build test bench artifacts smoke
+.PHONY: build test bench bench-train bench-train-quick artifacts smoke
 
 build:
 	cd rust && cargo build --release
@@ -10,6 +10,16 @@ test:
 
 bench:
 	cd rust && cargo bench
+
+# SGNS trainer benches only: fused kernels vs the scalar/atomic
+# baselines, summary written to BENCH_train.json at the repo root
+# (DESIGN.md §Training). The -quick variant is the CI smoke profile:
+# tiny corpus, one timed iteration, same JSON schema.
+bench-train:
+	cd rust && cargo bench --bench hotpaths -- --train-only --json ../BENCH_train.json
+
+bench-train-quick:
+	cd rust && cargo bench --bench hotpaths -- --train-only --quick --json ../BENCH_train.json
 
 # AOT-compile the PJRT HLO artifacts (requires the python toolchain;
 # rust falls back to --backend native without them).

@@ -3,23 +3,90 @@
 //! are visible without running whole experiments.
 //!
 //! harness = false (hand-rolled timing: warmup + repeated runs, report
-//! best and mean — criterion is unavailable offline).
+//! best and mean — criterion is unavailable offline). Each bench also
+//! prints a single-line JSON twin of its human-readable line (the
+//! bench-harness idiom: one JSON object per line, greppable from logs).
+//!
+//! Args (after `cargo bench --bench hotpaths --`):
+//!   --train-only   run only the SGNS trainer benches
+//!   --quick        smoke profile (small corpus, one timed iter) for CI
+//!   --json PATH    write the train-bench summary object to PATH
+//!                  (`make bench-train` writes BENCH_train.json)
+//!
+//! The train section benches the fused-kernel trainers against the
+//! pre-kernel baselines kept verbatim below (scalar serial; per-element
+//! atomic hogwild), so the speedups recorded in BENCH_train.json are
+//! measured against real code, not a guess (DESIGN.md §Training).
 
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering::Relaxed};
 use std::time::Instant;
 
 use kcore_embed::cores::core_decomposition;
-use kcore_embed::embed::{batches::SgnsParams, native, sampler::NegativeSampler};
+use kcore_embed::embed::kernels::{self, SigmoidTable};
+use kcore_embed::embed::{batches::SgnsParams, native, sampler::NegativeSampler, Embedding};
 use kcore_embed::eval::logistic::{LogRegParams, LogisticRegression};
 use kcore_embed::graph::generators;
 use kcore_embed::propagate::{propagate_mean, PropagationParams};
 use kcore_embed::runtime::{default_artifacts_dir, Manifest, Runtime};
+use kcore_embed::util::json::Json;
+use kcore_embed::util::pool;
 use kcore_embed::util::rng::Rng;
 use kcore_embed::walks::{
     generate_node2vec_shards, generate_node2vec_walks, generate_walk_shards, generate_walks,
-    Node2VecParams, ShardOpts, WalkParams, WalkSchedule,
+    Corpus, Node2VecParams, PairStream, ShardOpts, ShardedCorpus, WalkParams, WalkSchedule,
 };
 
-fn bench<F: FnMut() -> u64>(name: &str, unit: &str, iters: usize, mut f: F) {
+struct Opts {
+    train_only: bool,
+    quick: bool,
+    json_path: Option<String>,
+}
+
+fn parse_opts() -> Opts {
+    let mut o = Opts {
+        train_only: false,
+        quick: false,
+        json_path: None,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--train-only" => o.train_only = true,
+            "--quick" => o.quick = true,
+            "--json" => o.json_path = args.next(),
+            // cargo bench passes --bench through to harness=false bins.
+            "--bench" => {}
+            x => eprintln!("(ignoring unknown arg {x})"),
+        }
+    }
+    o
+}
+
+struct BenchEntry {
+    name: &'static str,
+    unit: &'static str,
+    best_per_s: f64,
+    mean_per_s: f64,
+    work: u64,
+}
+
+fn bench_json(e: &BenchEntry) -> String {
+    Json::object(vec![
+        ("bench", Json::str(e.name)),
+        ("unit", Json::str(e.unit)),
+        ("best_per_s", Json::num(e.best_per_s)),
+        ("mean_per_s", Json::num(e.mean_per_s)),
+        ("work_per_iter", Json::num(e.work as f64)),
+    ])
+    .to_string()
+}
+
+fn bench<F: FnMut() -> u64>(
+    name: &'static str,
+    unit: &'static str,
+    iters: usize,
+    mut f: F,
+) -> BenchEntry {
     // warmup
     let _ = f();
     let mut best = f64::INFINITY;
@@ -32,16 +99,306 @@ fn bench<F: FnMut() -> u64>(name: &str, unit: &str, iters: usize, mut f: F) {
         best = best.min(dt);
         mean += dt / iters as f64;
     }
+    let entry = BenchEntry {
+        name,
+        unit,
+        best_per_s: work as f64 / best,
+        mean_per_s: work as f64 / mean,
+        work,
+    };
     println!(
         "{name:<42} best {:>9.2} {unit}/s   mean {:>9.2} {unit}/s   ({} {unit}/iter)",
-        work as f64 / best / 1e6,
-        work as f64 / mean / 1e6,
+        entry.best_per_s / 1e6,
+        entry.mean_per_s / 1e6,
         work
     );
+    println!("{}", bench_json(&entry));
+    entry
 }
 
 fn main() {
+    let opts = parse_opts();
     println!("hot-path micro-benchmarks (M = 1e6 units/s)\n");
+    if !opts.train_only {
+        bench_layers();
+    }
+    let summary = bench_train(&opts);
+    println!("{summary}");
+    if let Some(path) = &opts.json_path {
+        std::fs::write(path, format!("{summary}\n")).expect("write train-bench json");
+        println!("wrote {path}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SGNS trainer benches: fused kernels vs the pre-kernel baselines.
+// ---------------------------------------------------------------------------
+
+/// Run the four trainer benches and return the single-object JSON
+/// summary (`BENCH_train.json` schema): pairs/s for scalar-vs-fused
+/// serial and atomic-vs-racy hogwild, plus the derived speedups.
+fn bench_train(opts: &Opts) -> String {
+    let (n_nodes, walks, walk_length, dim, iters) = if opts.quick {
+        (300usize, 3u32, 12usize, 64usize, 1usize)
+    } else {
+        (1000, 8, 20, 128, 3)
+    };
+    let params = SgnsParams {
+        dim,
+        seed: 3,
+        ..Default::default()
+    };
+    let g = generators::holme_kim(n_nodes, 4, 0.4, &mut Rng::new(3));
+    let sched = WalkSchedule::uniform(n_nodes, walks);
+    let wp = WalkParams {
+        walk_length,
+        seed: 3,
+        threads: pool::default_threads(),
+    };
+    let corpus = generate_walks(&g, &sched, &wp);
+    let sharded = generate_walk_shards(
+        &g,
+        &sched,
+        &wp,
+        &ShardOpts {
+            shards: 16,
+            ..Default::default()
+        },
+    );
+    // At least 2 workers so the hogwild comparison measures the shared-
+    // matrix representation, not the serial fallback.
+    let threads = pool::default_threads().max(2);
+
+    let serial_scalar = bench("SGNS serial scalar-ref (M pairs)", "M-pair", iters, || {
+        let (loss, n) = train_serial_scalar_reference(&corpus, n_nodes, &params);
+        std::hint::black_box(loss);
+        n
+    });
+    let serial_fused = bench("SGNS serial fused (M pairs)", "M-pair", iters, || {
+        let r = native::train_native(&corpus, n_nodes, &params);
+        std::hint::black_box(r.mean_loss);
+        r.n_pairs
+    });
+    let hog_atomic = bench("SGNS hogwild atomic-ref (M pairs)", "M-pair", iters, || {
+        let (loss, n) = train_hogwild_atomic_reference(&sharded, n_nodes, &params, threads);
+        std::hint::black_box(loss);
+        n
+    });
+    let hog_racy = bench("SGNS hogwild racy fused (M pairs)", "M-pair", iters, || {
+        let r = native::train_native_parallel_sharded(&sharded, n_nodes, &params, threads);
+        std::hint::black_box(r.mean_loss);
+        r.n_pairs
+    });
+
+    let serial_speedup = serial_fused.best_per_s / serial_scalar.best_per_s;
+    let hogwild_speedup = hog_racy.best_per_s / hog_atomic.best_per_s;
+    println!(
+        "    train speedups: serial fused {serial_speedup:.2}x vs scalar, \
+         hogwild racy {hogwild_speedup:.2}x vs atomic ({threads} threads)"
+    );
+    Json::object(vec![
+        ("bench", Json::str("sgns_train")),
+        ("quick", Json::Bool(opts.quick)),
+        ("dim", Json::num(params.dim as f64)),
+        ("negatives", Json::num(params.negatives as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("serial_scalar_pairs_per_s", Json::num(serial_scalar.best_per_s)),
+        ("serial_fused_pairs_per_s", Json::num(serial_fused.best_per_s)),
+        ("serial_fused_speedup", Json::num(serial_speedup)),
+        ("hogwild_atomic_pairs_per_s", Json::num(hog_atomic.best_per_s)),
+        ("hogwild_racy_pairs_per_s", Json::num(hog_racy.best_per_s)),
+        ("hogwild_racy_speedup", Json::num(hogwild_speedup)),
+    ])
+    .to_string()
+}
+
+// -- pre-kernel baselines, kept verbatim for the comparison ----------------
+
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// `acc += scale * row`
+fn accumulate_scalar(acc: &mut [f32], row: &[f32], scale: f32) {
+    for (a, &r) in acc.iter_mut().zip(row) {
+        *a += scale * r;
+    }
+}
+
+/// `row += scale * delta`
+fn axpy_scalar(row: &mut [f32], delta: &[f32], scale: f32) {
+    for (r, &d) in row.iter_mut().zip(delta) {
+        *r += scale * d;
+    }
+}
+
+/// The pre-kernel serial trainer: naive sequential dot plus separate
+/// accumulate/axpy passes per target row (three traversals where the
+/// fused path does two).
+fn train_serial_scalar_reference(
+    corpus: &Corpus,
+    n_nodes: usize,
+    params: &SgnsParams,
+) -> (f64, u64) {
+    let mut rng = Rng::new(params.seed);
+    let mut w_in = Embedding::word2vec_init(n_nodes, params.dim, &mut rng);
+    let mut w_out = Embedding::zeros(n_nodes, params.dim);
+    let sampler = NegativeSampler::from_counts(&corpus.node_counts());
+    let sig = SigmoidTable::new();
+    let total_pairs = (corpus.exact_pair_count(params.window) * params.epochs as u64).max(1);
+    let mut emitted = 0u64;
+    let mut loss_sum = 0f64;
+    let mut neg_buf: Vec<u32> = Vec::with_capacity(params.negatives);
+    let mut grad_h = vec![0f32; params.dim];
+    for epoch in 0..params.epochs {
+        let mut neg_rng = Rng::new(params.seed ^ (0x5EED + epoch as u64));
+        let pairs = PairStream::new(
+            corpus,
+            params.window,
+            Rng::new(params.seed ^ (0x9A1C + epoch as u64)),
+        );
+        for (center, context) in pairs {
+            let frac = emitted as f64 / total_pairs as f64;
+            let lr = ((params.lr0 as f64 * (1.0 - frac)).max(params.lr_min as f64)) as f32;
+            sampler.sample_k(params.negatives, context, &mut neg_rng, &mut neg_buf);
+            grad_h.iter_mut().for_each(|x| *x = 0.0);
+            let h = w_in.row(center);
+            let pos = dot_scalar(h, w_out.row(context));
+            let g_pos = sig.get(pos) - 1.0;
+            loss_sum += -kernels::ln_sigmoid(pos) as f64;
+            accumulate_scalar(&mut grad_h, w_out.row(context), g_pos);
+            axpy_scalar(w_out.row_mut(context), h, -lr * g_pos);
+            for &ng in &neg_buf {
+                let neg = dot_scalar(h, w_out.row(ng));
+                let s_neg = sig.get(neg);
+                loss_sum += -kernels::ln_sigmoid(-neg) as f64;
+                accumulate_scalar(&mut grad_h, w_out.row(ng), s_neg);
+                axpy_scalar(w_out.row_mut(ng), h, -lr * s_neg);
+            }
+            axpy_scalar(w_in.row_mut(center), &grad_h, -lr);
+            emitted += 1;
+        }
+    }
+    (loss_sum, emitted)
+}
+
+#[inline]
+fn at_load(a: &AtomicU32) -> f32 {
+    f32::from_bits(a.load(Relaxed))
+}
+
+#[inline]
+fn at_store(a: &AtomicU32, v: f32) {
+    a.store(v.to_bits(), Relaxed)
+}
+
+/// The pre-kernel hogwild trainer: `Vec<AtomicU32>` matrices with
+/// relaxed per-element load/store on every row pass, and the sigmoid
+/// table rebuilt per shard task — the exact shape the racy fused
+/// trainer replaced.
+fn train_hogwild_atomic_reference(
+    corpus: &ShardedCorpus,
+    n_nodes: usize,
+    params: &SgnsParams,
+    threads: usize,
+) -> (f64, u64) {
+    let dim = params.dim;
+    let mut seed_rng = Rng::new(params.seed);
+    let init = Embedding::word2vec_init(n_nodes, dim, &mut seed_rng);
+    let w_in: Vec<AtomicU32> = init
+        .data()
+        .iter()
+        .map(|x| AtomicU32::new(x.to_bits()))
+        .collect();
+    let w_out: Vec<AtomicU32> = (0..n_nodes * dim).map(|_| AtomicU32::new(0)).collect();
+    let sampler = NegativeSampler::from_counts(&corpus.node_counts());
+    let total_pairs = (corpus.exact_pair_count(params.window) * params.epochs as u64).max(1);
+    let global_pairs = AtomicU64::new(0);
+
+    let results: Vec<(f64, u64)> = pool::parallel_tasks(corpus.n_shards(), threads, |si| {
+        let shard = &corpus.shards()[si];
+        let sig = SigmoidTable::new();
+        let mut rng = Rng::new(params.seed ^ (0xBEEF + si as u64));
+        let mut neg_buf: Vec<u32> = Vec::with_capacity(params.negatives);
+        let mut grad_h = vec![0f32; dim];
+        let mut h_snap = vec![0f32; dim];
+        let mut walk: Vec<u32> = Vec::new();
+        let mut loss_sum = 0f64;
+        let mut local_pairs = 0u64;
+        let mut lr = params.lr0;
+        for _epoch in 0..params.epochs {
+            let mut reader = shard.reader();
+            while reader.next_walk(&mut walk) {
+                for c_pos in 0..walk.len() {
+                    let radius = 1 + rng.gen_index(params.window);
+                    let lo = c_pos.saturating_sub(radius);
+                    let hi = (c_pos + radius).min(walk.len() - 1);
+                    for t_pos in lo..=hi {
+                        if t_pos == c_pos {
+                            continue;
+                        }
+                        let center = walk[c_pos] as usize;
+                        let context = walk[t_pos] as usize;
+                        if local_pairs % 4096 == 0 {
+                            let done = global_pairs.fetch_add(4096, Relaxed);
+                            let frac = done as f64 / total_pairs as f64;
+                            lr = ((params.lr0 as f64 * (1.0 - frac))
+                                .max(params.lr_min as f64))
+                                as f32;
+                        }
+                        sampler.sample_k(params.negatives, context as u32, &mut rng, &mut neg_buf);
+                        let h_row = &w_in[center * dim..(center + 1) * dim];
+                        for (s, a) in h_snap.iter_mut().zip(h_row) {
+                            *s = at_load(a);
+                        }
+                        grad_h.iter_mut().for_each(|x| *x = 0.0);
+                        let c_row = &w_out[context * dim..(context + 1) * dim];
+                        let mut pos = 0f32;
+                        for (hs, ca) in h_snap.iter().zip(c_row) {
+                            pos += hs * at_load(ca);
+                        }
+                        let g_pos = sig.get(pos) - 1.0;
+                        loss_sum += -kernels::ln_sigmoid(pos) as f64;
+                        for ((gh, ca), hs) in grad_h.iter_mut().zip(c_row).zip(&h_snap) {
+                            *gh += g_pos * at_load(ca);
+                            at_store(ca, at_load(ca) - lr * g_pos * hs);
+                        }
+                        for &ng in &neg_buf {
+                            let n_row = &w_out[ng as usize * dim..(ng as usize + 1) * dim];
+                            let mut neg = 0f32;
+                            for (hs, na) in h_snap.iter().zip(n_row) {
+                                neg += hs * at_load(na);
+                            }
+                            let s_neg = sig.get(neg);
+                            loss_sum += -kernels::ln_sigmoid(-neg) as f64;
+                            for ((gh, na), hs) in grad_h.iter_mut().zip(n_row).zip(&h_snap) {
+                                *gh += s_neg * at_load(na);
+                                at_store(na, at_load(na) - lr * s_neg * hs);
+                            }
+                        }
+                        for (ha, gh) in h_row.iter().zip(&grad_h) {
+                            at_store(ha, at_load(ha) - lr * gh);
+                        }
+                        local_pairs += 1;
+                    }
+                }
+            }
+        }
+        (loss_sum, local_pairs)
+    });
+
+    let (loss_sum, n_pairs) = results
+        .into_iter()
+        .fold((0f64, 0u64), |(l, n), (dl, dn)| (l + dl, n + dn));
+    std::hint::black_box(at_load(&w_in[0]) + at_load(&w_out[0]));
+    (loss_sum, n_pairs)
+}
+
+// ---------------------------------------------------------------------------
+// Per-layer benches (the original hotpaths list).
+// ---------------------------------------------------------------------------
+
+fn bench_layers() {
     let mut rng = Rng::new(1);
     let fb = generators::facebook_like(7);
     let gh = generators::github_like(7);
@@ -67,7 +424,7 @@ fn main() {
             &WalkParams {
                 walk_length: 30,
                 seed: 2,
-                threads: kcore_embed::util::pool::default_threads(),
+                threads: pool::default_threads(),
             },
         );
         c.n_tokens() as u64
@@ -85,32 +442,10 @@ fn main() {
         2_000_000
     });
 
-    // L3: native SGNS training (unit: pairs).
-    let small = generators::holme_kim(1000, 4, 0.4, &mut Rng::new(3));
-    let corpus = generate_walks(
-        &small,
-        &WalkSchedule::uniform(1000, 5),
-        &WalkParams {
-            walk_length: 20,
-            seed: 3,
-            threads: 4,
-        },
-    );
-    let params = SgnsParams::default();
-    bench("native SGNS train (M pairs)", "M-pair", 3, || {
-        let r = native::train_native(&corpus, 1000, &params);
-        std::hint::black_box(r.mean_loss);
-        r.n_pairs
-    });
-
     // L3: mean propagation (unit: propagated node-rounds).
     let d = core_decomposition(&fb);
     let core_nodes = kcore_embed::cores::subcore::k_core_nodes(&d, 25);
-    let emb = kcore_embed::embed::Embedding::word2vec_init(
-        core_nodes.len(),
-        128,
-        &mut Rng::new(4),
-    );
+    let emb = Embedding::word2vec_init(core_nodes.len(), 128, &mut Rng::new(4));
     bench("mean propagation k0=25 (M node-rounds)", "M-nr", 3, || {
         let (out, stats) = propagate_mean(
             &fb,
@@ -135,15 +470,13 @@ fn main() {
     let gh_params = WalkParams {
         walk_length: 30,
         seed: 11,
-        threads: kcore_embed::util::pool::default_threads(),
+        threads: pool::default_threads(),
     };
     let mut materialized_bytes = 0usize;
     bench("corpus materialized github (M steps)", "M-step", 3, || {
         let c = generate_walks(&gh, &gh_sched, &gh_params);
         materialized_bytes = c.n_tokens() * 4 + (c.n_walks() + 1) * 8;
-        let n: u64 = kcore_embed::walks::PairStream::new(&c, 2, Rng::new(12))
-            .map(|_| 1u64)
-            .sum();
+        let n: u64 = PairStream::new(&c, 2, Rng::new(12)).map(|_| 1u64).sum();
         std::hint::black_box(n);
         c.n_tokens() as u64
     });
@@ -182,7 +515,7 @@ fn main() {
         q: 2.0,
         walk_length: 30,
         seed: 11,
-        threads: kcore_embed::util::pool::default_threads(),
+        threads: pool::default_threads(),
     };
     let mut n2v_materialized_bytes = 0usize;
     bench("node2vec materialized github (M steps)", "M-step", 3, || {
@@ -225,7 +558,7 @@ fn main() {
         let vecs: Vec<f32> = (0..sn * sdim).map(|_| sr.gen_f32() * 2.0 - 1.0).collect();
         let store = EmbeddingStore::from_parts(vecs, sn, sdim, vec![0; sn]);
         let params = TopKParams {
-            threads: kcore_embed::util::pool::default_threads(),
+            threads: pool::default_threads(),
             ..Default::default()
         };
         let exact = ExactScan::build(&store, params.clone());
@@ -303,6 +636,8 @@ fn main() {
     match Manifest::load(&default_artifacts_dir()) {
         Ok(manifest) => {
             let rt = Runtime::cpu().expect("pjrt cpu client");
+            let small = generators::holme_kim(1000, 4, 0.4, &mut Rng::new(3));
+            let params = SgnsParams::default();
             let corpus2 = generate_walks(
                 &small,
                 &WalkSchedule::uniform(1000, 10),

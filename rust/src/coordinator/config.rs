@@ -63,6 +63,13 @@ pub struct PipelineConfig {
     pub sgns: SgnsParams,
     pub propagation: PropagationParams,
     pub threads: usize,
+    /// Hogwild worker count for the native SGNS trainer; 0 = follow
+    /// `threads`. Separated because training wants every core while
+    /// walk generation is often I/O-shaped — and because `threads = 1`
+    /// routes to the deterministic serial trainer, deployments pin
+    /// `train_threads: 1` to keep reproducible embeddings while walks
+    /// still fan out (DESIGN.md §Training).
+    pub train_threads: usize,
     pub seed: u64,
     /// PJRT backend: poll the on-device loss stats every N dispatches
     /// (0 = only at the end; each poll downloads the full state).
@@ -104,6 +111,7 @@ impl Default for PipelineConfig {
             sgns: SgnsParams::default(),
             propagation: PropagationParams::default(),
             threads: crate::util::pool::default_threads(),
+            train_threads: 0,
             seed: 0,
             loss_poll: 0,
             bridge_walks: 0,
@@ -162,6 +170,7 @@ impl PipelineConfig {
             ("prop_iterations", Json::num(self.propagation.iterations as f64)),
             ("prop_tolerance", Json::num(self.propagation.tolerance as f64)),
             ("threads", Json::num(self.threads as f64)),
+            ("train_threads", Json::num(self.train_threads as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("corpus_shards", Json::num(self.corpus_shards as f64)),
             ("corpus_budget_mb", Json::num(self.corpus_budget_mb as f64)),
@@ -231,6 +240,7 @@ impl PipelineConfig {
         cfg.propagation.iterations = get_u("prop_iterations", cfg.propagation.iterations);
         cfg.propagation.tolerance = get_f("prop_tolerance", cfg.propagation.tolerance as f64) as f32;
         cfg.threads = get_u("threads", cfg.threads);
+        cfg.train_threads = get_u("train_threads", cfg.train_threads);
         cfg.seed = get_f("seed", 0.0) as u64;
         cfg.corpus_shards = get_u("corpus_shards", cfg.corpus_shards);
         cfg.corpus_budget_mb = get_u("corpus_budget_mb", cfg.corpus_budget_mb);
@@ -248,6 +258,16 @@ impl PipelineConfig {
             .map(std::path::PathBuf::from);
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Worker count the native trainer actually runs with:
+    /// `train_threads`, falling back to `threads` when unset (0).
+    pub fn train_threads_resolved(&self) -> usize {
+        if self.train_threads == 0 {
+            self.threads.max(1)
+        } else {
+            self.train_threads
+        }
     }
 
     /// Row label in the paper's table style: `DeepWalk`, `CoreWalk`,
@@ -320,6 +340,25 @@ mod tests {
         )
         .unwrap();
         assert!(PipelineConfig::from_json(&j).is_ok());
+    }
+
+    #[test]
+    fn train_threads_round_trips_and_resolves() {
+        let mut cfg = PipelineConfig {
+            threads: 4,
+            ..Default::default()
+        };
+        // Unset: follows `threads`.
+        assert_eq!(cfg.train_threads, 0);
+        assert_eq!(cfg.train_threads_resolved(), 4);
+        // Set: wins over `threads`, survives the JSON round trip.
+        cfg.train_threads = 1;
+        assert_eq!(cfg.train_threads_resolved(), 1);
+        let back = PipelineConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.train_threads, 1);
+        assert_eq!(back.train_threads_resolved(), 1);
+        let j = Json::parse(r#"{"train_threads": 8}"#).unwrap();
+        assert_eq!(PipelineConfig::from_json(&j).unwrap().train_threads, 8);
     }
 
     #[test]

@@ -186,12 +186,17 @@ pub fn run_pipeline(
             (r.w_in, r.n_pairs, r.loss_curve)
         }
         Backend::Native => {
+            // Trainer fan-out is its own knob: `train_threads` (0 =
+            // follow `threads`); 1 routes to the deterministic serial
+            // trainer, >1 runs hogwild over the racy shared matrix
+            // (DESIGN.md §Training).
+            let train_threads = cfg.train_threads_resolved();
             let r = timer.time(PHASE_TRAIN, || {
                 native::train_native_parallel_sharded(
                     &corpus,
                     target.n_nodes(),
                     &sgns,
-                    cfg.threads,
+                    train_threads,
                 )
             });
             (r.w_in, r.n_pairs, Vec::new())
@@ -349,6 +354,25 @@ mod tests {
             out_dw.n_walks
         );
         assert!(out_cw.degeneracy > 0);
+    }
+
+    #[test]
+    fn train_threads_knob_reaches_the_trainer() {
+        // Same seed, train_threads=1 twice: the serial route must make
+        // the whole pipeline reproducible even with walk threads > 1.
+        let g = generators::holme_kim(80, 3, 0.4, &mut crate::util::rng::Rng::new(9));
+        let mut cfg = tiny_cfg();
+        cfg.threads = 4;
+        cfg.train_threads = 1;
+        let a = run_pipeline(&g, &cfg, None).unwrap();
+        let b = run_pipeline(&g, &cfg, None).unwrap();
+        assert_eq!(a.embedding, b.embedding);
+        // And the hogwild route still produces a usable embedding.
+        cfg.train_threads = 2;
+        let c = run_pipeline(&g, &cfg, None).unwrap();
+        assert_eq!(c.embedding.n(), 80);
+        assert!(c.n_pairs > 0);
+        assert!(c.embedding.data().iter().all(|x| x.is_finite()));
     }
 
     #[test]

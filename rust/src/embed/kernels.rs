@@ -1,0 +1,271 @@
+//! Fused, unroll-by-4 f32 kernels for the native SGNS trainers
+//! (DESIGN.md §Training).
+//!
+//! The SGNS inner loop is memory-bound: per (center, context-or-negative)
+//! pair it reads the center row `h` and one `w_out` row, and writes that
+//! `w_out` row plus a gradient accumulator. The pre-kernel code made
+//! three traversals of the `w_out` row per target (`dot` → `accumulate`
+//! → `axpy`); [`fused_grad_update`] folds the last two into one
+//! read-modify-write traversal, so each target row is touched exactly
+//! twice (once for the dot, once for the update) — half the row traffic.
+//!
+//! All kernels are unrolled by 4 via `chunks_exact`, which the
+//! autovectorizer turns into SIMD on every target we build for. The
+//! unrolled [`dot`] uses four independent accumulators (breaking the
+//! sequential FP dependence chain), so its summation order differs from
+//! a naive left-to-right sum — but it is a fixed order, so training
+//! stays deterministic-given-seed. [`fused_grad_update`] and [`axpy`]
+//! are element-wise and bit-exact against their scalar references at
+//! any unroll factor (asserted in the parity tests below).
+//!
+//! Both the serial trainer and the hogwild trainer
+//! ([`super::native`]) run on these kernels: the serial path hands them
+//! `Embedding` rows, the hogwild path hands them racy row views of a
+//! [`super::matrix::HogwildMatrix`]. One implementation, one set of
+//! parity tests.
+
+const EXP_TABLE_SIZE: usize = 1024;
+const MAX_EXP: f32 = 6.0;
+
+/// Precomputed sigmoid lookup (word2vec trick): sigma(x) for x in
+/// [-MAX_EXP, MAX_EXP], saturated outside.
+///
+/// Shared by every native training path; construct once per run and
+/// pass by reference (it is `Sync` — hogwild workers share one table
+/// instead of rebuilding ~4 KiB per shard task).
+pub struct SigmoidTable {
+    table: Vec<f32>,
+}
+
+impl Default for SigmoidTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SigmoidTable {
+    pub fn new() -> Self {
+        let table = (0..EXP_TABLE_SIZE)
+            .map(|i| {
+                let x = (i as f32 / EXP_TABLE_SIZE as f32 * 2.0 - 1.0) * MAX_EXP;
+                1.0 / (1.0 + (-x).exp())
+            })
+            .collect();
+        SigmoidTable { table }
+    }
+
+    #[inline]
+    pub fn get(&self, x: f32) -> f32 {
+        if x >= MAX_EXP {
+            1.0
+        } else if x <= -MAX_EXP {
+            0.0
+        } else {
+            let i = ((x / MAX_EXP + 1.0) * 0.5 * EXP_TABLE_SIZE as f32) as usize;
+            self.table[i.min(EXP_TABLE_SIZE - 1)]
+        }
+    }
+}
+
+/// Dot product, unrolled by 4 with independent accumulators.
+///
+/// The four partial sums break the FP add dependence chain so the loop
+/// vectorizes; they are combined pairwise at the end. Summation order is
+/// fixed (deterministic), but differs from a naive sequential sum, so
+/// compare against [`dot`] itself — not a hand-rolled loop — when bit
+/// equality matters.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let mut tail = 0f32;
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    let mut acc = [0f32; 4];
+    for (xs, ys) in ca.zip(cb) {
+        acc[0] += xs[0] * ys[0];
+        acc[1] += xs[1] * ys[1];
+        acc[2] += xs[2] * ys[2];
+        acc[3] += xs[3] * ys[3];
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// The fused SGNS target-row pass: one traversal that, for gradient
+/// scale `g` and learning rate `lr`, does
+///
+/// ```text
+/// grad_h[i] += g * w_row[i];      // accumulate into the center grad
+/// w_row[i]  -= (lr * g) * h[i];   // and update the target row
+/// ```
+///
+/// reading each `w_row` element exactly once (the gradient uses the
+/// pre-update value, matching the unfused accumulate-then-axpy order).
+/// Element-wise, so bit-exact against the scalar reference.
+#[inline]
+pub fn fused_grad_update(grad_h: &mut [f32], w_row: &mut [f32], h: &[f32], g: f32, lr: f32) {
+    debug_assert_eq!(grad_h.len(), w_row.len());
+    debug_assert_eq!(grad_h.len(), h.len());
+    let step = lr * g;
+    let mut cg = grad_h.chunks_exact_mut(4);
+    let mut cw = w_row.chunks_exact_mut(4);
+    let ch = h.chunks_exact(4);
+    let h_rem = ch.remainder();
+    for ((gs, ws), hs) in (&mut cg).zip(&mut cw).zip(ch) {
+        gs[0] += g * ws[0];
+        ws[0] -= step * hs[0];
+        gs[1] += g * ws[1];
+        ws[1] -= step * hs[1];
+        gs[2] += g * ws[2];
+        ws[2] -= step * hs[2];
+        gs[3] += g * ws[3];
+        ws[3] -= step * hs[3];
+    }
+    for ((gr, wr), &hr) in cg
+        .into_remainder()
+        .iter_mut()
+        .zip(cw.into_remainder())
+        .zip(h_rem)
+    {
+        *gr += g * *wr;
+        *wr -= step * hr;
+    }
+}
+
+/// `row += scale * delta` (delta must not alias row), unrolled by 4.
+/// Element-wise: bit-exact against the scalar reference.
+#[inline]
+pub fn axpy(row: &mut [f32], delta: &[f32], scale: f32) {
+    debug_assert_eq!(row.len(), delta.len());
+    let mut cr = row.chunks_exact_mut(4);
+    let cd = delta.chunks_exact(4);
+    let d_rem = cd.remainder();
+    for (rs, ds) in (&mut cr).zip(cd) {
+        rs[0] += scale * ds[0];
+        rs[1] += scale * ds[1];
+        rs[2] += scale * ds[2];
+        rs[3] += scale * ds[3];
+    }
+    for (r, &d) in cr.into_remainder().iter_mut().zip(d_rem) {
+        *r += scale * d;
+    }
+}
+
+/// Numerically stable log-sigmoid: `min(x,0) - ln(1 + e^{-|x|})`.
+#[inline]
+pub fn ln_sigmoid(x: f32) -> f32 {
+    x.min(0.0) - (-x.abs()).exp().ln_1p()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gen_f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn sigmoid_table_accuracy() {
+        let sig = SigmoidTable::new();
+        for &x in &[-5.9f32, -2.0, -0.5, 0.0, 0.5, 2.0, 5.9] {
+            let exact = 1.0 / (1.0 + (-x).exp());
+            assert!(
+                (sig.get(x) - exact).abs() < 0.01,
+                "x={x}: {} vs {exact}",
+                sig.get(x)
+            );
+        }
+        assert_eq!(sig.get(100.0), 1.0);
+        assert_eq!(sig.get(-100.0), 0.0);
+    }
+
+    #[test]
+    fn dot_matches_naive_within_tolerance() {
+        let mut rng = Rng::new(1);
+        // Cover the unrolled body, the remainder, and tiny sizes.
+        for n in [0usize, 1, 3, 4, 7, 16, 127, 128, 1000] {
+            let a = random_vec(&mut rng, n);
+            let b = random_vec(&mut rng, n);
+            let naive: f32 = a.iter().zip(&b).map(|(&x, &y)| x * y).sum();
+            let fast = dot(&a, &b);
+            assert!(
+                (fast - naive).abs() <= 1e-4 * (1.0 + naive.abs()),
+                "n={n}: {fast} vs {naive}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_is_deterministic() {
+        let mut rng = Rng::new(2);
+        let a = random_vec(&mut rng, 128);
+        let b = random_vec(&mut rng, 128);
+        assert_eq!(dot(&a, &b).to_bits(), dot(&a, &b).to_bits());
+    }
+
+    #[test]
+    fn fused_grad_update_bit_exact_vs_scalar_reference() {
+        // The fused pass must equal the unfused accumulate-then-axpy
+        // sequence bit for bit — fusion changes memory traffic, never
+        // results (the serial-trainer contract).
+        let mut rng = Rng::new(3);
+        for n in [1usize, 4, 5, 16, 127, 128] {
+            let h = random_vec(&mut rng, n);
+            let w0 = random_vec(&mut rng, n);
+            let (g, lr) = (0.37f32, 0.025f32);
+
+            // Scalar reference: grad += g*w (old w), then w += (-lr*g)*h.
+            let mut grad_ref = random_vec(&mut rng, n);
+            let mut grad_fused = grad_ref.clone();
+            let mut w_ref = w0.clone();
+            for (acc, &w) in grad_ref.iter_mut().zip(&w_ref) {
+                *acc += g * w;
+            }
+            let scale = -lr * g;
+            for (w, &d) in w_ref.iter_mut().zip(&h) {
+                *w += scale * d;
+            }
+
+            let mut w_fused = w0.clone();
+            fused_grad_update(&mut grad_fused, &mut w_fused, &h, g, lr);
+
+            for i in 0..n {
+                assert_eq!(
+                    grad_fused[i].to_bits(),
+                    grad_ref[i].to_bits(),
+                    "grad[{i}] n={n}"
+                );
+                assert_eq!(w_fused[i].to_bits(), w_ref[i].to_bits(), "w[{i}] n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_bit_exact_vs_scalar_reference() {
+        let mut rng = Rng::new(4);
+        for n in [1usize, 4, 7, 128] {
+            let delta = random_vec(&mut rng, n);
+            let r0 = random_vec(&mut rng, n);
+            let mut r_ref = r0.clone();
+            for (r, &d) in r_ref.iter_mut().zip(&delta) {
+                *r += 0.125 * d;
+            }
+            let mut r_fast = r0.clone();
+            axpy(&mut r_fast, &delta, 0.125);
+            for i in 0..n {
+                assert_eq!(r_fast[i].to_bits(), r_ref[i].to_bits(), "r[{i}] n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn ln_sigmoid_stable_at_extremes() {
+        assert!(ln_sigmoid(100.0).abs() < 1e-6);
+        assert!((ln_sigmoid(-100.0) + 100.0).abs() < 1e-3);
+        assert!((ln_sigmoid(0.0) - (0.5f32).ln()).abs() < 1e-6);
+    }
+}

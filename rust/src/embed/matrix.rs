@@ -1,5 +1,9 @@
 //! Embedding matrix: row-major `n x dim` f32 storage with word2vec-style
-//! initialization and the vector ops evaluation needs.
+//! initialization and the vector ops evaluation needs, plus the
+//! [`HogwildMatrix`] racy shared view the parallel trainer updates
+//! through (DESIGN.md §Training).
+
+use std::cell::UnsafeCell;
 
 use crate::util::rng::Rng;
 
@@ -32,6 +36,11 @@ impl Embedding {
     pub fn from_data(data: Vec<f32>, n: usize, dim: usize) -> Embedding {
         assert_eq!(data.len(), n * dim);
         Embedding { data, n, dim }
+    }
+
+    /// Consume the matrix, handing back its row-major backing vector.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
     }
 
     pub fn n(&self) -> usize {
@@ -101,10 +110,90 @@ impl Embedding {
     }
 }
 
+/// Dot product — delegates to the unrolled trainer kernel
+/// ([`super::kernels::dot`]) so every caller (cosine, serving re-rank,
+/// the trainers) runs the same vectorized code.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+    super::kernels::dot(a, b)
+}
+
+// ---------------------------------------------------------------------------
+// Hogwild shared matrix
+// ---------------------------------------------------------------------------
+
+/// A plain-`f32` embedding matrix shared mutably across hogwild workers
+/// — no per-element atomics, no locks (DESIGN.md §Training).
+///
+/// Workers address rows through [`Self::row_ptr`] and build short-lived
+/// slices at the call site; concurrent updates to the same row race, and
+/// hogwild's contract (Niu et al., 2011) is exactly that those sparse
+/// lost updates are tolerated by SGD. Compared to the previous
+/// `Vec<AtomicU32>` representation this removes the per-element
+/// load/store tax and lets the fused kernels autovectorize.
+///
+/// Be explicit about what is traded away: when two workers touch the
+/// same row at once, the `&mut [f32]` views they build alias — a data
+/// race that is undefined behavior under Rust's formal memory model
+/// (Miri/TSan would flag it), not merely a benign race. This is the
+/// deliberate, classic hogwild bargain (word2vec's C trainer makes the
+/// same one), and its blast radius is bounded in practice: f32
+/// loads/stores are single machine words on every supported target (no
+/// torn values); each kernel call makes one forward pass that loads and
+/// stores each element once, so whatever value the optimizer's
+/// `noalias`-based caching reads back degrades to a stale/lost *update*
+/// — never to corruption, because no index or branch ever depends on
+/// racy data; and the matrix is only read as a whole
+/// ([`Self::into_embedding`]) after the worker scope joins. Callers who
+/// need soundness guarantees use `threads = 1`, which routes to the
+/// serial trainer and never constructs this type.
+pub struct HogwildMatrix {
+    data: UnsafeCell<Vec<f32>>,
+    n: usize,
+    dim: usize,
+}
+
+// Safety: all concurrent access goes through raw row pointers whose
+// races the hogwild contract explicitly accepts — including the
+// aliasing-&mut UB spelled out in the type docs; the Vec itself
+// (len/capacity) is never mutated while shared.
+unsafe impl Sync for HogwildMatrix {}
+
+impl HogwildMatrix {
+    /// Wrap an initialized embedding for racy shared updates.
+    pub fn from_embedding(e: Embedding) -> HogwildMatrix {
+        let (n, dim) = (e.n(), e.dim());
+        HogwildMatrix {
+            data: UnsafeCell::new(e.into_data()),
+            n,
+            dim,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Pointer to the first element of row `v`.
+    ///
+    /// The pointed-to row is `dim()` elements long; callers build
+    /// short-lived slices from it (`slice::from_raw_parts[_mut]`) inside
+    /// the worker scope. Panics if `v` is out of bounds, so the returned
+    /// pointer always addresses a full valid row.
+    #[inline]
+    pub fn row_ptr(&self, v: usize) -> *mut f32 {
+        assert!(v < self.n, "row {v} out of bounds ({} rows)", self.n);
+        unsafe { (*self.data.get()).as_mut_ptr().add(v * self.dim) }
+    }
+
+    /// Unwrap back into a plain [`Embedding`] once all workers joined.
+    pub fn into_embedding(self) -> Embedding {
+        Embedding::from_data(self.data.into_inner(), self.n, self.dim)
+    }
 }
 
 #[cfg(test)]
@@ -138,6 +227,28 @@ mod tests {
         let mut e = Embedding::zeros(2, 2);
         e.set_row(0, &[1.0, 0.0]);
         assert_eq!(e.cosine(0, 1), 0.0);
+    }
+
+    #[test]
+    fn hogwild_round_trips_and_exposes_rows() {
+        let mut e = Embedding::zeros(3, 4);
+        e.set_row(1, &[1.0, 2.0, 3.0, 4.0]);
+        let m = HogwildMatrix::from_embedding(e);
+        assert_eq!((m.n(), m.dim()), (3, 4));
+        // Writes through a racy row view land in the unwrapped matrix.
+        let row = unsafe { std::slice::from_raw_parts_mut(m.row_ptr(2), m.dim()) };
+        row.copy_from_slice(&[9.0, 8.0, 7.0, 6.0]);
+        let back = m.into_embedding();
+        assert_eq!(back.row(1), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(back.row(2), &[9.0, 8.0, 7.0, 6.0]);
+        assert_eq!(back.row(0), &[0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn hogwild_row_ptr_bounds_checked() {
+        let m = HogwildMatrix::from_embedding(Embedding::zeros(2, 4));
+        let _ = m.row_ptr(2);
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! SkipGram-negative-sampling embedding: matrix storage, negative
 //! sampling, pull-based batch streaming ([`batches::BatchStream`] over
-//! either corpus representation), the PJRT-backed trainer (the hot
-//! path) and the pure-rust cross-check trainers.
+//! either corpus representation), the PJRT-backed trainer, and the
+//! pure-rust trainers — serial and hogwild — built on the fused
+//! unroll-by-4 kernels in [`kernels`] (DESIGN.md §Training).
 
 pub mod batches;
+pub mod kernels;
 pub mod matrix;
 pub mod native;
 pub mod sampler;

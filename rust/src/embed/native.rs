@@ -4,7 +4,15 @@
 //! (same math, same sampling — embeddings must reach comparable link-
 //! prediction F1); (b) the word2vec-style CPU baseline the paper's
 //! DeepWalk timings correspond to; (c) a fallback when artifacts are
-//! absent. Uses word2vec's precomputed sigmoid table for speed.
+//! absent — and, on multi-core CPU hosts, the fast path itself.
+//!
+//! Both the serial and the hogwild trainer run on the fused,
+//! unroll-by-4 kernels in [`super::kernels`] (DESIGN.md §Training):
+//! one dot pass plus one fused read-modify-write pass per target row,
+//! instead of the previous dot → accumulate → axpy triple traversal.
+//! The hogwild path updates a plain-f32 [`HogwildMatrix`] with racy
+//! writes (no per-element atomics), so both paths share the same
+//! kernel code byte for byte.
 //!
 //! Both corpus representations are supported (DESIGN.md
 //! §Corpus-streaming): [`train_native`] on a materialized [`Corpus`],
@@ -15,45 +23,15 @@
 //! callers shard at generation time (`generate_walk_shards`) or bridge
 //! zero-copy via [`Corpus::into_sharded`].
 
+use std::slice::{from_raw_parts, from_raw_parts_mut};
+
 use crate::util::rng::Rng;
 use crate::walks::{Corpus, PairStream, ShardedCorpus};
 
 use super::batches::SgnsParams;
-use super::matrix::Embedding;
+use super::kernels::{self, SigmoidTable};
+use super::matrix::{Embedding, HogwildMatrix};
 use super::sampler::NegativeSampler;
-
-const EXP_TABLE_SIZE: usize = 1024;
-const MAX_EXP: f32 = 6.0;
-
-/// Precomputed sigmoid lookup (word2vec trick): sigma(x) for x in
-/// [-MAX_EXP, MAX_EXP], saturated outside.
-struct SigmoidTable {
-    table: Vec<f32>,
-}
-
-impl SigmoidTable {
-    fn new() -> Self {
-        let table = (0..EXP_TABLE_SIZE)
-            .map(|i| {
-                let x = (i as f32 / EXP_TABLE_SIZE as f32 * 2.0 - 1.0) * MAX_EXP;
-                1.0 / (1.0 + (-x).exp())
-            })
-            .collect();
-        SigmoidTable { table }
-    }
-
-    #[inline]
-    fn get(&self, x: f32) -> f32 {
-        if x >= MAX_EXP {
-            1.0
-        } else if x <= -MAX_EXP {
-            0.0
-        } else {
-            let i = ((x / MAX_EXP + 1.0) * 0.5 * EXP_TABLE_SIZE as f32) as usize;
-            self.table[i.min(EXP_TABLE_SIZE - 1)]
-        }
-    }
-}
 
 /// Result of a native training run.
 pub struct NativeTrainResult {
@@ -67,7 +45,8 @@ pub struct NativeTrainResult {
 /// [`train_native`] (materialized) and [`train_native_sharded`]
 /// (streaming). Exact semantics of the L2 step: per-pair SGD, linear lr
 /// decay, unigram^0.75 negatives, context excluded from its own
-/// negatives.
+/// negatives. Deterministic given the seed: the fused kernels use a
+/// fixed (if unrolled) evaluation order.
 fn train_serial_with_pairs<I, F>(
     n_nodes: usize,
     params: &SgnsParams,
@@ -95,30 +74,27 @@ where
     for epoch in 0..params.epochs {
         let mut neg_rng = Rng::new(params.seed ^ (0x5EED + epoch as u64));
         for (center, context) in pairs_for_epoch(epoch) {
-            let frac = emitted as f64 / total_pairs as f64;
-            let lr = ((params.lr0 as f64 * (1.0 - frac)).max(params.lr_min as f64)) as f32;
+            let lr = lr_at(params, emitted, total_pairs);
             sampler.sample_k(params.negatives, context, &mut neg_rng, &mut neg_buf);
 
-            grad_h.iter_mut().for_each(|x| *x = 0.0);
+            grad_h.fill(0.0);
             let h = w_in.row(center);
 
-            // Positive pair.
-            let pos = dot_rows(h, w_out.row(context));
-            let s_pos = sig.get(pos);
-            let g_pos = s_pos - 1.0;
-            loss_sum += -ln_sigmoid(pos) as f64;
-            accumulate(&mut grad_h, w_out.row(context), g_pos);
-            axpy(w_out.row_mut(context), h, -lr * g_pos);
+            // Positive pair: dot, then one fused pass over the context
+            // row (grad accumulation + row update in a single traversal).
+            let pos = kernels::dot(h, w_out.row(context));
+            let g_pos = sig.get(pos) - 1.0;
+            loss_sum += -kernels::ln_sigmoid(pos) as f64;
+            kernels::fused_grad_update(&mut grad_h, w_out.row_mut(context), h, g_pos, lr);
 
-            // Negatives.
+            // Negatives: same fused shape per sampled row.
             for &ng in &neg_buf {
-                let neg = dot_rows(h, w_out.row(ng));
+                let neg = kernels::dot(h, w_out.row(ng));
                 let s_neg = sig.get(neg);
-                loss_sum += -ln_sigmoid(-neg) as f64;
-                accumulate(&mut grad_h, w_out.row(ng), s_neg);
-                axpy(w_out.row_mut(ng), h, -lr * s_neg);
+                loss_sum += -kernels::ln_sigmoid(-neg) as f64;
+                kernels::fused_grad_update(&mut grad_h, w_out.row_mut(ng), h, s_neg, lr);
             }
-            axpy(w_in.row_mut(center), &grad_h, -lr);
+            kernels::axpy(w_in.row_mut(center), &grad_h, -lr);
             emitted += 1;
         }
     }
@@ -167,35 +143,56 @@ pub fn train_native_sharded(
 }
 
 // ---------------------------------------------------------------------------
-// Hogwild-parallel trainer (§Perf): the word2vec trick, made sound in
-// rust with relaxed AtomicU32 loads/stores (bit-cast f32). Racy lost
+// Hogwild-parallel trainer (DESIGN.md §Training): classic racy hogwild —
+// workers update one shared plain-f32 matrix per side through
+// HogwildMatrix row views, with no per-element atomics. Sparse lost
 // updates are part of hogwild's contract (SGD tolerates them); results
 // are non-deterministic across runs, so the serial trainers remain the
-// cross-check oracles.
+// cross-check oracles. The inner loop is the same fused-kernel step the
+// serial trainer runs, so the two paths cannot drift.
 //
 // Work partitioning is shard-granular: workers claim whole shards from
 // the task queue (util::pool::parallel_tasks) and stream one shard at a
 // time, so the hogwild path also keeps peak corpus memory O(shard).
+// Shared per-run state (sigmoid table, sampler) is built once and
+// borrowed by every worker — nothing is rebuilt per shard task.
 //
 // Measured on this testbed (EXPERIMENTS.md §Perf): the container exposes
-// ONE cpu core, so threads > 1 only adds overhead (atomic element ops
-// also defeat SIMD: ~1.5x slower per op than the serial slice path).
-// `threads = 1` therefore routes to the serial trainer, and the pipeline
-// default (`pool::default_threads()` = available_parallelism = 1 there)
-// picks the fast path automatically; the hogwild path exists for
-// multi-core deployments.
+// ONE cpu core, so threads > 1 only adds scheduling overhead.
+// `threads = 1` therefore routes to the serial trainer (also keeping the
+// single-thread path deterministic), and the pipeline default
+// (`pool::default_threads()` = available_parallelism = 1 there) picks
+// the fast path automatically; the hogwild path exists for multi-core
+// deployments, where the racy matrix lets the fused kernels vectorize
+// exactly like the serial path (`make bench-train` records the
+// atomic-vs-racy comparison in BENCH_train.json).
 // ---------------------------------------------------------------------------
 
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering::Relaxed};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
+/// Point on the linear lr schedule after `done` of `total` pairs.
 #[inline]
-fn at_load(a: &AtomicU32) -> f32 {
-    f32::from_bits(a.load(Relaxed))
+fn lr_at(params: &SgnsParams, done: u64, total: u64) -> f32 {
+    let frac = done as f64 / total as f64;
+    ((params.lr0 as f64 * (1.0 - frac)).max(params.lr_min as f64)) as f32
 }
 
-#[inline]
-fn at_store(a: &AtomicU32, v: f32) {
-    a.store(v.to_bits(), Relaxed)
+/// Expand one walk into its dynamic-window skip-gram pairs (word2vec
+/// semantics, one radius draw per center — the same distribution
+/// `ShardedPairStream` produces), reusing `out`. Keeping pair expansion
+/// out of the numeric loop lets the fused kernels run back to back.
+fn window_pairs(walk: &[u32], window: usize, rng: &mut Rng, out: &mut Vec<(u32, u32)>) {
+    out.clear();
+    for c_pos in 0..walk.len() {
+        let radius = 1 + rng.gen_index(window);
+        let lo = c_pos.saturating_sub(radius);
+        let hi = (c_pos + radius).min(walk.len() - 1);
+        for t_pos in lo..=hi {
+            if t_pos != c_pos {
+                out.push((walk[c_pos], walk[t_pos]));
+            }
+        }
+    }
 }
 
 /// Train SGNS over a sharded corpus with `threads` hogwild workers.
@@ -215,9 +212,13 @@ pub fn train_native_parallel_sharded(
     let dim = params.dim;
     let mut seed_rng = Rng::new(params.seed);
     let init = Embedding::word2vec_init(n_nodes, dim, &mut seed_rng);
-    let w_in: Vec<AtomicU32> = init.data().iter().map(|x| AtomicU32::new(x.to_bits())).collect();
-    let w_out: Vec<AtomicU32> = (0..n_nodes * dim).map(|_| AtomicU32::new(0)).collect();
+    let w_in = HogwildMatrix::from_embedding(init);
+    let w_out = HogwildMatrix::from_embedding(Embedding::zeros(n_nodes, dim));
     let sampler = NegativeSampler::from_counts(&corpus.node_counts());
+    // Hoisted per-run state, shared by reference across workers (the
+    // sigmoid table used to be rebuilt per shard *task*, not even per
+    // worker).
+    let sig = SigmoidTable::new();
     let total_pairs = (corpus.exact_pair_count(params.window) * params.epochs as u64).max(1);
     let global_pairs = AtomicU64::new(0);
 
@@ -226,9 +227,9 @@ pub fn train_native_parallel_sharded(
         threads,
         |si| {
             let shard = &corpus.shards()[si];
-            let sig = SigmoidTable::new();
             let mut rng = Rng::new(params.seed ^ (0xBEEF + si as u64));
             let mut neg_buf: Vec<u32> = Vec::with_capacity(params.negatives);
+            let mut pair_buf: Vec<(u32, u32)> = Vec::new();
             let mut grad_h = vec![0f32; dim];
             let mut h_snap = vec![0f32; dim];
             let mut walk: Vec<u32> = Vec::new();
@@ -238,72 +239,42 @@ pub fn train_native_parallel_sharded(
             for _epoch in 0..params.epochs {
                 let mut reader = shard.reader();
                 while reader.next_walk(&mut walk) {
-                    for c_pos in 0..walk.len() {
-                        let radius = 1 + rng.gen_index(params.window);
-                        let lo = c_pos.saturating_sub(radius);
-                        let hi = (c_pos + radius).min(walk.len() - 1);
-                        for t_pos in lo..=hi {
-                            if t_pos == c_pos {
-                                continue;
-                            }
-                            let center = walk[c_pos] as usize;
-                            let context = walk[t_pos] as usize;
-                            // Refresh lr from the shared counter every 4096
-                            // local pairs (keeps the contended RMW rare).
-                            if local_pairs % 4096 == 0 {
-                                let done = global_pairs.fetch_add(4096, Relaxed);
-                                let frac = done as f64 / total_pairs as f64;
-                                lr = ((params.lr0 as f64 * (1.0 - frac))
-                                    .max(params.lr_min as f64))
-                                    as f32;
-                            }
-                            sampler.sample_k(
-                                params.negatives,
-                                context as u32,
-                                &mut rng,
-                                &mut neg_buf,
-                            );
-                            let h_row = &w_in[center * dim..(center + 1) * dim];
-                            for (s, a) in h_snap.iter_mut().zip(h_row) {
-                                *s = at_load(a);
-                            }
-                            grad_h.iter_mut().for_each(|x| *x = 0.0);
-                            // Positive.
-                            let c_row = &w_out[context * dim..(context + 1) * dim];
-                            let mut pos = 0f32;
-                            for (hs, ca) in h_snap.iter().zip(c_row) {
-                                pos += hs * at_load(ca);
-                            }
-                            let g_pos = sig.get(pos) - 1.0;
-                            loss_sum += -ln_sigmoid(pos) as f64;
-                            for ((gh, ca), hs) in
-                                grad_h.iter_mut().zip(c_row).zip(&h_snap)
-                            {
-                                *gh += g_pos * at_load(ca);
-                                at_store(ca, at_load(ca) - lr * g_pos * hs);
-                            }
-                            // Negatives.
-                            for &ng in &neg_buf {
-                                let n_row =
-                                    &w_out[ng as usize * dim..(ng as usize + 1) * dim];
-                                let mut neg = 0f32;
-                                for (hs, na) in h_snap.iter().zip(n_row) {
-                                    neg += hs * at_load(na);
-                                }
-                                let s_neg = sig.get(neg);
-                                loss_sum += -ln_sigmoid(-neg) as f64;
-                                for ((gh, na), hs) in
-                                    grad_h.iter_mut().zip(n_row).zip(&h_snap)
-                                {
-                                    *gh += s_neg * at_load(na);
-                                    at_store(na, at_load(na) - lr * s_neg * hs);
-                                }
-                            }
-                            for (ha, gh) in h_row.iter().zip(&grad_h) {
-                                at_store(ha, at_load(ha) - lr * gh);
-                            }
-                            local_pairs += 1;
+                    window_pairs(&walk, params.window, &mut rng, &mut pair_buf);
+                    for &(center, context) in &pair_buf {
+                        // Refresh lr from the shared counter every 4096
+                        // local pairs (keeps the contended RMW rare).
+                        if local_pairs % 4096 == 0 {
+                            let done = global_pairs.fetch_add(4096, Relaxed);
+                            lr = lr_at(params, done, total_pairs);
                         }
+                        sampler.sample_k(params.negatives, context, &mut rng, &mut neg_buf);
+                        let (ci, ti) = (center as usize, context as usize);
+                        // Snapshot the center row once per pair; the racy
+                        // read is within the hogwild contract.
+                        let h_src = unsafe { from_raw_parts(w_in.row_ptr(ci), dim) };
+                        h_snap.copy_from_slice(h_src);
+                        grad_h.fill(0.0);
+
+                        // Positive: dot + one fused pass — exactly the
+                        // serial kernels, on a racy row view.
+                        let c_row = unsafe { from_raw_parts_mut(w_out.row_ptr(ti), dim) };
+                        let pos = kernels::dot(&h_snap, c_row);
+                        let g_pos = sig.get(pos) - 1.0;
+                        loss_sum += -kernels::ln_sigmoid(pos) as f64;
+                        kernels::fused_grad_update(&mut grad_h, c_row, &h_snap, g_pos, lr);
+
+                        // Negatives: same fused shape per sampled row.
+                        for &ng in &neg_buf {
+                            let ni = ng as usize;
+                            let n_row = unsafe { from_raw_parts_mut(w_out.row_ptr(ni), dim) };
+                            let neg = kernels::dot(&h_snap, n_row);
+                            let s_neg = sig.get(neg);
+                            loss_sum += -kernels::ln_sigmoid(-neg) as f64;
+                            kernels::fused_grad_update(&mut grad_h, n_row, &h_snap, s_neg, lr);
+                        }
+                        let h_row = unsafe { from_raw_parts_mut(w_in.row_ptr(ci), dim) };
+                        kernels::axpy(h_row, &grad_h, -lr);
+                        local_pairs += 1;
                     }
                 }
             }
@@ -314,16 +285,9 @@ pub fn train_native_parallel_sharded(
     let (loss_sum, n_pairs) = results
         .into_iter()
         .fold((0f64, 0u64), |(l, n), (dl, dn)| (l + dl, n + dn));
-    let to_emb = |ws: Vec<AtomicU32>| -> Embedding {
-        Embedding::from_data(
-            ws.into_iter().map(|a| f32::from_bits(a.into_inner())).collect(),
-            n_nodes,
-            dim,
-        )
-    };
     NativeTrainResult {
-        w_in: to_emb(w_in),
-        w_out: to_emb(w_out),
+        w_in: w_in.into_embedding(),
+        w_out: w_out.into_embedding(),
         mean_loss: if n_pairs == 0 {
             0.0
         } else {
@@ -331,33 +295,6 @@ pub fn train_native_parallel_sharded(
         },
         n_pairs,
     }
-}
-
-#[inline]
-fn dot_rows(a: &[f32], b: &[f32]) -> f32 {
-    super::matrix::dot(a, b)
-}
-
-/// `acc += scale * row`
-#[inline]
-fn accumulate(acc: &mut [f32], row: &[f32], scale: f32) {
-    for (a, &r) in acc.iter_mut().zip(row) {
-        *a += scale * r;
-    }
-}
-
-/// `row += scale * delta`  (delta must not alias row)
-#[inline]
-fn axpy(row: &mut [f32], delta: &[f32], scale: f32) {
-    for (r, &d) in row.iter_mut().zip(delta) {
-        *r += scale * d;
-    }
-}
-
-#[inline]
-fn ln_sigmoid(x: f32) -> f32 {
-    // stable: min(x,0) - ln(1 + e^{-|x|})
-    x.min(0.0) - (-x.abs()).exp().ln_1p()
 }
 
 #[cfg(test)]
@@ -378,6 +315,15 @@ mod tests {
         }
     }
 
+    fn ring_separation(emb: &Embedding, n: usize) -> (f64, f64) {
+        let (mut adj, mut far) = (0f64, 0f64);
+        for v in 0..n as u32 {
+            adj += emb.cosine(v, (v + 1) % n as u32) as f64;
+            far += emb.cosine(v, (v + n as u32 / 2) % n as u32) as f64;
+        }
+        (adj / n as f64, far / n as f64)
+    }
+
     #[test]
     fn training_learns_ring_structure() {
         // On a ring, adjacent nodes should end up more similar than
@@ -395,14 +341,7 @@ mod tests {
         );
         let r = train_native(&corpus, n, &small_params(16));
         assert!(r.n_pairs > 1000);
-        let mut adj_sim = 0f64;
-        let mut far_sim = 0f64;
-        for v in 0..n as u32 {
-            adj_sim += r.w_in.cosine(v, (v + 1) % n as u32) as f64;
-            far_sim += r.w_in.cosine(v, (v + n as u32 / 2) % n as u32) as f64;
-        }
-        adj_sim /= n as f64;
-        far_sim /= n as f64;
+        let (adj_sim, far_sim) = ring_separation(&r.w_in, n);
         assert!(
             adj_sim > far_sim + 0.2,
             "adjacent {adj_sim} vs antipodal {far_sim}"
@@ -426,21 +365,6 @@ mod tests {
         // Untrained loss is (1+K)*ln2 ~ 4.16; training should beat it.
         assert!(r.mean_loss < 4.16, "mean loss {}", r.mean_loss);
         assert!(r.mean_loss > 0.0);
-    }
-
-    #[test]
-    fn sigmoid_table_accuracy() {
-        let sig = SigmoidTable::new();
-        for &x in &[-5.9f32, -2.0, -0.5, 0.0, 0.5, 2.0, 5.9] {
-            let exact = 1.0 / (1.0 + (-x).exp());
-            assert!(
-                (sig.get(x) - exact).abs() < 0.01,
-                "x={x}: {} vs {exact}",
-                sig.get(x)
-            );
-        }
-        assert_eq!(sig.get(100.0), 1.0);
-        assert_eq!(sig.get(-100.0), 0.0);
     }
 
     #[test]
@@ -472,17 +396,54 @@ mod tests {
         assert!((0.8..1.2).contains(&ratio), "pair ratio {ratio}");
         assert!(par.mean_loss.is_finite() && par.mean_loss < 4.16);
         // Learns the same ring structure.
-        let (mut adj, mut far) = (0f64, 0f64);
-        for v in 0..n as u32 {
-            adj += par.w_in.cosine(v, (v + 1) % n as u32) as f64;
-            far += par.w_in.cosine(v, (v + n as u32 / 2) % n as u32) as f64;
-        }
-        assert!(
-            adj / n as f64 > far / n as f64 + 0.2,
-            "adjacent {} vs antipodal {}",
-            adj / n as f64,
-            far / n as f64
+        let (adj, far) = ring_separation(&par.w_in, n);
+        assert!(adj > far + 0.2, "adjacent {adj} vs antipodal {far}");
+    }
+
+    #[test]
+    fn hogwild_thread_sweep_stays_finite_and_learns() {
+        // The racy-matrix path must hold at any worker count: 1 routes
+        // to the serial trainer, 2 and 8 race on the shared f32 rows.
+        let n = 24;
+        let g = generators::ring(n);
+        let sharded = generate_walk_shards(
+            &g,
+            &WalkSchedule::uniform(n, 20),
+            &WalkParams {
+                walk_length: 12,
+                seed: 1,
+                threads: 2,
+            },
+            &ShardOpts {
+                shards: 8,
+                ..Default::default()
+            },
         );
+        for threads in [1usize, 2, 8] {
+            let r = train_native_parallel_sharded(&sharded, n, &small_params(16), threads);
+            assert!(r.n_pairs > 1000, "threads={threads}: {} pairs", r.n_pairs);
+            assert!(
+                r.mean_loss.is_finite() && r.mean_loss > 0.0 && r.mean_loss < 4.16,
+                "threads={threads}: loss {}",
+                r.mean_loss
+            );
+            assert!(
+                r.w_in.data().iter().all(|x| x.is_finite()),
+                "threads={threads}: non-finite embedding"
+            );
+            // Quality margin only on the deterministic serial route:
+            // at 8 workers racing on 24 rows an unlucky interleave can
+            // legitimately dent the margin, and a failed run could not
+            // be reproduced (parallel_matches_serial_quality covers the
+            // racy path's quality at a realistic worker count).
+            if threads == 1 {
+                let (adj, far) = ring_separation(&r.w_in, n);
+                assert!(
+                    adj > far + 0.2,
+                    "threads={threads}: adjacent {adj} vs antipodal {far}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -549,17 +510,8 @@ mod tests {
         assert_eq!(a.w_in, b.w_in);
         assert_eq!(a.n_pairs, b.n_pairs);
         assert!(a.mean_loss < 4.16);
-        let (mut adj, mut far) = (0f64, 0f64);
-        for v in 0..n as u32 {
-            adj += a.w_in.cosine(v, (v + 1) % n as u32) as f64;
-            far += a.w_in.cosine(v, (v + n as u32 / 2) % n as u32) as f64;
-        }
-        assert!(
-            adj / n as f64 > far / n as f64 + 0.2,
-            "adjacent {} vs antipodal {}",
-            adj / n as f64,
-            far / n as f64
-        );
+        let (adj, far) = ring_separation(&a.w_in, n);
+        assert!(adj > far + 0.2, "adjacent {adj} vs antipodal {far}");
     }
 
     #[test]

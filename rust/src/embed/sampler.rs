@@ -31,13 +31,23 @@ impl NegativeSampler {
     /// Fill `out` with `k` negatives, rejecting the positive context
     /// (word2vec keeps accidental collisions with the *center*; we follow
     /// that and only exclude the context node).
+    ///
+    /// The rejection loop is bounded: when the excluded context is the
+    /// only node with nonzero count, rejection can never succeed, so
+    /// after a generous retry budget collisions are kept instead (the
+    /// word2vec precedent — it keeps center collisions unconditionally).
+    /// For any non-degenerate distribution the budget is far above the
+    /// expected rejection count and never bites.
     #[inline]
     pub fn sample_k(&self, k: usize, exclude: u32, rng: &mut Rng, out: &mut Vec<u32>) {
         out.clear();
+        let mut budget = 16 * k + 64;
         while out.len() < k {
             let s = self.table.sample(rng);
-            if s != exclude {
+            if s != exclude || budget == 0 {
                 out.push(s);
+            } else {
+                budget -= 1;
             }
         }
     }
@@ -71,6 +81,19 @@ mod tests {
         s.sample_k(50, 1, &mut rng, &mut out);
         assert_eq!(out.len(), 50);
         assert!(out.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn degenerate_distribution_terminates_by_keeping_collisions() {
+        // Node 1 is the only samplable node AND the excluded context:
+        // unbounded rejection would spin forever. The bounded loop must
+        // fall back to keeping the collision.
+        let counts = vec![0u64, 7, 0];
+        let s = NegativeSampler::from_counts(&counts);
+        let mut rng = Rng::new(3);
+        let mut out = Vec::new();
+        s.sample_k(5, 1, &mut rng, &mut out);
+        assert_eq!(out, vec![1; 5]);
     }
 
     #[test]

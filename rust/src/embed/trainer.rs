@@ -1,4 +1,4 @@
-//! The PJRT-backed SGNS trainer — the request-path hot loop.
+//! The PJRT-backed SGNS trainer — the device-offload hot loop.
 //!
 //! Orchestration: stream skip-gram pairs out of the sharded corpus
 //! ([`crate::walks::ShardedPairStream`]) into `[S, B, 3+K]` super-batches
@@ -8,6 +8,11 @@
 //! corpus or the pair list — peak host memory is O(shard) + O(batch)
 //! (DESIGN.md §Corpus-streaming). Loss is polled from the on-device
 //! stats row at a configurable cadence.
+//!
+//! On CPU-only hosts the fused-kernel native trainers
+//! ([`super::native`], DESIGN.md §Training) are the fast path; this
+//! trainer and those share sampling and objective, so either can
+//! cross-check the other.
 
 use anyhow::Result;
 

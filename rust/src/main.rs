@@ -49,6 +49,7 @@ COMMANDS
             [--p P] [--q Q] (node2vec bias knobs; must be positive finite)
             [--k0 K] [--backend pjrt|native] [--walks N] [--walk-length L]
             [--dim D] [--window W] [--epochs E] [--seed N]
+            [--threads N] [--train-threads N]
             [--shards S] [--corpus-budget-mb M] [--spill-dir DIR]
             [--store ARTIFACT [--notify SOCKET]] --out PATH
   eval      (--graph NAME | --edges PATH) [--remove FRAC] [--trials T]
@@ -72,6 +73,11 @@ depend on --threads), --corpus-budget-mb M bounds resident corpus memory
 by spilling shards to disk (0 = unbounded), and --spill-dir points spill
 files at a dedicated scratch disk (default: OS temp dir). See DESIGN.md
 §Corpus-streaming.
+
+Native training (DESIGN.md §Training): --train-threads N sets the SGNS
+hogwild worker count independently of --threads (0 = follow --threads);
+1 selects the deterministic serial trainer, >1 runs racy hogwild on the
+fused kernels. `make bench-train` records the kernel throughput.
 
 Serving (DESIGN.md §Serving): `embed --store` exports a versioned binary
 artifact (embedding + core numbers, checksummed); `serve`/`query` mmap
@@ -178,6 +184,9 @@ fn build_config(args: &Args) -> Result<PipelineConfig> {
         usize::MAX => None,
         k => Some(k as u32),
     };
+    cfg.train_threads = args
+        .get_usize("train-threads", 0)
+        .map_err(anyhow::Error::msg)?;
     cfg.sgns.dim = args.get_usize("dim", 128).map_err(anyhow::Error::msg)?;
     cfg.sgns.window = args.get_usize("window", 4).map_err(anyhow::Error::msg)?;
     cfg.sgns.epochs = args.get_usize("epochs", 1).map_err(anyhow::Error::msg)?;

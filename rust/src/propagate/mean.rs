@@ -123,7 +123,7 @@ pub fn propagate_mean(
             let mut max_delta = 0f32;
             for (i, &v) in frontier.iter().enumerate() {
                 let out = &mut next[i * dim..(i + 1) * dim];
-                out.iter_mut().for_each(|x| *x = 0.0);
+                out.fill(0.0);
                 let nbrs = &nbr_lists[i];
                 if nbrs.is_empty() {
                     continue;
