@@ -1,6 +1,6 @@
 # Convenience targets; everything also works as plain cargo/python calls.
 
-.PHONY: build test bench bench-train bench-train-quick artifacts smoke
+.PHONY: build test bench bench-train bench-train-quick bench-serve artifacts smoke
 
 build:
 	cd rust && cargo build --release
@@ -21,6 +21,37 @@ bench-train:
 bench-train-quick:
 	cd rust && cargo bench --bench hotpaths -- --train-only --quick --json ../BENCH_train.json
 
+# Serving latency snapshot: run the daemon on loopback TCP and drive
+# the loadgen scenarios against the exact scan path, then again with
+# --quantized, merging both under their labels into BENCH_serve.json
+# (DESIGN.md §Serving). Fan-out is 8 clients x 125 batches = 1000
+# batches per labelled pass; loadgen exits non-zero on any failed
+# batch.
+bench-serve: build
+	set -e; \
+	  ./rust/target/release/kcore-embed embed --graph cora \
+	    --backend native --walks 2 --walk-length 10 --dim 32 \
+	    --out /tmp/bench_serve_emb.tsv --store /tmp/bench_serve_emb.kce; \
+	  for label in exact quantized; do \
+	    if [ $$label = quantized ]; then QFLAG=--quantized; PORT=47318; \
+	    else QFLAG=; PORT=47317; fi; \
+	    ./rust/target/release/kcore-embed serve --store /tmp/bench_serve_emb.kce \
+	      $$QFLAG --listen-tcp 127.0.0.1:$$PORT & DPID=$$!; \
+	    trap 'kill $$DPID 2>/dev/null || true' EXIT; \
+	    for i in $$(seq 100); do \
+	      ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:$$PORT \
+	        --control stats >/dev/null 2>&1 && break; sleep 0.1; \
+	    done; \
+	    ./rust/target/release/loadgen --connect-tcp 127.0.0.1:$$PORT \
+	      --scenario all --clients 8 --batches 125 --batch 8 --seed 7 \
+	      --json BENCH_serve.json --label $$label; \
+	    ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:$$PORT \
+	      --control shutdown; \
+	    wait $$DPID; \
+	  done
+	python3 -m json.tool BENCH_serve.json > /dev/null
+	@echo "BENCH_serve.json written"
+
 # AOT-compile the PJRT HLO artifacts (requires the python toolchain;
 # rust falls back to --backend native without them).
 artifacts:
@@ -33,8 +64,10 @@ artifacts:
 # the spill path actually executed (grep for the spill report), then
 # runs the persistent daemon: serve --listen on a unix socket, query
 # over it, hot-swap via a re-export with --notify (answers must
-# change), stats, and a graceful shutdown with exit code 0. CI runs
-# exactly this target — extend it here, not in ci.yml.
+# change), stats, and a graceful shutdown with exit code 0. Then the
+# same daemon on loopback TCP, driven by a short loadgen scenario pair
+# whose JSON must record zero failed batches. CI runs exactly this
+# target — extend it here, not in ci.yml.
 smoke: build
 	cd rust && ./target/release/kcore-embed embed --graph cora \
 	  --backend native --walks 2 --walk-length 10 --dim 32 \
@@ -77,5 +110,24 @@ smoke: build
 	  ./rust/target/release/kcore-embed query --connect /tmp/smoke_daemon.sock \
 	    --control stats; \
 	  ./rust/target/release/kcore-embed query --connect /tmp/smoke_daemon.sock \
+	    --control shutdown; \
+	  wait $$DPID
+	set -e; \
+	  rm -f /tmp/smoke_serve.json; \
+	  ./rust/target/release/kcore-embed serve --store /tmp/smoke_emb.kce \
+	    --listen-tcp 127.0.0.1:47311 & DPID=$$!; \
+	  trap 'kill $$DPID 2>/dev/null || true' EXIT; \
+	  for i in $$(seq 100); do \
+	    ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:47311 \
+	      --control stats >/dev/null 2>&1 && break; sleep 0.1; \
+	  done; \
+	  ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:47311 \
+	    --node 0 --top-k 5; \
+	  ./rust/target/release/loadgen --connect-tcp 127.0.0.1:47311 \
+	    --scenario baseline,fanout --clients 4 --batches 25 --batch 4 --seed 7 \
+	    --json /tmp/smoke_serve.json --label smoke; \
+	  grep -q '"p99_us"' /tmp/smoke_serve.json; \
+	  grep -q '"failed_batches":0' /tmp/smoke_serve.json; \
+	  ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:47311 \
 	    --control shutdown; \
 	  wait $$DPID

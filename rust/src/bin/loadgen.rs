@@ -1,0 +1,62 @@
+//! `loadgen` — multi-client load generator for the serving daemon.
+//!
+//! Thin shell over [`kcore_embed::serve::loadtest`]: plans
+//! deterministic request schedules, drives a live daemon over unix or
+//! TCP, prints one JSON line per scenario and merges histograms into a
+//! bench file. `kcore-embed loadgen` is the same entry point; this
+//! standalone binary exists so load tests need none of the pipeline's
+//! subcommand surface.
+//!
+//! ```text
+//! loadgen --connect-tcp 127.0.0.1:7878 --scenario fanout \
+//!         --clients 8 --batches 125 --batch 8 \
+//!         --json BENCH_serve.json --label exact
+//! ```
+
+use kcore_embed::serve::loadtest;
+use kcore_embed::util::cli::Args;
+
+const USAGE: &str = "\
+loadgen — drive a running kcore-embed serving daemon with load scenarios
+
+USAGE: loadgen (--connect ADDR | --connect-tcp HOST:PORT) [options]
+
+  --scenario S      baseline|fanout|fanin|poisson, comma list, or 'all'
+  --clients N       concurrent client connections (default 8)
+  --batches N       batches per client (default 50)
+  --batch N         request lines per batch (default 8)
+  --top-k K         k for generated nn requests (default 10)
+  --nodes N         node-id space (default: probe the daemon's stats)
+  --seed N          schedule seed; fixed seed = identical request stream
+  --rate R          poisson arrivals per client per second (default 200)
+  --edge-frac F     edge-verb fraction in the poisson mix (default 0.25)
+  --stats-frac F    stats-verb fraction in the poisson mix (default 0.02)
+  --json PATH       merge results into PATH as {label: {scenario: ...}}
+  --label NAME      label inside the json file (default: transport name)
+  --allow-failures  exit 0 even when batches failed
+
+Each scenario prints one single-line JSON object with per-batch latency
+percentiles (p50/p90/p99/max microseconds), throughput and error counts.
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.has_flag("help") {
+        print!("{USAGE}");
+        return;
+    }
+    if let Some(cmd) = &args.command {
+        eprintln!("error: loadgen takes no subcommand (got {cmd:?})\n{USAGE}");
+        std::process::exit(2);
+    }
+    if let Err(e) = loadtest::run_cli(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

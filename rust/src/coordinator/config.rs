@@ -94,10 +94,11 @@ pub struct PipelineConfig {
     /// at this path. None = no export.
     pub export_store: Option<std::path::PathBuf>,
     /// After exporting, tell the serving daemon listening on this
-    /// Unix-domain socket to hot-swap to the fresh artifact
-    /// ([`crate::serve::server::notify_swap`]). Requires
-    /// `export_store`. None = no notification.
-    pub notify_daemon: Option<std::path::PathBuf>,
+    /// address — a unix-socket path or a TCP `host:port`
+    /// ([`crate::serve::server::ServeAddr::parse`]) — to hot-swap to
+    /// the fresh artifact ([`crate::serve::server::notify_swap`]).
+    /// Requires `export_store`. None = no notification.
+    pub notify_daemon: Option<String>,
 }
 
 impl Default for PipelineConfig {
@@ -191,8 +192,8 @@ impl PipelineConfig {
             (
                 "notify_daemon",
                 self.notify_daemon
-                    .as_ref()
-                    .map(|p| Json::str(&p.to_string_lossy()))
+                    .as_deref()
+                    .map(Json::str)
                     .unwrap_or(Json::Null),
             ),
         ];
@@ -255,7 +256,7 @@ impl PipelineConfig {
         cfg.notify_daemon = j
             .get("notify_daemon")
             .and_then(Json::as_str)
-            .map(std::path::PathBuf::from);
+            .map(str::to_string);
         cfg.validate()?;
         Ok(cfg)
     }
@@ -310,7 +311,7 @@ mod tests {
             corpus_budget_mb: 64,
             spill_dir: Some(std::path::PathBuf::from("/scratch/corpus")),
             export_store: Some(std::path::PathBuf::from("out/emb.kce")),
-            notify_daemon: Some(std::path::PathBuf::from("/run/kcore.sock")),
+            notify_daemon: Some("/run/kcore.sock".to_string()),
             ..Default::default()
         };
         let back = PipelineConfig::from_json(&cfg.to_json()).unwrap();
@@ -329,7 +330,7 @@ mod tests {
     #[test]
     fn notify_without_export_rejected() {
         let cfg = PipelineConfig {
-            notify_daemon: Some(std::path::PathBuf::from("/run/kcore.sock")),
+            notify_daemon: Some("/run/kcore.sock".to_string()),
             ..Default::default()
         };
         assert!(cfg.validate().is_err());

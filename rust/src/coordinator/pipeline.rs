@@ -249,13 +249,16 @@ pub fn run_pipeline(
     // (`make smoke` still hard-fails a broken notify path: the daemon's
     // answers would not change after the re-export.)
     let daemon_ack = match (&cfg.notify_daemon, &cfg.export_store) {
-        (Some(sock), Some(path)) => match crate::serve::server::notify_swap(sock, path) {
-            Ok(ack) => Some(ack),
-            Err(e) => {
-                eprintln!("warning: serving daemon at {} not notified: {e:#}", sock.display());
-                None
+        (Some(addr), Some(path)) => {
+            let addr = crate::serve::server::ServeAddr::parse(addr);
+            match crate::serve::server::notify_swap(&addr, path) {
+                Ok(ack) => Some(ack),
+                Err(e) => {
+                    eprintln!("warning: serving daemon at {addr} not notified: {e:#}");
+                    None
+                }
             }
-        },
+        }
         _ => None,
     };
 
@@ -474,7 +477,7 @@ mod tests {
     fn notify_daemon_without_export_fails_but_dead_daemon_is_nonfatal() {
         let g = generators::ring(10);
         let mut cfg = tiny_cfg();
-        cfg.notify_daemon = Some(std::path::PathBuf::from("/tmp/kcore_no_daemon_here.sock"));
+        cfg.notify_daemon = Some("/tmp/kcore_no_daemon_here.sock".to_string());
         // No export_store: rejected at validation, before any work.
         assert!(run_pipeline(&g, &cfg, None).is_err());
         // With an export but nothing listening: the run must still

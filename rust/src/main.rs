@@ -19,6 +19,7 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -31,9 +32,9 @@ use kcore_embed::eval::EdgeOp;
 use kcore_embed::graph::{generators, io, metrics, Graph};
 use kcore_embed::runtime::{default_artifacts_dir, Manifest, Runtime};
 use kcore_embed::serve::{
-    client_exchange, notify_swap, run_server, ClientMsg, EdgeScorer, EdgeScorerParams,
+    client_exchange, loadtest, notify_swap, run_server, ClientMsg, EdgeScorer, EdgeScorerParams,
     EmbeddingStore, GenerationOpts, GenerationStore, Metric, QueryService, Request, Response,
-    ServeOpts, ServerOpts, TopKParams,
+    ServeAddr, ServeOpts, ServerOpts, TopKParams,
 };
 use kcore_embed::util::cli::Args;
 
@@ -51,19 +52,25 @@ COMMANDS
             [--dim D] [--window W] [--epochs E] [--seed N]
             [--threads N] [--train-threads N]
             [--shards S] [--corpus-budget-mb M] [--spill-dir DIR]
-            [--store ARTIFACT [--notify SOCKET]] --out PATH
+            [--store ARTIFACT [--notify ADDR]] --out PATH
   eval      (--graph NAME | --edges PATH) [--remove FRAC] [--trials T]
             [--embedder ...] [--k0 K] [--cores K1,K2,...] [--backend ...]
             [--walks N] [--seed N]
   serve     --store ARTIFACT [--requests FILE] [--metric dot|cosine]
             [--quantized] [--batch N] [--top-k K] [--in-memory]
             [--threads N] [(--graph NAME | --edges PATH) [--op OP]]
-            [--listen SOCKET]   (persistent daemon mode)
+            [--listen SOCKET | --listen-tcp HOST:PORT]  (daemon mode)
+            [--max-conns N] [--read-timeout-ms MS]
   query     --store ARTIFACT (--node V [--top-k K] | --edge U,V)
             [--metric dot|cosine] [--quantized] [--in-memory]
             [(--graph NAME | --edges PATH) [--op OP]]
-  query     --connect SOCKET (--node V [--top-k K] | --edge U,V |
+  query     (--connect ADDR | --connect-tcp HOST:PORT)
+            (--node V [--top-k K] | --edge U,V |
             --control swap --store ARTIFACT | --control stats|shutdown)
+  loadgen   (--connect ADDR | --connect-tcp HOST:PORT)
+            [--scenario baseline|fanout|fanin|poisson|all] [--clients N]
+            [--batches N] [--batch N] [--seed N] [--rate R]
+            [--json PATH --label NAME]   (see `loadgen --help`)
   bench     --exp NAME [--trials T] [--walks N] [--backend pjrt|native]
             [--seed N] [--out-dir DIR] [--quick]
 
@@ -87,11 +94,21 @@ lines ('nn NODE K' | 'edge U V') from --requests or stdin and prints a
 per-batch latency-percentile table; edge scoring needs the serving
 graph (--graph/--edges) to fit its logistic model at startup.
 
-Daemon mode: `serve --listen SOCK` keeps serving on a unix socket and
-hot-swaps artifact generations without downtime — re-exports over the
-watched path are picked up automatically, `embed --notify SOCK` pushes
-a swap after export, and `query --connect SOCK` sends queries or the
-swap/stats/shutdown control verbs.
+Daemon mode: `serve --listen SOCK` (unix socket) or `serve --listen-tcp
+HOST:PORT` (TCP; port 0 picks an ephemeral port and prints it) keeps
+serving and hot-swaps artifact generations without downtime —
+re-exports over the watched path are picked up automatically, `embed
+--notify ADDR` pushes a swap after export (ADDR is a socket path or
+host:port), and `query --connect ADDR` / `--connect-tcp HOST:PORT`
+sends queries or the swap/stats/shutdown control verbs. --max-conns
+caps live connections (over-capacity clients get one parseable err
+line; 0 = unlimited, default 256) and --read-timeout-ms closes
+connections idle past the limit (0 disables, default 30000).
+
+Load testing: `loadgen` drives a running daemon with deterministic
+multi-client scenarios and records latency histograms; `make
+bench-serve` snapshots BENCH_serve.json for the exact and quantized
+scan paths.
 
 Run `make artifacts` once before using the pjrt backend.
 ";
@@ -116,6 +133,7 @@ fn main() {
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
         "query" => cmd_query(&args),
+        "loadgen" => loadtest::run_cli(&args),
         "bench" => cmd_bench(&args),
         other => Err(anyhow::anyhow!("unknown command {other:?}\n{USAGE}")),
     };
@@ -243,7 +261,7 @@ fn cmd_embed(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
     let mut cfg = build_config(args)?;
     cfg.export_store = args.opt_str("store").map(PathBuf::from);
-    cfg.notify_daemon = args.opt_str("notify").map(PathBuf::from);
+    cfg.notify_daemon = args.opt_str("notify");
     cfg.validate()?; // --notify without --store is a usage error
     let out = args
         .opt_str("out")
@@ -417,8 +435,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map_err(anyhow::Error::msg)?;
     let requests_path = args.opt_str("requests");
     let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
-    if let Some(sock) = args.opt_str("listen") {
-        // Persistent daemon mode: generations + unix-socket loop.
+    let listen = match (args.opt_str("listen"), args.opt_str("listen-tcp")) {
+        (Some(_), Some(_)) => bail!("specify at most one of --listen / --listen-tcp"),
+        (Some(sock), None) => Some(ServeAddr::Unix(PathBuf::from(sock))),
+        (None, Some(tcp)) => Some(ServeAddr::Tcp(tcp)),
+        (None, None) => None,
+    };
+    if let Some(listen) = listen {
+        // Persistent daemon mode: generations + transport serve loop.
         if requests_path.is_some() {
             bail!("--requests is batch-mode only; daemon clients send requests over the socket");
         }
@@ -429,6 +453,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .opt_str("store")
             .ok_or_else(|| anyhow::anyhow!("--store required"))?;
         let in_memory = args.has_flag("in-memory");
+        let max_conns = args.get_usize("max-conns", 256).map_err(anyhow::Error::msg)?;
+        let timeout_ms = args
+            .get_u64("read-timeout-ms", 30_000)
+            .map_err(anyhow::Error::msg)?;
         args.finish().map_err(anyhow::Error::msg)?;
         let opts = GenerationOpts {
             serve: ServeOpts {
@@ -448,25 +476,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let gens = GenerationStore::open(Path::new(&store_path), graph, opts)?;
         let gen = gens.current();
         eprintln!(
-            "daemon: {} from {}, edge scorer {}, listening on {sock}",
+            "daemon: {} from {}, edge scorer {}, listening on {listen} ({})",
             gen.stats_line(),
             store_path,
             if has_graph { "fitted" } else { "absent" },
+            listen.transport(),
         );
         // Thread budget: --threads controls one scan's fan-out; the
         // batch-level fan-out fills whatever cores remain, so nested
         // pool::parallel_tasks never oversubscribes threads*batch.
         let cores = kcore_embed::util::pool::default_threads();
         let server_opts = ServerOpts {
-            socket: PathBuf::from(&sock),
+            listen,
             batch_threads: (cores / threads.max(1)).max(1),
+            read_timeout: if timeout_ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(timeout_ms))
+            },
+            max_conns,
         };
         let stats = run_server(Arc::new(gens), &server_opts)?;
         eprintln!(
-            "daemon: clean shutdown after {} connections, {} requests, {} swaps",
+            "daemon: clean shutdown after {} connections, {} requests, {} swaps, {} rejected",
             stats.connections,
             stats.requests,
-            stats.swaps
+            stats.swaps,
+            stats.rejected
         );
         return Ok(());
     }
@@ -543,8 +579,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `query --connect`: drive a running daemon over its unix socket.
-fn cmd_query_connect(args: &Args, sock: &Path) -> Result<()> {
+/// `query --connect`/`--connect-tcp`: drive a running daemon over
+/// either transport.
+fn cmd_query_connect(args: &Args, addr: &ServeAddr) -> Result<()> {
     let control = args.opt_str("control");
     let k = args.get_usize("top-k", 10).map_err(anyhow::Error::msg)?;
     let node = match args.get_usize("node", usize::MAX).map_err(anyhow::Error::msg)? {
@@ -560,7 +597,7 @@ fn cmd_query_connect(args: &Args, sock: &Path) -> Result<()> {
         Some("swap") => {
             let p = store
                 .ok_or_else(|| anyhow::anyhow!("--control swap needs --store ARTIFACT"))?;
-            println!("{}", notify_swap(sock, Path::new(&p))?);
+            println!("{}", notify_swap(addr, Path::new(&p))?);
             return Ok(());
         }
         Some("stats") => vec![ClientMsg::Stats.encode()],
@@ -580,15 +617,21 @@ fn cmd_query_connect(args: &Args, sock: &Path) -> Result<()> {
             ls
         }
     };
-    for reply in client_exchange(sock, &lines)? {
+    for reply in client_exchange(addr, &lines)? {
         println!("{reply}");
     }
     Ok(())
 }
 
 fn cmd_query(args: &Args) -> Result<()> {
-    if let Some(sock) = args.opt_str("connect") {
-        return cmd_query_connect(args, Path::new(&sock));
+    let addr = match (args.opt_str("connect"), args.opt_str("connect-tcp")) {
+        (Some(_), Some(_)) => bail!("specify at most one of --connect / --connect-tcp"),
+        (Some(s), None) => Some(ServeAddr::parse(&s)),
+        (None, Some(t)) => Some(ServeAddr::Tcp(t)),
+        (None, None) => None,
+    };
+    if let Some(addr) = addr {
+        return cmd_query_connect(args, &addr);
     }
     let graph = maybe_load_graph(args)?;
     let metric = parse_metric(args)?;

@@ -1,0 +1,661 @@
+//! Load-generation scenarios for the serving daemon (DESIGN.md
+//! §Serving): the library behind the `loadgen` binary and the
+//! `kcore-embed loadgen` subcommand.
+//!
+//! Four scenarios, all driving the blank-line batch protocol over
+//! either transport ([`ServeAddr`]):
+//!
+//! - `baseline` — one client, back-to-back batches: the daemon's
+//!   floor latency with no contention.
+//! - `fanout`  — N persistent clients hammering batches concurrently:
+//!   the thread-per-connection model under steady saturation.
+//! - `fanin`   — N clients synchronized on a barrier each round, with
+//!   small deterministic jitter: bursty arrival, everyone at once.
+//! - `poisson` — per-client Poisson arrivals (exponential inter-batch
+//!   gaps at `rate` batches/s) of mixed `nn`/`edge`/`stats` verbs:
+//!   the open-loop shape real traffic has.
+//!
+//! Determinism contract: workloads and schedules are *planned* by pure
+//! functions of `(seed, worker)` ([`plan_worker_batches`],
+//! [`poisson_gaps_us`]) before any socket is touched, so a fixed seed
+//! replays byte-identical request streams — the loadgen tests pin
+//! this. Only the measured latencies vary run to run.
+//!
+//! Each completed batch records one latency sample (send of the first
+//! line to receipt of the last reply). Results aggregate into a
+//! [`ScenarioResult`] — nearest-rank p50/p90/p99/max via
+//! [`percentile`], throughput, `err`-reply and failed-batch counts —
+//! which serializes to single-line JSON and merges into
+//! `BENCH_serve.json` under a `--label` key (the Makefile records
+//! `exact` and `quantized` serving paths side by side).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::serve::server::{client_exchange, ClientConn, ServeAddr};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+/// Scenario names `run_scenario` accepts, in the order `--scenario
+/// all` runs them.
+pub const SCENARIOS: [&str; 4] = ["baseline", "fanout", "fanin", "poisson"];
+
+/// Knobs shared by every scenario. Scenario-specific shaping (client
+/// count, verb mix) is applied on top by [`run_scenario`].
+#[derive(Debug, Clone)]
+pub struct LoadOpts {
+    /// Daemon to drive (either transport).
+    pub addr: ServeAddr,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Batches per client.
+    pub batches: usize,
+    /// Request lines per batch.
+    pub batch_size: usize,
+    /// `k` for generated `nn` requests.
+    pub top_k: usize,
+    /// Node-id space to draw from; 0 = probe the daemon's `stats`
+    /// verb for the store size.
+    pub nodes: usize,
+    /// Master seed; worker `w` plans from `fork(w)`.
+    pub seed: u64,
+    /// Poisson arrival rate, batches per second per client.
+    pub rate: f64,
+    /// Fraction of `edge U V` lines in the poisson mix.
+    pub edge_frac: f64,
+    /// Fraction of `stats` lines in the poisson mix.
+    pub stats_frac: f64,
+}
+
+impl LoadOpts {
+    pub fn new(addr: ServeAddr) -> LoadOpts {
+        LoadOpts {
+            addr,
+            clients: 8,
+            batches: 50,
+            batch_size: 8,
+            top_k: 10,
+            nodes: 0,
+            seed: 7,
+            rate: 200.0,
+            edge_frac: 0.25,
+            stats_frac: 0.02,
+        }
+    }
+}
+
+/// Aggregated outcome of one scenario run.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub scenario: String,
+    pub transport: &'static str,
+    pub clients: usize,
+    /// Total batches planned (clients × batches-per-client).
+    pub batches: usize,
+    pub batch_size: usize,
+    /// Reply lines received (includes `err` replies).
+    pub requests: u64,
+    /// `err`-prefixed reply lines.
+    pub errors: u64,
+    /// Batches that failed outright (connect/io error, short reply).
+    pub failed_batches: u64,
+    /// Longest per-worker span, start barrier to last batch.
+    pub elapsed_s: f64,
+    pub throughput_rps: f64,
+    /// Per-batch latency percentiles, microseconds (nearest-rank).
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    pub seed: u64,
+}
+
+impl ScenarioResult {
+    /// Single-line JSON object with every histogram/throughput key the
+    /// bench file promises.
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("scenario", Json::str(&self.scenario)),
+            ("transport", Json::str(self.transport)),
+            ("clients", Json::num(self.clients as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("failed_batches", Json::num(self.failed_batches as f64)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("p50_us", Json::num(self.p50_us)),
+            ("p90_us", Json::num(self.p90_us)),
+            ("p99_us", Json::num(self.p99_us)),
+            ("max_us", Json::num(self.max_us)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic planning (pure functions of the RNG state)
+// ---------------------------------------------------------------------------
+
+/// Plan `count` request lines from `rng`: `stats` with probability
+/// `stats_frac`, `edge U V` with `edge_frac`, else `nn NODE K`, node
+/// ids uniform over `[0, nodes)`.
+pub fn plan_lines(
+    rng: &mut Rng,
+    count: usize,
+    nodes: usize,
+    k: usize,
+    edge_frac: f64,
+    stats_frac: f64,
+) -> Vec<String> {
+    assert!(nodes > 0, "plan_lines needs a non-empty id space");
+    (0..count)
+        .map(|_| {
+            let roll = rng.gen_f64();
+            if roll < stats_frac {
+                "stats".to_string()
+            } else if roll < stats_frac + edge_frac {
+                let u = rng.gen_index(nodes) as u32;
+                let v = rng.gen_index(nodes) as u32;
+                format!("edge {u} {v}")
+            } else {
+                format!("nn {} {k}", rng.gen_index(nodes))
+            }
+        })
+        .collect()
+}
+
+/// Worker `w`'s full batch plan: `opts.batches` batches of
+/// `opts.batch_size` lines, from `Rng::new(seed).fork(w)` — the same
+/// `(seed, worker)` always plans byte-identical batches.
+pub fn plan_worker_batches(opts: &LoadOpts, worker: usize, nodes: usize) -> Vec<Vec<String>> {
+    let mut rng = Rng::new(opts.seed).fork(worker as u64);
+    (0..opts.batches)
+        .map(|_| {
+            plan_lines(
+                &mut rng,
+                opts.batch_size,
+                nodes,
+                opts.top_k,
+                opts.edge_frac,
+                opts.stats_frac,
+            )
+        })
+        .collect()
+}
+
+/// Exponential inter-arrival gaps (microseconds) for a Poisson process
+/// at `rate` events/second: `-ln(1-u)/rate`. Deterministic in the RNG
+/// state.
+pub fn poisson_gaps_us(rng: &mut Rng, rate: f64, count: usize) -> Vec<u64> {
+    assert!(rate > 0.0, "poisson rate must be positive");
+    (0..count)
+        .map(|_| {
+            // u in [0, 1) so 1-u in (0, 1]: ln is finite, gap >= 0.
+            let u = rng.gen_f64();
+            ((-(1.0 - u).ln()) / rate * 1e6) as u64
+        })
+        .collect()
+}
+
+/// Per-round burst jitter (microseconds, < 2ms) for the fanin
+/// scenario, deterministic per `(seed, worker)`.
+pub fn fanin_jitter_us(seed: u64, worker: usize, rounds: usize) -> Vec<u64> {
+    let mut rng = Rng::new(seed ^ 0xFA17).fork(worker as u64);
+    (0..rounds).map(|_| rng.gen_range(2000)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------------
+
+/// Ask the daemon how many nodes it serves (`stats` verb → the
+/// `store NxD` token).
+pub fn probe_nodes(addr: &ServeAddr) -> Result<usize> {
+    let replies = client_exchange(addr, &["stats".to_string()])?;
+    let line = replies
+        .first()
+        .context("daemon closed the connection without answering stats")?;
+    parse_store_nodes(line).with_context(|| format!("parsing stats reply {line:?}"))
+}
+
+/// Extract the node count from a daemon stats line (`... store NxD ...`).
+pub fn parse_store_nodes(stats_line: &str) -> Result<usize> {
+    let mut toks = stats_line.split_whitespace();
+    while let Some(t) = toks.next() {
+        if t == "store" {
+            let shape = toks.next().context("stats reply ends after 'store'")?;
+            let (n, _) = shape
+                .split_once('x')
+                .with_context(|| format!("store shape {shape:?} is not NxD"))?;
+            return n
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad store node count {n:?}"));
+        }
+    }
+    bail!("no 'store NxD' token in stats reply {stats_line:?}")
+}
+
+/// Apply scenario shaping on top of the shared opts: `baseline` is one
+/// client, and only `poisson` mixes verbs (the latency-focused
+/// scenarios stay pure `nn` so their histograms measure one thing).
+fn shaped(opts: &LoadOpts, scenario: &str) -> Result<LoadOpts> {
+    let mut o = opts.clone();
+    match scenario {
+        "baseline" => {
+            o.clients = 1;
+            o.edge_frac = 0.0;
+            o.stats_frac = 0.0;
+        }
+        "fanout" | "fanin" => {
+            o.edge_frac = 0.0;
+            o.stats_frac = 0.0;
+        }
+        "poisson" => {}
+        other => bail!("unknown scenario {other:?} ({})", SCENARIOS.join("|")),
+    }
+    Ok(o)
+}
+
+#[derive(Default)]
+struct WorkerOut {
+    latencies_us: Vec<f64>,
+    requests: u64,
+    errors: u64,
+    failed_batches: u64,
+    elapsed_s: f64,
+}
+
+fn worker_run(
+    scenario: &str,
+    o: &LoadOpts,
+    worker: usize,
+    nodes: usize,
+    barrier: &Barrier,
+) -> WorkerOut {
+    let batches = plan_worker_batches(o, worker, nodes);
+    let gaps = if scenario == "poisson" {
+        let mut rng = Rng::new(o.seed ^ 0x9E37).fork(worker as u64);
+        poisson_gaps_us(&mut rng, o.rate.max(1e-6), batches.len())
+    } else {
+        Vec::new()
+    };
+    let jitter = if scenario == "fanin" {
+        fanin_jitter_us(o.seed, worker, batches.len())
+    } else {
+        Vec::new()
+    };
+
+    let mut out = WorkerOut::default();
+    let mut conn = ClientConn::connect(&o.addr).ok();
+    // Everyone connects before anyone sends, so `fanout` really is N
+    // simultaneous connections from the first batch on.
+    barrier.wait();
+    let t0 = Instant::now();
+    for (i, batch) in batches.iter().enumerate() {
+        if scenario == "fanin" {
+            // Synchronized burst each round, de-phased by a little
+            // deterministic jitter.
+            barrier.wait();
+            thread::sleep(Duration::from_micros(jitter[i]));
+        }
+        if scenario == "poisson" {
+            thread::sleep(Duration::from_micros(gaps[i]));
+        }
+        if conn.is_none() {
+            // One reconnect attempt per batch after a failure.
+            conn = ClientConn::connect(&o.addr).ok();
+        }
+        let bt = Instant::now();
+        let exchanged = conn.as_mut().map(|c| c.exchange(batch));
+        match exchanged {
+            Some(Ok(replies)) => {
+                out.latencies_us.push(bt.elapsed().as_secs_f64() * 1e6);
+                out.requests += replies.len() as u64;
+                out.errors += replies.iter().filter(|r| r.starts_with("err")).count() as u64;
+            }
+            Some(Err(_)) => {
+                out.failed_batches += 1;
+                conn = None;
+            }
+            None => out.failed_batches += 1,
+        }
+    }
+    out.elapsed_s = t0.elapsed().as_secs_f64();
+    out
+}
+
+/// Run one scenario against a live daemon and aggregate the results.
+pub fn run_scenario(scenario: &str, opts: &LoadOpts) -> Result<ScenarioResult> {
+    let o = shaped(opts, scenario)?;
+    ensure!(
+        o.clients > 0 && o.batches > 0 && o.batch_size > 0,
+        "clients, batches and batch size must all be positive"
+    );
+    let nodes = if o.nodes > 0 {
+        o.nodes
+    } else {
+        probe_nodes(&o.addr)?
+    };
+    ensure!(nodes > 0, "daemon reports an empty store");
+
+    let barrier = Arc::new(Barrier::new(o.clients));
+    let mut handles = Vec::with_capacity(o.clients);
+    for w in 0..o.clients {
+        let o = o.clone();
+        let barrier = Arc::clone(&barrier);
+        let scenario = scenario.to_string();
+        handles.push(thread::spawn(move || {
+            worker_run(&scenario, &o, w, nodes, &barrier)
+        }));
+    }
+    let mut lat: Vec<f64> = Vec::new();
+    let (mut requests, mut errors, mut failed) = (0u64, 0u64, 0u64);
+    let mut elapsed = 0f64;
+    for h in handles {
+        let wo = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("load worker panicked"))?;
+        lat.extend(wo.latencies_us);
+        requests += wo.requests;
+        errors += wo.errors;
+        failed += wo.failed_batches;
+        elapsed = elapsed.max(wo.elapsed_s);
+    }
+    lat.sort_by(f64::total_cmp);
+    Ok(ScenarioResult {
+        scenario: scenario.to_string(),
+        transport: o.addr.transport(),
+        clients: o.clients,
+        batches: o.clients * o.batches,
+        batch_size: o.batch_size,
+        requests,
+        errors,
+        failed_batches: failed,
+        elapsed_s: elapsed,
+        throughput_rps: if elapsed > 0.0 {
+            requests as f64 / elapsed
+        } else {
+            0.0
+        },
+        p50_us: percentile(&lat, 0.5),
+        p90_us: percentile(&lat, 0.9),
+        p99_us: percentile(&lat, 0.99),
+        max_us: percentile(&lat, 1.0),
+        seed: o.seed,
+    })
+}
+
+/// Merge scenario results into a bench JSON file as
+/// `{label: {scenario: result}}`, preserving other labels already
+/// recorded (the Makefile runs `exact` and `quantized` passes against
+/// the same file). The file stays single-line.
+pub fn merge_results_file(path: &Path, label: &str, results: &[ScenarioResult]) -> Result<()> {
+    let mut map = match std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+    {
+        Some(Json::Object(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    let mut entry = match map.remove(label) {
+        Some(Json::Object(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    for r in results {
+        entry.insert(r.scenario.clone(), r.to_json());
+    }
+    map.insert(label.to_string(), Json::Object(entry));
+    std::fs::write(path, Json::Object(map).to_string() + "\n")
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// CLI entry shared by the `loadgen` binary and the `kcore-embed
+/// loadgen` subcommand.
+pub fn run_cli(args: &Args) -> Result<()> {
+    let addr = match (args.opt_str("connect-tcp"), args.opt_str("connect")) {
+        (Some(t), None) => ServeAddr::Tcp(t),
+        (None, Some(s)) => ServeAddr::parse(&s),
+        (None, None) => bail!("--connect ADDR or --connect-tcp HOST:PORT required"),
+        _ => bail!("specify exactly one of --connect / --connect-tcp"),
+    };
+    let scenarios_arg = args.get_str("scenario", "all");
+    let mut opts = LoadOpts::new(addr);
+    opts.clients = args
+        .get_usize("clients", opts.clients)
+        .map_err(anyhow::Error::msg)?;
+    opts.batches = args
+        .get_usize("batches", opts.batches)
+        .map_err(anyhow::Error::msg)?;
+    opts.batch_size = args
+        .get_usize("batch", opts.batch_size)
+        .map_err(anyhow::Error::msg)?;
+    opts.top_k = args
+        .get_usize("top-k", opts.top_k)
+        .map_err(anyhow::Error::msg)?;
+    opts.nodes = args
+        .get_usize("nodes", opts.nodes)
+        .map_err(anyhow::Error::msg)?;
+    opts.seed = args.get_u64("seed", opts.seed).map_err(anyhow::Error::msg)?;
+    opts.rate = args.get_f64("rate", opts.rate).map_err(anyhow::Error::msg)?;
+    opts.edge_frac = args
+        .get_f64("edge-frac", opts.edge_frac)
+        .map_err(anyhow::Error::msg)?;
+    opts.stats_frac = args
+        .get_f64("stats-frac", opts.stats_frac)
+        .map_err(anyhow::Error::msg)?;
+    let label = args.get_str("label", opts.addr.transport());
+    let json_path = args.opt_str("json");
+    let allow_failures = args.has_flag("allow-failures");
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let names: Vec<String> = if scenarios_arg == "all" {
+        SCENARIOS.iter().map(|s| s.to_string()).collect()
+    } else {
+        scenarios_arg
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect()
+    };
+    let mut results = Vec::new();
+    for name in &names {
+        let res = run_scenario(name, &opts)?;
+        println!("{}", res.to_json().to_string());
+        results.push(res);
+    }
+    if let Some(path) = &json_path {
+        merge_results_file(Path::new(path), &label, &results)?;
+        eprintln!("loadgen: wrote {path}");
+    }
+    let failed: u64 = results.iter().map(|r| r.failed_batches).sum();
+    if failed > 0 && !allow_failures {
+        bail!(
+            "{failed} failed batches across {} scenario(s)",
+            results.len()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::ClientMsg;
+
+    fn opts() -> LoadOpts {
+        LoadOpts {
+            batches: 6,
+            batch_size: 5,
+            ..LoadOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()))
+        }
+    }
+
+    #[test]
+    fn worker_plans_are_byte_identical_across_runs() {
+        let o = opts();
+        for w in 0..3 {
+            assert_eq!(
+                plan_worker_batches(&o, w, 100),
+                plan_worker_batches(&o, w, 100),
+                "worker {w} replanned differently"
+            );
+        }
+        // Different workers and different seeds plan different streams.
+        assert_ne!(plan_worker_batches(&o, 0, 100), plan_worker_batches(&o, 1, 100));
+        let reseeded = LoadOpts { seed: 8, ..opts() };
+        assert_ne!(
+            plan_worker_batches(&o, 0, 100),
+            plan_worker_batches(&reseeded, 0, 100)
+        );
+    }
+
+    #[test]
+    fn poisson_and_jitter_schedules_are_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let ga = poisson_gaps_us(&mut a, 500.0, 200);
+        assert_eq!(ga, poisson_gaps_us(&mut b, 500.0, 200));
+        // Mean gap ~ 1/rate = 2000us; loose sanity band.
+        let mean = ga.iter().sum::<u64>() as f64 / ga.len() as f64;
+        assert!((500.0..8000.0).contains(&mean), "mean gap {mean}us");
+        assert_eq!(fanin_jitter_us(7, 3, 50), fanin_jitter_us(7, 3, 50));
+        assert_ne!(fanin_jitter_us(7, 3, 50), fanin_jitter_us(7, 4, 50));
+        assert!(fanin_jitter_us(7, 3, 50).iter().all(|&j| j < 2000));
+    }
+
+    #[test]
+    fn planned_lines_are_valid_protocol_and_respect_mix() {
+        let mut rng = Rng::new(1);
+        let lines = plan_lines(&mut rng, 400, 50, 10, 0.3, 0.05);
+        let mut stats = 0;
+        let mut edges = 0;
+        for line in &lines {
+            match ClientMsg::parse(line).unwrap().unwrap() {
+                ClientMsg::Stats => stats += 1,
+                ClientMsg::Query(crate::serve::query::Request::EdgeScore { u, v }) => {
+                    assert!(u < 50 && v < 50);
+                    edges += 1;
+                }
+                ClientMsg::Query(crate::serve::query::Request::Neighbors { node, k }) => {
+                    assert!(node < 50);
+                    assert_eq!(k, 10);
+                }
+                other => panic!("planned unexpected line {other:?}"),
+            }
+        }
+        assert!((5..50).contains(&stats), "{stats} stats of 400");
+        assert!((70..170).contains(&edges), "{edges} edges of 400");
+        // Pure-nn shaping plans no control verbs at all.
+        let pure = plan_lines(&mut rng, 100, 50, 5, 0.0, 0.0);
+        assert!(pure.iter().all(|l| l.starts_with("nn ")));
+    }
+
+    #[test]
+    fn stats_line_probe_parses_node_count() {
+        let line = "stats gen 2 strategy exact store 80x8 queries 5 mean_us 12.3 \
+                    max_us 99 connections 3 requests 5 swaps 1";
+        assert_eq!(parse_store_nodes(line).unwrap(), 80);
+        assert!(parse_store_nodes("err no store here").is_err());
+        assert!(parse_store_nodes("stats gen 1 store eightx8").is_err());
+    }
+
+    #[test]
+    fn result_json_is_single_line_with_all_histogram_keys() {
+        let r = ScenarioResult {
+            scenario: "fanout".into(),
+            transport: "tcp",
+            clients: 8,
+            batches: 1000,
+            batch_size: 8,
+            requests: 8000,
+            errors: 0,
+            failed_batches: 0,
+            elapsed_s: 1.25,
+            throughput_rps: 6400.0,
+            p50_us: 180.0,
+            p90_us: 420.0,
+            p99_us: 1100.0,
+            max_us: 2400.0,
+            seed: 7,
+        };
+        let line = r.to_json().to_string();
+        assert!(!line.contains('\n'));
+        let parsed = Json::parse(&line).unwrap();
+        for key in [
+            "scenario",
+            "transport",
+            "clients",
+            "batches",
+            "batch_size",
+            "requests",
+            "errors",
+            "failed_batches",
+            "elapsed_s",
+            "throughput_rps",
+            "p50_us",
+            "p90_us",
+            "p99_us",
+            "max_us",
+            "seed",
+        ] {
+            assert!(parsed.get(key).is_some(), "missing {key} in {line}");
+        }
+        assert_eq!(parsed.get("p99_us").unwrap().as_f64(), Some(1100.0));
+    }
+
+    #[test]
+    fn merge_results_file_keeps_other_labels() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("kcore_loadtest_merge_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let r = |name: &str| ScenarioResult {
+            scenario: name.into(),
+            transport: "tcp",
+            clients: 1,
+            batches: 1,
+            batch_size: 1,
+            requests: 1,
+            errors: 0,
+            failed_batches: 0,
+            elapsed_s: 0.1,
+            throughput_rps: 10.0,
+            p50_us: 1.0,
+            p90_us: 2.0,
+            p99_us: 3.0,
+            max_us: 4.0,
+            seed: 7,
+        };
+        merge_results_file(&path, "exact", &[r("baseline"), r("fanout")]).unwrap();
+        merge_results_file(&path, "quantized", &[r("fanout")]).unwrap();
+        // Second pass under the same label updates in place.
+        merge_results_file(&path, "exact", &[r("fanout")]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1, "bench file is not single-line");
+        let root = Json::parse(text.trim()).unwrap();
+        assert!(root.path(&["exact", "baseline", "p50_us"]).is_some());
+        assert!(root.path(&["exact", "fanout", "p99_us"]).is_some());
+        assert!(root.path(&["quantized", "fanout", "max_us"]).is_some());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn shaping_rejects_unknown_scenarios_and_purifies_latency_runs() {
+        let o = opts();
+        assert!(shaped(&o, "warp-speed").is_err());
+        let b = shaped(&o, "baseline").unwrap();
+        assert_eq!(b.clients, 1);
+        assert_eq!(b.edge_frac, 0.0);
+        let p = shaped(&o, "poisson").unwrap();
+        assert_eq!(p.clients, o.clients);
+        assert!(p.edge_frac > 0.0);
+    }
+}

@@ -15,8 +15,12 @@
 //! [`generation`] holds hot-swappable artifact generations (Arc-epoch
 //! publish, readers never block, watched-path reload), [`protocol`]
 //! defines the line protocol plus `swap`/`stats`/`shutdown` control
-//! verbs, and [`server`] runs the Unix-domain-socket serve loop the
-//! CLI exposes as `serve --listen` / `query --connect`.
+//! verbs, and [`server`] runs one transport-generic serve loop over a
+//! unix socket or TCP listener ([`ServeAddr`]) — the CLI exposes it as
+//! `serve --listen`/`--listen-tcp` and `query --connect`. [`loadtest`]
+//! drives a live daemon with deterministic multi-client scenarios
+//! (fan-out, bursty fan-in, Poisson arrivals) and records latency
+//! histograms — the `loadgen` binary.
 //!
 //! Layering: `serve` sits above `embed`/`eval` (it consumes trained
 //! tables and reuses evaluation operators) and below `coordinator`
@@ -25,6 +29,7 @@
 
 pub mod generation;
 pub mod linkpred;
+pub mod loadtest;
 pub mod protocol;
 pub mod query;
 pub mod server;
@@ -33,8 +38,12 @@ pub mod topk;
 
 pub use generation::{Generation, GenerationOpts, GenerationStore};
 pub use linkpred::{EdgeScorer, EdgeScorerParams};
+pub use loadtest::{LoadOpts, ScenarioResult, SCENARIOS};
 pub use protocol::ClientMsg;
 pub use query::{BatchReport, QueryService, Request, Response, ServeOpts};
-pub use server::{client_exchange, notify_swap, run_server, ServerOpts, ServerStats};
+pub use server::{
+    client_exchange, notify_swap, run_server, run_server_ready, ClientConn, ServeAddr, ServerOpts,
+    ServerStats, MAX_LINE_BYTES,
+};
 pub use store::{read_header, write_store, EmbeddingStore, StoreHeader};
 pub use topk::{build_scan_index, ExactScan, Metric, QuantizedScan, ScanIndex, TopKParams};

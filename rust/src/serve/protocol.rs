@@ -1,6 +1,11 @@
 //! Line protocol of the serving daemon (DESIGN.md §Serving).
 //!
-//! One message per line, UTF-8, whitespace-separated tokens. Client to
+//! One message per line, UTF-8, whitespace-separated tokens. The
+//! protocol is transport-agnostic: the same bytes flow over a unix
+//! socket or a TCP connection (`server::ServeAddr` picks), and the
+//! framing rules the server enforces at the transport edge — the
+//! 64 KiB line cap, per-line invalid-UTF-8 rejection, read timeouts —
+//! live in `server`, not here. Client to
 //! server, a line is either a data request — the same `nn NODE K` /
 //! `edge U V` grammar [`Request::parse`] has always accepted, plus `#`
 //! comments — or one of three control verbs:

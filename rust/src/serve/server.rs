@@ -1,16 +1,20 @@
-//! The persistent serving daemon: a Unix-domain-socket loop over a
-//! [`GenerationStore`] (std-only — no async runtime or HTTP stack is
-//! available offline, and a line protocol over a local socket is all
-//! the ROADMAP's "persistent server loop" needs to stand up).
+//! The persistent serving daemon: one connection loop over a
+//! [`GenerationStore`], behind either transport (std-only — no async
+//! runtime or HTTP stack is available offline, and a line protocol
+//! over a socket is all the ROADMAP's "persistent server loop" needs):
 //!
 //! ```text
-//! embed --store A --notify S ─┐ swap A          ┌─ query --connect S
-//!                             ▼                 ▼
-//!                    [daemon: run_server on socket S]
-//!                       │ per connection (own thread): maybe_reload
-//!                       │ (header watch), batch lines, control verbs
-//!                       ▼
-//!                GenerationStore ── Arc<Generation> per batch
+//!    unix socket path            TCP host:port
+//!  ServeAddr::Unix(..)         ServeAddr::Tcp(..)
+//!         │                          │
+//!         └───────► Acceptor ◄───────┘        (bind / accept / wake)
+//!                      │ accept → ServeStream (Read + Write seam)
+//!                      ▼
+//!     [handle_conn: one thread per connection]
+//!        maybe_reload (header watch) → capped line reads
+//!        → batch lines → control verbs → flush on blank line
+//!                      ▼
+//!           GenerationStore ── Arc<Generation> per batch
 //! ```
 //!
 //! Concurrency shape: one thread per connection; each **batch** (the
@@ -21,38 +25,134 @@
 //! watched-path poll runs at the start of each connection's handler —
 //! never on the acceptor thread — and skips (try-lock) when a swap is
 //! already in flight, so neither accepts nor other connections stall
-//! behind a generation build. `shutdown` stops the accept loop (a
-//! self-connection wakes the blocked `accept`), half-closes in-flight
-//! connections so idle readers see EOF and flush their pending
-//! batches, joins them, and removes the socket file; [`run_server`]
-//! then returns its counters, so a clean daemon exits 0 — `make
-//! smoke` checks exactly that.
+//! behind a generation build.
+//!
+//! Robustness at the edge of the socket: request lines are read
+//! through a capped reader ([`MAX_LINE_BYTES`]), so an oversized line
+//! costs O(cap) memory and is answered with an `err` line before the
+//! connection closes; invalid UTF-8 is rejected per line without
+//! dropping the connection; and a connection idle past the
+//! per-connection read timeout (slow-loris, wedged client) has its
+//! pending batch flushed, is told `err ... read timeout`, and is
+//! closed — its thread exits rather than leaking. A `max_conns` cap
+//! bounds the thread-per-connection model: connections accepted over
+//! the cap get exactly one parseable `err server at capacity ...` line
+//! and are closed without ever getting a handler thread.
+//!
+//! `shutdown` stops the accept loop (a self-connection over the
+//! *resolved* listen address wakes the blocked `accept` on either
+//! transport), half-closes in-flight connections so idle readers see
+//! EOF and flush their pending batches, joins them, and removes the
+//! socket file when the transport was unix; [`run_server`] then
+//! returns its counters, so a clean daemon exits 0 — `make smoke`
+//! checks exactly that on both transports.
 //!
 //! The client side lives here too: [`client_exchange`] (one
-//! request/response exchange over a fresh connection) and
-//! [`notify_swap`] (what `embed --notify` and `query --control swap`
-//! send), so the daemon and its clients cannot drift apart.
+//! request/response exchange over a fresh connection),
+//! [`ClientConn`] (a persistent connection exchanging blank-line
+//! batches — what the load generator drives), and [`notify_swap`]
+//! (what `embed --notify` and `query --control swap` send), so the
+//! daemon and its clients cannot drift apart.
 
-use std::path::PathBuf;
+use std::collections::HashMap;
+use std::fmt;
+use std::io::{self, BufRead, BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
+use anyhow::{bail, Context, Result};
+
+use crate::serve::generation::GenerationStore;
+use crate::serve::protocol::{self, ClientMsg};
+use crate::serve::query::Request;
 use crate::util::pool;
+
+/// Hard cap on one protocol line. Requests are tens of bytes; anything
+/// past this is hostile or broken, answered with an `err` line and a
+/// closed connection instead of an unbounded buffer.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Where a daemon listens / where a client connects: a unix-domain
+/// socket path or a TCP `host:port`. Both speak the same line
+/// protocol; [`ServeAddr::parse`] picks the transport from the spec's
+/// shape for knobs (like `embed --notify`) that accept either.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeAddr {
+    /// Unix-domain socket path. Created on bind (a stale file from a
+    /// dead daemon is replaced), removed on shutdown.
+    Unix(PathBuf),
+    /// TCP listen/connect spec, e.g. `127.0.0.1:7878`. Port 0 binds an
+    /// ephemeral port; the resolved address is reported via
+    /// [`run_server_ready`]'s ready channel.
+    Tcp(String),
+}
+
+impl ServeAddr {
+    /// Classify a spec: `host:port` (no path separator, the token
+    /// after the last `:` parses as a port) is TCP, anything else is a
+    /// unix socket path. `localhost:7878` and `[::1]:7878` are TCP;
+    /// `/run/kcore.sock` and `./a:b` are paths.
+    pub fn parse(spec: &str) -> ServeAddr {
+        if !spec.contains('/') {
+            if let Some((host, port)) = spec.rsplit_once(':') {
+                if !host.is_empty() && port.parse::<u16>().is_ok() {
+                    return ServeAddr::Tcp(spec.to_string());
+                }
+            }
+        }
+        ServeAddr::Unix(PathBuf::from(spec))
+    }
+
+    /// Transport name for telemetry (`"unix"` / `"tcp"`).
+    pub fn transport(&self) -> &'static str {
+        match self {
+            ServeAddr::Unix(_) => "unix",
+            ServeAddr::Tcp(_) => "tcp",
+        }
+    }
+}
+
+impl fmt::Display for ServeAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeAddr::Unix(p) => write!(f, "{}", p.display()),
+            ServeAddr::Tcp(s) => write!(f, "{s}"),
+        }
+    }
+}
 
 /// Daemon configuration.
 #[derive(Debug, Clone)]
 pub struct ServerOpts {
-    /// Unix-domain socket path to listen on. Created on bind (a stale
-    /// file from a dead daemon is replaced), removed on shutdown.
-    pub socket: PathBuf,
+    /// Address to listen on (either transport).
+    pub listen: ServeAddr,
     /// Worker threads fanning each request batch (each request's scan
     /// additionally fans blocks per its own `TopKParams::threads`).
     pub batch_threads: usize,
+    /// Per-connection read timeout. A connection idle past it gets its
+    /// pending batch flushed, one `err ... read timeout` line, and is
+    /// closed. `None` waits forever (test/unix-peer friendly).
+    pub read_timeout: Option<Duration>,
+    /// Cap on simultaneously served connections; 0 = unlimited. A
+    /// connection accepted over the cap is answered exactly one
+    /// parseable `err server at capacity ...` line and closed without
+    /// getting a handler thread.
+    pub max_conns: usize,
 }
 
 impl ServerOpts {
-    pub fn new(socket: PathBuf) -> ServerOpts {
+    pub fn new(listen: ServeAddr) -> ServerOpts {
         ServerOpts {
-            socket,
+            listen,
             batch_threads: pool::default_threads(),
+            read_timeout: Some(Duration::from_secs(30)),
+            max_conns: 0,
         }
     }
 }
@@ -60,306 +160,673 @@ impl ServerOpts {
 /// Lifetime counters a finished daemon reports.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ServerStats {
+    /// Connections that got a handler thread (rejections excluded).
     pub connections: u64,
     pub requests: u64,
     pub swaps: u64,
+    /// Connections turned away at the `max_conns` cap.
+    pub rejected: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Transport seam: one stream/acceptor pair the serve loop is written
+// against, so the unix and TCP paths share every line of protocol code.
+// ---------------------------------------------------------------------------
+
+/// One accepted or dialed connection on either transport.
+pub enum ServeStream {
+    #[cfg(unix)]
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl ServeStream {
+    pub fn try_clone(&self) -> io::Result<ServeStream> {
+        match self {
+            #[cfg(unix)]
+            ServeStream::Unix(s) => s.try_clone().map(ServeStream::Unix),
+            ServeStream::Tcp(s) => s.try_clone().map(ServeStream::Tcp),
+        }
+    }
+
+    pub fn shutdown(&self, how: Shutdown) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            ServeStream::Unix(s) => s.shutdown(how),
+            ServeStream::Tcp(s) => s.shutdown(how),
+        }
+    }
+
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            ServeStream::Unix(s) => s.set_read_timeout(dur),
+            ServeStream::Tcp(s) => s.set_read_timeout(dur),
+        }
+    }
+
+    pub fn set_write_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            ServeStream::Unix(s) => s.set_write_timeout(dur),
+            ServeStream::Tcp(s) => s.set_write_timeout(dur),
+        }
+    }
+}
+
+impl io::Read for ServeStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            ServeStream::Unix(s) => s.read(buf),
+            ServeStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl io::Write for ServeStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            ServeStream::Unix(s) => s.write(buf),
+            ServeStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            ServeStream::Unix(s) => s.flush(),
+            ServeStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Dial a daemon on either transport.
+pub fn connect_stream(addr: &ServeAddr) -> Result<ServeStream> {
+    match addr {
+        #[cfg(unix)]
+        ServeAddr::Unix(path) => UnixStream::connect(path)
+            .with_context(|| format!("connecting to serving daemon at {}", path.display()))
+            .map(ServeStream::Unix),
+        #[cfg(not(unix))]
+        ServeAddr::Unix(path) => bail!(
+            "unix-domain sockets are unix-only; connect to a TCP daemon instead ({})",
+            path.display()
+        ),
+        ServeAddr::Tcp(spec) => {
+            let s = TcpStream::connect(spec.as_str())
+                .with_context(|| format!("connecting to serving daemon at {spec}"))?;
+            // The protocol is blank-line batched; Nagle coalescing of
+            // the final short flush only adds latency.
+            let _ = s.set_nodelay(true);
+            Ok(ServeStream::Tcp(s))
+        }
+    }
+}
+
+enum Acceptor {
+    #[cfg(unix)]
+    Unix(UnixListener),
+    Tcp(TcpListener),
 }
 
 #[cfg(unix)]
-mod imp {
-    use std::collections::HashMap;
-    use std::io::{BufRead, BufReader, BufWriter, Write};
-    use std::os::unix::net::{UnixListener, UnixStream};
-    use std::path::{Path, PathBuf};
-    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-    use std::sync::{Arc, Mutex};
-
-    use anyhow::{bail, Context, Result};
-
-    use crate::serve::generation::GenerationStore;
-    use crate::serve::protocol::{self, ClientMsg};
-    use crate::serve::query::Request;
-    use crate::util::pool;
-
-    use super::{ServerOpts, ServerStats};
-
-    struct Ctl {
-        socket: PathBuf,
-        shutdown: AtomicBool,
-        connections: AtomicU64,
-        requests: AtomicU64,
-        /// Live connections by id, so shutdown can half-close readers
-        /// that are idle-blocked in a read and would otherwise hang
-        /// the final join forever. Handlers remove their own entry.
-        conns: Mutex<HashMap<u64, UnixStream>>,
+fn bind_unix(path: &Path) -> Result<UnixListener> {
+    if let Ok(meta) = std::fs::symlink_metadata(path) {
+        // Replace a stale socket from a dead daemon, but never delete
+        // a non-socket (a typo'd --listen must not destroy a data
+        // file) and never hijack a live daemon: stealing the path
+        // would strand it unreachable (its shutdown verb could no
+        // longer arrive).
+        use std::os::unix::fs::FileTypeExt;
+        if !meta.file_type().is_socket() {
+            bail!(
+                "{} exists and is not a socket; refusing to replace it",
+                path.display()
+            );
+        }
+        if UnixStream::connect(path).is_ok() {
+            bail!("a daemon is already listening on {}", path.display());
+        }
+        std::fs::remove_file(path)
+            .with_context(|| format!("replacing stale socket {}", path.display()))?;
     }
+    UnixListener::bind(path).with_context(|| format!("binding daemon socket {}", path.display()))
+}
 
-    impl Ctl {
-        fn begin_shutdown(&self) {
-            self.shutdown.store(true, Ordering::SeqCst);
-            // The acceptor blocks in accept(); a throwaway connection
-            // wakes it so it can observe the flag and stop. It then
-            // half-closes the registered connections itself — every
-            // accepted stream is registered before the next accept, so
-            // none can be missed.
-            let _ = UnixStream::connect(&self.socket);
+impl Acceptor {
+    /// Bind the listen address. Returns the acceptor plus the
+    /// *resolved, connectable* address: an ephemeral TCP port becomes
+    /// the kernel-assigned one and an unspecified host becomes
+    /// loopback, so the result is always something `connect_stream`
+    /// (and the shutdown self-wake) can dial.
+    fn bind(listen: &ServeAddr) -> Result<(Acceptor, ServeAddr)> {
+        match listen {
+            #[cfg(unix)]
+            ServeAddr::Unix(path) => Ok((
+                Acceptor::Unix(bind_unix(path)?),
+                ServeAddr::Unix(path.clone()),
+            )),
+            #[cfg(not(unix))]
+            ServeAddr::Unix(path) => bail!(
+                "unix-domain sockets are unix-only; listen on a TCP host:port instead ({})",
+                path.display()
+            ),
+            ServeAddr::Tcp(spec) => {
+                let listener = TcpListener::bind(spec.as_str())
+                    .with_context(|| format!("binding daemon TCP listener on {spec}"))?;
+                let local = listener
+                    .local_addr()
+                    .context("resolving bound TCP address")?;
+                let resolved = match local {
+                    SocketAddr::V4(v4) if v4.ip().is_unspecified() => {
+                        format!("127.0.0.1:{}", v4.port())
+                    }
+                    SocketAddr::V6(v6) if v6.ip().is_unspecified() => {
+                        format!("[::1]:{}", v6.port())
+                    }
+                    other => other.to_string(),
+                };
+                Ok((Acceptor::Tcp(listener), ServeAddr::Tcp(resolved)))
+            }
         }
     }
 
-    /// Serve until a `shutdown` verb arrives. Blocks the calling
-    /// thread; returns the daemon's lifetime counters on clean exit.
-    pub fn run_server(gens: Arc<GenerationStore>, opts: &ServerOpts) -> Result<ServerStats> {
-        if let Ok(meta) = std::fs::symlink_metadata(&opts.socket) {
-            // Replace a stale socket from a dead daemon, but never
-            // delete a non-socket (a typo'd --listen must not destroy
-            // a data file) and never hijack a live daemon: stealing
-            // the path would strand it unreachable (its shutdown verb
-            // could no longer arrive).
-            use std::os::unix::fs::FileTypeExt;
-            if !meta.file_type().is_socket() {
-                bail!(
-                    "{} exists and is not a socket; refusing to replace it",
-                    opts.socket.display()
-                );
-            }
-            if UnixStream::connect(&opts.socket).is_ok() {
-                bail!("a daemon is already listening on {}", opts.socket.display());
-            }
-            std::fs::remove_file(&opts.socket)
-                .with_context(|| format!("replacing stale socket {}", opts.socket.display()))?;
+    fn accept(&self) -> io::Result<ServeStream> {
+        match self {
+            #[cfg(unix)]
+            Acceptor::Unix(l) => l.accept().map(|(s, _)| ServeStream::Unix(s)),
+            Acceptor::Tcp(l) => l.accept().map(|(s, _)| {
+                let _ = s.set_nodelay(true);
+                ServeStream::Tcp(s)
+            }),
         }
-        let listener = UnixListener::bind(&opts.socket)
-            .with_context(|| format!("binding daemon socket {}", opts.socket.display()))?;
-        let ctl = Arc::new(Ctl {
-            socket: opts.socket.clone(),
-            shutdown: AtomicBool::new(false),
-            connections: AtomicU64::new(0),
-            requests: AtomicU64::new(0),
-            conns: Mutex::new(HashMap::new()),
-        });
-        let mut next_conn_id = 0u64;
-        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
-        for stream in listener.incoming() {
-            if ctl.shutdown.load(Ordering::SeqCst) {
-                break;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serve loop
+// ---------------------------------------------------------------------------
+
+struct Ctl {
+    /// Resolved listen address; what the shutdown self-wake dials.
+    wake: ServeAddr,
+    shutdown: AtomicBool,
+    connections: AtomicU64,
+    requests: AtomicU64,
+    rejected: AtomicU64,
+    /// Live connections by id, so shutdown can half-close readers
+    /// that are idle-blocked in a read and would otherwise hang
+    /// the final join forever. Handlers remove their own entry.
+    conns: Mutex<HashMap<u64, ServeStream>>,
+}
+
+impl Ctl {
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // The acceptor blocks in accept(); a throwaway connection over
+        // the resolved address (works on both transports) wakes it so
+        // it can observe the flag and stop. It then half-closes the
+        // registered connections itself — every accepted stream is
+        // registered before the next accept, so none can be missed.
+        let _ = connect_stream(&self.wake);
+    }
+}
+
+/// Serve until a `shutdown` verb arrives. Blocks the calling thread;
+/// returns the daemon's lifetime counters on clean exit.
+pub fn run_server(gens: Arc<GenerationStore>, opts: &ServerOpts) -> Result<ServerStats> {
+    run_server_ready(gens, opts, None)
+}
+
+/// [`run_server`], additionally reporting the resolved listen address
+/// (ephemeral TCP ports become concrete) over `ready` once the daemon
+/// accepts connections. Tests and scripts that listen on `:0` use this
+/// to learn where to connect.
+pub fn run_server_ready(
+    gens: Arc<GenerationStore>,
+    opts: &ServerOpts,
+    ready: Option<Sender<ServeAddr>>,
+) -> Result<ServerStats> {
+    let (acceptor, resolved) = Acceptor::bind(&opts.listen)?;
+    eprintln!("serve: listening on {} ({})", resolved, resolved.transport());
+    let ctl = Arc::new(Ctl {
+        wake: resolved.clone(),
+        shutdown: AtomicBool::new(false),
+        connections: AtomicU64::new(0),
+        requests: AtomicU64::new(0),
+        rejected: AtomicU64::new(0),
+        conns: Mutex::new(HashMap::new()),
+    });
+    if let Some(tx) = ready {
+        let _ = tx.send(resolved.clone());
+    }
+    let mut next_conn_id = 0u64;
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        let stream = acceptor.accept();
+        if ctl.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // Reap finished connection threads so a long-lived daemon
+        // does not accumulate one JoinHandle per connection ever
+        // served.
+        handles.retain(|h| !h.is_finished());
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: accept failed: {e}");
+                continue;
             }
-            // Reap finished connection threads so a long-lived daemon
-            // does not accumulate one JoinHandle per connection ever
-            // served.
-            handles.retain(|h| !h.is_finished());
-            let stream = match stream {
-                Ok(s) => s,
-                Err(e) => {
-                    eprintln!("serve: accept failed: {e}");
+        };
+        let live = ctl.conns.lock().expect("conn registry").len();
+        if opts.max_conns > 0 && live >= opts.max_conns {
+            // Over capacity: one parseable error line, no handler
+            // thread. The write is bounded by a timeout so a client
+            // that never reads cannot stall the acceptor.
+            ctl.rejected.fetch_add(1, Ordering::Relaxed);
+            let mut s = stream;
+            let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
+            let _ = writeln!(
+                s,
+                "err server at capacity ({live} of {} connections in use); retry later",
+                opts.max_conns
+            );
+            let _ = s.shutdown(Shutdown::Both);
+            continue;
+        }
+        ctl.connections.fetch_add(1, Ordering::Relaxed);
+        let conn_id = next_conn_id;
+        next_conn_id += 1;
+        let _ = stream.set_read_timeout(opts.read_timeout);
+        if let Ok(clone) = stream.try_clone() {
+            ctl.conns.lock().expect("conn registry").insert(conn_id, clone);
+        }
+        let gens = Arc::clone(&gens);
+        let ctl = Arc::clone(&ctl);
+        let threads = opts.batch_threads;
+        let read_timeout = opts.read_timeout;
+        handles.push(std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, &gens, &ctl, threads, read_timeout) {
+                eprintln!("serve: connection error: {e:#}");
+            }
+            ctl.conns.lock().expect("conn registry").remove(&conn_id);
+        }));
+    }
+    // Graceful: flush what in-flight connections have queued, then
+    // wait for them. Half-closing the read side unblocks handlers
+    // whose client went idle without disconnecting (they see EOF,
+    // flush pending responses and return) — without it one wedged
+    // client would hang the join below forever. Works identically on
+    // both transports.
+    for conn in ctl.conns.lock().expect("conn registry").values() {
+        let _ = conn.shutdown(Shutdown::Read);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    drop(acceptor);
+    if let ServeAddr::Unix(path) = &resolved {
+        let _ = std::fs::remove_file(path);
+    }
+    Ok(ServerStats {
+        connections: ctl.connections.load(Ordering::Relaxed),
+        requests: ctl.requests.load(Ordering::Relaxed),
+        swaps: gens.swaps(),
+        rejected: ctl.rejected.load(Ordering::Relaxed),
+    })
+}
+
+/// Answer the queued batch from one generation snapshot, in
+/// request order, errors as per-line `err` responses.
+fn flush_batch<W: Write>(
+    pending: &mut Vec<Request>,
+    gens: &GenerationStore,
+    ctl: &Ctl,
+    threads: usize,
+    w: &mut W,
+) -> Result<()> {
+    if pending.is_empty() {
+        return Ok(());
+    }
+    let gen = gens.current();
+    let results = pool::parallel_tasks(pending.len(), threads.max(1), |i| gen.execute(&pending[i]));
+    for r in &results {
+        match r {
+            Ok(resp) => writeln!(w, "{}", protocol::encode_response(resp))?,
+            Err(e) => writeln!(w, "{}", protocol::encode_error(e))?,
+        }
+    }
+    w.flush()?;
+    ctl.requests.fetch_add(pending.len() as u64, Ordering::Relaxed);
+    pending.clear();
+    Ok(())
+}
+
+/// One `\n`-terminated line read through the cap.
+enum LineRead {
+    /// A complete line (terminator and trailing `\r` stripped), or the
+    /// final unterminated bytes before EOF.
+    Line(Vec<u8>),
+    Eof,
+    /// The line passed `cap` bytes before its terminator arrived.
+    Oversized,
+    /// The socket's read timeout fired mid-wait.
+    TimedOut,
+}
+
+/// Read one line of at most `cap` bytes. Socket read timeouts surface
+/// as [`LineRead::TimedOut`] rather than an error so the caller can
+/// answer the client before closing.
+fn read_line_capped(r: &mut impl BufRead, cap: usize) -> io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (done, used) = {
+            let available = match r.fill_buf() {
+                Ok(a) => a,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    return Ok(LineRead::TimedOut)
+                }
+                Err(e) => return Err(e),
+            };
+            if available.is_empty() {
+                return Ok(if buf.is_empty() {
+                    LineRead::Eof
+                } else {
+                    LineRead::Line(buf)
+                });
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    buf.extend_from_slice(&available[..i]);
+                    (true, i + 1)
+                }
+                None => {
+                    buf.extend_from_slice(available);
+                    (false, available.len())
+                }
+            }
+        };
+        r.consume(used);
+        if buf.len() > cap {
+            return Ok(LineRead::Oversized);
+        }
+        if done {
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return Ok(LineRead::Line(buf));
+        }
+    }
+}
+
+fn handle_conn(
+    stream: ServeStream,
+    gens: &GenerationStore,
+    ctl: &Ctl,
+    threads: usize,
+    read_timeout: Option<Duration>,
+) -> Result<()> {
+    // Per-connection watch poll, on this handler thread so the
+    // acceptor never stalls behind a generation build: a
+    // re-exported artifact becomes the serving generation without
+    // any verb. Errors (torn/missing file) and a swap already in
+    // flight (the reload try-locks) keep the current generation.
+    match gens.maybe_reload() {
+        Ok(Some(gen)) => {
+            eprintln!("serve: watched artifact changed, now {}", gen.stats_line());
+        }
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("serve: watch check failed: {e:#} (keeping current generation)");
+        }
+    }
+    let mut reader = BufReader::new(stream.try_clone().context("cloning connection stream")?);
+    let mut w = BufWriter::new(stream);
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        match read_line_capped(&mut reader, MAX_LINE_BYTES)? {
+            LineRead::Eof => break,
+            LineRead::TimedOut => {
+                // Slow-loris / wedged client: answer what is complete,
+                // say why, and give the thread back.
+                flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
+                let ms = read_timeout.map(|d| d.as_millis()).unwrap_or(0);
+                writeln!(w, "err connection idle past the {ms}ms read timeout; closing")?;
+                w.flush()?;
+                return Ok(());
+            }
+            LineRead::Oversized => {
+                flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
+                writeln!(w, "err request line exceeds {MAX_LINE_BYTES} bytes; closing")?;
+                w.flush()?;
+                return Ok(());
+            }
+            LineRead::Line(bytes) => {
+                let Ok(line) = std::str::from_utf8(&bytes) else {
+                    // Reject per line — the terminator was found, so
+                    // the stream is still in sync.
+                    writeln!(w, "err request line is not valid UTF-8")?;
+                    w.flush()?;
+                    continue;
+                };
+                if line.trim().is_empty() {
+                    flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
                     continue;
                 }
-            };
-            ctl.connections.fetch_add(1, Ordering::Relaxed);
-            let conn_id = next_conn_id;
-            next_conn_id += 1;
-            if let Ok(clone) = stream.try_clone() {
-                let mut conns = ctl.conns.lock().expect("conn registry");
-                conns.insert(conn_id, clone);
-            }
-            let gens = Arc::clone(&gens);
-            let ctl = Arc::clone(&ctl);
-            let threads = opts.batch_threads;
-            handles.push(std::thread::spawn(move || {
-                if let Err(e) = handle_conn(stream, &gens, &ctl, threads) {
-                    eprintln!("serve: connection error: {e:#}");
+                match ClientMsg::parse(line) {
+                    Ok(None) => {}
+                    Ok(Some(ClientMsg::Query(req))) => pending.push(req),
+                    Ok(Some(msg)) => {
+                        // Control verbs act on a consistent point in the
+                        // stream: drain queued requests first.
+                        flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
+                        match msg {
+                            ClientMsg::Swap(path) => match gens.swap_to(path.as_deref()) {
+                                Ok(gen) => writeln!(
+                                    w,
+                                    "ok swap gen {} store {}x{} {}",
+                                    gen.seq(),
+                                    gen.store().n(),
+                                    gen.store().dim(),
+                                    gen.strategy()
+                                )?,
+                                Err(e) => writeln!(w, "{}", protocol::encode_error(&e))?,
+                            },
+                            ClientMsg::Stats => {
+                                let gen = gens.current();
+                                writeln!(
+                                    w,
+                                    "stats {} connections {} requests {} swaps {}",
+                                    gen.stats_line(),
+                                    ctl.connections.load(Ordering::Relaxed),
+                                    ctl.requests.load(Ordering::Relaxed),
+                                    gens.swaps()
+                                )?;
+                            }
+                            ClientMsg::Shutdown => {
+                                writeln!(w, "ok shutdown")?;
+                                w.flush()?;
+                                ctl.begin_shutdown();
+                                return Ok(());
+                            }
+                            ClientMsg::Query(_) => unreachable!("queries queue above"),
+                        }
+                        w.flush()?;
+                    }
+                    Err(e) => {
+                        // Malformed line: report and keep the connection.
+                        writeln!(w, "{}", protocol::encode_error(&e))?;
+                        w.flush()?;
+                    }
                 }
-                ctl.conns.lock().expect("conn registry").remove(&conn_id);
-            }));
+            }
         }
-        // Graceful: flush what in-flight connections have queued, then
-        // wait for them. Half-closing the read side unblocks handlers
-        // whose client went idle without disconnecting (they see EOF,
-        // flush pending responses and return) — without it one wedged
-        // client would hang the join below forever.
-        for conn in ctl.conns.lock().expect("conn registry").values() {
-            let _ = conn.shutdown(std::net::Shutdown::Read);
-        }
-        for h in handles {
-            let _ = h.join();
-        }
-        let _ = std::fs::remove_file(&opts.socket);
-        Ok(ServerStats {
-            connections: ctl.connections.load(Ordering::Relaxed),
-            requests: ctl.requests.load(Ordering::Relaxed),
-            swaps: gens.swaps(),
+    }
+    // EOF flushes whatever is still pending.
+    flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Client side
+// ---------------------------------------------------------------------------
+
+/// Client side of one connection: send `lines`, half-close, read
+/// every reply line. Each call is one fresh connection.
+pub fn client_exchange(addr: &ServeAddr, lines: &[String]) -> Result<Vec<String>> {
+    let stream = connect_stream(addr)?;
+    let mut w = BufWriter::new(stream.try_clone().context("cloning connection stream")?);
+    for line in lines {
+        writeln!(w, "{line}")?;
+    }
+    w.flush()?;
+    stream.shutdown(Shutdown::Write)?;
+    let mut out = Vec::new();
+    for line in BufReader::new(stream).lines() {
+        out.push(line?);
+    }
+    Ok(out)
+}
+
+/// A persistent client connection exchanging blank-line-flushed
+/// batches — each batch of N lines is answered by exactly N reply
+/// lines, so replies can be read without closing the connection. The
+/// load generator drives the daemon through this.
+pub struct ClientConn {
+    reader: BufReader<ServeStream>,
+    writer: BufWriter<ServeStream>,
+}
+
+impl ClientConn {
+    pub fn connect(addr: &ServeAddr) -> Result<ClientConn> {
+        let stream = connect_stream(addr)?;
+        let reader = BufReader::new(stream.try_clone().context("cloning connection stream")?);
+        Ok(ClientConn {
+            reader,
+            writer: BufWriter::new(stream),
         })
     }
 
-    /// Answer the queued batch from one generation snapshot, in
-    /// request order, errors as per-line `err` responses.
-    fn flush_batch(
-        pending: &mut Vec<Request>,
-        gens: &GenerationStore,
-        ctl: &Ctl,
-        threads: usize,
-        w: &mut BufWriter<UnixStream>,
-    ) -> Result<()> {
-        if pending.is_empty() {
-            return Ok(());
-        }
-        let gen = gens.current();
-        let results =
-            pool::parallel_tasks(pending.len(), threads.max(1), |i| gen.execute(&pending[i]));
-        for r in &results {
-            match r {
-                Ok(resp) => writeln!(w, "{}", protocol::encode_response(resp))?,
-                Err(e) => writeln!(w, "{}", protocol::encode_error(e))?,
-            }
-        }
-        w.flush()?;
-        ctl.requests.fetch_add(pending.len() as u64, Ordering::Relaxed);
-        pending.clear();
-        Ok(())
-    }
-
-    fn handle_conn(
-        stream: UnixStream,
-        gens: &GenerationStore,
-        ctl: &Ctl,
-        threads: usize,
-    ) -> Result<()> {
-        // Per-connection watch poll, on this handler thread so the
-        // acceptor never stalls behind a generation build: a
-        // re-exported artifact becomes the serving generation without
-        // any verb. Errors (torn/missing file) and a swap already in
-        // flight (the reload try-locks) keep the current generation.
-        match gens.maybe_reload() {
-            Ok(Some(gen)) => {
-                eprintln!("serve: watched artifact changed, now {}", gen.stats_line());
-            }
-            Ok(None) => {}
-            Err(e) => {
-                eprintln!("serve: watch check failed: {e:#} (keeping current generation)");
-            }
-        }
-        let reader = BufReader::new(stream.try_clone().context("cloning connection stream")?);
-        let mut w = BufWriter::new(stream);
-        let mut pending: Vec<Request> = Vec::new();
-        for line in reader.lines() {
-            let line = line?;
-            if line.trim().is_empty() {
-                flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
-                continue;
-            }
-            match ClientMsg::parse(&line) {
-                Ok(None) => {}
-                Ok(Some(ClientMsg::Query(req))) => pending.push(req),
-                Ok(Some(msg)) => {
-                    // Control verbs act on a consistent point in the
-                    // stream: drain queued requests first.
-                    flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
-                    match msg {
-                        ClientMsg::Swap(path) => match gens.swap_to(path.as_deref()) {
-                            Ok(gen) => writeln!(
-                                w,
-                                "ok swap gen {} store {}x{} {}",
-                                gen.seq(),
-                                gen.store().n(),
-                                gen.store().dim(),
-                                gen.strategy()
-                            )?,
-                            Err(e) => writeln!(w, "{}", protocol::encode_error(&e))?,
-                        },
-                        ClientMsg::Stats => {
-                            let gen = gens.current();
-                            writeln!(
-                                w,
-                                "stats {} connections {} requests {} swaps {}",
-                                gen.stats_line(),
-                                ctl.connections.load(Ordering::Relaxed),
-                                ctl.requests.load(Ordering::Relaxed),
-                                gens.swaps()
-                            )?;
-                        }
-                        ClientMsg::Shutdown => {
-                            writeln!(w, "ok shutdown")?;
-                            w.flush()?;
-                            ctl.begin_shutdown();
-                            return Ok(());
-                        }
-                        ClientMsg::Query(_) => unreachable!("queries queue above"),
-                    }
-                    w.flush()?;
-                }
-                Err(e) => {
-                    // Malformed line: report and keep the connection.
-                    writeln!(w, "{}", protocol::encode_error(&e))?;
-                    w.flush()?;
-                }
-            }
-        }
-        // EOF flushes whatever is still pending.
-        flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
-        Ok(())
-    }
-
-    /// Client side of one connection: send `lines`, half-close, read
-    /// every reply line. Each call is one fresh connection.
-    pub fn client_exchange(socket: &Path, lines: &[String]) -> Result<Vec<String>> {
-        let stream = UnixStream::connect(socket)
-            .with_context(|| format!("connecting to serving daemon at {}", socket.display()))?;
-        let mut w = BufWriter::new(stream.try_clone().context("cloning connection stream")?);
+    /// Send one batch (`lines` plus the blank-line flush) without
+    /// reading replies yet.
+    pub fn send_batch(&mut self, lines: &[String]) -> Result<()> {
         for line in lines {
-            writeln!(w, "{line}")?;
+            writeln!(self.writer, "{line}")?;
         }
-        w.flush()?;
-        stream.shutdown(std::net::Shutdown::Write)?;
-        let mut out = Vec::new();
-        for line in BufReader::new(stream).lines() {
-            out.push(line?);
+        writeln!(self.writer)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read exactly `n` reply lines.
+    pub fn read_replies(&mut self, n: usize) -> Result<Vec<String>> {
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut line = String::new();
+            let read = self.reader.read_line(&mut line)?;
+            if read == 0 {
+                bail!("server closed the connection with {} of {n} replies pending", n - i);
+            }
+            while line.ends_with('\n') || line.ends_with('\r') {
+                line.pop();
+            }
+            out.push(line);
         }
         Ok(out)
     }
 
-    /// Tell a running daemon to hot-swap to `artifact`; returns the
-    /// daemon's acknowledgement line. Used by `embed --notify` (the
-    /// pipeline's export step) and `query --control swap`.
-    pub fn notify_swap(socket: &Path, artifact: &Path) -> Result<String> {
-        // The daemon resolves relative paths against *its* cwd; send an
-        // absolute path so the caller's cwd never matters.
-        let artifact = artifact
-            .canonicalize()
-            .with_context(|| format!("resolving artifact path {}", artifact.display()))?;
-        let replies = client_exchange(socket, &[format!("swap {}", artifact.display())])?;
-        let reply = replies
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("daemon closed the connection without replying"))?;
-        if reply.starts_with("err") {
-            bail!("daemon refused swap: {reply}");
-        }
-        Ok(reply)
+    /// One batch round trip: every request line gets exactly one reply
+    /// line (the daemon answers control verbs and malformed lines with
+    /// one line each too), in order.
+    pub fn exchange(&mut self, lines: &[String]) -> Result<Vec<String>> {
+        self.send_batch(lines)?;
+        self.read_replies(lines.len())
     }
 }
 
-#[cfg(unix)]
-pub use imp::{client_exchange, notify_swap, run_server};
-
-#[cfg(not(unix))]
-pub fn run_server(
-    _gens: std::sync::Arc<super::generation::GenerationStore>,
-    _opts: &ServerOpts,
-) -> anyhow::Result<ServerStats> {
-    anyhow::bail!("the serving daemon needs unix-domain sockets (unix-only)")
+/// Tell a running daemon to hot-swap to `artifact`; returns the
+/// daemon's acknowledgement line. Used by `embed --notify` (the
+/// pipeline's export step) and `query --control swap`.
+pub fn notify_swap(addr: &ServeAddr, artifact: &Path) -> Result<String> {
+    // The daemon resolves relative paths against *its* cwd; send an
+    // absolute path so the caller's cwd never matters.
+    let artifact = artifact
+        .canonicalize()
+        .with_context(|| format!("resolving artifact path {}", artifact.display()))?;
+    let replies = client_exchange(addr, &[format!("swap {}", artifact.display())])?;
+    let reply = replies
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("daemon closed the connection without replying"))?;
+    if reply.starts_with("err") {
+        bail!("daemon refused swap: {reply}");
+    }
+    Ok(reply)
 }
 
-#[cfg(not(unix))]
-pub fn client_exchange(
-    _socket: &std::path::Path,
-    _lines: &[String],
-) -> anyhow::Result<Vec<String>> {
-    anyhow::bail!("daemon clients need unix-domain sockets (unix-only)")
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-#[cfg(not(unix))]
-pub fn notify_swap(
-    _socket: &std::path::Path,
-    _artifact: &std::path::Path,
-) -> anyhow::Result<String> {
-    anyhow::bail!("daemon clients need unix-domain sockets (unix-only)")
+    #[test]
+    fn serve_addr_parse_classifies_specs() {
+        assert_eq!(
+            ServeAddr::parse("127.0.0.1:7878"),
+            ServeAddr::Tcp("127.0.0.1:7878".into())
+        );
+        assert_eq!(
+            ServeAddr::parse("localhost:0"),
+            ServeAddr::Tcp("localhost:0".into())
+        );
+        assert_eq!(
+            ServeAddr::parse("[::1]:9000"),
+            ServeAddr::Tcp("[::1]:9000".into())
+        );
+        for path in ["/run/kcore.sock", "./rel:odd", "/tmp/a:1/sock", "plain.sock", ":7878"] {
+            assert_eq!(
+                ServeAddr::parse(path),
+                ServeAddr::Unix(PathBuf::from(path)),
+                "{path}"
+            );
+        }
+        // Out-of-range port is not a TCP spec.
+        assert_eq!(
+            ServeAddr::parse("host:99999"),
+            ServeAddr::Unix(PathBuf::from("host:99999"))
+        );
+        assert_eq!(ServeAddr::parse("127.0.0.1:7878").transport(), "tcp");
+        assert_eq!(ServeAddr::parse("/x.sock").transport(), "unix");
+    }
+
+    #[test]
+    fn read_line_capped_handles_terminators_and_caps() {
+        let mut r = io::Cursor::new(b"short\r\nplain\nlast".to_vec());
+        match read_line_capped(&mut r, 64).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, b"short"),
+            _ => panic!("expected line"),
+        }
+        match read_line_capped(&mut r, 64).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, b"plain"),
+            _ => panic!("expected line"),
+        }
+        // Unterminated final line still comes through before EOF.
+        match read_line_capped(&mut r, 64).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, b"last"),
+            _ => panic!("expected line"),
+        }
+        assert!(matches!(read_line_capped(&mut r, 64).unwrap(), LineRead::Eof));
+        // An over-cap line is cut off without buffering it all.
+        let big = vec![b'x'; 1000];
+        let mut r = io::Cursor::new(big);
+        assert!(matches!(
+            read_line_capped(&mut r, 100).unwrap(),
+            LineRead::Oversized
+        ));
+    }
 }

@@ -1,29 +1,35 @@
-//! Integration: the persistent serving daemon (ISSUE 4 / DESIGN.md
-//! §Serving).
+//! Integration: the persistent serving daemon (ISSUE 4 + ISSUE 6 /
+//! DESIGN.md §Serving).
 //!
 //! 1. Protocol: `Request`/`Response` and the control verbs round-trip
-//!    through the wire format bit-exactly; malformed lines are
-//!    rejected without killing the connection.
-//! 2. Hot-swap: a daemon serving generation N answers a second
-//!    client's queries from generation N+1 after `swap`, the watched
-//!    path picks up re-exports without any verb, and concurrent
-//!    clients see no failed or blocked requests during transitions.
-//! 3. Lifecycle: `stats` reports the live generation, `shutdown` stops
-//!    the loop, removes the socket and returns clean counters.
+//!    through the wire format bit-exactly — offline and over a live
+//!    TCP daemon — and malformed lines are rejected without killing
+//!    the connection.
+//! 2. Robustness at the transport edge: oversized lines, NUL/invalid
+//!    UTF-8 bytes, half-closed connections and slow-loris writers all
+//!    get explanatory `err` lines while the daemon keeps serving.
+//! 3. Concurrency: multi-client TCP fan-out completes with zero failed
+//!    batches, hot-swaps under load never tear a batch across
+//!    generations, and the `max_conns` cap turns connections away with
+//!    one parseable error line.
+//! 4. Lifecycle: `shutdown` drains in-flight batches and completes on
+//!    both transports even with idle connections open, removes the
+//!    unix socket, and returns clean counters.
 
-#![cfg(unix)]
-
+use std::io::{BufRead, BufReader, Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::Duration;
 
+use kcore_embed::serve::loadtest::{self, LoadOpts};
 use kcore_embed::serve::protocol::{encode_response, parse_response};
+use kcore_embed::serve::server::connect_stream;
 use kcore_embed::serve::{
-    client_exchange, notify_swap, run_server, write_store, ClientMsg, EmbeddingStore, ExactScan,
-    GenerationOpts, GenerationStore, Metric, Request, Response, ScanIndex, ServerOpts, ServerStats,
-    TopKParams,
+    client_exchange, notify_swap, run_server_ready, write_store, ClientConn, ClientMsg,
+    EmbeddingStore, ExactScan, GenerationOpts, GenerationStore, Metric, Request, Response,
+    ScanIndex, ServeAddr, ServerOpts, ServerStats, TopKParams, MAX_LINE_BYTES,
 };
 use kcore_embed::util::proptest::{ensure, forall};
 use kcore_embed::util::rng::Rng;
@@ -49,20 +55,29 @@ fn expected_nn(path: &Path, node: u32, k: usize) -> String {
     encode_response(&Response::Neighbors { node, hits })
 }
 
-fn start_daemon(store: &Path, sock: PathBuf) -> thread::JoinHandle<ServerStats> {
+/// Start a daemon with `opts` and wait for its resolved, connectable
+/// address (ephemeral TCP ports become concrete ones).
+fn start_daemon_opts(
+    store: &Path,
+    opts: ServerOpts,
+) -> (thread::JoinHandle<ServerStats>, ServeAddr) {
     let gens = GenerationStore::open(store, None, GenerationOpts::default()).unwrap();
     let gens = Arc::new(gens);
-    thread::spawn(move || run_server(gens, &ServerOpts::new(sock)).unwrap())
+    let (tx, rx) = mpsc::channel();
+    let handle = thread::spawn(move || run_server_ready(gens, &opts, Some(tx)).unwrap());
+    let addr = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("daemon never reported its listen address");
+    (handle, addr)
 }
 
-fn wait_for_socket(sock: &Path) {
-    for _ in 0..500 {
-        if sock.exists() {
-            return;
-        }
-        thread::sleep(Duration::from_millis(10));
-    }
-    panic!("daemon socket {} never appeared", sock.display());
+fn start_daemon(store: &Path, listen: ServeAddr) -> (thread::JoinHandle<ServerStats>, ServeAddr) {
+    start_daemon_opts(store, ServerOpts::new(listen))
+}
+
+/// An ephemeral loopback TCP daemon.
+fn start_tcp_daemon(store: &Path) -> (thread::JoinHandle<ServerStats>, ServeAddr) {
+    start_daemon(store, ServeAddr::Tcp("127.0.0.1:0".into()))
 }
 
 fn lines(strs: &[&str]) -> Vec<String> {
@@ -133,6 +148,384 @@ fn malformed_lines_rejected_by_parser() {
     }
 }
 
+/// Every query verb round-trips over a live TCP daemon: the reply
+/// parses back into a `Response` and re-encodes to the identical wire
+/// bytes, and `nn` answers match an independent exact scan.
+#[test]
+fn tcp_round_trips_every_verb_against_a_live_daemon() {
+    let p = tmp("tcp_prop.kce");
+    write_artifact(&p, 60, 6, 9);
+    let (daemon, addr) = start_tcp_daemon(&p);
+    assert_eq!(addr.transport(), "tcp");
+    let mut conn = ClientConn::connect(&addr).unwrap();
+
+    forall("tcp verb round trip", 40, 0x7C91, |ctx| {
+        let (sent, want_nn) = match ctx.rng.gen_index(3) {
+            0 => {
+                let node = ctx.rng.gen_index(60) as u32;
+                let k = 1 + ctx.rng.gen_index(8);
+                (format!("nn {node} {k}"), Some(expected_nn(&p, node, k)))
+            }
+            1 => {
+                let u = ctx.rng.gen_index(60) as u32;
+                let v = ctx.rng.gen_index(60) as u32;
+                (format!("edge {u} {v}"), None)
+            }
+            _ => ("stats".to_string(), None),
+        };
+        let replies = conn
+            .exchange(std::slice::from_ref(&sent))
+            .map_err(|e| format!("exchange {sent:?}: {e:#}"))?;
+        ensure(replies.len() == 1, || format!("{} replies to one line", replies.len()))?;
+        let reply = &replies[0];
+        if sent == "stats" {
+            return ensure(reply.starts_with("stats gen 1 "), || format!("stats reply {reply:?}"));
+        }
+        // Wire round trip is bit-exact: parse then re-encode.
+        let back = parse_response(reply).map_err(|e| format!("reply {reply:?}: {e:#}"))?;
+        ensure(&encode_response(&back) == reply, || {
+            format!("reply {reply:?} re-encoded differently")
+        })?;
+        match (want_nn, back) {
+            (Some(want), _) => ensure(reply == &want, || format!("nn reply {reply:?} != {want:?}")),
+            (None, Response::EdgeScore { u, v, p }) => {
+                let ok = sent == format!("edge {u} {v}") && (0.0..=1.0).contains(&p);
+                ensure(ok, || format!("edge reply {reply:?} for {sent:?}"))
+            }
+            (None, other) => Err(format!("edge answered {other:?}")),
+        }
+    });
+
+    drop(conn);
+    let replies = client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    assert_eq!(replies, vec!["ok shutdown".to_string()]);
+    daemon.join().unwrap();
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// Hostile bytes on the wire: NUL and invalid UTF-8 get per-line `err`
+/// replies with the connection (and daemon) surviving; an oversized
+/// line gets one bounded `err` and a close; the daemon keeps serving
+/// other clients afterwards.
+#[test]
+fn adversarial_inputs_get_err_lines_without_killing_the_daemon() {
+    let p = tmp("adversarial.kce");
+    write_artifact(&p, 40, 6, 10);
+    let (daemon, addr) = start_tcp_daemon(&p);
+    let expected0 = expected_nn(&p, 0, 5);
+
+    // One connection, escalating abuse, still answering queries.
+    let mut stream = connect_stream(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut read_line = |reader: &mut BufReader<_>| {
+        let mut l = String::new();
+        reader.read_line(&mut l).unwrap();
+        l.trim_end().to_string()
+    };
+    stream.write_all(b"\xff\xfe not utf8\n").unwrap();
+    assert_eq!(read_line(&mut reader), "err request line is not valid UTF-8");
+    stream.write_all(b"nn\x00 0 5\n").unwrap();
+    let reply = read_line(&mut reader);
+    assert!(reply.starts_with("err "), "NUL verb answered {reply:?}");
+    stream.write_all(b"nn 0 5\n\n").unwrap();
+    assert_eq!(read_line(&mut reader), expected0);
+    drop(stream);
+
+    // An oversized line: flushed `err`, then the server closes. Two
+    // phases with a pause so the server has consumed every byte
+    // before it trips the cap and closes (an unread-byte close would
+    // RST and could race the `err` reply away).
+    let mut stream = connect_stream(&addr).unwrap();
+    let chunk = [b'x'; 4096];
+    for _ in 0..(MAX_LINE_BYTES / chunk.len()) {
+        stream.write_all(&chunk).unwrap();
+    }
+    thread::sleep(Duration::from_millis(100));
+    stream.write_all(b"xxxx\n").unwrap();
+    let mut all = String::new();
+    BufReader::new(stream).read_to_string(&mut all).unwrap();
+    assert_eq!(
+        all.trim_end(),
+        format!("err request line exceeds {MAX_LINE_BYTES} bytes; closing")
+    );
+
+    // Half-close: a client that sends a partial batch and shuts down
+    // its write side still gets the batch answered before EOF.
+    let stream = connect_stream(&addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    w.write_all(b"nn 1 4\n").unwrap();
+    w.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut all = String::new();
+    BufReader::new(stream).read_to_string(&mut all).unwrap();
+    assert_eq!(all.trim_end(), expected_nn(&p, 1, 4));
+
+    // The daemon survived all of it.
+    let replies = client_exchange(&addr, &lines(&["nn 0 5"])).unwrap();
+    assert_eq!(replies, vec![expected0]);
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.rejected, 0);
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// A slow-loris writer (partial batch, then silence) hits the read
+/// timeout: its complete lines are answered, it is told why the
+/// connection closes, and its handler thread exits (shutdown joins).
+#[test]
+fn slow_loris_hits_the_read_timeout_and_gets_flushed() {
+    let p = tmp("loris.kce");
+    write_artifact(&p, 40, 6, 11);
+    let mut opts = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
+    opts.read_timeout = Some(Duration::from_millis(250));
+    let (daemon, addr) = start_daemon_opts(&p, opts);
+
+    let mut stream = connect_stream(&addr).unwrap();
+    stream.write_all(b"nn 2 4\n").unwrap(); // no blank line: batch stays pending
+    let mut all = String::new();
+    BufReader::new(stream).read_to_string(&mut all).unwrap();
+    let got: Vec<&str> = all.lines().collect();
+    assert_eq!(
+        got,
+        vec![
+            expected_nn(&p, 2, 4).as_str(),
+            "err connection idle past the 250ms read timeout; closing",
+        ],
+    );
+
+    // The timed-out handler exited rather than leaking: shutdown joins
+    // every handler thread, so a leak would hang this test here.
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.connections, 2);
+    assert_eq!(stats.requests, 1);
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// The fan-out load scenario against a real TCP daemon: 8 concurrent
+/// clients, every batch completes, zero failures, sane histograms.
+#[test]
+fn tcp_fanout_load_completes_with_zero_failed_batches() {
+    let p = tmp("fanout.kce");
+    write_artifact(&p, 80, 8, 12);
+    let (daemon, addr) = start_tcp_daemon(&p);
+
+    let mut opts = LoadOpts::new(addr.clone());
+    opts.clients = 8;
+    opts.batches = 20;
+    opts.batch_size = 8;
+    opts.top_k = 5;
+    opts.seed = 11;
+    let res = loadtest::run_scenario("fanout", &opts).unwrap();
+    assert_eq!(res.transport, "tcp");
+    assert_eq!(res.failed_batches, 0, "failed batches under fan-out");
+    assert_eq!(res.errors, 0, "err replies under fan-out");
+    assert_eq!(res.batches, 8 * 20);
+    assert_eq!(res.requests, (8 * 20 * 8) as u64);
+    assert!(res.p50_us > 0.0 && res.p50_us <= res.p99_us && res.p99_us <= res.max_us);
+    assert!(res.throughput_rps > 0.0);
+
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    // Control verbs (the node-count probe, shutdown) are not queries.
+    assert_eq!(stats.requests, res.requests);
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// Hot-swap while TCP clients stream batches: every batch is answered
+/// entirely from one generation — never torn across two — and no
+/// client sees a failure.
+#[test]
+fn hot_swap_under_tcp_load_never_tears_a_batch() {
+    let a = tmp("tear_a.kce");
+    let b = tmp("tear_b.kce");
+    let (n, dim, k) = (30usize, 6usize, 4usize);
+    write_artifact(&a, n, dim, 13);
+    write_artifact(&b, n, dim, 14);
+    let expected_a: Vec<String> = (0..n as u32).map(|v| expected_nn(&a, v, k)).collect();
+    let expected_b: Vec<String> = (0..n as u32).map(|v| expected_nn(&b, v, k)).collect();
+    assert_ne!(expected_a, expected_b, "artifacts too similar to detect tearing");
+
+    let (daemon, addr) = start_tcp_daemon(&a);
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for w in 0..3usize {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        let expected_a = expected_a.clone();
+        let expected_b = expected_b.clone();
+        workers.push(thread::spawn(move || -> (u64, Vec<String>) {
+            // Persistent connection, fixed 3-line batch per worker.
+            let nodes = [w * 3, w * 3 + 1, w * 3 + 2];
+            let batch: Vec<String> = nodes.iter().map(|v| format!("nn {v} {k}")).collect();
+            let from_a: Vec<&String> = nodes.iter().map(|&v| &expected_a[v]).collect();
+            let from_b: Vec<&String> = nodes.iter().map(|&v| &expected_b[v]).collect();
+            let mut conn = match ClientConn::connect(&addr) {
+                Ok(c) => c,
+                Err(e) => return (0, vec![format!("connect failed: {e:#}")]),
+            };
+            let mut ok = 0u64;
+            let mut failures = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                match conn.exchange(&batch) {
+                    Err(e) => failures.push(format!("exchange failed: {e:#}")),
+                    Ok(replies) => {
+                        let got: Vec<&String> = replies.iter().collect();
+                        if got == from_a || got == from_b {
+                            ok += 1;
+                        } else {
+                            failures.push(format!("torn batch: {replies:?}"));
+                        }
+                    }
+                }
+            }
+            (ok, failures)
+        }));
+    }
+
+    for round in 0..6 {
+        thread::sleep(Duration::from_millis(25));
+        let target = if round % 2 == 0 { &b } else { &a };
+        let ack = notify_swap(&addr, target).unwrap();
+        assert!(ack.starts_with("ok swap gen"), "{ack}");
+    }
+    thread::sleep(Duration::from_millis(25));
+    stop.store(true, Ordering::Relaxed);
+    for wkr in workers {
+        let (ok, failures) = wkr.join().unwrap();
+        assert!(failures.is_empty(), "client failures during swaps: {failures:?}");
+        assert!(ok > 0, "a client never completed a batch");
+    }
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.swaps, 6);
+    std::fs::remove_file(&a).unwrap();
+    std::fs::remove_file(&b).unwrap();
+}
+
+/// `max_conns`: connections over the cap are turned away with exactly
+/// one parseable `err` line, never a handler thread; capacity frees up
+/// when a held connection closes.
+#[test]
+fn connection_cap_rejects_with_a_parseable_error_line() {
+    let p = tmp("cap.kce");
+    write_artifact(&p, 40, 6, 15);
+    let mut opts = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
+    opts.max_conns = 2;
+    let (daemon, addr) = start_daemon_opts(&p, opts);
+    let expected0 = expected_nn(&p, 0, 4);
+
+    // Fill the cap with two held connections (the exchange proves each
+    // was accepted and registered, not just queued in the backlog).
+    let mut c1 = ClientConn::connect(&addr).unwrap();
+    let mut c2 = ClientConn::connect(&addr).unwrap();
+    assert_eq!(c1.exchange(&lines(&["nn 0 4"])).unwrap(), vec![expected0.clone()]);
+    assert_eq!(c2.exchange(&lines(&["nn 0 4"])).unwrap(), vec![expected0.clone()]);
+
+    // Third connection: one error line, then the server closes it.
+    let mut rejected = ClientConn::connect(&addr).unwrap();
+    let reply = rejected.read_replies(1).unwrap().remove(0);
+    assert!(
+        reply.starts_with("err server at capacity (2 of 2 connections in use)"),
+        "{reply}"
+    );
+    // Parseable as a protocol error line carrying the message.
+    let err = parse_response(&reply).unwrap_err();
+    assert!(format!("{err:#}").contains("at capacity"), "{err:#}");
+    assert!(rejected.read_replies(1).is_err(), "rejected conn not closed");
+
+    // Closing one held connection frees a slot (the handler exits and
+    // deregisters asynchronously, so poll briefly).
+    drop(c2);
+    let mut readmitted = None;
+    for _ in 0..100 {
+        if let Ok(mut c) = ClientConn::connect(&addr) {
+            if let Ok(replies) = c.exchange(&lines(&["nn 0 4"])) {
+                if replies == vec![expected0.clone()] {
+                    readmitted = Some(c);
+                    break;
+                }
+            }
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    let mut readmitted = readmitted.expect("capacity never freed after a close");
+
+    // Shut down over the readmitted connection (a fresh one could be
+    // rejected: c1 still holds a slot).
+    assert_eq!(
+        readmitted.exchange(&lines(&["shutdown"])).unwrap(),
+        vec!["ok shutdown".to_string()]
+    );
+    let stats = daemon.join().unwrap();
+    assert!(stats.rejected >= 1, "no rejection counted: {stats:?}");
+    // c1, c2 and the readmitted client each completed one nn query;
+    // rejected polls never reached a handler.
+    assert_eq!(stats.connections, 3);
+    assert_eq!(stats.requests, 3);
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// Regression (ISSUE 6 satellite): `shutdown` must complete — draining
+/// pending batches — even while idle connections sit open with no read
+/// timeout, on either transport. Before the transport refactor the
+/// wake-up only worked for unix sockets.
+fn shutdown_drains_idle_connections(listen: ServeAddr, artifact: &Path) -> ServerStats {
+    let mut opts = ServerOpts::new(listen);
+    opts.read_timeout = None; // idle conns block their handlers forever
+    let (daemon, addr) = start_daemon_opts(artifact, opts);
+
+    // Two idle connections that never send a byte.
+    let _idle1 = ClientConn::connect(&addr).unwrap();
+    let _idle2 = ClientConn::connect(&addr).unwrap();
+
+    // One connection with a complete batch behind it and a partial
+    // batch pending; the sync exchange proves the handler is past
+    // accept, the sleep lets it consume the partial line.
+    let mut pending = connect_stream(&addr).unwrap();
+    let mut pending_reader = BufReader::new(pending.try_clone().unwrap());
+    pending.write_all(b"nn 0 5\n\n").unwrap();
+    let mut first = String::new();
+    pending_reader.read_line(&mut first).unwrap();
+    assert_eq!(first.trim_end(), expected_nn(artifact, 0, 5));
+    pending.write_all(b"nn 1 4\n").unwrap();
+    thread::sleep(Duration::from_millis(150));
+
+    let replies = client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    assert_eq!(replies, vec!["ok shutdown".to_string()]);
+    // The daemon half-closes the pending connection's read side; its
+    // handler sees EOF, flushes the partial batch, and the reply lands
+    // before the connection closes.
+    let mut rest = String::new();
+    pending_reader.read_to_string(&mut rest).unwrap();
+    assert_eq!(rest.trim_end(), expected_nn(artifact, 1, 4));
+
+    // Idle handlers were unblocked too — a leak would hang this join.
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.connections, 4);
+    assert_eq!(stats.requests, 2);
+    stats
+}
+
+#[test]
+fn shutdown_completes_with_idle_tcp_connections_open() {
+    let p = tmp("idle_tcp.kce");
+    write_artifact(&p, 40, 6, 16);
+    shutdown_drains_idle_connections(ServeAddr::Tcp("127.0.0.1:0".into()), &p);
+    std::fs::remove_file(&p).unwrap();
+}
+
+#[cfg(unix)]
+#[test]
+fn shutdown_completes_with_idle_unix_connections_open() {
+    let p = tmp("idle_unix.kce");
+    let sock = tmp("idle_unix.sock");
+    write_artifact(&p, 40, 6, 17);
+    shutdown_drains_idle_connections(ServeAddr::Unix(sock.clone()), &p);
+    assert!(!sock.exists(), "socket file not removed on shutdown");
+    std::fs::remove_file(&p).unwrap();
+}
+
+#[cfg(unix)]
 #[test]
 fn daemon_hot_swaps_and_shuts_down_cleanly() {
     let a = tmp("e2e_a.kce");
@@ -145,36 +538,36 @@ fn daemon_hot_swaps_and_shuts_down_cleanly() {
     let expected_b0 = expected_nn(&b, 0, 5);
     assert_ne!(expected_a0, expected_b0, "artifacts too similar to test a swap");
 
-    let daemon = start_daemon(&a, sock.clone());
-    wait_for_socket(&sock);
+    let (daemon, addr) = start_daemon(&a, ServeAddr::Unix(sock.clone()));
+    assert_eq!(addr.transport(), "unix");
 
     // One connection, two batches split by a blank-line flush.
-    let replies = client_exchange(&sock, &lines(&["nn 0 5", "", "nn 1 5"])).unwrap();
+    let replies = client_exchange(&addr, &lines(&["nn 0 5", "", "nn 1 5"])).unwrap();
     assert_eq!(replies, vec![expected_a0.clone(), expected_a1]);
 
     // A malformed line answers `err` and keeps the connection usable.
-    let replies = client_exchange(&sock, &lines(&["bogus", "nn 0 5"])).unwrap();
+    let replies = client_exchange(&addr, &lines(&["bogus", "nn 0 5"])).unwrap();
     assert_eq!(replies.len(), 2);
     assert!(replies[0].starts_with("err "), "{}", replies[0]);
     assert_eq!(replies[1], expected_a0);
 
     // Out-of-range requests fail per-line, not per-connection.
-    let replies = client_exchange(&sock, &lines(&["nn 999 3"])).unwrap();
+    let replies = client_exchange(&addr, &lines(&["nn 999 3"])).unwrap();
     assert!(replies[0].starts_with("err "), "{}", replies[0]);
 
     // Hot-swap to artifact B (notify_swap canonicalizes the path).
-    let ack = notify_swap(&sock, &b).unwrap();
+    let ack = notify_swap(&addr, &b).unwrap();
     assert!(ack.starts_with("ok swap gen 2 store 80x8 exact"), "{ack}");
 
     // A second client now answers from generation 2.
-    let replies = client_exchange(&sock, &lines(&["nn 0 5"])).unwrap();
+    let replies = client_exchange(&addr, &lines(&["nn 0 5"])).unwrap();
     assert_eq!(replies, vec![expected_b0]);
 
-    let replies = client_exchange(&sock, &lines(&["stats"])).unwrap();
+    let replies = client_exchange(&addr, &lines(&["stats"])).unwrap();
     assert!(replies[0].starts_with("stats gen 2"), "{}", replies[0]);
     assert!(replies[0].contains("swaps 1"), "{}", replies[0]);
 
-    let replies = client_exchange(&sock, &lines(&["shutdown"])).unwrap();
+    let replies = client_exchange(&addr, &lines(&["shutdown"])).unwrap();
     assert_eq!(replies, vec!["ok shutdown".to_string()]);
     let stats = daemon.join().unwrap();
     assert_eq!(stats.swaps, 1);
@@ -190,13 +583,12 @@ fn daemon_hot_swaps_and_shuts_down_cleanly() {
 #[test]
 fn watched_reexport_is_picked_up_without_a_verb() {
     let p = tmp("watch.kce");
-    let sock = tmp("watch.sock");
     write_artifact(&p, 50, 6, 3);
     let expected_old = expected_nn(&p, 2, 4);
 
-    let daemon = start_daemon(&p, sock.clone());
-    wait_for_socket(&sock);
-    let replies = client_exchange(&sock, &lines(&["nn 2 4"])).unwrap();
+    // Over TCP: the watched-path reload is transport-independent.
+    let (daemon, addr) = start_tcp_daemon(&p);
+    let replies = client_exchange(&addr, &lines(&["nn 2 4"])).unwrap();
     assert_eq!(replies, vec![expected_old.clone()]);
 
     // Re-export over the watched path (atomic rename inside): the next
@@ -204,17 +596,18 @@ fn watched_reexport_is_picked_up_without_a_verb() {
     write_artifact(&p, 50, 6, 4);
     let expected_new = expected_nn(&p, 2, 4);
     assert_ne!(expected_old, expected_new);
-    let replies = client_exchange(&sock, &lines(&["nn 2 4"])).unwrap();
+    let replies = client_exchange(&addr, &lines(&["nn 2 4"])).unwrap();
     assert_eq!(replies, vec![expected_new]);
 
-    let replies = client_exchange(&sock, &lines(&["stats"])).unwrap();
+    let replies = client_exchange(&addr, &lines(&["stats"])).unwrap();
     assert!(replies[0].starts_with("stats gen 2"), "{}", replies[0]);
-    client_exchange(&sock, &lines(&["shutdown"])).unwrap();
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
     let stats = daemon.join().unwrap();
     assert_eq!(stats.swaps, 1);
     std::fs::remove_file(&p).unwrap();
 }
 
+#[cfg(unix)]
 #[test]
 fn concurrent_clients_never_fail_or_block_across_swaps() {
     let a = tmp("conc_a.kce");
@@ -227,13 +620,12 @@ fn concurrent_clients_never_fail_or_block_across_swaps() {
     let expected_a: Vec<String> = (0..n as u32).map(|v| expected_nn(&a, v, k)).collect();
     let expected_b: Vec<String> = (0..n as u32).map(|v| expected_nn(&b, v, k)).collect();
 
-    let daemon = start_daemon(&a, sock.clone());
-    wait_for_socket(&sock);
+    let (daemon, addr) = start_daemon(&a, ServeAddr::Unix(sock));
 
     let stop = Arc::new(AtomicBool::new(false));
     let mut workers = Vec::new();
     for w in 0..4usize {
-        let sock = sock.clone();
+        let addr = addr.clone();
         let stop = Arc::clone(&stop);
         let expected_a = expected_a.clone();
         let expected_b = expected_b.clone();
@@ -245,7 +637,7 @@ fn concurrent_clients_never_fail_or_block_across_swaps() {
                 let node = (w * 17 + i * 7) % n;
                 i += 1;
                 let sent = format!("nn {node} {k}");
-                match client_exchange(&sock, std::slice::from_ref(&sent)) {
+                match client_exchange(&addr, std::slice::from_ref(&sent)) {
                     Err(e) => failures.push(format!("exchange failed: {e:#}")),
                     Ok(replies) => {
                         let matches_either = replies.len() == 1
@@ -266,7 +658,7 @@ fn concurrent_clients_never_fail_or_block_across_swaps() {
     for round in 0..6 {
         thread::sleep(Duration::from_millis(30));
         let target = if round % 2 == 0 { &b } else { &a };
-        let ack = notify_swap(&sock, target).unwrap();
+        let ack = notify_swap(&addr, target).unwrap();
         assert!(ack.starts_with("ok swap gen"), "{ack}");
     }
     thread::sleep(Duration::from_millis(30));
@@ -278,7 +670,7 @@ fn concurrent_clients_never_fail_or_block_across_swaps() {
         assert!(ok > 0, "a client never completed a request");
         total_ok += ok;
     }
-    client_exchange(&sock, &lines(&["shutdown"])).unwrap();
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
     let stats = daemon.join().unwrap();
     assert_eq!(stats.swaps, 6);
     assert_eq!(stats.requests, total_ok);
