@@ -59,19 +59,25 @@ artifacts:
 
 # Serving smoke: train a tiny embedding, export the binary artifact,
 # verify the mmap and in-memory query paths agree, exercise the
-# quantized scan and the batch `serve` front-end. Also trains via the
-# shard-native node2vec walker under a 1 MiB corpus budget and asserts
-# the spill path actually executed (grep for the spill report), then
-# runs the persistent daemon: serve --listen on a unix socket, query
-# over it, hot-swap via a re-export with --notify (answers must
-# change), stats, and a graceful shutdown with exit code 0. Then the
-# same daemon on loopback TCP, driven by a short loadgen scenario pair
-# whose JSON must record zero failed batches. CI runs exactly this
+# quantized scan and the batch `serve` front-end. The first embed runs
+# with --trace-out and the span JSONL is parse-checked (one span per
+# pipeline phase nested under one root, sysmon RSS/CPU series). Also
+# trains via the shard-native node2vec walker under a 1 MiB corpus
+# budget and asserts the spill path actually executed (grep for the
+# spill report), then runs the persistent daemon: serve --listen on a
+# unix socket, query over it, hot-swap via a re-export with --notify
+# (answers must change), stats (single-line JSON, parse-checked), and
+# a graceful shutdown with exit code 0. Then the same daemon on
+# loopback TCP, driven by a short loadgen scenario pair whose JSON
+# must record zero failed batches, plus a `metrics` registry snapshot
+# parse-checked for per-verb latency histograms. CI runs exactly this
 # target — extend it here, not in ci.yml.
 smoke: build
 	cd rust && ./target/release/kcore-embed embed --graph cora \
 	  --backend native --walks 2 --walk-length 10 --dim 32 \
+	  --trace-out /tmp/smoke_trace.jsonl \
 	  --out /tmp/smoke_emb.tsv --store /tmp/smoke_emb.kce
+	python3 scripts/check_trace.py /tmp/smoke_trace.jsonl
 	cd rust && ./target/release/kcore-embed embed --graph cora \
 	  --embedder node2vec --p 0.5 --q 2.0 --backend native \
 	  --walks 8 --walk-length 30 --dim 32 --shards 8 --corpus-budget-mb 1 \
@@ -108,7 +114,7 @@ smoke: build
 	    echo "hot-swap did not change answers" >&2; exit 1; \
 	  fi; \
 	  ./rust/target/release/kcore-embed query --connect /tmp/smoke_daemon.sock \
-	    --control stats; \
+	    --control stats | python3 -m json.tool > /dev/null; \
 	  ./rust/target/release/kcore-embed query --connect /tmp/smoke_daemon.sock \
 	    --control shutdown; \
 	  wait $$DPID
@@ -128,6 +134,8 @@ smoke: build
 	    --json /tmp/smoke_serve.json --label smoke; \
 	  grep -q '"p99_us"' /tmp/smoke_serve.json; \
 	  grep -q '"failed_batches":0' /tmp/smoke_serve.json; \
+	  ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:47311 \
+	    --control metrics | python3 scripts/check_metrics.py; \
 	  ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:47311 \
 	    --control shutdown; \
 	  wait $$DPID

@@ -99,6 +99,9 @@ pub struct PipelineConfig {
     /// the fresh artifact ([`crate::serve::server::notify_swap`]).
     /// Requires `export_store`. None = no notification.
     pub notify_daemon: Option<String>,
+    /// Write a span-trace JSONL file ([`crate::obs::trace`]) covering
+    /// every pipeline phase to this path. None = tracing off.
+    pub trace_out: Option<std::path::PathBuf>,
 }
 
 impl Default for PipelineConfig {
@@ -121,6 +124,7 @@ impl Default for PipelineConfig {
             spill_dir: None,
             export_store: None,
             notify_daemon: None,
+            trace_out: None,
         }
     }
 }
@@ -196,6 +200,13 @@ impl PipelineConfig {
                     .map(Json::str)
                     .unwrap_or(Json::Null),
             ),
+            (
+                "trace_out",
+                self.trace_out
+                    .as_ref()
+                    .map(|p| Json::str(&p.to_string_lossy()))
+                    .unwrap_or(Json::Null),
+            ),
         ];
         if let Embedder::Node2Vec { p, q } = self.embedder {
             fields.push(("p", Json::num(p)));
@@ -257,6 +268,10 @@ impl PipelineConfig {
             .get("notify_daemon")
             .and_then(Json::as_str)
             .map(str::to_string);
+        cfg.trace_out = j
+            .get("trace_out")
+            .and_then(Json::as_str)
+            .map(std::path::PathBuf::from);
         cfg.validate()?;
         Ok(cfg)
     }
@@ -312,6 +327,7 @@ mod tests {
             spill_dir: Some(std::path::PathBuf::from("/scratch/corpus")),
             export_store: Some(std::path::PathBuf::from("out/emb.kce")),
             notify_daemon: Some("/run/kcore.sock".to_string()),
+            trace_out: Some(std::path::PathBuf::from("out/trace.jsonl")),
             ..Default::default()
         };
         let back = PipelineConfig::from_json(&cfg.to_json()).unwrap();
@@ -320,11 +336,13 @@ mod tests {
         assert_eq!(back.spill_dir, cfg.spill_dir);
         assert_eq!(back.export_store, cfg.export_store);
         assert_eq!(back.notify_daemon, cfg.notify_daemon);
+        assert_eq!(back.trace_out, cfg.trace_out);
         // Defaults stay None through a round trip.
         let d = PipelineConfig::from_json(&PipelineConfig::default().to_json()).unwrap();
         assert_eq!(d.spill_dir, None);
         assert_eq!(d.export_store, None);
         assert_eq!(d.notify_daemon, None);
+        assert_eq!(d.trace_out, None);
     }
 
     #[test]

@@ -9,4 +9,4 @@ pub mod pipeline;
 pub mod report;
 
 pub use config::{Backend, Embedder, PipelineConfig};
-pub use pipeline::{run_pipeline, PipelineOutput};
+pub use pipeline::{run_pipeline, run_pipeline_traced, PipelineOutput};

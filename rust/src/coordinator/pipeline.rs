@@ -5,11 +5,21 @@
 //! Each phase is timed separately because the paper's appendix tables
 //! report the breakdown (core decomposition / propagation / embedding).
 //!
+//! Observability (DESIGN.md §Observability): with `trace_out` set (or
+//! a caller-supplied [`Tracer`] via [`run_pipeline_traced`]) every
+//! phase emits a span — nested under one root `pipeline` span, with a
+//! `skipped` field on phases the config turned off — plus a final
+//! `sysmon` event carrying the run's RSS/CPU curves, and
+//! [`PipelineOutput::trace_summary`] aggregates per-phase durations.
+//!
 //! Memory (DESIGN.md §Corpus-streaming): the walk corpus is produced as
 //! a [`ShardedCorpus`] and training consumes it as a stream of
 //! super-batches — the pipeline never holds the full corpus in one
 //! allocation, and with `corpus_budget_mb` set the shards spill to disk
 //! so peak corpus RSS is O(budget).
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -17,8 +27,12 @@ use crate::coordinator::config::{Backend, Embedder, PipelineConfig};
 use crate::cores::{core_decomposition, subcore, CoreDecomposition};
 use crate::embed::{native, trainer, Embedding};
 use crate::graph::Graph;
+use crate::obs::metrics::Registry;
+use crate::obs::sysmon::{Sysmon, CPU_METRIC, RSS_METRIC};
+use crate::obs::trace::Tracer;
 use crate::propagate::propagate_mean;
 use crate::runtime::{Manifest, Runtime};
+use crate::util::json::Json;
 use crate::util::timer::PhaseTimer;
 use crate::walks::{
     corewalk, generate_walk_shards, node2vec, CorpusShard, ShardOpts, ShardStats, ShardedCorpus,
@@ -53,6 +67,9 @@ pub struct PipelineOutput {
     /// Acknowledgement line from the serving daemon when
     /// `notify_daemon` asked the export step to trigger a hot-swap.
     pub daemon_ack: Option<String>,
+    /// Per-span `{name: {count, total_us}}` aggregate when the run was
+    /// traced (`trace_out` / [`run_pipeline_traced`]); None otherwise.
+    pub trace_summary: Option<Json>,
 }
 
 impl PipelineOutput {
@@ -67,24 +84,59 @@ impl PipelineOutput {
 }
 
 /// Run the full pipeline on `g`. `runtime` is required for
-/// [`Backend::Pjrt`] (pass the shared client + manifest).
+/// [`Backend::Pjrt`] (pass the shared client + manifest). Tracing
+/// follows `cfg.trace_out`; callers that already hold a [`Tracer`]
+/// (the CLI, which traces graph loading too) use
+/// [`run_pipeline_traced`] directly.
 pub fn run_pipeline(
     g: &Graph,
     cfg: &PipelineConfig,
     runtime: Option<(&Runtime, &Manifest)>,
+) -> Result<PipelineOutput> {
+    let tracer = Tracer::from_trace_out(cfg.trace_out.as_deref())?;
+    run_pipeline_traced(g, cfg, runtime, &tracer)
+}
+
+/// [`run_pipeline`] with a caller-supplied tracer (which wins over
+/// `cfg.trace_out` — the config field only picks the sink in
+/// [`run_pipeline`]). Every phase emits a span nested under one root
+/// `pipeline` span; phases the config turns off still emit theirs,
+/// flagged `skipped`, so trace consumers always see the same six-phase
+/// shape. A `sysmon` event with the run's RSS/CPU series lands last.
+pub fn run_pipeline_traced(
+    g: &Graph,
+    cfg: &PipelineConfig,
+    runtime: Option<(&Runtime, &Manifest)>,
+    tracer: &Tracer,
 ) -> Result<PipelineOutput> {
     // Fail fast on configs the samplers cannot honor (p/q <= 0,
     // zero-length walks) — config/CLI parsing validates too, but tests
     // and library callers construct `PipelineConfig` directly.
     cfg.validate()?;
     let mut timer = PhaseTimer::new();
+    let root = tracer.span_with(
+        "pipeline",
+        &[
+            ("embedder", Json::str(cfg.embedder.name())),
+            ("backend", Json::str(cfg.backend.name())),
+        ],
+    );
+    // Resource curves for the whole run, reported as a trace event at
+    // the end. The registry is pipeline-local so concurrent runs in one
+    // process (tests) never mix their samples.
+    let mon_registry = Arc::new(Registry::new());
+    let sysmon = tracer
+        .enabled()
+        .then(|| Sysmon::start(Arc::clone(&mon_registry), Duration::from_millis(50)));
 
     // Phase 1: core decomposition (needed by CoreWalk scheduling and/or
     // k0-core extraction; the plain DeepWalk baseline skips it, like the
     // paper's baseline rows which have no decomposition column).
     let needs_decomp = cfg.k0.is_some() || matches!(cfg.embedder, Embedder::CoreWalk);
-    let decomp: Option<CoreDecomposition> =
-        needs_decomp.then(|| timer.time(PHASE_DECOMP, || core_decomposition(g)));
+    let decomp: Option<CoreDecomposition> = {
+        let _s = tracer.span_with(PHASE_DECOMP, &[("skipped", Json::Bool(!needs_decomp))]);
+        needs_decomp.then(|| timer.time(PHASE_DECOMP, || core_decomposition(g)))
+    };
     let degeneracy = decomp.as_ref().map(|d| d.degeneracy).unwrap_or(0);
 
     // Phase 2: pick the graph to embed (whole graph or k0-core).
@@ -105,6 +157,7 @@ pub fn run_pipeline(
     };
 
     // Phase 3: walk schedule + corpus on the target graph.
+    let mut walks_span = tracer.span(PHASE_WALKS);
     let schedule = match cfg.embedder {
         Embedder::DeepWalk | Embedder::Node2Vec { .. } => {
             WalkSchedule::uniform(target.n_nodes(), cfg.walks_per_node)
@@ -169,9 +222,14 @@ pub fn run_pipeline(
         }
     }
     let (n_walks, n_tokens) = (corpus.n_walks(), corpus.n_tokens());
+    walks_span.field("walks", Json::num(n_walks as f64));
+    walks_span.field("tokens", Json::num(n_tokens as f64));
+    drop(walks_span);
 
     // Phase 4: SGNS training on the chosen backend — both consume the
     // sharded corpus as a stream; the full corpus is never concatenated.
+    let mut train_span =
+        tracer.span_with(PHASE_TRAIN, &[("backend", Json::str(cfg.backend.name()))]);
     let mut sgns = cfg.sgns.clone();
     sgns.seed = cfg.seed ^ 0x7EA1;
     let (core_embedding, n_pairs, loss_curve) = match cfg.backend {
@@ -202,44 +260,54 @@ pub fn run_pipeline(
             (r.w_in, r.n_pairs, Vec::new())
         }
     };
+    train_span.field("pairs", Json::num(n_pairs as f64));
+    drop(train_span);
     let corpus_stats = corpus.stats();
     drop(corpus); // release shards (and any spill files) before propagation
 
     // Phase 5: propagation back to the whole graph.
-    let embedding = match (&core_nodes, k0_used) {
-        (Some(map), Some(k0)) => {
-            let d = decomp.as_ref().unwrap();
-            timer
-                .time(PHASE_PROP, || {
-                    propagate_mean(g, d, k0, map, &core_embedding, &cfg.propagation)
-                })
-                .0
+    let embedding = {
+        let prop_runs = matches!((&core_nodes, k0_used), (Some(_), Some(_)));
+        let _s = tracer.span_with(PHASE_PROP, &[("skipped", Json::Bool(!prop_runs))]);
+        match (&core_nodes, k0_used) {
+            (Some(map), Some(k0)) => {
+                let d = decomp.as_ref().unwrap();
+                timer
+                    .time(PHASE_PROP, || {
+                        propagate_mean(g, d, k0, map, &core_embedding, &cfg.propagation)
+                    })
+                    .0
+            }
+            _ => core_embedding,
         }
-        _ => core_embedding,
     };
 
     // Phase 6: export the serving artifact — the full-graph embedding
     // plus per-node core numbers, so the query tier never re-decomposes
     // (crate::serve::store). Reuses the phase-1 decomposition when the
     // run computed one.
-    if let Some(path) = &cfg.export_store {
-        let full_decomp;
-        let cores: &[u32] = match &decomp {
-            Some(d) => &d.core,
-            None => {
-                full_decomp = timer.time(PHASE_DECOMP, || core_decomposition(g));
-                &full_decomp.core
-            }
-        };
-        timer.time(PHASE_EXPORT, || {
-            crate::serve::store::write_store(
-                path,
-                embedding.data(),
-                embedding.n(),
-                embedding.dim(),
-                Some(cores),
-            )
-        })?;
+    {
+        let skipped = cfg.export_store.is_none();
+        let _s = tracer.span_with(PHASE_EXPORT, &[("skipped", Json::Bool(skipped))]);
+        if let Some(path) = &cfg.export_store {
+            let full_decomp;
+            let cores: &[u32] = match &decomp {
+                Some(d) => &d.core,
+                None => {
+                    full_decomp = timer.time(PHASE_DECOMP, || core_decomposition(g));
+                    &full_decomp.core
+                }
+            };
+            timer.time(PHASE_EXPORT, || {
+                crate::serve::store::write_store(
+                    path,
+                    embedding.data(),
+                    embedding.n(),
+                    embedding.dim(),
+                    Some(cores),
+                )
+            })?;
+        }
     }
 
     // Phase 6b: signal a running serving daemon to hot-swap to the
@@ -262,6 +330,22 @@ pub fn run_pipeline(
         _ => None,
     };
 
+    // Close out the trace: final resource samples as one event, then
+    // the root span, then the per-span aggregate for the caller.
+    if let Some(mon) = sysmon {
+        mon.stop();
+        tracer.event(
+            "sysmon",
+            &[
+                ("rss_bytes", mon_registry.series(RSS_METRIC).to_json()),
+                ("cpu_secs", mon_registry.series(CPU_METRIC).to_json()),
+            ],
+        );
+    }
+    drop(root);
+    tracer.flush()?;
+    let trace_summary = tracer.enabled().then(|| tracer.summary_json());
+
     Ok(PipelineOutput {
         embedding,
         degeneracy,
@@ -273,6 +357,7 @@ pub fn run_pipeline(
         loss_curve,
         corpus_stats,
         daemon_ack,
+        trace_summary,
         timer,
     })
 }
@@ -492,6 +577,64 @@ mod tests {
         assert_eq!(out.daemon_ack, None);
         assert!(path.exists(), "export should land even when notify fails");
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn traced_run_emits_every_phase_span_under_one_root() {
+        let g = generators::holme_kim(60, 3, 0.4, &mut crate::util::rng::Rng::new(3));
+        let tracer = Tracer::in_memory();
+        let out = run_pipeline_traced(&g, &tiny_cfg(), None, &tracer).unwrap();
+
+        // Untraced runs stay summary-free; traced runs aggregate.
+        assert_eq!(run_pipeline(&g, &tiny_cfg(), None).unwrap().trace_summary, None);
+        let summary = out.trace_summary.expect("traced run has a summary");
+        assert!(summary.path(&["pipeline", "count"]).is_some());
+        assert!(summary.path(&[PHASE_WALKS, "total_us"]).is_some());
+
+        // Every phase span is present exactly once, nested under the
+        // root `pipeline` span; skipped phases carry the flag.
+        let mut spans: Vec<Json> = Vec::new();
+        let mut sysmon_events = 0;
+        for line in tracer.lines() {
+            let j = Json::parse(&line).unwrap();
+            match j.get("kind").and_then(Json::as_str) {
+                Some("span") => spans.push(j),
+                Some("sysmon") => sysmon_events += 1,
+                other => panic!("unexpected trace kind {other:?}"),
+            }
+        }
+        assert_eq!(sysmon_events, 1);
+        let root = spans
+            .iter()
+            .find(|s| s.get("name").and_then(Json::as_str) == Some("pipeline"))
+            .expect("root span");
+        assert_eq!(root.get("parent"), Some(&Json::Null));
+        let root_id = root.get("span").and_then(Json::as_i64).unwrap();
+        for phase in [PHASE_DECOMP, PHASE_WALKS, PHASE_TRAIN, PHASE_PROP, PHASE_EXPORT] {
+            let matches: Vec<&Json> = spans
+                .iter()
+                .filter(|s| s.get("name").and_then(Json::as_str) == Some(phase))
+                .collect();
+            assert_eq!(matches.len(), 1, "phase {phase}");
+            let parent = matches[0].get("parent").and_then(Json::as_i64);
+            assert_eq!(parent, Some(root_id), "phase {phase} not under root");
+        }
+        // tiny_cfg has no k0 and no export: those phases are flagged.
+        for (phase, skipped) in [(PHASE_DECOMP, true), (PHASE_PROP, true), (PHASE_EXPORT, true)] {
+            let s = spans
+                .iter()
+                .find(|s| s.get("name").and_then(Json::as_str) == Some(phase))
+                .unwrap();
+            let flag = s.path(&["fields", "skipped"]).and_then(Json::as_bool);
+            assert_eq!(flag, Some(skipped), "phase {phase}");
+        }
+        // The walks span reports its volume.
+        let walks = spans
+            .iter()
+            .find(|s| s.get("name").and_then(Json::as_str) == Some(PHASE_WALKS))
+            .unwrap();
+        let n = walks.path(&["fields", "walks"]).and_then(Json::as_f64);
+        assert_eq!(n, Some(out.n_walks as f64));
     }
 
     #[test]

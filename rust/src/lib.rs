@@ -48,6 +48,9 @@
 //!   the persistent unix-socket daemon with hot-swappable artifact
 //!   generations.
 //! - [`runtime`] — PJRT artifact manifest + execution sessions.
+//! - [`obs`] — observability: metrics registry (counters, gauges,
+//!   log-linear latency histograms, time series), span tracing to
+//!   JSONL (`--trace-out`), and a `/proc` RSS/CPU sampler.
 //! - [`coordinator`] — pipeline orchestration, experiment runner,
 //!   config (incl. corpus shard/budget knobs), bench harness.
 //!
@@ -59,6 +62,7 @@ pub mod cores;
 pub mod embed;
 pub mod eval;
 pub mod graph;
+pub mod obs;
 pub mod propagate;
 pub mod runtime;
 pub mod serve;

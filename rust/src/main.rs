@@ -26,10 +26,11 @@ use anyhow::{bail, Context, Result};
 use kcore_embed::coordinator::bench::{run_bench, BenchOpts, BENCH_NAMES};
 use kcore_embed::coordinator::experiment::Experiment;
 use kcore_embed::coordinator::report::{render_latency_table, render_table};
-use kcore_embed::coordinator::{run_pipeline, Backend, Embedder, PipelineConfig};
+use kcore_embed::coordinator::{run_pipeline_traced, Backend, Embedder, PipelineConfig};
 use kcore_embed::cores::{core_decomposition, subcore};
 use kcore_embed::eval::EdgeOp;
 use kcore_embed::graph::{generators, io, metrics, Graph};
+use kcore_embed::obs::trace::Tracer;
 use kcore_embed::runtime::{default_artifacts_dir, Manifest, Runtime};
 use kcore_embed::serve::{
     client_exchange, loadtest, notify_swap, run_server, ClientMsg, EdgeScorer, EdgeScorerParams,
@@ -52,7 +53,7 @@ COMMANDS
             [--dim D] [--window W] [--epochs E] [--seed N]
             [--threads N] [--train-threads N]
             [--shards S] [--corpus-budget-mb M] [--spill-dir DIR]
-            [--store ARTIFACT [--notify ADDR]] --out PATH
+            [--store ARTIFACT [--notify ADDR]] [--trace-out PATH] --out PATH
   eval      (--graph NAME | --edges PATH) [--remove FRAC] [--trials T]
             [--embedder ...] [--k0 K] [--cores K1,K2,...] [--backend ...]
             [--walks N] [--seed N]
@@ -60,13 +61,14 @@ COMMANDS
             [--quantized] [--batch N] [--top-k K] [--in-memory]
             [--threads N] [(--graph NAME | --edges PATH) [--op OP]]
             [--listen SOCKET | --listen-tcp HOST:PORT]  (daemon mode)
-            [--max-conns N] [--read-timeout-ms MS]
+            [--max-conns N] [--read-timeout-ms MS] [--trace-out PATH]
   query     --store ARTIFACT (--node V [--top-k K] | --edge U,V)
             [--metric dot|cosine] [--quantized] [--in-memory]
             [(--graph NAME | --edges PATH) [--op OP]]
   query     (--connect ADDR | --connect-tcp HOST:PORT)
             (--node V [--top-k K] | --edge U,V |
-            --control swap --store ARTIFACT | --control stats|shutdown)
+            --control swap --store ARTIFACT |
+            --control stats|metrics|shutdown)
   loadgen   (--connect ADDR | --connect-tcp HOST:PORT)
             [--scenario baseline|fanout|fanin|poisson|all] [--clients N]
             [--batches N] [--batch N] [--seed N] [--rate R]
@@ -100,10 +102,18 @@ serving and hot-swaps artifact generations without downtime —
 re-exports over the watched path are picked up automatically, `embed
 --notify ADDR` pushes a swap after export (ADDR is a socket path or
 host:port), and `query --connect ADDR` / `--connect-tcp HOST:PORT`
-sends queries or the swap/stats/shutdown control verbs. --max-conns
-caps live connections (over-capacity clients get one parseable err
-line; 0 = unlimited, default 256) and --read-timeout-ms closes
-connections idle past the limit (0 disables, default 30000).
+sends queries or the swap/stats/metrics/shutdown control verbs (stats
+and metrics answer one-line JSON). --max-conns caps live connections
+(over-capacity clients get one parseable err line; 0 = unlimited,
+default 256) and --read-timeout-ms closes connections idle past the
+limit (0 disables, default 30000).
+
+Observability (DESIGN.md §Observability): --trace-out PATH (embed and
+daemon-mode serve) writes span-trace JSONL — one span per pipeline
+phase (load/decomposition/walks/train/propagation/export) or daemon
+verb, plus /proc RSS/CPU series — and the daemon's `metrics` control
+verb snapshots its full metrics registry (per-verb latency histograms,
+connection counters) as one JSON line.
 
 Load testing: `loadgen` drives a running daemon with deterministic
 multi-client scenarios and records latency histograms; `make
@@ -258,10 +268,18 @@ fn cmd_describe(args: &Args) -> Result<()> {
 }
 
 fn cmd_embed(args: &Args) -> Result<()> {
-    let g = load_graph(args)?;
+    // The tracer opens before the graph loads so the `load` phase is
+    // on the trace too (it dominates for big edge lists).
+    let trace_out = args.opt_str("trace-out").map(PathBuf::from);
+    let tracer = Tracer::from_trace_out(trace_out.as_deref())?;
+    let g = {
+        let _s = tracer.span("load");
+        load_graph(args)?
+    };
     let mut cfg = build_config(args)?;
     cfg.export_store = args.opt_str("store").map(PathBuf::from);
     cfg.notify_daemon = args.opt_str("notify");
+    cfg.trace_out = trace_out;
     cfg.validate()?; // --notify without --store is a usage error
     let out = args
         .opt_str("out")
@@ -269,7 +287,7 @@ fn cmd_embed(args: &Args) -> Result<()> {
     args.finish().map_err(anyhow::Error::msg)?;
     let rt = maybe_runtime(cfg.backend)?;
     let rt_ref = rt.as_ref().map(|(r, m)| (r, m));
-    let res = run_pipeline(&g, &cfg, rt_ref)?;
+    let res = run_pipeline_traced(&g, &cfg, rt_ref, &tracer)?;
     println!(
         "embedded {} nodes (core size {}, k0 {:?}, degeneracy {}) in {:.2}s",
         res.embedding.n(),
@@ -312,6 +330,12 @@ fn cmd_embed(args: &Args) -> Result<()> {
     println!("wrote {out}");
     if let Some(store) = &cfg.export_store {
         println!("wrote serving artifact {}", store.display());
+    }
+    if let Some(path) = &cfg.trace_out {
+        println!("wrote trace {}", path.display());
+        if let Some(summary) = &res.trace_summary {
+            println!("trace summary: {}", summary.to_string());
+        }
     }
     if let Some(ack) = &res.daemon_ack {
         println!("daemon swap: {ack}");
@@ -457,6 +481,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let timeout_ms = args
             .get_u64("read-timeout-ms", 30_000)
             .map_err(anyhow::Error::msg)?;
+        let trace_out = args.opt_str("trace-out").map(PathBuf::from);
         args.finish().map_err(anyhow::Error::msg)?;
         let opts = GenerationOpts {
             serve: ServeOpts {
@@ -495,6 +520,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 Some(Duration::from_millis(timeout_ms))
             },
             max_conns,
+            trace: Tracer::from_trace_out(trace_out.as_deref())?,
         };
         let stats = run_server(Arc::new(gens), &server_opts)?;
         eprintln!(
@@ -601,8 +627,9 @@ fn cmd_query_connect(args: &Args, addr: &ServeAddr) -> Result<()> {
             return Ok(());
         }
         Some("stats") => vec![ClientMsg::Stats.encode()],
+        Some("metrics") => vec![ClientMsg::Metrics.encode()],
         Some("shutdown") => vec![ClientMsg::Shutdown.encode()],
-        Some(x) => bail!("unknown --control {x:?} (swap|stats|shutdown)"),
+        Some(x) => bail!("unknown --control {x:?} (swap|stats|metrics|shutdown)"),
         None => {
             let mut ls = Vec::new();
             if let Some(v) = node {
@@ -612,7 +639,10 @@ fn cmd_query_connect(args: &Args, addr: &ServeAddr) -> Result<()> {
                 ls.push(ClientMsg::Query(Request::EdgeScore { u, v }).encode());
             }
             if ls.is_empty() {
-                bail!("specify --node V and/or --edge U,V (or --control swap|stats|shutdown)");
+                bail!(
+                    "specify --node V and/or --edge U,V (or --control \
+                     swap|stats|metrics|shutdown)"
+                );
             }
             ls
         }

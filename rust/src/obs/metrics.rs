@@ -1,0 +1,522 @@
+//! Named metrics: counters, gauges, log-linear histograms and bounded
+//! time series behind a [`Registry`] (DESIGN.md §Observability).
+//!
+//! The histogram is the piece everything else leans on — it replaces
+//! the three percentile implementations that used to live in
+//! `serve::query`, `serve::loadtest` and `serve::generation`. Design:
+//!
+//! - **Log-linear buckets** (HdrHistogram-style): values below
+//!   [`SUB_BUCKETS`] get one exact bucket each; every power-of-two
+//!   range above that is split into [`SUB_BUCKETS`] linear sub-buckets,
+//!   so the relative quantile error is bounded by `1/SUB_BUCKETS`
+//!   (6.25%) at any magnitude, over the full `u64` range, in a fixed
+//!   976-bucket table.
+//! - **Lock-free recording**: every bucket is an `AtomicU64`;
+//!   `record` is three relaxed RMWs (bucket, count+sum, max) and can
+//!   be called from any number of threads without coordination.
+//! - **Mergeable**: worker-local histograms fold into one with
+//!   [`Histogram::merge`] (bucket-wise add), which is how the load
+//!   generator aggregates per-client latencies.
+//! - **Exact tails**: `sum` and `max` are tracked exactly, so `mean()`
+//!   has no bucketing error and `quantile(1.0)` returns the true
+//!   maximum; interior quantiles are capped at the true max.
+//!
+//! A [`Registry`] names metrics and hands out `Arc` handles; reads and
+//! writes never lock each other (the registry lock guards only the
+//! name→handle maps). [`Registry::snapshot`] serializes everything to
+//! one [`Json`] object — the daemon's `metrics` verb returns exactly
+//! that, one line. A process-global registry ([`global`]) exists for
+//! one-off instrumentation; the daemon deliberately builds a
+//! per-instance registry so concurrently-running daemons (tests run
+//! many in one process) never pollute each other's counters.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Linear sub-buckets per power-of-two range (and the number of exact
+/// single-value buckets at the bottom). Relative quantile error is
+/// bounded by `1 / SUB_BUCKETS`.
+pub const SUB_BUCKETS: usize = 16;
+
+/// Total bucket count: `SUB_BUCKETS` exact low buckets + 60 power-of-two
+/// ranges of `SUB_BUCKETS` sub-buckets covering the rest of `u64`.
+const NUM_BUCKETS: usize = SUB_BUCKETS + 60 * SUB_BUCKETS;
+
+/// A monotonically increasing named count.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins named measurement (stored as `f64` bits).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Lock-free log-linear histogram of `u64` values (latencies in
+/// microseconds, sizes in bytes, …). See the module docs for the
+/// bucketing scheme and error bound.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index of `v`: exact below [`SUB_BUCKETS`], then
+    /// `SUB_BUCKETS` linear sub-buckets per power-of-two range.
+    fn bucket_index(v: u64) -> usize {
+        if v < SUB_BUCKETS as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros() as usize; // >= 4 here
+        let sub = (v >> (msb - 4)) as usize - SUB_BUCKETS;
+        (msb - 3) * SUB_BUCKETS + sub
+    }
+
+    /// Largest value landing in bucket `idx` — the representative
+    /// quantile extraction reports, so bucketed quantiles never
+    /// under-estimate the true order statistic.
+    fn bucket_high(idx: usize) -> u64 {
+        if idx < SUB_BUCKETS {
+            return idx as u64;
+        }
+        let msb = idx / SUB_BUCKETS + 3;
+        let sub = (idx % SUB_BUCKETS) as u64;
+        let width = 1u64 << (msb - 4);
+        ((SUB_BUCKETS as u64 + sub) << (msb - 4)) + width - 1
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Exact mean (`sum` and `count` carry no bucketing error).
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    /// Nearest-rank quantile from the bucket table, `q` in `[0, 1]`.
+    /// Reports the upper edge of the selected bucket (within
+    /// `1/SUB_BUCKETS` relative error above the true order statistic),
+    /// capped at the exact recorded maximum; `quantile(1.0)` is the
+    /// exact max. Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_high(idx).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Fold `other`'s recordings into `self` (bucket-wise add). The
+    /// merged histogram answers quantiles exactly as if every value had
+    /// been recorded into one histogram.
+    pub fn merge(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+        self.max.fetch_max(other.max(), Ordering::Relaxed);
+    }
+
+    /// `{count, sum, max, mean, p50, p90, p99}` — the summary shape
+    /// every latency consumer reports.
+    pub fn summary_json(&self) -> Json {
+        Json::object(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("sum", Json::num(self.sum() as f64)),
+            ("max", Json::num(self.max() as f64)),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.quantile(0.50) as f64)),
+            ("p90", Json::num(self.quantile(0.90) as f64)),
+            ("p99", Json::num(self.quantile(0.99) as f64)),
+        ])
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Histogram {{ count: {}, mean: {:.1}, p50: {}, p99: {}, max: {} }}",
+            self.count(),
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+/// A bounded ring of timestamped samples — what the `/proc` sampler
+/// records so RSS/CPU become inspectable curves, not one-off numbers.
+/// Keeps the most recent [`TimeSeries::CAPACITY`] points; `n` counts
+/// every sample ever recorded.
+pub struct TimeSeries {
+    epoch: Instant,
+    points: Mutex<std::collections::VecDeque<(u64, f64)>>,
+    total: AtomicU64,
+}
+
+impl Default for TimeSeries {
+    fn default() -> Self {
+        TimeSeries::new()
+    }
+}
+
+impl TimeSeries {
+    /// Retained points per series; older samples are dropped.
+    pub const CAPACITY: usize = 1024;
+
+    pub fn new() -> TimeSeries {
+        TimeSeries {
+            epoch: Instant::now(),
+            points: Mutex::new(std::collections::VecDeque::new()),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    /// Record `v` stamped with milliseconds since the series was
+    /// created.
+    pub fn record(&self, v: f64) {
+        let t_ms = self.epoch.elapsed().as_millis() as u64;
+        let mut pts = self.points.lock().expect("series lock");
+        if pts.len() == Self::CAPACITY {
+            pts.pop_front();
+        }
+        pts.push_back((t_ms, v));
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Samples ever recorded (retained or dropped).
+    pub fn len(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn last(&self) -> Option<(u64, f64)> {
+        self.points.lock().expect("series lock").back().copied()
+    }
+
+    /// Retained `(t_ms, value)` points, oldest first.
+    pub fn points(&self) -> Vec<(u64, f64)> {
+        self.points.lock().expect("series lock").iter().copied().collect()
+    }
+
+    /// `{n, last, points: [[t_ms, v], ...]}`.
+    pub fn to_json(&self) -> Json {
+        let pts = self.points();
+        Json::object(vec![
+            ("n", Json::num(self.len() as f64)),
+            ("last", pts.last().map(|&(_, v)| Json::num(v)).unwrap_or(Json::Null)),
+            (
+                "points",
+                Json::Array(
+                    pts.iter()
+                        .map(|&(t, v)| Json::Array(vec![Json::num(t as f64), Json::num(v)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// A named family of metrics. Handle lookups lock the name map briefly;
+/// the handles themselves are lock-free (counters/gauges/histograms) or
+/// independently locked (series), so hot paths cache their `Arc`s and
+/// never contend on the registry.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    series: Mutex<BTreeMap<String, Arc<TimeSeries>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().expect("registry lock");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().expect("registry lock");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.histograms.lock().expect("registry lock");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    pub fn series(&self, name: &str) -> Arc<TimeSeries> {
+        let mut m = self.series.lock().expect("registry lock");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// One JSON object over every registered metric:
+    /// `{"counters": {name: n}, "gauges": {name: v},
+    ///   "histograms": {name: summary}, "series": {name: series}}`.
+    /// Serializes to a single line via `Json::to_string` — the payload
+    /// of the daemon's `metrics` verb.
+    pub fn snapshot(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .lock()
+            .expect("registry lock")
+            .iter()
+            .map(|(k, c)| (k.clone(), Json::num(c.get() as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .lock()
+            .expect("registry lock")
+            .iter()
+            .map(|(k, g)| (k.clone(), Json::num(g.get())))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .histograms
+            .lock()
+            .expect("registry lock")
+            .iter()
+            .map(|(k, h)| (k.clone(), h.summary_json()))
+            .collect();
+        let series: BTreeMap<String, Json> = self
+            .series
+            .lock()
+            .expect("registry lock")
+            .iter()
+            .map(|(k, s)| (k.clone(), s.to_json()))
+            .collect();
+        Json::object(vec![
+            ("counters", Json::Object(counters)),
+            ("gauges", Json::Object(gauges)),
+            ("histograms", Json::Object(histograms)),
+            ("series", Json::Object(series)),
+        ])
+    }
+}
+
+/// The process-global registry, for one-off instrumentation where
+/// threading a registry through would be pure ceremony. Long-lived
+/// components (the daemon) hold their own `Registry` instead so
+/// co-resident instances never share counters.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let r = Registry::new();
+        r.counter("hits").inc();
+        r.counter("hits").add(4);
+        assert_eq!(r.counter("hits").get(), 5);
+        r.gauge("rss").set(1.5e9);
+        assert_eq!(r.gauge("rss").get(), 1.5e9);
+        // Same name, same handle.
+        assert!(Arc::ptr_eq(&r.counter("hits"), &r.counter("hits")));
+    }
+
+    #[test]
+    fn bucket_index_and_high_are_consistent() {
+        // Every value lands in a bucket whose range contains it, and
+        // bucket highs are strictly increasing (quantiles monotone).
+        for v in (0u64..5000).chain([1 << 20, u64::MAX / 3, u64::MAX - 1, u64::MAX]) {
+            let idx = Histogram::bucket_index(v);
+            assert!(Histogram::bucket_high(idx) >= v, "v={v} idx={idx}");
+            if idx > 0 {
+                assert!(Histogram::bucket_high(idx - 1) < v, "v={v} idx={idx}");
+            }
+        }
+        for idx in 1..NUM_BUCKETS {
+            assert!(Histogram::bucket_high(idx) > Histogram::bucket_high(idx - 1));
+        }
+        assert_eq!(Histogram::bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        assert_eq!(Histogram::bucket_high(NUM_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn quantiles_of_known_distribution() {
+        let h = Histogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 5050);
+        assert_eq!(h.max(), 100);
+        assert_eq!(h.mean(), 50.5);
+        // Within the 1/16 relative error bound, never below the true
+        // order statistic, p100 exact.
+        let p50 = h.quantile(0.5);
+        assert!((50..=54).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((99..=100).contains(&p99), "p99={p99}");
+        assert_eq!(h.quantile(1.0), 100);
+        assert!(h.quantile(0.5) <= h.quantile(0.9));
+        assert!(h.quantile(0.9) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        let j = h.summary_json();
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn merge_equals_single_histogram() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        for v in 0..500u64 {
+            let x = v * v % 7919;
+            if v % 2 == 0 { &a } else { &b }.record(x);
+            all.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.sum(), all.sum());
+        assert_eq!(a.max(), all.max());
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), all.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn series_keeps_bounded_window_but_counts_all() {
+        let s = TimeSeries::new();
+        for i in 0..(TimeSeries::CAPACITY + 10) {
+            s.record(i as f64);
+        }
+        assert_eq!(s.len(), (TimeSeries::CAPACITY + 10) as u64);
+        let pts = s.points();
+        assert_eq!(pts.len(), TimeSeries::CAPACITY);
+        assert_eq!(pts.last().unwrap().1, (TimeSeries::CAPACITY + 9) as f64);
+        assert_eq!(s.last().unwrap().1, (TimeSeries::CAPACITY + 9) as f64);
+        let j = s.to_json();
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(TimeSeries::CAPACITY + 10));
+    }
+
+    #[test]
+    fn snapshot_is_single_line_json_with_all_sections() {
+        let r = Registry::new();
+        r.counter("c").add(3);
+        r.gauge("g").set(2.5);
+        r.histogram("h").record(42);
+        r.series("s").record(1.0);
+        let line = r.snapshot().to_string();
+        assert!(!line.contains('\n'));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.path(&["counters", "c"]).unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.path(&["gauges", "g"]).unwrap().as_f64(), Some(2.5));
+        assert_eq!(j.path(&["histograms", "h", "p50"]).unwrap().as_f64(), Some(42.0));
+        assert_eq!(j.path(&["series", "s", "n"]).unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        global().counter("obs.test.global").inc();
+        assert!(global().counter("obs.test.global").get() >= 1);
+    }
+}

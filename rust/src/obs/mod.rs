@@ -1,0 +1,28 @@
+//! Unified observability layer: metrics, span tracing, and `/proc`
+//! resource telemetry (DESIGN.md §Observability).
+//!
+//! Three zero-dependency pieces share one JSON surface
+//! ([`crate::util::json::Json`]):
+//!
+//! - [`metrics`] — a [`metrics::Registry`] of named counters, gauges,
+//!   lock-free log-linear [`metrics::Histogram`]s (the single
+//!   percentile implementation in the tree; p50/p90/p99 with a
+//!   bounded-error bucketing scheme) and bounded
+//!   [`metrics::TimeSeries`]. `Registry::snapshot()` is one JSON line —
+//!   the payload of the daemon's `metrics` verb.
+//! - [`trace`] — RAII [`trace::Span`] guards (via [`crate::span!`])
+//!   with per-thread nesting, emitting JSONL span events to a
+//!   `--trace-out` file; wired through every pipeline phase and every
+//!   daemon verb.
+//! - [`sysmon`] — a background `/proc/self/{statm,stat}` sampler
+//!   recording RSS/CPU curves into a registry (Linux; graceful no-op
+//!   elsewhere), so the paper's memory claims are tracked series
+//!   rather than one-off prints.
+
+pub mod metrics;
+pub mod sysmon;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histogram, Registry, TimeSeries};
+pub use sysmon::{sample_proc, ProcSample, Sysmon};
+pub use trace::{Span, Tracer};

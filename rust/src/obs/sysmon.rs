@@ -1,0 +1,239 @@
+//! Background `/proc` resource sampler (DESIGN.md §Observability).
+//!
+//! On Linux, [`sample_proc`] reads two files for the current process:
+//!
+//! - `/proc/self/statm` — field 2 is resident pages; × page size
+//!   (`sysconf(_SC_PAGESIZE)`) gives RSS in bytes.
+//! - `/proc/self/stat` — `utime`/`stime` (the 14th/15th fields, i.e.
+//!   tokens 11/12 after the parenthesised, possibly space-containing
+//!   `comm` field); their sum ÷ `sysconf(_SC_CLK_TCK)` gives total CPU
+//!   seconds consumed.
+//!
+//! [`Sysmon::start`] spawns a thread that records both into a
+//! [`Registry`] — gauges `proc.rss_bytes` / `proc.cpu_secs` hold the
+//! latest value, time series of the same names hold the curve. One
+//! sample is taken synchronously at start and one more at stop, so any
+//! monitored region yields ≥ 2 points no matter how short it runs.
+//! On non-Linux targets [`sample_proc`] returns `None` and the monitor
+//! records nothing (graceful no-op, nothing else to configure).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::metrics::Registry;
+
+/// One point-in-time reading of this process's resource usage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProcSample {
+    /// Resident set size in bytes.
+    pub rss_bytes: u64,
+    /// Total CPU time (user + system, all threads) in seconds.
+    pub cpu_secs: f64,
+}
+
+/// Gauge/series name for resident set size.
+pub const RSS_METRIC: &str = "proc.rss_bytes";
+/// Gauge/series name for cumulative CPU seconds.
+pub const CPU_METRIC: &str = "proc.cpu_secs";
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use super::ProcSample;
+
+    // Avoiding a libc dependency: these glibc constants are stable ABI
+    // on Linux.
+    const SC_CLK_TCK: i32 = 2;
+    const SC_PAGESIZE: i32 = 30;
+
+    extern "C" {
+        fn sysconf(name: i32) -> i64;
+    }
+
+    fn page_size() -> u64 {
+        let v = unsafe { sysconf(SC_PAGESIZE) };
+        if v > 0 {
+            v as u64
+        } else {
+            4096
+        }
+    }
+
+    fn clock_ticks_per_sec() -> f64 {
+        let v = unsafe { sysconf(SC_CLK_TCK) };
+        if v > 0 {
+            v as f64
+        } else {
+            100.0
+        }
+    }
+
+    pub fn sample_proc() -> Option<ProcSample> {
+        let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+        let resident_pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+
+        let stat = std::fs::read_to_string("/proc/self/stat").ok()?;
+        // comm (field 2) is parenthesised and may contain spaces; the
+        // fixed-format fields start after the LAST ')'.
+        let after = &stat[stat.rfind(')')? + 1..];
+        let fields: Vec<&str> = after.split_whitespace().collect();
+        // After ')': state is token 0, so utime (overall field 14) is
+        // token 11 and stime token 12.
+        let utime: u64 = fields.get(11)?.parse().ok()?;
+        let stime: u64 = fields.get(12)?.parse().ok()?;
+
+        Some(ProcSample {
+            rss_bytes: resident_pages * page_size(),
+            cpu_secs: (utime + stime) as f64 / clock_ticks_per_sec(),
+        })
+    }
+}
+
+/// Read the current process's RSS and CPU time. `None` when `/proc` is
+/// unavailable (non-Linux, or an unexpected format).
+pub fn sample_proc() -> Option<ProcSample> {
+    #[cfg(target_os = "linux")]
+    {
+        linux::sample_proc()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// Background resource monitor. Samples `/proc` on a fixed interval
+/// into a [`Registry`] until dropped (or [`Sysmon::stop`] is called);
+/// the final sample is taken synchronously at stop.
+pub struct Sysmon {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+    registry: Arc<Registry>,
+}
+
+impl Sysmon {
+    /// Start sampling into `registry` every `interval`. Takes one
+    /// sample immediately (synchronously) before spawning.
+    pub fn start(registry: Arc<Registry>, interval: Duration) -> Sysmon {
+        record_sample(&registry);
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let registry = Arc::clone(&registry);
+            std::thread::Builder::new()
+                .name("sysmon".to_string())
+                .spawn(move || {
+                    let (lock, cvar) = &*stop;
+                    let mut stopped = lock.lock().expect("sysmon lock");
+                    loop {
+                        let (guard, timeout) = cvar
+                            .wait_timeout(stopped, interval)
+                            .expect("sysmon wait");
+                        stopped = guard;
+                        if *stopped {
+                            return;
+                        }
+                        if timeout.timed_out() {
+                            record_sample(&registry);
+                        }
+                    }
+                })
+                .expect("spawn sysmon thread")
+        };
+        Sysmon {
+            stop,
+            handle: Some(handle),
+            registry,
+        }
+    }
+
+    /// Stop the sampler thread and take one final sample. Dropping the
+    /// monitor does the same.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        let Some(handle) = self.handle.take() else {
+            return;
+        };
+        {
+            let (lock, cvar) = &*self.stop;
+            *lock.lock().expect("sysmon lock") = true;
+            cvar.notify_all();
+        }
+        let _ = handle.join();
+        record_sample(&self.registry);
+    }
+}
+
+impl Drop for Sysmon {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn record_sample(registry: &Registry) {
+    if let Some(s) = sample_proc() {
+        registry.gauge(RSS_METRIC).set(s.rss_bytes as f64);
+        registry.series(RSS_METRIC).record(s.rss_bytes as f64);
+        registry.gauge(CPU_METRIC).set(s.cpu_secs);
+        registry.series(CPU_METRIC).record(s.cpu_secs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn proc_sample_reads_plausible_values() {
+        let s = sample_proc().expect("linux /proc sample");
+        // A running Rust test binary is resident well past 1 MiB and
+        // has burned some CPU.
+        assert!(s.rss_bytes > 1 << 20, "rss={}", s.rss_bytes);
+        assert!(s.cpu_secs >= 0.0);
+        // CPU time is monotone across a bit of busy work.
+        let mut acc = 0u64;
+        for i in 0..2_000_000u64 {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        let s2 = sample_proc().unwrap();
+        assert!(s2.cpu_secs >= s.cpu_secs);
+        assert!(s2.rss_bytes > 0);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn sysmon_records_at_least_two_samples() {
+        let reg = Arc::new(Registry::new());
+        let mon = Sysmon::start(Arc::clone(&reg), Duration::from_millis(5));
+        std::thread::sleep(Duration::from_millis(30));
+        mon.stop();
+        let rss = reg.series(RSS_METRIC);
+        let cpu = reg.series(CPU_METRIC);
+        assert!(rss.len() >= 2, "rss samples: {}", rss.len());
+        assert_eq!(rss.len(), cpu.len());
+        assert!(rss.last().unwrap().1 > 0.0);
+        // CPU series is non-decreasing.
+        let pts = cpu.points();
+        for w in pts.windows(2) {
+            assert!(w[1].1 >= w[0].1, "cpu series decreased: {pts:?}");
+        }
+        // Gauges hold the latest values.
+        assert!(reg.gauge(RSS_METRIC).get() > 0.0);
+    }
+
+    #[test]
+    fn sysmon_is_safe_to_start_and_stop_anywhere() {
+        // On non-Linux this records nothing; either way start/stop and
+        // double-stop-via-drop must be clean.
+        let reg = Arc::new(Registry::new());
+        let mon = Sysmon::start(Arc::clone(&reg), Duration::from_millis(50));
+        drop(mon);
+        let mon2 = Sysmon::start(Arc::clone(&reg), Duration::from_millis(50));
+        mon2.stop();
+    }
+}

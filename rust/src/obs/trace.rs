@@ -1,0 +1,468 @@
+//! Span-based phase tracing emitting machine-readable JSONL
+//! (DESIGN.md §Observability).
+//!
+//! A [`Tracer`] hands out RAII [`Span`] guards. Opening a span pushes
+//! its id onto a per-thread stack (so spans opened on the same thread
+//! nest — the parent is whatever span is currently on top); dropping
+//! it pops the stack and emits one JSON line:
+//!
+//! ```json
+//! {"dur_us":1234,"fields":{"n_walks":280},"kind":"span","name":"walks",
+//!  "parent":1,"span":2,"start_us":87}
+//! ```
+//!
+//! - `span` — unique id within this tracer; `parent` — enclosing span's
+//!   id, or `null` for roots.
+//! - `start_us` — microseconds since the tracer was created;
+//!   `dur_us` — span duration in microseconds.
+//! - `fields` — optional key=value annotations attached at open time
+//!   or via [`Span::field`]; omitted when empty.
+//!
+//! Lines appear in span-*close* order (a child always precedes its
+//! parent), which is what makes single-pass JSONL emission possible
+//! without buffering open spans. Non-span events (e.g. the sysmon
+//! summary) share the stream with a different `"kind"`.
+//!
+//! A disabled tracer ([`Tracer::disabled`]) is a near-free no-op —
+//! spans skip the stack, the sink, and the summary — so call sites
+//! trace unconditionally and the `--trace-out` flag decides.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::ThreadId;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+enum Sink {
+    File(BufWriter<File>),
+    Memory(Vec<String>),
+}
+
+struct Inner {
+    epoch: Instant,
+    next_id: AtomicU64,
+    sink: Mutex<Sink>,
+    /// Per-thread stack of open span ids — parent linkage for nesting.
+    stacks: Mutex<HashMap<ThreadId, Vec<u64>>>,
+    /// name → (count, total_us), folded on span close.
+    summary: Mutex<BTreeMap<String, (u64, u64)>>,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        if let Ok(mut sink) = self.sink.lock() {
+            if let Sink::File(w) = &mut *sink {
+                let _ = w.flush();
+            }
+        }
+    }
+}
+
+/// Handle to a trace stream; cheap to clone (shared `Arc`), and a
+/// no-op when built with [`Tracer::disabled`].
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Option<Arc<Inner>>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            Some(_) => write!(f, "Tracer(enabled)"),
+            None => write!(f, "Tracer(disabled)"),
+        }
+    }
+}
+
+impl Tracer {
+    fn with_sink(sink: Sink) -> Tracer {
+        Tracer {
+            inner: Some(Arc::new(Inner {
+                epoch: Instant::now(),
+                next_id: AtomicU64::new(1),
+                sink: Mutex::new(sink),
+                stacks: Mutex::new(HashMap::new()),
+                summary: Mutex::new(BTreeMap::new()),
+            })),
+        }
+    }
+
+    /// A tracer that records nothing; every operation is a no-op.
+    pub fn disabled() -> Tracer {
+        Tracer { inner: None }
+    }
+
+    /// Trace to a JSONL file, truncating any existing content.
+    pub fn to_file(path: &Path) -> Result<Tracer> {
+        let f = File::create(path)
+            .with_context(|| format!("create trace file {}", path.display()))?;
+        Ok(Tracer::with_sink(Sink::File(BufWriter::new(f))))
+    }
+
+    /// Trace into an in-memory line buffer (tests; read back with
+    /// [`Tracer::lines`]).
+    pub fn in_memory() -> Tracer {
+        Tracer::with_sink(Sink::Memory(Vec::new()))
+    }
+
+    /// `--trace-out` adapter: `Some(path)` → file tracer, `None` →
+    /// disabled.
+    pub fn from_trace_out(path: Option<&Path>) -> Result<Tracer> {
+        match path {
+            Some(p) => Tracer::to_file(p),
+            None => Ok(Tracer::disabled()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a span; it closes (and emits its line) when the returned
+    /// guard drops.
+    pub fn span(&self, name: &str) -> Span {
+        self.span_with(name, &[])
+    }
+
+    /// Open a span with initial key=value fields.
+    pub fn span_with(&self, name: &str, fields: &[(&str, Json)]) -> Span {
+        let Some(inner) = &self.inner else {
+            return Span::noop();
+        };
+        let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let parent = {
+            let mut stacks = inner.stacks.lock().expect("trace stacks");
+            let stack = stacks.entry(std::thread::current().id()).or_default();
+            let parent = stack.last().copied();
+            stack.push(id);
+            parent
+        };
+        Span {
+            inner: Some(Arc::clone(inner)),
+            id,
+            parent,
+            name: name.to_string(),
+            start: Instant::now(),
+            start_us: inner.epoch.elapsed().as_micros() as u64,
+            fields: fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        }
+    }
+
+    /// Emit a non-span JSONL event: `{"kind": kind, ...fields}`.
+    pub fn event(&self, kind: &str, fields: &[(&str, Json)]) {
+        let Some(inner) = &self.inner else { return };
+        let mut obj = BTreeMap::new();
+        obj.insert("kind".to_string(), Json::str(kind));
+        for (k, v) in fields {
+            obj.insert(k.to_string(), v.clone());
+        }
+        inner.emit(&Json::Object(obj));
+    }
+
+    /// Lines emitted so far (in-memory sink only; empty otherwise).
+    pub fn lines(&self) -> Vec<String> {
+        match &self.inner {
+            Some(inner) => match &*inner.sink.lock().expect("trace sink") {
+                Sink::Memory(lines) => lines.clone(),
+                Sink::File(_) => Vec::new(),
+            },
+            None => Vec::new(),
+        }
+    }
+
+    /// Per-name aggregate over closed spans:
+    /// `{name: {"count": n, "total_us": t}, ...}`.
+    pub fn summary_json(&self) -> Json {
+        let Some(inner) = &self.inner else {
+            return Json::Object(BTreeMap::new());
+        };
+        let summary = inner.summary.lock().expect("trace summary");
+        Json::Object(
+            summary
+                .iter()
+                .map(|(name, &(count, total_us))| {
+                    (
+                        name.clone(),
+                        Json::object(vec![
+                            ("count", Json::num(count as f64)),
+                            ("total_us", Json::num(total_us as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Flush a file sink to disk (also happens when the last clone
+    /// drops).
+    pub fn flush(&self) -> Result<()> {
+        if let Some(inner) = &self.inner {
+            if let Sink::File(w) = &mut *inner.sink.lock().expect("trace sink") {
+                w.flush().context("flush trace file")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Inner {
+    fn emit(&self, j: &Json) {
+        let line = j.to_string();
+        match &mut *self.sink.lock().expect("trace sink") {
+            Sink::File(w) => {
+                let _ = writeln!(w, "{line}");
+            }
+            Sink::Memory(lines) => lines.push(line),
+        }
+    }
+}
+
+/// RAII span guard; emits its JSONL line on drop. Obtained from
+/// [`Tracer::span`] / [`Tracer::span_with`] / [`crate::span!`].
+pub struct Span {
+    inner: Option<Arc<Inner>>,
+    id: u64,
+    parent: Option<u64>,
+    name: String,
+    start: Instant,
+    start_us: u64,
+    fields: Vec<(String, Json)>,
+}
+
+impl Span {
+    fn noop() -> Span {
+        Span {
+            inner: None,
+            id: 0,
+            parent: None,
+            name: String::new(),
+            start: Instant::now(),
+            start_us: 0,
+            fields: Vec::new(),
+        }
+    }
+
+    /// Span id within its tracer (0 for disabled tracers).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Attach a key=value field; it appears in the span's emitted line.
+    pub fn field(&mut self, key: &str, value: Json) {
+        if self.inner.is_some() {
+            self.fields.push((key.to_string(), value));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(inner) = self.inner.take() else {
+            return;
+        };
+        let dur_us = self.start.elapsed().as_micros() as u64;
+        {
+            let mut stacks = inner.stacks.lock().expect("trace stacks");
+            if let Some(stack) = stacks.get_mut(&std::thread::current().id()) {
+                if let Some(pos) = stack.iter().rposition(|&id| id == self.id) {
+                    stack.remove(pos);
+                }
+                if stack.is_empty() {
+                    stacks.remove(&std::thread::current().id());
+                }
+            }
+        }
+        {
+            let mut summary = inner.summary.lock().expect("trace summary");
+            let entry = summary.entry(self.name.clone()).or_insert((0, 0));
+            entry.0 += 1;
+            entry.1 += dur_us;
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("kind".to_string(), Json::str("span"));
+        obj.insert("span".to_string(), Json::num(self.id as f64));
+        obj.insert(
+            "parent".to_string(),
+            self.parent.map(|p| Json::num(p as f64)).unwrap_or(Json::Null),
+        );
+        obj.insert("name".to_string(), Json::str(&self.name));
+        obj.insert("start_us".to_string(), Json::num(self.start_us as f64));
+        obj.insert("dur_us".to_string(), Json::num(dur_us as f64));
+        if !self.fields.is_empty() {
+            obj.insert(
+                "fields".to_string(),
+                Json::Object(self.fields.drain(..).collect::<BTreeMap<String, Json>>()),
+            );
+        }
+        inner.emit(&Json::Object(obj));
+    }
+}
+
+/// Open a span on a tracer: `span!(tracer, "train")` or
+/// `span!(tracer, "train", "n_pairs" => Json::num(42.0))`. Bind the
+/// result (`let _span = span!(...)`) — it closes when the guard drops.
+#[macro_export]
+macro_rules! span {
+    ($tracer:expr, $name:expr $(,)?) => {
+        $tracer.span($name)
+    };
+    ($tracer:expr, $name:expr, $($k:expr => $v:expr),+ $(,)?) => {
+        $tracer.span_with($name, &[$(($k, $v)),+])
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_lines(t: &Tracer) -> Vec<Json> {
+        t.lines()
+            .iter()
+            .map(|l| Json::parse(l).expect("trace line parses"))
+            .collect()
+    }
+
+    #[test]
+    fn spans_nest_and_close_in_child_first_order() {
+        let t = Tracer::in_memory();
+        {
+            let _outer = t.span("outer");
+            let _inner = t.span("inner");
+        }
+        let events = parse_lines(&t);
+        assert_eq!(events.len(), 2);
+        // Child closes (and is emitted) first.
+        assert_eq!(events[0].get("name").unwrap().as_str(), Some("inner"));
+        assert_eq!(events[1].get("name").unwrap().as_str(), Some("outer"));
+        let outer_id = events[1].get("span").unwrap().as_f64().unwrap();
+        assert_eq!(events[0].get("parent").unwrap().as_f64(), Some(outer_id));
+        assert!(matches!(events[1].get("parent"), Some(Json::Null)));
+        for e in &events {
+            assert_eq!(e.get("kind").unwrap().as_str(), Some("span"));
+            assert!(e.get("start_us").unwrap().as_f64().is_some());
+            assert!(e.get("dur_us").unwrap().as_f64().is_some());
+        }
+    }
+
+    #[test]
+    fn sibling_spans_share_a_parent() {
+        let t = Tracer::in_memory();
+        {
+            let _root = t.span("root");
+            drop(t.span("a"));
+            drop(t.span("b"));
+        }
+        let events = parse_lines(&t);
+        let root_id = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("root"))
+            .unwrap()
+            .get("span")
+            .unwrap()
+            .as_f64();
+        for name in ["a", "b"] {
+            let e = events
+                .iter()
+                .find(|e| e.get("name").unwrap().as_str() == Some(name))
+                .unwrap();
+            assert_eq!(e.get("parent").unwrap().as_f64(), root_id);
+        }
+    }
+
+    #[test]
+    fn fields_roundtrip_and_macro_forms_work() {
+        let t = Tracer::in_memory();
+        {
+            let mut s = span!(t, "train", "backend" => Json::str("native"));
+            s.field("n_pairs", Json::num(42.0));
+        }
+        drop(span!(t, "plain"));
+        let events = parse_lines(&t);
+        let train = &events[0];
+        assert_eq!(train.path(&["fields", "backend"]).unwrap().as_str(), Some("native"));
+        assert_eq!(train.path(&["fields", "n_pairs"]).unwrap().as_f64(), Some(42.0));
+        // Field-less spans omit the fields key entirely.
+        assert!(events[1].get("fields").is_none());
+    }
+
+    #[test]
+    fn summary_aggregates_by_name() {
+        let t = Tracer::in_memory();
+        drop(t.span("walks"));
+        drop(t.span("walks"));
+        drop(t.span("train"));
+        let s = t.summary_json();
+        assert_eq!(s.path(&["walks", "count"]).unwrap().as_f64(), Some(2.0));
+        assert_eq!(s.path(&["train", "count"]).unwrap().as_f64(), Some(1.0));
+        assert!(s.path(&["walks", "total_us"]).unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn spans_on_different_threads_do_not_nest() {
+        let t = Tracer::in_memory();
+        {
+            let _main = t.span("main");
+            let t2 = t.clone();
+            std::thread::spawn(move || drop(t2.span("worker"))).join().unwrap();
+        }
+        let events = parse_lines(&t);
+        let worker = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("worker"))
+            .unwrap();
+        // The worker thread has its own stack: no parent.
+        assert!(matches!(worker.get("parent"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn disabled_tracer_is_silent() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        {
+            let mut s = t.span("anything");
+            s.field("k", Json::num(1.0));
+        }
+        t.event("sysmon", &[("x", Json::num(1.0))]);
+        assert!(t.lines().is_empty());
+        assert_eq!(t.summary_json().to_string(), "{}");
+        t.flush().unwrap();
+    }
+
+    #[test]
+    fn file_sink_writes_parseable_jsonl() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("obs_trace_test_{}.jsonl", std::process::id()));
+        {
+            let t = Tracer::to_file(&path).unwrap();
+            let _root = span!(t, "root");
+            drop(span!(t, "child"));
+            t.event("sysmon", &[("rss", Json::num(1.0))]);
+        }
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for l in &lines {
+            Json::parse(l).expect("file trace line parses");
+        }
+        // Emission order: child span closes first, then the event,
+        // then the root span.
+        let names: Vec<String> = lines
+            .iter()
+            .map(|l| {
+                let j = Json::parse(l).unwrap();
+                match j.get("kind").unwrap().as_str().unwrap() {
+                    "span" => j.get("name").unwrap().as_str().unwrap().to_string(),
+                    other => other.to_string(),
+                }
+            })
+            .collect();
+        assert_eq!(names, ["child", "sysmon", "root"]);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -2,7 +2,8 @@
 //!
 //! A [`Generation`] is one fully-loaded serving unit: the
 //! [`EmbeddingStore`], its [`ScanIndex`] strategy and (optionally) a
-//! fitted [`EdgeScorer`], plus per-generation latency counters. A
+//! fitted [`EdgeScorer`], plus a per-generation latency histogram
+//! ([`crate::obs::metrics::Histogram`]). A
 //! [`GenerationStore`] owns the *current* generation behind an
 //! `RwLock<Arc<..>>` and publishes successors atomically:
 //!
@@ -33,6 +34,8 @@ use anyhow::{Context, Result};
 
 use crate::eval::operators::EdgeOp;
 use crate::graph::Graph;
+use crate::obs::metrics::Histogram;
+use crate::util::json::Json;
 
 use super::linkpred::{EdgeScorer, EdgeScorerParams};
 use super::query::{execute_with, Request, Response, ServeOpts};
@@ -71,10 +74,9 @@ pub struct Generation {
     store: EmbeddingStore,
     scan: Box<dyn ScanIndex>,
     scorer: Option<EdgeScorer>,
-    // Per-generation latency telemetry (microseconds).
-    queries: AtomicU64,
-    total_us: AtomicU64,
-    max_us: AtomicU64,
+    // Per-generation latency telemetry (microseconds): one histogram
+    // carries count/sum/max exactly plus bounded-error quantiles.
+    latency: Histogram,
 }
 
 impl Generation {
@@ -118,14 +120,12 @@ impl Generation {
             store,
             scan,
             scorer,
-            queries: AtomicU64::new(0),
-            total_us: AtomicU64::new(0),
-            max_us: AtomicU64::new(0),
+            latency: Histogram::new(),
         })
     }
 
     /// Execute one request against this generation, recording its
-    /// latency in the generation's counters.
+    /// latency in the generation's histogram.
     pub fn execute(&self, req: &Request) -> Result<Response> {
         let t0 = Instant::now();
         let out = execute_with(
@@ -135,10 +135,7 @@ impl Generation {
             self.metric,
             req,
         );
-        let us = t0.elapsed().as_micros() as u64;
-        self.queries.fetch_add(1, Ordering::Relaxed);
-        self.total_us.fetch_add(us, Ordering::Relaxed);
-        self.max_us.fetch_max(us, Ordering::Relaxed);
+        self.latency.record(t0.elapsed().as_micros() as u64);
         out
     }
 
@@ -163,24 +160,49 @@ impl Generation {
     }
 
     pub fn queries_served(&self) -> u64 {
-        self.queries.load(Ordering::Relaxed)
+        self.latency.count()
     }
 
-    /// One-line latency/identity summary (the `stats` verb's payload).
+    /// The per-generation request latency histogram (microseconds).
+    pub fn latency(&self) -> &Histogram {
+        &self.latency
+    }
+
+    /// Human-oriented latency/identity summary line.
     pub fn stats_line(&self) -> String {
-        let q = self.queries.load(Ordering::Relaxed);
-        let total = self.total_us.load(Ordering::Relaxed);
-        let mean = if q > 0 { total as f64 / q as f64 } else { 0.0 };
         format!(
             "gen {} strategy {} store {}x{} queries {} mean_us {:.1} max_us {}",
             self.seq,
             self.scan.strategy(),
             self.store.n(),
             self.store.dim(),
-            q,
-            mean,
-            self.max_us.load(Ordering::Relaxed)
+            self.latency.count(),
+            self.latency.mean(),
+            self.latency.max()
         )
+    }
+
+    /// The generation's identity + latency summary as a JSON object —
+    /// the core of the `stats` verb's single-line reply (the server
+    /// merges its own connection counters in).
+    pub fn stats_json(&self) -> Json {
+        Json::object(vec![
+            ("gen", Json::num(self.seq as f64)),
+            ("strategy", Json::str(self.scan.strategy())),
+            (
+                "store",
+                Json::object(vec![
+                    ("n", Json::num(self.store.n() as f64)),
+                    ("dim", Json::num(self.store.dim() as f64)),
+                ]),
+            ),
+            ("queries", Json::num(self.latency.count() as f64)),
+            ("mean_us", Json::num(self.latency.mean())),
+            ("max_us", Json::num(self.latency.max() as f64)),
+            ("p50_us", Json::num(self.latency.quantile(0.50) as f64)),
+            ("p90_us", Json::num(self.latency.quantile(0.90) as f64)),
+            ("p99_us", Json::num(self.latency.quantile(0.99) as f64)),
+        ])
     }
 }
 
@@ -417,6 +439,31 @@ mod tests {
         gen.execute(&Request::Neighbors { node: 0, k: 2 }).unwrap();
         let line = gen.stats_line();
         assert!(line.starts_with("gen 1 strategy quantized store 25x6 queries 1"), "{line}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn stats_json_mirrors_identity_and_latency_summary() {
+        let p = tmp("stats_json.kce");
+        write_artifact(&p, 25, 6, 7);
+        let gens = GenerationStore::open(&p, None, GenerationOpts::default()).unwrap();
+        let gen = gens.current();
+        gen.execute(&Request::Neighbors { node: 0, k: 2 }).unwrap();
+        gen.execute(&Request::Neighbors { node: 3, k: 4 }).unwrap();
+        let j = gen.stats_json();
+        assert_eq!(j.get("gen").and_then(Json::as_i64), Some(1));
+        assert_eq!(j.get("strategy").and_then(Json::as_str), Some("exact"));
+        assert_eq!(j.path(&["store", "n"]).and_then(Json::as_usize), Some(25));
+        assert_eq!(j.path(&["store", "dim"]).and_then(Json::as_usize), Some(6));
+        assert_eq!(j.get("queries").and_then(Json::as_i64), Some(2));
+        for key in ["mean_us", "max_us", "p50_us", "p90_us", "p99_us"] {
+            assert!(j.get(key).and_then(Json::as_f64).is_some(), "missing {key}");
+        }
+        // Encodes to one line and round-trips through the parser — the
+        // shape the daemon's `stats` verb puts on the wire.
+        let line = j.to_string();
+        assert!(!line.contains('\n'));
+        assert_eq!(Json::parse(&line).unwrap(), j);
         std::fs::remove_file(&p).unwrap();
     }
 }

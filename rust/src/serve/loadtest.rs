@@ -22,12 +22,14 @@
 //! this. Only the measured latencies vary run to run.
 //!
 //! Each completed batch records one latency sample (send of the first
-//! line to receipt of the last reply). Results aggregate into a
-//! [`ScenarioResult`] — nearest-rank p50/p90/p99/max via
-//! [`percentile`], throughput, `err`-reply and failed-batch counts —
-//! which serializes to single-line JSON and merges into
-//! `BENCH_serve.json` under a `--label` key (the Makefile records
-//! `exact` and `quantized` serving paths side by side).
+//! line to receipt of the last reply) into an `obs::metrics`
+//! [`Histogram`] — the same log-linear histogram the daemon itself
+//! keeps — and per-worker histograms merge lock-free into one.
+//! Results aggregate into a [`ScenarioResult`] — p50/p90/p99/max,
+//! throughput, `err`-reply and failed-batch counts — which serializes
+//! to single-line JSON and merges into `BENCH_serve.json` under a
+//! `--label` key (the Makefile records `exact` and `quantized` serving
+//! paths side by side).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -37,11 +39,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::obs::metrics::Histogram;
 use crate::serve::server::{client_exchange, ClientConn, ServeAddr};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::util::stats::percentile;
 
 /// Scenario names `run_scenario` accepts, in the order `--scenario
 /// all` runs them.
@@ -109,7 +111,8 @@ pub struct ScenarioResult {
     /// Longest per-worker span, start barrier to last batch.
     pub elapsed_s: f64,
     pub throughput_rps: f64,
-    /// Per-batch latency percentiles, microseconds (nearest-rank).
+    /// Per-batch latency percentiles, microseconds (nearest-rank over
+    /// log-linear [`Histogram`] buckets).
     pub p50_us: f64,
     pub p90_us: f64,
     pub p99_us: f64,
@@ -218,7 +221,7 @@ pub fn fanin_jitter_us(seed: u64, worker: usize, rounds: usize) -> Vec<u64> {
 // ---------------------------------------------------------------------------
 
 /// Ask the daemon how many nodes it serves (`stats` verb → the
-/// `store NxD` token).
+/// `store.n` field of its JSON reply).
 pub fn probe_nodes(addr: &ServeAddr) -> Result<usize> {
     let replies = client_exchange(addr, &["stats".to_string()])?;
     let line = replies
@@ -227,21 +230,14 @@ pub fn probe_nodes(addr: &ServeAddr) -> Result<usize> {
     parse_store_nodes(line).with_context(|| format!("parsing stats reply {line:?}"))
 }
 
-/// Extract the node count from a daemon stats line (`... store NxD ...`).
+/// Extract the node count from a daemon stats reply (one-line JSON
+/// with a `store: {n, dim}` object).
 pub fn parse_store_nodes(stats_line: &str) -> Result<usize> {
-    let mut toks = stats_line.split_whitespace();
-    while let Some(t) = toks.next() {
-        if t == "store" {
-            let shape = toks.next().context("stats reply ends after 'store'")?;
-            let (n, _) = shape
-                .split_once('x')
-                .with_context(|| format!("store shape {shape:?} is not NxD"))?;
-            return n
-                .parse::<usize>()
-                .map_err(|_| anyhow::anyhow!("bad store node count {n:?}"));
-        }
-    }
-    bail!("no 'store NxD' token in stats reply {stats_line:?}")
+    let j = Json::parse(stats_line.trim())
+        .map_err(|e| anyhow::anyhow!("stats reply is not JSON ({e})"))?;
+    j.path(&["store", "n"])
+        .and_then(Json::as_usize)
+        .with_context(|| format!("no numeric store.n in stats reply {stats_line:?}"))
 }
 
 /// Apply scenario shaping on top of the shared opts: `baseline` is one
@@ -267,7 +263,8 @@ fn shaped(opts: &LoadOpts, scenario: &str) -> Result<LoadOpts> {
 
 #[derive(Default)]
 struct WorkerOut {
-    latencies_us: Vec<f64>,
+    /// Per-batch wire latency, microseconds.
+    latency: Histogram,
     requests: u64,
     errors: u64,
     failed_batches: u64,
@@ -318,7 +315,7 @@ fn worker_run(
         let exchanged = conn.as_mut().map(|c| c.exchange(batch));
         match exchanged {
             Some(Ok(replies)) => {
-                out.latencies_us.push(bt.elapsed().as_secs_f64() * 1e6);
+                out.latency.record(bt.elapsed().as_micros() as u64);
                 out.requests += replies.len() as u64;
                 out.errors += replies.iter().filter(|r| r.starts_with("err")).count() as u64;
             }
@@ -357,20 +354,19 @@ pub fn run_scenario(scenario: &str, opts: &LoadOpts) -> Result<ScenarioResult> {
             worker_run(&scenario, &o, w, nodes, &barrier)
         }));
     }
-    let mut lat: Vec<f64> = Vec::new();
+    let lat = Histogram::new();
     let (mut requests, mut errors, mut failed) = (0u64, 0u64, 0u64);
     let mut elapsed = 0f64;
     for h in handles {
         let wo = h
             .join()
             .map_err(|_| anyhow::anyhow!("load worker panicked"))?;
-        lat.extend(wo.latencies_us);
+        lat.merge(&wo.latency);
         requests += wo.requests;
         errors += wo.errors;
         failed += wo.failed_batches;
         elapsed = elapsed.max(wo.elapsed_s);
     }
-    lat.sort_by(f64::total_cmp);
     Ok(ScenarioResult {
         scenario: scenario.to_string(),
         transport: o.addr.transport(),
@@ -386,10 +382,10 @@ pub fn run_scenario(scenario: &str, opts: &LoadOpts) -> Result<ScenarioResult> {
         } else {
             0.0
         },
-        p50_us: percentile(&lat, 0.5),
-        p90_us: percentile(&lat, 0.9),
-        p99_us: percentile(&lat, 0.99),
-        max_us: percentile(&lat, 1.0),
+        p50_us: lat.quantile(0.5) as f64,
+        p90_us: lat.quantile(0.9) as f64,
+        p99_us: lat.quantile(0.99) as f64,
+        max_us: lat.max() as f64,
         seed: o.seed,
     })
 }
@@ -560,12 +556,12 @@ mod tests {
     }
 
     #[test]
-    fn stats_line_probe_parses_node_count() {
-        let line = "stats gen 2 strategy exact store 80x8 queries 5 mean_us 12.3 \
-                    max_us 99 connections 3 requests 5 swaps 1";
+    fn stats_json_probe_parses_node_count() {
+        let line = r#"{"connections":3,"gen":2,"max_us":99,"mean_us":12.3,"p50_us":9,"p90_us":80,"p99_us":99,"queries":5,"requests":5,"store":{"dim":8,"n":80},"strategy":"exact","swaps":1}"#;
         assert_eq!(parse_store_nodes(line).unwrap(), 80);
         assert!(parse_store_nodes("err no store here").is_err());
-        assert!(parse_store_nodes("stats gen 1 store eightx8").is_err());
+        assert!(parse_store_nodes(r#"{"store":{"dim":8}}"#).is_err());
+        assert!(parse_store_nodes(r#"{"store":{"n":"eighty"}}"#).is_err());
     }
 
     #[test]

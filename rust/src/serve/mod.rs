@@ -14,8 +14,10 @@
 //! On top of the one-shot tier sits the **persistent daemon**:
 //! [`generation`] holds hot-swappable artifact generations (Arc-epoch
 //! publish, readers never block, watched-path reload), [`protocol`]
-//! defines the line protocol plus `swap`/`stats`/`shutdown` control
-//! verbs, and [`server`] runs one transport-generic serve loop over a
+//! defines the line protocol plus `swap`/`stats`/`metrics`/`shutdown`
+//! control verbs (`stats` and `metrics` answer one-line JSON backed by
+//! the `obs::metrics` registry), and [`server`] runs one
+//! transport-generic serve loop over a
 //! unix socket or TCP listener ([`ServeAddr`]) — the CLI exposes it as
 //! `serve --listen`/`--listen-tcp` and `query --connect`. [`loadtest`]
 //! drives a live daemon with deterministic multi-client scenarios

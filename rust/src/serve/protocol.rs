@@ -8,12 +8,17 @@
 //! live in `server`, not here. Client to
 //! server, a line is either a data request — the same `nn NODE K` /
 //! `edge U V` grammar [`Request::parse`] has always accepted, plus `#`
-//! comments — or one of three control verbs:
+//! comments — or one of four control verbs:
 //!
 //! ```text
 //! swap [PATH]   load PATH (or re-check the watched artifact) and
 //!               publish it as the next generation
-//! stats         one-line counters of the current generation + server
+//! stats         one-line JSON counters of the current generation +
+//!               server (gen/strategy/store/queries/latency quantiles,
+//!               connections/requests/swaps)
+//! metrics       one-line JSON snapshot of the daemon's full metrics
+//!               registry (per-verb latency histograms, connection
+//!               lifecycle counters, /proc RSS/CPU series)
 //! shutdown      stop accepting connections and exit the serve loop
 //! ```
 //!
@@ -26,8 +31,9 @@
 //! Rust's shortest round-trip float formatting, so
 //! [`parse_response`]`(`[`encode_response`]`(r)) == r` exactly — the
 //! round-trip property tests in `tests/daemon.rs` pin this. Control
-//! verbs are answered with a free-form `ok ...` / `stats ...` / `err
-//! ...` line.
+//! verbs are answered with one line: `ok ...` / `err ...` for `swap`
+//! and `shutdown`, a single-line JSON document (starting with `{`) for
+//! `stats` and `metrics`.
 //!
 //! `swap` treats everything after the verb (trimmed) as the path, so
 //! artifact paths with interior whitespace work; the CLI sends
@@ -47,6 +53,8 @@ pub enum ClientMsg {
     /// path.
     Swap(Option<PathBuf>),
     Stats,
+    /// Full metrics-registry snapshot as one JSON line.
+    Metrics,
     Shutdown,
 }
 
@@ -73,6 +81,8 @@ impl ClientMsg {
         match toks.as_slice() {
             ["stats"] => Ok(Some(ClientMsg::Stats)),
             ["stats", ..] => bail!("stats takes no arguments"),
+            ["metrics"] => Ok(Some(ClientMsg::Metrics)),
+            ["metrics", ..] => bail!("metrics takes no arguments"),
             ["shutdown"] => Ok(Some(ClientMsg::Shutdown)),
             ["shutdown", ..] => bail!("shutdown takes no arguments"),
             _ => Ok(Request::parse(trimmed)?.map(ClientMsg::Query)),
@@ -87,6 +97,7 @@ impl ClientMsg {
             ClientMsg::Swap(None) => "swap".to_string(),
             ClientMsg::Swap(Some(p)) => format!("swap {}", p.display()),
             ClientMsg::Stats => "stats".to_string(),
+            ClientMsg::Metrics => "metrics".to_string(),
             ClientMsg::Shutdown => "shutdown".to_string(),
         }
     }
@@ -156,6 +167,7 @@ mod tests {
             ("swap", ClientMsg::Swap(None)),
             ("swap /x/emb.kce", ClientMsg::Swap(Some(PathBuf::from("/x/emb.kce")))),
             ("stats", ClientMsg::Stats),
+            ("metrics", ClientMsg::Metrics),
             ("shutdown", ClientMsg::Shutdown),
             ("nn 3 10", ClientMsg::Query(Request::Neighbors { node: 3, k: 10 })),
             ("edge 1 2", ClientMsg::Query(Request::EdgeScore { u: 1, v: 2 })),
@@ -177,6 +189,7 @@ mod tests {
     fn malformed_lines_rejected() {
         for bad in [
             "stats now",
+            "metrics now",
             "shutdown -f",
             "nn 3",
             "nn 3 4 5",

@@ -6,9 +6,10 @@
 //! batches. The scan strategy is chosen once (at the first neighbor
 //! request) and the execution path never branches on it again — the
 //! daemon's [`super::generation::Generation`] shares the same
-//! [`execute_with`] core. Each request is timed individually; a batch
-//! returns a [`BatchReport`] with nearest-rank p50/p90/p99/max
-//! latencies which `coordinator::report::render_latency_table` turns
+//! [`execute_with`] core. Each request is timed individually into an
+//! [`crate::obs::metrics::Histogram`]; a batch returns a
+//! [`BatchReport`] with p50/p90/p99/max latencies which
+//! `coordinator::report::render_latency_table` turns
 //! into the usual paper-style table. The CLI `serve` subcommand is a
 //! thin file/stdin front-end over this module; the persistent daemon
 //! lives in [`super::server`]; tests drive both directly.
@@ -17,7 +18,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::util::stats::percentile;
+use crate::obs::metrics::Histogram;
 
 use super::linkpred::EdgeScorer;
 use super::store::EmbeddingStore;
@@ -226,21 +227,20 @@ impl QueryService {
         }
         let t_batch = Instant::now();
         let mut responses = Vec::with_capacity(requests.len());
-        let mut lat_us: Vec<f64> = Vec::with_capacity(requests.len());
+        let lat = Histogram::new();
         for req in requests {
             let t0 = Instant::now();
             responses.push(self.execute(req)?);
-            lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+            lat.record(t0.elapsed().as_micros() as u64);
         }
-        lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
         self.batches_run += 1;
         let report = BatchReport {
             batch: self.batches_run,
             n_requests: requests.len(),
-            p50_us: percentile(&lat_us, 0.50),
-            p90_us: percentile(&lat_us, 0.90),
-            p99_us: percentile(&lat_us, 0.99),
-            max_us: lat_us.last().copied().unwrap_or(0.0),
+            p50_us: lat.quantile(0.50) as f64,
+            p90_us: lat.quantile(0.90) as f64,
+            p99_us: lat.quantile(0.99) as f64,
+            max_us: lat.max() as f64,
             total_ms: t_batch.elapsed().as_secs_f64() * 1e3,
         };
         Ok((responses, report))

@@ -61,16 +61,20 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::metrics::{Counter, Registry};
+use crate::obs::sysmon::Sysmon;
+use crate::obs::trace::Tracer;
 use crate::serve::generation::GenerationStore;
 use crate::serve::protocol::{self, ClientMsg};
 use crate::serve::query::Request;
+use crate::util::json::Json;
 use crate::util::pool;
 
 /// Hard cap on one protocol line. Requests are tens of bytes; anything
@@ -144,6 +148,9 @@ pub struct ServerOpts {
     /// parseable `err server at capacity ...` line and closed without
     /// getting a handler thread.
     pub max_conns: usize,
+    /// Span tracer for verb/batch timing (`serve --trace-out`);
+    /// disabled by default.
+    pub trace: Tracer,
 }
 
 impl ServerOpts {
@@ -153,6 +160,7 @@ impl ServerOpts {
             batch_threads: pool::default_threads(),
             read_timeout: Some(Duration::from_secs(30)),
             max_conns: 0,
+            trace: Tracer::disabled(),
         }
     }
 }
@@ -353,9 +361,18 @@ struct Ctl {
     /// Resolved listen address; what the shutdown self-wake dials.
     wake: ServeAddr,
     shutdown: AtomicBool,
-    connections: AtomicU64,
-    requests: AtomicU64,
-    rejected: AtomicU64,
+    /// This daemon's metrics registry — the `metrics` verb's payload.
+    /// Deliberately per-instance rather than process-global: tests run
+    /// many daemons in one process, and their counters must not bleed
+    /// into each other.
+    registry: Arc<Registry>,
+    // Lifecycle counters, registered in `registry` (handles cached
+    // here so hot paths never re-lock the name map).
+    connections: Arc<Counter>,
+    requests: Arc<Counter>,
+    rejected: Arc<Counter>,
+    /// Span tracer (`--trace-out`); disabled unless configured.
+    trace: Tracer,
     /// Live connections by id, so shutdown can half-close readers
     /// that are idle-blocked in a read and would otherwise hang
     /// the final join forever. Handlers remove their own entry.
@@ -391,14 +408,20 @@ pub fn run_server_ready(
 ) -> Result<ServerStats> {
     let (acceptor, resolved) = Acceptor::bind(&opts.listen)?;
     eprintln!("serve: listening on {} ({})", resolved, resolved.transport());
+    let registry = Arc::new(Registry::new());
     let ctl = Arc::new(Ctl {
         wake: resolved.clone(),
         shutdown: AtomicBool::new(false),
-        connections: AtomicU64::new(0),
-        requests: AtomicU64::new(0),
-        rejected: AtomicU64::new(0),
+        connections: registry.counter("serve.connections"),
+        requests: registry.counter("serve.requests"),
+        rejected: registry.counter("serve.rejected"),
+        trace: opts.trace.clone(),
+        registry: Arc::clone(&registry),
         conns: Mutex::new(HashMap::new()),
     });
+    // RSS/CPU curves for the whole daemon lifetime; the `metrics` verb
+    // reports them as `proc.*` series (no-op off Linux).
+    let sysmon = Sysmon::start(registry, Duration::from_millis(100));
     if let Some(tx) = ready {
         let _ = tx.send(resolved.clone());
     }
@@ -425,7 +448,7 @@ pub fn run_server_ready(
             // Over capacity: one parseable error line, no handler
             // thread. The write is bounded by a timeout so a client
             // that never reads cannot stall the acceptor.
-            ctl.rejected.fetch_add(1, Ordering::Relaxed);
+            ctl.rejected.inc();
             let mut s = stream;
             let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
             let _ = writeln!(
@@ -436,7 +459,7 @@ pub fn run_server_ready(
             let _ = s.shutdown(Shutdown::Both);
             continue;
         }
-        ctl.connections.fetch_add(1, Ordering::Relaxed);
+        ctl.connections.inc();
         let conn_id = next_conn_id;
         next_conn_id += 1;
         let _ = stream.set_read_timeout(opts.read_timeout);
@@ -470,12 +493,30 @@ pub fn run_server_ready(
     if let ServeAddr::Unix(path) = &resolved {
         let _ = std::fs::remove_file(path);
     }
+    // Stop the sampler (takes its final RSS/CPU sample) before the
+    // counters are read out.
+    drop(sysmon);
     Ok(ServerStats {
-        connections: ctl.connections.load(Ordering::Relaxed),
-        requests: ctl.requests.load(Ordering::Relaxed),
+        connections: ctl.connections.get(),
+        requests: ctl.requests.get(),
         swaps: gens.swaps(),
-        rejected: ctl.rejected.load(Ordering::Relaxed),
+        rejected: ctl.rejected.get(),
     })
+}
+
+/// The `stats` verb's single-line JSON payload: the current
+/// generation's identity + latency summary with the server's
+/// connection counters merged in.
+fn stats_reply(gens: &GenerationStore, ctl: &Ctl) -> String {
+    let mut obj = match gens.current().stats_json() {
+        Json::Object(m) => m,
+        _ => unreachable!("stats_json returns an object"),
+    };
+    obj.insert("connections".to_string(), Json::num(ctl.connections.get() as f64));
+    obj.insert("requests".to_string(), Json::num(ctl.requests.get() as f64));
+    obj.insert("swaps".to_string(), Json::num(gens.swaps() as f64));
+    obj.insert("rejected".to_string(), Json::num(ctl.rejected.get() as f64));
+    Json::Object(obj).to_string()
 }
 
 /// Answer the queued batch from one generation snapshot, in
@@ -491,7 +532,22 @@ fn flush_batch<W: Write>(
         return Ok(());
     }
     let gen = gens.current();
-    let results = pool::parallel_tasks(pending.len(), threads.max(1), |i| gen.execute(&pending[i]));
+    let n = pending.len() as f64;
+    let _span = ctl.trace.span_with("batch", &[("n", Json::num(n))]);
+    // Per-verb wire latency, recorded inside the fan-out so queue wait
+    // under thread contention counts (handles resolved once per batch).
+    let h_nn = ctl.registry.histogram("serve.verb.nn");
+    let h_edge = ctl.registry.histogram("serve.verb.edge");
+    let results = pool::parallel_tasks(pending.len(), threads.max(1), |i| {
+        let t0 = Instant::now();
+        let out = gen.execute(&pending[i]);
+        let us = t0.elapsed().as_micros() as u64;
+        match pending[i] {
+            Request::Neighbors { .. } => h_nn.record(us),
+            Request::EdgeScore { .. } => h_edge.record(us),
+        }
+        out
+    });
     for r in &results {
         match r {
             Ok(resp) => writeln!(w, "{}", protocol::encode_response(resp))?,
@@ -499,7 +555,7 @@ fn flush_batch<W: Write>(
         }
     }
     w.flush()?;
-    ctl.requests.fetch_add(pending.len() as u64, Ordering::Relaxed);
+    ctl.requests.add(pending.len() as u64);
     pending.clear();
     Ok(())
 }
@@ -627,29 +683,43 @@ fn handle_conn(
                         // stream: drain queued requests first.
                         flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
                         match msg {
-                            ClientMsg::Swap(path) => match gens.swap_to(path.as_deref()) {
-                                Ok(gen) => writeln!(
-                                    w,
-                                    "ok swap gen {} store {}x{} {}",
-                                    gen.seq(),
-                                    gen.store().n(),
-                                    gen.store().dim(),
-                                    gen.strategy()
-                                )?,
-                                Err(e) => writeln!(w, "{}", protocol::encode_error(&e))?,
-                            },
+                            ClientMsg::Swap(path) => {
+                                let _s = ctl.trace.span("verb.swap");
+                                let t0 = Instant::now();
+                                match gens.swap_to(path.as_deref()) {
+                                    Ok(gen) => writeln!(
+                                        w,
+                                        "ok swap gen {} store {}x{} {}",
+                                        gen.seq(),
+                                        gen.store().n(),
+                                        gen.store().dim(),
+                                        gen.strategy()
+                                    )?,
+                                    Err(e) => writeln!(w, "{}", protocol::encode_error(&e))?,
+                                }
+                                ctl.registry
+                                    .histogram("serve.verb.swap")
+                                    .record(t0.elapsed().as_micros() as u64);
+                            }
                             ClientMsg::Stats => {
-                                let gen = gens.current();
-                                writeln!(
-                                    w,
-                                    "stats {} connections {} requests {} swaps {}",
-                                    gen.stats_line(),
-                                    ctl.connections.load(Ordering::Relaxed),
-                                    ctl.requests.load(Ordering::Relaxed),
-                                    gens.swaps()
-                                )?;
+                                let _s = ctl.trace.span("verb.stats");
+                                let t0 = Instant::now();
+                                writeln!(w, "{}", stats_reply(gens, ctl))?;
+                                ctl.registry
+                                    .histogram("serve.verb.stats")
+                                    .record(t0.elapsed().as_micros() as u64);
+                            }
+                            ClientMsg::Metrics => {
+                                let _s = ctl.trace.span("verb.metrics");
+                                let t0 = Instant::now();
+                                ctl.registry.gauge("serve.swaps").set(gens.swaps() as f64);
+                                writeln!(w, "{}", ctl.registry.snapshot().to_string())?;
+                                ctl.registry
+                                    .histogram("serve.verb.metrics")
+                                    .record(t0.elapsed().as_micros() as u64);
                             }
                             ClientMsg::Shutdown => {
+                                let _s = ctl.trace.span("verb.shutdown");
                                 writeln!(w, "ok shutdown")?;
                                 w.flush()?;
                                 ctl.begin_shutdown();

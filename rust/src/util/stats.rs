@@ -48,18 +48,9 @@ impl MeanStd {
     }
 }
 
-/// Nearest-rank percentile of an ascending-sorted sample: `q` in
-/// [0, 1]; 0.5 = median, 1.0 = max. Returns 0 for an empty sample.
-/// The serving layer reports per-batch latency p50/p90/p99 with this.
-pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "input not sorted");
-    let q = q.clamp(0.0, 1.0);
-    let rank = (q * sorted.len() as f64).ceil() as usize;
-    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
-}
+// Latency percentiles moved to `obs::metrics::Histogram` — the one
+// log-linear histogram the serving layer, load generator and pipeline
+// all share.
 
 /// Histogram over integer keys (e.g. nodes per core index).
 pub fn int_histogram(xs: impl IntoIterator<Item = usize>) -> Vec<(usize, usize)> {
@@ -220,18 +211,6 @@ mod tests {
         assert_eq!(m.count(), 8);
         let single = MeanStd::from_slice(&[3.0]);
         assert_eq!(single.std(), 0.0);
-    }
-
-    #[test]
-    fn percentile_nearest_rank() {
-        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(percentile(&xs, 0.5), 50.0);
-        assert_eq!(percentile(&xs, 0.9), 90.0);
-        assert_eq!(percentile(&xs, 0.99), 99.0);
-        assert_eq!(percentile(&xs, 1.0), 100.0);
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&[7.0], 0.5), 7.0);
-        assert_eq!(percentile(&[], 0.9), 0.0);
     }
 
     #[test]

@@ -31,6 +31,7 @@ use kcore_embed::serve::{
     EmbeddingStore, ExactScan, GenerationOpts, GenerationStore, Metric, Request, Response,
     ScanIndex, ServeAddr, ServerOpts, ServerStats, TopKParams, MAX_LINE_BYTES,
 };
+use kcore_embed::util::json::Json;
 use kcore_embed::util::proptest::{ensure, forall};
 use kcore_embed::util::rng::Rng;
 
@@ -179,7 +180,10 @@ fn tcp_round_trips_every_verb_against_a_live_daemon() {
         ensure(replies.len() == 1, || format!("{} replies to one line", replies.len()))?;
         let reply = &replies[0];
         if sent == "stats" {
-            return ensure(reply.starts_with("stats gen 1 "), || format!("stats reply {reply:?}"));
+            let j = Json::parse(reply).map_err(|e| format!("stats reply {reply:?}: {e:#}"))?;
+            return ensure(j.get("gen").and_then(Json::as_i64) == Some(1), || {
+                format!("stats reply {reply:?}")
+            });
         }
         // Wire round trip is bit-exact: parse then re-encode.
         let back = parse_response(reply).map_err(|e| format!("reply {reply:?}: {e:#}"))?;
@@ -199,6 +203,61 @@ fn tcp_round_trips_every_verb_against_a_live_daemon() {
     drop(conn);
     let replies = client_exchange(&addr, &lines(&["shutdown"])).unwrap();
     assert_eq!(replies, vec!["ok shutdown".to_string()]);
+    daemon.join().unwrap();
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// The `stats` and `metrics` control verbs answer single-line JSON:
+/// `stats` merges the live generation's query stats with server-level
+/// counters, `metrics` dumps the whole registry snapshot including
+/// per-verb latency histograms and (on Linux) `/proc` RSS/CPU series.
+#[test]
+fn stats_and_metrics_verbs_answer_single_line_json() {
+    let p = tmp("metrics.kce");
+    write_artifact(&p, 50, 6, 21);
+    let (daemon, addr) = start_tcp_daemon(&p);
+
+    // Traffic first, so the per-verb histograms have samples.
+    let mut conn = ClientConn::connect(&addr).unwrap();
+    conn.exchange(&lines(&["nn 0 5", "edge 1 2"])).unwrap();
+
+    let replies = conn.exchange(&lines(&["stats"])).unwrap();
+    assert_eq!(replies.len(), 1);
+    assert!(!replies[0].contains('\n'));
+    let stats = Json::parse(&replies[0]).unwrap();
+    assert_eq!(stats.get("gen").and_then(Json::as_i64), Some(1));
+    assert_eq!(stats.path(&["store", "n"]).and_then(Json::as_usize), Some(50));
+    assert_eq!(stats.path(&["store", "dim"]).and_then(Json::as_usize), Some(6));
+    assert_eq!(stats.get("queries").and_then(Json::as_i64), Some(2));
+    assert_eq!(stats.get("requests").and_then(Json::as_i64), Some(2));
+    assert_eq!(stats.get("swaps").and_then(Json::as_i64), Some(0));
+    for key in ["strategy", "mean_us", "max_us", "p50_us", "p99_us", "connections", "rejected"] {
+        assert!(stats.get(key).is_some(), "stats reply missing {key}: {}", replies[0]);
+    }
+
+    let replies = conn.exchange(&lines(&["metrics"])).unwrap();
+    assert_eq!(replies.len(), 1);
+    assert!(!replies[0].contains('\n'));
+    let m = Json::parse(&replies[0]).unwrap();
+    assert_eq!(m.path(&["counters", "serve.requests"]).and_then(Json::as_i64), Some(2));
+    assert!(m.path(&["counters", "serve.connections"]).is_some());
+    for verb in ["nn", "edge", "stats"] {
+        let h = format!("serve.verb.{verb}");
+        assert_eq!(m.path(&["histograms", &h, "count"]).and_then(Json::as_i64), Some(1), "{h}");
+        for q in ["p50", "p90", "p99"] {
+            assert!(m.path(&["histograms", &h, q]).is_some(), "{h} missing {q}");
+        }
+    }
+    assert_eq!(m.path(&["gauges", "serve.swaps"]).and_then(Json::as_i64), Some(0));
+    // The /proc sampler took at least its synchronous startup sample.
+    #[cfg(target_os = "linux")]
+    {
+        let n = m.path(&["series", "proc.rss_bytes", "n"]).and_then(Json::as_i64);
+        assert!(n.unwrap_or(0) >= 1, "no rss samples: {}", replies[0]);
+    }
+
+    drop(conn);
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
     daemon.join().unwrap();
     std::fs::remove_file(&p).unwrap();
 }
@@ -564,8 +623,9 @@ fn daemon_hot_swaps_and_shuts_down_cleanly() {
     assert_eq!(replies, vec![expected_b0]);
 
     let replies = client_exchange(&addr, &lines(&["stats"])).unwrap();
-    assert!(replies[0].starts_with("stats gen 2"), "{}", replies[0]);
-    assert!(replies[0].contains("swaps 1"), "{}", replies[0]);
+    let j = Json::parse(&replies[0]).unwrap();
+    assert_eq!(j.get("gen").and_then(Json::as_i64), Some(2), "{}", replies[0]);
+    assert_eq!(j.get("swaps").and_then(Json::as_i64), Some(1), "{}", replies[0]);
 
     let replies = client_exchange(&addr, &lines(&["shutdown"])).unwrap();
     assert_eq!(replies, vec!["ok shutdown".to_string()]);
@@ -600,7 +660,8 @@ fn watched_reexport_is_picked_up_without_a_verb() {
     assert_eq!(replies, vec![expected_new]);
 
     let replies = client_exchange(&addr, &lines(&["stats"])).unwrap();
-    assert!(replies[0].starts_with("stats gen 2"), "{}", replies[0]);
+    let j = Json::parse(&replies[0]).unwrap();
+    assert_eq!(j.get("gen").and_then(Json::as_i64), Some(2), "{}", replies[0]);
     client_exchange(&addr, &lines(&["shutdown"])).unwrap();
     let stats = daemon.join().unwrap();
     assert_eq!(stats.swaps, 1);

@@ -1,0 +1,198 @@
+//! Integration tests for the observability layer (`obs`): histogram
+//! bucket math against exact order statistics, merge equivalence,
+//! lock-free concurrent recording, trace JSONL schema, and the `/proc`
+//! resource sampler.
+
+use std::sync::Arc;
+use std::thread;
+
+use kcore_embed::obs::metrics::Histogram;
+use kcore_embed::obs::trace::Tracer;
+use kcore_embed::util::json::Json;
+use kcore_embed::util::proptest::{ensure, forall};
+
+/// Bucketed quantiles never under-estimate the exact nearest-rank
+/// order statistic, and overshoot it by at most one sub-bucket width
+/// (`1/16` relative, `+1` for integer truncation). `count`, `sum`
+/// and `max` are exact regardless of bucketing.
+#[test]
+fn histogram_quantiles_bound_exact_order_statistics() {
+    forall("histogram quantile error bound", 60, 0x0B51, |ctx| {
+        let n = ctx.scaled(1, 400);
+        let h = Histogram::new();
+        let mut vals: Vec<u64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Mix magnitudes: the exact sub-16 region, mid-range
+            // latencies, and huge values up to the top bucket.
+            let v = match ctx.rng.gen_index(3) {
+                0 => ctx.rng.gen_index(16) as u64,
+                1 => ctx.rng.gen_index(1 << 20) as u64,
+                _ => ctx.rng.next_u64() >> ctx.rng.gen_index(40),
+            };
+            vals.push(v);
+            h.record(v);
+        }
+        vals.sort_unstable();
+        ensure(h.count() == n as u64, || format!("count {} != {n}", h.count()))?;
+        let sum = vals.iter().fold(0u64, |a, &v| a.wrapping_add(v));
+        ensure(h.sum() == sum, || format!("sum {} != {sum}", h.sum()))?;
+        ensure(h.max() == *vals.last().unwrap(), || {
+            format!("max {} != {}", h.max(), vals.last().unwrap())
+        })?;
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+            let exact = vals[rank - 1];
+            let est = h.quantile(q);
+            ensure(est >= exact, || format!("q{q}: {est} under-estimates {exact}"))?;
+            let bound = exact.saturating_add(exact / 16).saturating_add(1);
+            ensure(est <= bound, || {
+                format!("q{q}: {est} > bound {bound} (exact {exact})")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+/// Merging shard histograms answers count/sum/max and every quantile
+/// exactly as if all values had been recorded into one histogram —
+/// the property the load generator's per-worker merge relies on.
+#[test]
+fn merged_histograms_answer_like_one_big_histogram() {
+    forall("histogram merge equivalence", 40, 0x0B52, |ctx| {
+        let parts: Vec<Histogram> = (0..3).map(|_| Histogram::new()).collect();
+        let combined = Histogram::new();
+        let n = ctx.scaled(3, 300);
+        for i in 0..n {
+            let v = ctx.rng.next_u64() >> ctx.rng.gen_index(50);
+            parts[i % 3].record(v);
+            combined.record(v);
+        }
+        let merged = Histogram::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+        ensure(merged.count() == combined.count(), || "count mismatch".to_string())?;
+        ensure(merged.sum() == combined.sum(), || "sum mismatch".to_string())?;
+        ensure(merged.max() == combined.max(), || "max mismatch".to_string())?;
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            ensure(merged.quantile(q) == combined.quantile(q), || {
+                format!("q{q}: {} != {}", merged.quantile(q), combined.quantile(q))
+            })?;
+        }
+        Ok(())
+    });
+}
+
+/// Eight threads hammering one histogram lose no recordings: the
+/// relaxed atomics keep count/sum/max exact and quantiles within the
+/// bucket error bound of the known distribution.
+#[test]
+fn concurrent_recording_from_eight_threads_loses_nothing() {
+    let h = Arc::new(Histogram::new());
+    let per_thread = 10_000u64;
+    let threads: Vec<_> = (0..8u64)
+        .map(|t| {
+            let h = Arc::clone(&h);
+            thread::spawn(move || {
+                for i in 0..per_thread {
+                    h.record(t * per_thread + i);
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().unwrap();
+    }
+    let total = 8 * per_thread;
+    assert_eq!(h.count(), total);
+    assert_eq!(h.sum(), total * (total - 1) / 2);
+    assert_eq!(h.max(), total - 1);
+    assert_eq!(h.quantile(1.0), total - 1);
+    // Exact p50 of 0..80000 is 39999; allow one sub-bucket overshoot.
+    let p50 = h.quantile(0.5);
+    assert!((39_999..=42_499).contains(&p50), "p50 {p50}");
+}
+
+/// Every line a tracer emits is parseable JSON with the documented
+/// span schema: ids, parent links, timing, fields; the per-name
+/// summary aggregates closed spans.
+#[test]
+fn trace_jsonl_schema_round_trips() {
+    let t = Tracer::in_memory();
+    {
+        let mut root = t.span("root");
+        {
+            let mut child = t.span_with("child", &[("k", Json::num(1.0))]);
+            child.field("extra", Json::str("v"));
+        }
+        t.event("note", &[("msg", Json::str("hello"))]);
+        root.field("done", Json::Bool(true));
+    }
+    let lines = t.lines();
+    assert_eq!(lines.len(), 3, "{lines:?}");
+    let parsed: Vec<Json> = lines.iter().map(|l| Json::parse(l).unwrap()).collect();
+
+    // Emit order: child closes first, then the event, then root.
+    let child = &parsed[0];
+    assert_eq!(child.get("kind").and_then(Json::as_str), Some("span"));
+    assert_eq!(child.get("name").and_then(Json::as_str), Some("child"));
+    assert_eq!(child.path(&["fields", "k"]).and_then(Json::as_i64), Some(1));
+    assert_eq!(child.path(&["fields", "extra"]).and_then(Json::as_str), Some("v"));
+
+    let event = &parsed[1];
+    assert_eq!(event.get("kind").and_then(Json::as_str), Some("note"));
+    assert_eq!(event.get("msg").and_then(Json::as_str), Some("hello"));
+
+    let root = &parsed[2];
+    assert_eq!(root.get("name").and_then(Json::as_str), Some("root"));
+    assert_eq!(root.get("parent"), Some(&Json::Null));
+    assert_eq!(root.path(&["fields", "done"]), Some(&Json::Bool(true)));
+    assert_eq!(child.get("parent"), root.get("span"));
+    for key in ["span", "start_us", "dur_us"] {
+        assert!(root.get(key).is_some(), "root missing {key}");
+        assert!(child.get(key).is_some(), "child missing {key}");
+    }
+
+    let s = t.summary_json();
+    assert_eq!(s.path(&["root", "count"]).and_then(Json::as_i64), Some(1));
+    assert_eq!(s.path(&["child", "count"]).and_then(Json::as_i64), Some(1));
+    assert!(s.path(&["child", "total_us"]).and_then(Json::as_f64).is_some());
+}
+
+/// A disabled tracer is free: spans are noops, nothing is recorded.
+#[test]
+fn disabled_tracer_emits_nothing() {
+    let t = Tracer::disabled();
+    assert!(!t.enabled());
+    {
+        let mut s = t.span_with("x", &[("a", Json::num(1.0))]);
+        s.field("b", Json::num(2.0));
+        assert_eq!(s.id(), 0);
+    }
+    t.event("e", &[]);
+    assert!(t.lines().is_empty());
+    assert_eq!(t.summary_json(), Json::Object(Default::default()));
+}
+
+/// The `/proc` sampler fills RSS/CPU time series: at least the
+/// synchronous startup sample plus the final sample on stop.
+#[cfg(target_os = "linux")]
+#[test]
+fn sysmon_records_rss_and_cpu_series() {
+    use std::time::Duration;
+
+    use kcore_embed::obs::metrics::Registry;
+    use kcore_embed::obs::sysmon::{Sysmon, CPU_METRIC, RSS_METRIC};
+
+    let reg = Arc::new(Registry::new());
+    let mon = Sysmon::start(Arc::clone(&reg), Duration::from_millis(10));
+    thread::sleep(Duration::from_millis(30));
+    mon.stop();
+    let snap = reg.snapshot();
+    for metric in [RSS_METRIC, CPU_METRIC] {
+        let n = snap.path(&["series", metric, "n"]).and_then(Json::as_i64).unwrap_or(0);
+        assert!(n >= 2, "{metric}: {n} samples in {}", snap.to_string());
+    }
+    let rss = snap.path(&["gauges", RSS_METRIC]).and_then(Json::as_f64).unwrap_or(0.0);
+    assert!(rss > 0.0, "rss gauge {rss}");
+}

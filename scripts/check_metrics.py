@@ -1,0 +1,28 @@
+#!/usr/bin/env python3
+"""Parse-check a daemon `metrics` reply (one-line JSON registry snapshot).
+
+Reads the snapshot from stdin and asserts the shape DESIGN.md
+§Observability promises: connection counters, per-verb latency
+histograms with p50/p90/p99, the swap gauge, and (on Linux) /proc
+RSS/CPU series with at least two samples.
+"""
+import json
+import sys
+
+snap = json.loads(sys.stdin.read().strip())
+for section in ("counters", "gauges", "histograms", "series"):
+    assert section in snap, f"missing section {section}"
+for counter in ("serve.connections", "serve.requests", "serve.rejected"):
+    assert counter in snap["counters"], f"missing counter {counter}"
+verbs = [k for k in snap["histograms"] if k.startswith("serve.verb.")]
+assert verbs, "no per-verb latency histograms"
+for name in verbs:
+    hist = snap["histograms"][name]
+    for key in ("count", "mean", "p50", "p90", "p99", "max"):
+        assert key in hist, f"{name} missing {key}"
+assert "serve.swaps" in snap["gauges"], "missing serve.swaps gauge"
+if sys.platform.startswith("linux"):
+    for series in ("proc.rss_bytes", "proc.cpu_secs"):
+        n = snap["series"].get(series, {}).get("n", 0)
+        assert n >= 2, f"{series} has {n} < 2 samples"
+print(f"metrics ok: {len(verbs)} verb histograms")

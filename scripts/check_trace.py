@@ -1,0 +1,35 @@
+#!/usr/bin/env python3
+"""Parse-check a --trace-out JSONL file (DESIGN.md §Observability).
+
+Asserts the six pipeline spans (load + five phases) each appear exactly
+once, the five phases nest under a single root `pipeline` span, and the
+sysmon event carries RSS/CPU series with at least two samples each.
+"""
+import json
+import sys
+
+path = sys.argv[1]
+spans = {}
+events = []
+with open(path) as f:
+    for line in f:
+        obj = json.loads(line)
+        if obj["kind"] == "span":
+            spans.setdefault(obj["name"], []).append(obj)
+        else:
+            events.append(obj)
+
+PHASES = ["core_decomposition", "walks", "train", "propagation", "export"]
+for name in ["pipeline", "load"] + PHASES:
+    assert len(spans.get(name, [])) == 1, f"expected exactly one {name} span"
+root = spans["pipeline"][0]
+assert root["parent"] is None, "pipeline span is not a root"
+for name in PHASES:
+    assert spans[name][0]["parent"] == root["span"], f"{name} not nested under pipeline"
+    assert spans[name][0]["dur_us"] >= 0, f"{name} has negative duration"
+mon = [e for e in events if e["kind"] == "sysmon"]
+assert len(mon) == 1, f"expected one sysmon event, got {len(mon)}"
+for series in ("rss_bytes", "cpu_secs"):
+    n = mon[0][series]["n"]
+    assert n >= 2, f"sysmon {series} has {n} < 2 samples"
+print(f"trace ok: {sum(len(v) for v in spans.values())} spans, sysmon sampled")
