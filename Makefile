@@ -1,6 +1,6 @@
 # Convenience targets; everything also works as plain cargo/python calls.
 
-.PHONY: build test bench bench-train bench-train-quick bench-serve artifacts smoke
+.PHONY: build test bench bench-train bench-train-quick bench-serve artifacts smoke chaos
 
 build:
 	cd rust && cargo build --release
@@ -51,6 +51,48 @@ bench-serve: build
 	  done
 	python3 -m json.tool BENCH_serve.json > /dev/null
 	@echo "BENCH_serve.json written"
+
+# Chaos drill (DESIGN.md §Robustness): first the in-process chaos
+# battery (tests/chaos.rs — every failpoint against a live daemon,
+# bit-identical last-good answers, parseable degradation), then a
+# scripted pass against a real daemon process with failpoints armed at
+# a fixed seed: queries under stream chaos must either succeed or fail
+# parseably, the daemon must survive to answer a clean `health` probe
+# (shape-checked by scripts/check_health.py) after the storm, and
+# shutdown must exit 0.
+chaos: build
+	cd rust && cargo test --release -q --test chaos
+	set -e; \
+	  ./rust/target/release/kcore-embed embed --graph cora \
+	    --backend native --walks 2 --walk-length 10 --dim 32 \
+	    --out /tmp/chaos_emb.tsv --store /tmp/chaos_emb.kce; \
+	  ./rust/target/release/kcore-embed serve --store /tmp/chaos_emb.kce \
+	    --listen-tcp 127.0.0.1:47321 --max-inflight 4 --fault-seed 3405691582 \
+	    --faults 'serve.stream.delay_ms=0.2:1,serve.stream.short_read=0.3,serve.stream.err=0.05' \
+	    & DPID=$$!; \
+	  trap 'kill $$DPID 2>/dev/null || true' EXIT; \
+	  for i in $$(seq 100); do \
+	    ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:47321 \
+	      --control stats >/dev/null 2>&1 && break; sleep 0.1; \
+	  done; \
+	  for i in $$(seq 40); do \
+	    ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:47321 \
+	      --node $$i --top-k 5 >/dev/null 2>&1 || true; \
+	  done; \
+	  kill -0 $$DPID; \
+	  for i in $$(seq 50); do \
+	    ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:47321 \
+	      --control health > /tmp/chaos_health.json 2>/dev/null && break; \
+	    sleep 0.1; \
+	  done; \
+	  python3 scripts/check_health.py < /tmp/chaos_health.json; \
+	  for i in $$(seq 50); do \
+	    ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:47321 \
+	      --control shutdown >/dev/null 2>&1 && break; \
+	    kill -0 $$DPID 2>/dev/null || break; sleep 0.1; \
+	  done; \
+	  wait $$DPID
+	@echo "chaos drill survived"
 
 # AOT-compile the PJRT HLO artifacts (requires the python toolchain;
 # rust falls back to --backend native without them).

@@ -313,17 +313,22 @@ pub fn run_pipeline_traced(
     // Phase 6b: signal a running serving daemon to hot-swap to the
     // artifact just exported (validated above: notify needs export).
     // Non-fatal on failure: a down daemon must not discard a completed
-    // training run — the caller still gets its embedding and artifact.
-    // (`make smoke` still hard-fails a broken notify path: the daemon's
-    // answers would not change after the re-export.)
+    // training run — the connect itself retries with backoff (inside
+    // `notify_swap` → `client_exchange`), and if the daemon still
+    // cannot be reached or refuses the swap, the pipeline warns and
+    // succeeds, recording `daemon_ack: failed (...)` in the report so
+    // the miss is visible, not silent. (`make smoke` still hard-fails
+    // a broken notify path: the daemon's answers would not change
+    // after the re-export.)
     let daemon_ack = match (&cfg.notify_daemon, &cfg.export_store) {
         (Some(addr), Some(path)) => {
             let addr = crate::serve::server::ServeAddr::parse(addr);
             match crate::serve::server::notify_swap(&addr, path) {
                 Ok(ack) => Some(ack),
                 Err(e) => {
-                    eprintln!("warning: serving daemon at {addr} not notified: {e:#}");
-                    None
+                    let msg = format!("{e:#}").replace('\n', " ");
+                    eprintln!("warning: serving daemon at {addr} not notified: {msg}");
+                    Some(format!("failed ({msg})"))
                 }
             }
         }
@@ -567,14 +572,15 @@ mod tests {
         assert!(run_pipeline(&g, &cfg, None).is_err());
         // With an export but nothing listening: the run must still
         // succeed and keep its outputs — a down daemon costs only the
-        // notification (warned, ack absent).
+        // notification (warned, recorded as a failed ack).
         let path = std::env::temp_dir().join(format!(
             "kcore_embed_pipeline_notify_{}.kce",
             std::process::id()
         ));
         cfg.export_store = Some(path.clone());
         let out = run_pipeline(&g, &cfg, None).unwrap();
-        assert_eq!(out.daemon_ack, None);
+        let ack = out.daemon_ack.as_deref().expect("failed notify still records an ack");
+        assert!(ack.starts_with("failed"), "unreachable daemon -> failed ack, got {ack:?}");
         assert!(path.exists(), "export should land even when notify fails");
         std::fs::remove_file(&path).unwrap();
     }

@@ -62,13 +62,14 @@ COMMANDS
             [--threads N] [(--graph NAME | --edges PATH) [--op OP]]
             [--listen SOCKET | --listen-tcp HOST:PORT]  (daemon mode)
             [--max-conns N] [--read-timeout-ms MS] [--trace-out PATH]
+            [--max-inflight N] [--faults SPEC] [--fault-seed N]
   query     --store ARTIFACT (--node V [--top-k K] | --edge U,V)
             [--metric dot|cosine] [--quantized] [--in-memory]
             [(--graph NAME | --edges PATH) [--op OP]]
   query     (--connect ADDR | --connect-tcp HOST:PORT)
             (--node V [--top-k K] | --edge U,V |
             --control swap --store ARTIFACT |
-            --control stats|metrics|shutdown)
+            --control stats|metrics|health|shutdown)
   loadgen   (--connect ADDR | --connect-tcp HOST:PORT)
             [--scenario baseline|fanout|fanin|poisson|all] [--clients N]
             [--batches N] [--batch N] [--seed N] [--rate R]
@@ -102,11 +103,22 @@ serving and hot-swaps artifact generations without downtime —
 re-exports over the watched path are picked up automatically, `embed
 --notify ADDR` pushes a swap after export (ADDR is a socket path or
 host:port), and `query --connect ADDR` / `--connect-tcp HOST:PORT`
-sends queries or the swap/stats/metrics/shutdown control verbs (stats
-and metrics answer one-line JSON). --max-conns caps live connections
-(over-capacity clients get one parseable err line; 0 = unlimited,
-default 256) and --read-timeout-ms closes connections idle past the
-limit (0 disables, default 30000).
+sends queries or the swap/stats/metrics/health/shutdown control verbs
+(stats, metrics and health answer one-line JSON). --max-conns caps live
+connections (over-capacity clients get one parseable err line; 0 =
+unlimited, default 256) and --read-timeout-ms closes connections idle
+past the limit (0 disables, default 30000).
+
+Robustness (DESIGN.md §Robustness): the daemon degrades instead of
+dying — a panicking connection handler is caught (one connection drops,
+`serve.panics` counts it), a failed or corrupt swap keeps the last-good
+generation serving (the `health` verb reports last_swap_result), and
+--max-inflight N sheds batches past N concurrent executions with
+parseable `err overloaded` lines (0 = unlimited, default). Failure
+injection for chaos drills: --faults 'name=always|p|N[:VALUE],...'
+arms named failpoints (see `make chaos`), --fault-seed N makes
+probabilistic faults replayable; the KCORE_FAULTS / KCORE_FAULT_SEED
+environment variables do the same for any subcommand.
 
 Observability (DESIGN.md §Observability): --trace-out PATH (embed and
 daemon-mode serve) writes span-trace JSONL — one span per pipeline
@@ -134,6 +146,12 @@ fn main() {
     if args.command.is_none() || args.has_flag("help") {
         print!("{USAGE}");
         return;
+    }
+    // Environment-driven failpoints (KCORE_FAULTS/KCORE_FAULT_SEED)
+    // apply to every subcommand; `serve --faults` layers on top.
+    if let Err(e) = kcore_embed::obs::faults::init_from_env() {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
     }
     let cmd = args.command.clone().unwrap();
     let result = match cmd.as_str() {
@@ -482,7 +500,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .get_u64("read-timeout-ms", 30_000)
             .map_err(anyhow::Error::msg)?;
         let trace_out = args.opt_str("trace-out").map(PathBuf::from);
+        let max_inflight = args.get_usize("max-inflight", 0).map_err(anyhow::Error::msg)?;
+        let fault_spec = args.opt_str("faults");
+        let fault_seed = args.get_u64("fault-seed", 0).map_err(anyhow::Error::msg)?;
         args.finish().map_err(anyhow::Error::msg)?;
+        if let Some(spec) = fault_spec {
+            kcore_embed::obs::faults::global()
+                .configure(&spec, fault_seed)
+                .context("parsing --faults")?;
+        }
+        if kcore_embed::obs::faults::armed() {
+            eprintln!("daemon: FAILPOINTS ARMED (chaos drill — not a production configuration)");
+        }
         let opts = GenerationOpts {
             serve: ServeOpts {
                 metric,
@@ -496,6 +525,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             op,
             seed,
             in_memory,
+            verify_on_load: true,
         };
         let has_graph = graph.is_some();
         let gens = GenerationStore::open(Path::new(&store_path), graph, opts)?;
@@ -520,15 +550,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 Some(Duration::from_millis(timeout_ms))
             },
             max_conns,
+            max_inflight,
             trace: Tracer::from_trace_out(trace_out.as_deref())?,
         };
         let stats = run_server(Arc::new(gens), &server_opts)?;
         eprintln!(
-            "daemon: clean shutdown after {} connections, {} requests, {} swaps, {} rejected",
+            "daemon: clean shutdown after {} connections, {} requests, {} swaps, {} rejected, \
+             {} panics caught, {} shed",
             stats.connections,
             stats.requests,
             stats.swaps,
-            stats.rejected
+            stats.rejected,
+            stats.panics,
+            stats.shed
         );
         return Ok(());
     }
@@ -628,8 +662,9 @@ fn cmd_query_connect(args: &Args, addr: &ServeAddr) -> Result<()> {
         }
         Some("stats") => vec![ClientMsg::Stats.encode()],
         Some("metrics") => vec![ClientMsg::Metrics.encode()],
+        Some("health") => vec![ClientMsg::Health.encode()],
         Some("shutdown") => vec![ClientMsg::Shutdown.encode()],
-        Some(x) => bail!("unknown --control {x:?} (swap|stats|metrics|shutdown)"),
+        Some(x) => bail!("unknown --control {x:?} (swap|stats|metrics|health|shutdown)"),
         None => {
             let mut ls = Vec::new();
             if let Some(v) = node {
@@ -641,7 +676,7 @@ fn cmd_query_connect(args: &Args, addr: &ServeAddr) -> Result<()> {
             if ls.is_empty() {
                 bail!(
                     "specify --node V and/or --edge U,V (or --control \
-                     swap|stats|metrics|shutdown)"
+                     swap|stats|metrics|health|shutdown)"
                 );
             }
             ls

@@ -1,0 +1,458 @@
+//! Failpoint registry: deterministic fault injection for chaos testing.
+//!
+//! A process-wide table of *named failpoints* that production code probes
+//! at its fragile seams (artifact writes, mmap loads, stream reads,
+//! generation swaps, verb dispatch). Every probe site is a plain function
+//! call — `faults::check("store.write.torn")` — and the whole subsystem
+//! costs **one relaxed atomic load** when nothing is armed, so the hooks
+//! stay compiled into release builds and `make bench-serve` sees no
+//! regression with faults off.
+//!
+//! Failpoints are configured from a spec string (CLI `--faults` or the
+//! `KCORE_FAULTS` env var):
+//!
+//! ```text
+//! name=always          fire on every hit
+//! name=0.25            fire with probability 0.25 (seeded RNG, replayable)
+//! name=3               fire on the next 3 hits, then stay quiet
+//! name=off             disarm (remove) the failpoint
+//! name=ARM:VALUE       attach a u64 payload (e.g. a delay in ms)
+//! ```
+//!
+//! Specs are comma-separated: `--faults "serve.stream.delay_ms=0.2:5,swap.load.err=1"`.
+//! Probabilistic failpoints draw from a per-name [`Rng`] seeded with
+//! `seed ^ fnv1a(name)`, so a fixed `--fault-seed` replays the exact same
+//! fault schedule — the chaos battery (`tests/chaos.rs`) depends on this.
+//!
+//! The global registry is what production seams consult; unit tests that
+//! need isolation construct their own [`FaultRegistry`] instead (the lib
+//! test binary runs tests concurrently, so global count-N faults would be
+//! consumed by unrelated tests).
+
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+/// Env var holding a fault spec applied at process start (same grammar as
+/// `--faults`).
+pub const FAULTS_ENV: &str = "KCORE_FAULTS";
+
+/// Env var holding the u64 seed for probabilistic failpoints (default 0).
+pub const FAULT_SEED_ENV: &str = "KCORE_FAULT_SEED";
+
+/// How an armed failpoint decides whether a given hit fires.
+enum Arm {
+    /// Fire on every hit.
+    Always,
+    /// Fire with this probability per hit, drawn from the failpoint's RNG.
+    Prob(f64),
+    /// Fire on the next N hits (decremented atomically), then go quiet.
+    Count(AtomicU64),
+}
+
+/// One named failpoint: arming mode, optional payload, and hit/fire tallies.
+pub struct Failpoint {
+    arm: Arm,
+    /// Payload delivered when the point fires (e.g. a delay in ms); 0 when
+    /// the spec carried no `:VALUE` suffix.
+    value: u64,
+    rng: Mutex<Rng>,
+    hits: AtomicU64,
+    fired: AtomicU64,
+}
+
+impl Failpoint {
+    /// Record a hit and decide whether it fires; returns the payload on fire.
+    fn check(&self) -> Option<u64> {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        let fire = match &self.arm {
+            Arm::Always => true,
+            Arm::Prob(p) => self
+                .rng
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .gen_bool(*p),
+            Arm::Count(remaining) => remaining
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+                .is_ok(),
+        };
+        if fire {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+            Some(self.value)
+        } else {
+            None
+        }
+    }
+
+    /// Total times this failpoint has fired since it was configured.
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::Relaxed)
+    }
+
+    /// Total times this failpoint has been probed since it was configured.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+}
+
+/// A table of named failpoints.
+///
+/// The process-wide instance lives behind [`global()`]; tests construct
+/// their own for isolation. `armed` is the single-relaxed-load fast path:
+/// it is true iff at least one failpoint is configured, and every module
+/// helper consults it before touching the table mutex.
+pub struct FaultRegistry {
+    armed: AtomicBool,
+    points: Mutex<Vec<(String, Arc<Failpoint>)>>,
+}
+
+static GLOBAL: FaultRegistry = FaultRegistry::new();
+
+impl FaultRegistry {
+    /// An empty, disarmed registry (const so the global can be a `static`).
+    pub const fn new() -> FaultRegistry {
+        FaultRegistry {
+            armed: AtomicBool::new(false),
+            points: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// True iff at least one failpoint is configured. One relaxed load.
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    /// Apply a comma-separated spec (`name=always|p|N[:VALUE]`, `name=off`).
+    ///
+    /// Re-configuring an existing name replaces it (tallies reset); `off`
+    /// removes it. Probabilistic points seed their RNG with
+    /// `seed ^ fnv1a(name)` so each name draws an independent, replayable
+    /// stream.
+    pub fn configure(&self, spec: &str, seed: u64) -> Result<()> {
+        // Parse the whole spec before touching the table: a bad entry must
+        // not leave the registry half-applied.
+        let mut ops: Vec<(String, Option<Arc<Failpoint>>)> = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, arm_spec) = part.split_once('=').with_context(|| {
+                format!("failpoint spec {part:?} is missing '=' (want name=always|p|N[:VALUE])")
+            })?;
+            let name = name.trim();
+            if name.is_empty() {
+                bail!("failpoint spec {part:?} has an empty name");
+            }
+            let arm_spec = arm_spec.trim();
+            if arm_spec == "off" {
+                ops.push((name.to_string(), None));
+                continue;
+            }
+            let (mode, value) = match arm_spec.split_once(':') {
+                Some((mode, v)) => {
+                    let v = v.trim().parse::<u64>().with_context(|| {
+                        format!("failpoint {name}: bad value {v:?} (want u64)")
+                    })?;
+                    (mode.trim(), v)
+                }
+                None => (arm_spec, 0),
+            };
+            let arm = if mode == "always" {
+                Arm::Always
+            } else if mode.contains('.') {
+                let p = mode.parse::<f64>().with_context(|| {
+                    format!("failpoint {name}: bad probability {mode:?}")
+                })?;
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("failpoint {name}: probability {p} outside [0, 1]");
+                }
+                Arm::Prob(p)
+            } else {
+                let n = mode.parse::<u64>().with_context(|| {
+                    format!("failpoint {name}: bad mode {mode:?} (want always|p|N|off)")
+                })?;
+                Arm::Count(AtomicU64::new(n))
+            };
+            let point = Arc::new(Failpoint {
+                arm,
+                value,
+                rng: Mutex::new(Rng::new(seed ^ fnv1a(name))),
+                hits: AtomicU64::new(0),
+                fired: AtomicU64::new(0),
+            });
+            ops.push((name.to_string(), Some(point)));
+        }
+        let mut points = self.points.lock().unwrap_or_else(PoisonError::into_inner);
+        for (name, op) in ops {
+            match op {
+                None => points.retain(|(n, _)| n != &name),
+                Some(point) => match points.iter_mut().find(|(n, _)| *n == name) {
+                    Some(entry) => entry.1 = point,
+                    None => points.push((name, point)),
+                },
+            }
+        }
+        self.armed.store(!points.is_empty(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Probe a failpoint by name: records a hit and returns the payload if
+    /// it fires. Unconfigured names (and a disarmed registry) return `None`
+    /// after the one relaxed load.
+    pub fn check(&self, name: &str) -> Option<u64> {
+        if !self.armed() {
+            return None;
+        }
+        let point = {
+            let points = self.points.lock().unwrap_or_else(PoisonError::into_inner);
+            Arc::clone(&points.iter().find(|(n, _)| n == name)?.1)
+        };
+        point.check()
+    }
+
+    /// How many times the named failpoint has fired (0 if unconfigured).
+    pub fn fired(&self, name: &str) -> u64 {
+        let points = self.points.lock().unwrap_or_else(PoisonError::into_inner);
+        points
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| p.fired())
+            .unwrap_or(0)
+    }
+
+    /// `(name, fired)` for every configured failpoint, in configuration
+    /// order — feeds the `health` verb and the `fault.*` metrics gauges.
+    pub fn fired_counts(&self) -> Vec<(String, u64)> {
+        let points = self.points.lock().unwrap_or_else(PoisonError::into_inner);
+        points.iter().map(|(n, p)| (n.clone(), p.fired())).collect()
+    }
+
+    /// Remove every failpoint and disarm the fast path.
+    pub fn clear(&self) {
+        let mut points = self.points.lock().unwrap_or_else(PoisonError::into_inner);
+        points.clear();
+        self.armed.store(false, Ordering::Relaxed);
+    }
+}
+
+impl Default for FaultRegistry {
+    fn default() -> FaultRegistry {
+        FaultRegistry::new()
+    }
+}
+
+/// The process-wide registry consulted by production seams.
+pub fn global() -> &'static FaultRegistry {
+    &GLOBAL
+}
+
+/// One relaxed load: is any global failpoint configured?
+pub fn armed() -> bool {
+    GLOBAL.armed()
+}
+
+/// Probe a global failpoint; returns its payload if it fires.
+pub fn check(name: &str) -> Option<u64> {
+    GLOBAL.check(name)
+}
+
+/// Probe a global failpoint and return `Err("injected fault {name}")` if it
+/// fires — for seams whose natural error type is `anyhow`.
+pub fn fail(name: &str) -> Result<()> {
+    if GLOBAL.check(name).is_some() {
+        bail!("injected fault {name}");
+    }
+    Ok(())
+}
+
+/// Probe a global failpoint and return an `io::Error` if it fires — for
+/// seams inside `Read`/`Write` plumbing.
+pub fn fail_io(name: &str) -> std::io::Result<()> {
+    if GLOBAL.check(name).is_some() {
+        return Err(std::io::Error::other(format!("injected fault {name}")));
+    }
+    Ok(())
+}
+
+/// Probe a global failpoint and sleep for its payload in milliseconds if it
+/// fires (payload 0 = no-op even when fired).
+pub fn sleep_ms(name: &str) {
+    if let Some(ms) = GLOBAL.check(name) {
+        if ms > 0 {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+}
+
+/// Probe a global failpoint and panic if it fires — exercises the
+/// `catch_unwind` isolation in the daemon's connection and swap paths.
+pub fn maybe_panic(name: &str) {
+    if GLOBAL.check(name).is_some() {
+        panic!("injected fault {name}");
+    }
+}
+
+/// Best-effort text of a `catch_unwind` payload (`&str` / `String` panics;
+/// anything else gets a placeholder).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Configure the global registry from `KCORE_FAULTS` / `KCORE_FAULT_SEED`
+/// if set. Called once at process start so every binary (daemon, loadgen,
+/// test harness) honors the same env contract.
+pub fn init_from_env() -> Result<()> {
+    let Ok(spec) = std::env::var(FAULTS_ENV) else {
+        return Ok(());
+    };
+    let seed = match std::env::var(FAULT_SEED_ENV) {
+        Ok(s) => s
+            .trim()
+            .parse::<u64>()
+            .with_context(|| format!("parsing {FAULT_SEED_ENV}={s:?} (want u64)"))?,
+        Err(_) => 0,
+    };
+    GLOBAL
+        .configure(&spec, seed)
+        .with_context(|| format!("parsing {FAULTS_ENV}"))
+}
+
+/// FNV-1a over the failpoint name: decorrelates per-name RNG streams from a
+/// single `--fault-seed`.
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Every test uses a private registry: lib unit tests share one process
+    // and run concurrently, so global count-N faults would leak between
+    // them. Global-registry behavior is covered by tests/chaos.rs, which
+    // runs in its own process and serializes fault configuration.
+
+    #[test]
+    fn disarmed_registry_never_fires() {
+        let reg = FaultRegistry::new();
+        assert!(!reg.armed());
+        assert_eq!(reg.check("store.write.torn"), None);
+        assert_eq!(reg.fired("store.write.torn"), 0);
+        assert!(reg.fired_counts().is_empty());
+    }
+
+    #[test]
+    fn always_mode_fires_every_hit_with_payload() {
+        let reg = FaultRegistry::new();
+        reg.configure("serve.stream.delay_ms=always:25", 0).unwrap();
+        assert!(reg.armed());
+        for _ in 0..5 {
+            assert_eq!(reg.check("serve.stream.delay_ms"), Some(25));
+        }
+        assert_eq!(reg.fired("serve.stream.delay_ms"), 5);
+        // Unconfigured names still miss.
+        assert_eq!(reg.check("swap.load.err"), None);
+    }
+
+    #[test]
+    fn count_mode_fires_exactly_n_times() {
+        let reg = FaultRegistry::new();
+        reg.configure("swap.load.err=3", 7).unwrap();
+        let fires: Vec<bool> = (0..10).map(|_| reg.check("swap.load.err").is_some()).collect();
+        assert_eq!(fires.iter().filter(|f| **f).count(), 3);
+        assert!(fires[..3].iter().all(|f| *f), "count mode fires up-front");
+        assert_eq!(reg.fired("swap.load.err"), 3);
+        assert_eq!(reg.fired_counts(), vec![("swap.load.err".to_string(), 3)]);
+    }
+
+    #[test]
+    fn prob_mode_is_deterministic_for_a_seed_and_independent_per_name() {
+        let draw = |seed: u64| -> Vec<bool> {
+            let reg = FaultRegistry::new();
+            reg.configure("a.b=0.5,c.d=0.5", seed).unwrap();
+            (0..64).map(|_| reg.check("a.b").is_some()).collect()
+        };
+        assert_eq!(draw(42), draw(42), "same seed replays the same schedule");
+        assert_ne!(draw(42), draw(43), "different seeds diverge");
+
+        // Two names at the same seed draw decorrelated streams.
+        let reg = FaultRegistry::new();
+        reg.configure("a.b=0.5,c.d=0.5", 42).unwrap();
+        let a: Vec<bool> = (0..64).map(|_| reg.check("a.b").is_some()).collect();
+        let c: Vec<bool> = (0..64).map(|_| reg.check("c.d").is_some()).collect();
+        assert_ne!(a, c);
+        // And a 0.5 coin lands on both sides across 64 draws.
+        assert!(a.iter().any(|f| *f) && a.iter().any(|f| !*f));
+    }
+
+    #[test]
+    fn off_removes_and_reconfigure_replaces() {
+        let reg = FaultRegistry::new();
+        reg.configure("x.y=always", 0).unwrap();
+        assert_eq!(reg.check("x.y"), Some(0));
+        reg.configure("x.y=off", 0).unwrap();
+        assert!(!reg.armed());
+        assert_eq!(reg.check("x.y"), None);
+
+        reg.configure("x.y=2:9", 0).unwrap();
+        assert_eq!(reg.check("x.y"), Some(9));
+        // Replacing resets the remaining count and tallies.
+        reg.configure("x.y=1:4", 0).unwrap();
+        assert_eq!(reg.fired("x.y"), 0);
+        assert_eq!(reg.check("x.y"), Some(4));
+        assert_eq!(reg.check("x.y"), None);
+    }
+
+    #[test]
+    fn clear_disarms_everything() {
+        let reg = FaultRegistry::new();
+        reg.configure("a.b=always,c.d=0.5:7", 1).unwrap();
+        assert!(reg.armed());
+        reg.clear();
+        assert!(!reg.armed());
+        assert_eq!(reg.check("a.b"), None);
+        assert!(reg.fired_counts().is_empty());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_context() {
+        let reg = FaultRegistry::new();
+        for bad in [
+            "noequals",
+            "=always",
+            "x.y=1.5",
+            "x.y=-0.5",
+            "x.y=notanumber",
+            "x.y=always:notanumber",
+        ] {
+            let err = reg.configure(bad, 0).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("failpoint"), "{bad:?} -> {msg}");
+        }
+        // A half-bad spec must not leave the registry half-armed for the
+        // bad name.
+        assert_eq!(reg.check("x.y"), None);
+    }
+
+    #[test]
+    fn panic_message_extracts_str_and_string() {
+        let p = std::panic::catch_unwind(|| panic!("static payload")).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "static payload");
+        let p = std::panic::catch_unwind(|| panic!("formatted {}", 7)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "formatted 7");
+    }
+}

@@ -18,11 +18,19 @@
 //!   recording RSS/CPU curves into a registry (Linux; graceful no-op
 //!   elsewhere), so the paper's memory claims are tracked series
 //!   rather than one-off prints.
+//! - [`faults`] — a process-wide failpoint registry
+//!   ([`faults::FaultRegistry`]) for deterministic fault injection:
+//!   named points at the daemon's fragile seams, armed from a
+//!   `--faults`/`KCORE_FAULTS` spec with a seeded RNG, one relaxed
+//!   atomic load when disarmed. Drives the chaos battery
+//!   (`tests/chaos.rs`) and DESIGN.md §Robustness.
 
+pub mod faults;
 pub mod metrics;
 pub mod sysmon;
 pub mod trace;
 
+pub use faults::FaultRegistry;
 pub use metrics::{Counter, Gauge, Histogram, Registry, TimeSeries};
 pub use sysmon::{sample_proc, ProcSample, Sysmon};
 pub use trace::{Span, Tracer};

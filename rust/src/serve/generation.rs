@@ -30,10 +30,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::eval::operators::EdgeOp;
 use crate::graph::Graph;
+use crate::obs::faults;
 use crate::obs::metrics::Histogram;
 use crate::util::json::Json;
 
@@ -52,6 +53,12 @@ pub struct GenerationOpts {
     pub seed: u64,
     /// Load via the checksum-verifying in-memory path instead of mmap.
     pub in_memory: bool,
+    /// Force a full checksum pass on mmap loads before a generation can
+    /// publish. The mmap open intentionally defers payload reads, so
+    /// without this a bit-flipped artifact would swap in and serve
+    /// garbage rows; the daemon always verifies swap targets up front
+    /// (the in-memory loader verifies as a side effect of decoding).
+    pub verify_on_load: bool,
 }
 
 impl Default for GenerationOpts {
@@ -61,6 +68,7 @@ impl Default for GenerationOpts {
             op: EdgeOp::Hadamard,
             seed: 0,
             in_memory: false,
+            verify_on_load: true,
         }
     }
 }
@@ -90,11 +98,21 @@ impl Generation {
         opts: &GenerationOpts,
         graph: Option<&Graph>,
     ) -> Result<Generation> {
+        if faults::check("swap.load.err").is_some() {
+            bail!("injected fault swap.load.err loading {}", path.display());
+        }
+        faults::maybe_panic("swap.load.panic");
         let header = read_header(path)?;
         let store = if opts.in_memory {
             EmbeddingStore::open_in_memory(path)?
         } else {
-            EmbeddingStore::open_mmap(path)?
+            let store = EmbeddingStore::open_mmap(path)?;
+            if opts.verify_on_load {
+                store
+                    .verify()
+                    .with_context(|| format!("verifying artifact {}", path.display()))?;
+            }
+            store
         };
         let scan = build_scan_index(&store, opts.serve.topk.clone(), opts.serve.quantized);
         let scorer = match graph {
@@ -220,6 +238,10 @@ pub struct GenerationStore {
     swap_lock: Mutex<()>,
     next_seq: AtomicU64,
     swaps: AtomicU64,
+    /// Outcome of the most recent swap attempt (`"ok gen N"` or
+    /// `"err: .."`), surfaced by the `health` verb so operators can see
+    /// *why* the daemon is still on an old generation.
+    last_swap: Mutex<String>,
 }
 
 impl GenerationStore {
@@ -239,6 +261,7 @@ impl GenerationStore {
             swap_lock: Mutex::new(()),
             next_seq: AtomicU64::new(2),
             swaps: AtomicU64::new(0),
+            last_swap: Mutex::new("ok gen 1".to_string()),
         })
     }
 
@@ -257,6 +280,18 @@ impl GenerationStore {
     /// The artifact path [`Self::maybe_reload`] polls.
     pub fn watched_path(&self) -> PathBuf {
         self.watch.lock().expect("watch lock").clone()
+    }
+
+    /// Outcome of the most recent swap attempt: `"ok gen N"` after a
+    /// publish, `"err: .."` (single line) after a rejected or failed
+    /// load. Generation 1 counts as the first successful "swap".
+    pub fn last_swap_result(&self) -> String {
+        self.last_swap.lock().expect("last swap lock").clone()
+    }
+
+    fn record_swap(&self, result: String) {
+        let mut slot = self.last_swap.lock().expect("last swap lock");
+        *slot = result.replace('\n', " ");
     }
 
     /// Load `path` (or reload the watched path) and publish it as the
@@ -286,7 +321,14 @@ impl GenerationStore {
     pub fn maybe_reload(&self) -> Result<Option<Arc<Generation>>> {
         let watch = self.watched_path();
         let head = read_header(&watch)
-            .with_context(|| format!("checking watched artifact {}", watch.display()))?;
+            .with_context(|| format!("checking watched artifact {}", watch.display()));
+        let head = match head {
+            Ok(h) => h,
+            Err(e) => {
+                self.record_swap(format!("err: {e:#}"));
+                return Err(e);
+            }
+        };
         {
             let cur = self.current();
             if cur.path == watch && cur.header == head {
@@ -297,6 +339,22 @@ impl GenerationStore {
     }
 
     fn publish(&self, path: PathBuf, only_if_changed: bool) -> Result<Option<Arc<Generation>>> {
+        let result = self.publish_inner(path, only_if_changed);
+        match &result {
+            Ok(Some(gen)) => self.record_swap(format!("ok gen {}", gen.seq())),
+            // `Ok(None)` = nothing attempted (unchanged / someone else
+            // is loading); not a swap outcome, leave the record alone.
+            Ok(None) => {}
+            Err(e) => self.record_swap(format!("err: {e:#}")),
+        }
+        result
+    }
+
+    fn publish_inner(
+        &self,
+        path: PathBuf,
+        only_if_changed: bool,
+    ) -> Result<Option<Arc<Generation>>> {
         let _guard = if only_if_changed {
             // Watch-triggered reloads must never queue behind an
             // in-flight swap: if someone is already loading, keep
@@ -324,7 +382,24 @@ impl GenerationStore {
             return Ok(if only_if_changed { None } else { Some(cur) });
         }
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-        let gen = Arc::new(Generation::load(&path, seq, &self.opts, self.graph.as_ref())?);
+        // A panicking load (a bug in index build / scorer refit, or the
+        // swap.load.panic failpoint) must degrade exactly like a failed
+        // load: the daemon keeps serving `cur` and reports a parseable
+        // err. Caught here, inside the swap guard's scope but with no
+        // other lock held, so nothing is poisoned.
+        let loaded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            Generation::load(&path, seq, &self.opts, self.graph.as_ref())
+        }));
+        let gen = match loaded {
+            Ok(Ok(g)) => Arc::new(g),
+            Ok(Err(e)) => return Err(e),
+            Err(payload) => bail!(
+                "loading {} panicked: {} (still serving gen {})",
+                path.display(),
+                faults::panic_message(payload.as_ref()),
+                cur.seq()
+            ),
+        };
         *self.watch.lock().expect("watch lock") = path;
         *self.current.write().expect("generation lock") = gen.clone();
         self.swaps.fetch_add(1, Ordering::Relaxed);
@@ -421,6 +496,44 @@ mod tests {
         let req = Request::Neighbors { node: 1, k: 3 };
         assert!(gens.current().execute(&req).is_ok());
         std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn corrupt_swap_target_rejected_before_publish() {
+        let a = tmp("corrupt_a.kce");
+        let b = tmp("corrupt_b.kce");
+        write_artifact(&a, 30, 4, 11);
+        write_artifact(&b, 30, 4, 12);
+        // Flip one payload bit in B: the header still parses, so only
+        // the pre-publish checksum pass can catch it.
+        let mut bytes = std::fs::read(&b).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&b, &bytes).unwrap();
+
+        let gens = GenerationStore::open(&a, None, GenerationOpts::default()).unwrap();
+        assert_eq!(gens.last_swap_result(), "ok gen 1");
+        let req = Request::Neighbors { node: 0, k: 3 };
+        let before = gens.current().execute(&req).unwrap();
+
+        let err = gens.swap_to(Some(&b)).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        assert_eq!(gens.current().seq(), 1, "corrupt target published");
+        assert_eq!(gens.swaps(), 0);
+        assert_eq!(gens.watched_path(), a, "watch moved to the bad target");
+        let last_swap = gens.last_swap_result();
+        assert!(last_swap.starts_with("err:"), "{last_swap}");
+        assert!(!last_swap.contains('\n'), "must stay one line: {last_swap:?}");
+        // Last-good generation answers bit-identically.
+        assert_eq!(gens.current().execute(&req).unwrap(), before);
+
+        // Repair B: the swap goes through and the record flips to ok.
+        write_artifact(&b, 30, 4, 12);
+        let gen = gens.swap_to(Some(&b)).unwrap();
+        assert_eq!(gens.swaps(), 1);
+        assert_eq!(gens.last_swap_result(), format!("ok gen {}", gen.seq()));
+        std::fs::remove_file(&a).unwrap();
+        std::fs::remove_file(&b).unwrap();
     }
 
     #[test]

@@ -41,6 +41,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::obs::metrics::Histogram;
 use crate::serve::server::{client_exchange, ClientConn, ServeAddr};
+use crate::util::retry::RetryOpts;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -292,7 +293,10 @@ fn worker_run(
     };
 
     let mut out = WorkerOut::default();
-    let mut conn = ClientConn::connect(&o.addr).ok();
+    // Bounded fast retries (per-worker seed keeps jitter decorrelated):
+    // a briefly-full accept queue costs milliseconds, not a dead worker.
+    let retry = RetryOpts::fast(o.seed ^ 0xFA57 ^ worker as u64);
+    let mut conn = ClientConn::connect_with_retry(&o.addr, &retry).ok();
     // Everyone connects before anyone sends, so `fanout` really is N
     // simultaneous connections from the first batch on.
     barrier.wait();
@@ -308,8 +312,8 @@ fn worker_run(
             thread::sleep(Duration::from_micros(gaps[i]));
         }
         if conn.is_none() {
-            // One reconnect attempt per batch after a failure.
-            conn = ClientConn::connect(&o.addr).ok();
+            // One bounded reconnect round per batch after a failure.
+            conn = ClientConn::connect_with_retry(&o.addr, &retry).ok();
         }
         let bt = Instant::now();
         let exchanged = conn.as_mut().map(|c| c.exchange(batch));

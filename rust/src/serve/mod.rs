@@ -13,16 +13,20 @@
 //!
 //! On top of the one-shot tier sits the **persistent daemon**:
 //! [`generation`] holds hot-swappable artifact generations (Arc-epoch
-//! publish, readers never block, watched-path reload), [`protocol`]
-//! defines the line protocol plus `swap`/`stats`/`metrics`/`shutdown`
-//! control verbs (`stats` and `metrics` answer one-line JSON backed by
-//! the `obs::metrics` registry), and [`server`] runs one
+//! publish, readers never block, watched-path reload, last-good
+//! generation kept on a failed or panicking swap), [`protocol`]
+//! defines the line protocol plus the
+//! `swap`/`stats`/`metrics`/`health`/`shutdown` control verbs (`stats`,
+//! `metrics` and `health` answer one-line JSON backed by the
+//! `obs::metrics` registry), and [`server`] runs one
 //! transport-generic serve loop over a
 //! unix socket or TCP listener ([`ServeAddr`]) — the CLI exposes it as
 //! `serve --listen`/`--listen-tcp` and `query --connect`. [`loadtest`]
 //! drives a live daemon with deterministic multi-client scenarios
 //! (fan-out, bursty fan-in, Poisson arrivals) and records latency
-//! histograms — the `loadgen` binary.
+//! histograms — the `loadgen` binary. Degradation paths (panic
+//! isolation, load shedding, swap validation, failpoint injection) are
+//! described in DESIGN.md §Robustness and driven by `tests/chaos.rs`.
 //!
 //! Layering: `serve` sits above `embed`/`eval` (it consumes trained
 //! tables and reuses evaluation operators) and below `coordinator`
@@ -44,8 +48,8 @@ pub use loadtest::{LoadOpts, ScenarioResult, SCENARIOS};
 pub use protocol::ClientMsg;
 pub use query::{BatchReport, QueryService, Request, Response, ServeOpts};
 pub use server::{
-    client_exchange, notify_swap, run_server, run_server_ready, ClientConn, ServeAddr, ServerOpts,
-    ServerStats, MAX_LINE_BYTES,
+    client_exchange, connect_stream_retry, notify_swap, run_server, run_server_ready, ClientConn,
+    ServeAddr, ServerOpts, ServerStats, MAX_LINE_BYTES,
 };
 pub use store::{read_header, write_store, EmbeddingStore, StoreHeader};
 pub use topk::{build_scan_index, ExactScan, Metric, QuantizedScan, ScanIndex, TopKParams};

@@ -8,7 +8,7 @@
 //! live in `server`, not here. Client to
 //! server, a line is either a data request — the same `nn NODE K` /
 //! `edge U V` grammar [`Request::parse`] has always accepted, plus `#`
-//! comments — or one of four control verbs:
+//! comments — or one of five control verbs:
 //!
 //! ```text
 //! swap [PATH]   load PATH (or re-check the watched artifact) and
@@ -19,6 +19,9 @@
 //! metrics       one-line JSON snapshot of the daemon's full metrics
 //!               registry (per-verb latency histograms, connection
 //!               lifecycle counters, /proc RSS/CPU series)
+//! health        one-line JSON liveness + degradation report
+//!               (generation, last_swap_result, in-flight batches,
+//!               panics caught, requests shed, fault fire counts)
 //! shutdown      stop accepting connections and exit the serve loop
 //! ```
 //!
@@ -33,7 +36,7 @@
 //! round-trip property tests in `tests/daemon.rs` pin this. Control
 //! verbs are answered with one line: `ok ...` / `err ...` for `swap`
 //! and `shutdown`, a single-line JSON document (starting with `{`) for
-//! `stats` and `metrics`.
+//! `stats`, `metrics` and `health`.
 //!
 //! `swap` treats everything after the verb (trimmed) as the path, so
 //! artifact paths with interior whitespace work; the CLI sends
@@ -55,6 +58,8 @@ pub enum ClientMsg {
     Stats,
     /// Full metrics-registry snapshot as one JSON line.
     Metrics,
+    /// Liveness + degradation counters as one JSON line.
+    Health,
     Shutdown,
 }
 
@@ -83,6 +88,8 @@ impl ClientMsg {
             ["stats", ..] => bail!("stats takes no arguments"),
             ["metrics"] => Ok(Some(ClientMsg::Metrics)),
             ["metrics", ..] => bail!("metrics takes no arguments"),
+            ["health"] => Ok(Some(ClientMsg::Health)),
+            ["health", ..] => bail!("health takes no arguments"),
             ["shutdown"] => Ok(Some(ClientMsg::Shutdown)),
             ["shutdown", ..] => bail!("shutdown takes no arguments"),
             _ => Ok(Request::parse(trimmed)?.map(ClientMsg::Query)),
@@ -98,6 +105,7 @@ impl ClientMsg {
             ClientMsg::Swap(Some(p)) => format!("swap {}", p.display()),
             ClientMsg::Stats => "stats".to_string(),
             ClientMsg::Metrics => "metrics".to_string(),
+            ClientMsg::Health => "health".to_string(),
             ClientMsg::Shutdown => "shutdown".to_string(),
         }
     }
@@ -168,6 +176,7 @@ mod tests {
             ("swap /x/emb.kce", ClientMsg::Swap(Some(PathBuf::from("/x/emb.kce")))),
             ("stats", ClientMsg::Stats),
             ("metrics", ClientMsg::Metrics),
+            ("health", ClientMsg::Health),
             ("shutdown", ClientMsg::Shutdown),
             ("nn 3 10", ClientMsg::Query(Request::Neighbors { node: 3, k: 10 })),
             ("edge 1 2", ClientMsg::Query(Request::EdgeScore { u: 1, v: 2 })),
@@ -190,6 +199,7 @@ mod tests {
         for bad in [
             "stats now",
             "metrics now",
+            "health now",
             "shutdown -f",
             "nn 3",
             "nn 3 4 5",

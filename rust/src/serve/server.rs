@@ -47,12 +47,28 @@
 //! returns its counters, so a clean daemon exits 0 — `make smoke`
 //! checks exactly that on both transports.
 //!
+//! Degradation is deliberate, not accidental (DESIGN.md §Robustness):
+//! a panicking verb handler is caught per connection (`catch_unwind`
+//! in the spawn wrapper — the connection drops, `serve.panics` counts
+//! it, the process lives); batches past the `max_inflight` admission
+//! gate are *shed* with one parseable `err overloaded ...` line per
+//! pending request instead of queueing unboundedly; a failed swap
+//! leaves the last-good generation serving (see
+//! [`GenerationStore`]); and the `health` verb reports
+//! {generation, last_swap_result, in_flight, panics, shed, faults} as
+//! one JSON line. The [`crate::obs::faults`] failpoints threaded
+//! through the read/write/batch paths make every one of these paths
+//! drivable on demand (`tests/chaos.rs`).
+//!
 //! The client side lives here too: [`client_exchange`] (one
 //! request/response exchange over a fresh connection),
 //! [`ClientConn`] (a persistent connection exchanging blank-line
 //! batches — what the load generator drives), and [`notify_swap`]
 //! (what `embed --notify` and `query --control swap` send), so the
-//! daemon and its clients cannot drift apart.
+//! daemon and its clients cannot drift apart. Client dials go through
+//! [`connect_stream_retry`] (bounded exponential backoff with seeded
+//! jitter, [`crate::util::retry`]), so a daemon mid-restart costs a
+//! few hundred milliseconds, not a failed run.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -61,13 +77,14 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::faults;
 use crate::obs::metrics::{Counter, Registry};
 use crate::obs::sysmon::Sysmon;
 use crate::obs::trace::Tracer;
@@ -76,6 +93,7 @@ use crate::serve::protocol::{self, ClientMsg};
 use crate::serve::query::Request;
 use crate::util::json::Json;
 use crate::util::pool;
+use crate::util::retry::{self, RetryOpts};
 
 /// Hard cap on one protocol line. Requests are tens of bytes; anything
 /// past this is hostile or broken, answered with an `err` line and a
@@ -148,6 +166,12 @@ pub struct ServerOpts {
     /// parseable `err server at capacity ...` line and closed without
     /// getting a handler thread.
     pub max_conns: usize,
+    /// Load-shedding admission gate: cap on request batches in flight
+    /// across all connections; 0 = unlimited. A batch arriving over
+    /// the cap is *shed* — every pending request in it is answered
+    /// with one parseable `err overloaded ...` line (preserving the
+    /// one-reply-per-line contract) instead of queueing unboundedly.
+    pub max_inflight: usize,
     /// Span tracer for verb/batch timing (`serve --trace-out`);
     /// disabled by default.
     pub trace: Tracer,
@@ -160,6 +184,7 @@ impl ServerOpts {
             batch_threads: pool::default_threads(),
             read_timeout: Some(Duration::from_secs(30)),
             max_conns: 0,
+            max_inflight: 0,
             trace: Tracer::disabled(),
         }
     }
@@ -174,6 +199,10 @@ pub struct ServerStats {
     pub swaps: u64,
     /// Connections turned away at the `max_conns` cap.
     pub rejected: u64,
+    /// Connection handlers that panicked (caught; the daemon lived).
+    pub panics: u64,
+    /// Requests shed at the `max_inflight` admission gate.
+    pub shed: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -250,6 +279,21 @@ impl io::Write for ServeStream {
     }
 }
 
+#[cfg(unix)]
+mod sys {
+    //! One raw libc call (std already links libc, same trick as the
+    //! store's mmap bindings): `shutdown(2)` on the *listener* fd
+    //! forces a blocked `accept` to return, so daemon shutdown cannot
+    //! hang even when the self-connect wake fails.
+    use std::os::raw::c_int;
+
+    pub const SHUT_RDWR: c_int = 2;
+
+    extern "C" {
+        pub fn shutdown(fd: c_int, how: c_int) -> c_int;
+    }
+}
+
 /// Dial a daemon on either transport.
 pub fn connect_stream(addr: &ServeAddr) -> Result<ServeStream> {
     match addr {
@@ -271,6 +315,14 @@ pub fn connect_stream(addr: &ServeAddr) -> Result<ServeStream> {
             Ok(ServeStream::Tcp(s))
         }
     }
+}
+
+/// [`connect_stream`] through the bounded retry/backoff policy: rides
+/// out a daemon mid-restart, a briefly-full accept queue, or a swap
+/// stall instead of failing the caller's whole run on one refused
+/// connection.
+pub fn connect_stream_retry(addr: &ServeAddr, opts: &RetryOpts) -> Result<ServeStream> {
+    retry::retry(opts, &format!("connecting to {addr}"), |_| connect_stream(addr))
 }
 
 enum Acceptor {
@@ -351,6 +403,17 @@ impl Acceptor {
             }),
         }
     }
+
+    /// The listener's raw fd, kept by [`Ctl`] so the shutdown fallback
+    /// can force a blocked `accept` to return via `shutdown(2)`.
+    #[cfg(unix)]
+    fn raw_fd(&self) -> std::os::raw::c_int {
+        use std::os::unix::io::AsRawFd;
+        match self {
+            Acceptor::Unix(l) => l.as_raw_fd(),
+            Acceptor::Tcp(l) => l.as_raw_fd(),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -371,12 +434,24 @@ struct Ctl {
     connections: Arc<Counter>,
     requests: Arc<Counter>,
     rejected: Arc<Counter>,
+    /// Connection handlers that panicked (caught in the spawn wrapper).
+    panics: Arc<Counter>,
+    /// Requests shed at the admission gate.
+    shed: Arc<Counter>,
+    /// Request batches currently executing (admission gate state).
+    inflight: AtomicU64,
+    /// Gate bound; 0 = unlimited (see [`ServerOpts::max_inflight`]).
+    max_inflight: usize,
     /// Span tracer (`--trace-out`); disabled unless configured.
     trace: Tracer,
     /// Live connections by id, so shutdown can half-close readers
     /// that are idle-blocked in a read and would otherwise hang
     /// the final join forever. Handlers remove their own entry.
     conns: Mutex<HashMap<u64, ServeStream>>,
+    /// Raw listener fd for the shutdown fallback (`shutdown(2)` wakes
+    /// a blocked `accept` when the self-connect wake cannot).
+    #[cfg(unix)]
+    listener_fd: std::os::raw::c_int,
 }
 
 impl Ctl {
@@ -387,7 +462,31 @@ impl Ctl {
         // it can observe the flag and stop. It then half-closes the
         // registered connections itself — every accepted stream is
         // registered before the next accept, so none can be missed.
-        let _ = connect_stream(&self.wake);
+        //
+        // The wake connection itself can fail (fd exhaustion, a
+        // firewalled loopback, the serve.wake.err failpoint). Shutdown
+        // must never hang the process on it: bounded retries, then the
+        // hard fallback — drop every registered connection and force
+        // the listener out of `accept` directly.
+        for attempt in 0..3u32 {
+            let wake_blocked = faults::check("serve.wake.err").is_some();
+            if !wake_blocked && connect_stream(&self.wake).is_ok() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5 << attempt));
+        }
+        eprintln!("serve: shutdown wake connection failed; forcing the listener closed");
+        for conn in self.conns.lock().expect("conn registry").values() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        #[cfg(unix)]
+        {
+            // Linux returns from a blocked accept() with an error once
+            // the listening socket is shut down; the accept loop checks
+            // the shutdown flag immediately after accept returns, so an
+            // Err wake exits it just as cleanly as a connection would.
+            let _ = unsafe { sys::shutdown(self.listener_fd, sys::SHUT_RDWR) };
+        }
     }
 }
 
@@ -415,9 +514,15 @@ pub fn run_server_ready(
         connections: registry.counter("serve.connections"),
         requests: registry.counter("serve.requests"),
         rejected: registry.counter("serve.rejected"),
+        panics: registry.counter("serve.panics"),
+        shed: registry.counter("serve.shed"),
+        inflight: AtomicU64::new(0),
+        max_inflight: opts.max_inflight,
         trace: opts.trace.clone(),
         registry: Arc::clone(&registry),
         conns: Mutex::new(HashMap::new()),
+        #[cfg(unix)]
+        listener_fd: acceptor.raw_fd(),
     });
     // RSS/CPU curves for the whole daemon lifetime; the `metrics` verb
     // reports them as `proc.*` series (no-op off Linux).
@@ -471,8 +576,23 @@ pub fn run_server_ready(
         let threads = opts.batch_threads;
         let read_timeout = opts.read_timeout;
         handles.push(std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, &gens, &ctl, threads, read_timeout) {
-                eprintln!("serve: connection error: {e:#}");
+            // Panic isolation: a panicking handler (a bug, or the
+            // serve.verb.panic failpoint) costs one connection, never
+            // the process. The registry cleanup below runs either way,
+            // so shutdown's half-close sweep never sees a stale entry.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                handle_conn(stream, &gens, &ctl, threads, read_timeout)
+            }));
+            match result {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => eprintln!("serve: connection error: {e:#}"),
+                Err(payload) => {
+                    ctl.panics.inc();
+                    eprintln!(
+                        "serve: connection handler panicked: {} (connection dropped, daemon alive)",
+                        faults::panic_message(payload.as_ref())
+                    );
+                }
             }
             ctl.conns.lock().expect("conn registry").remove(&conn_id);
         }));
@@ -501,6 +621,8 @@ pub fn run_server_ready(
         requests: ctl.requests.get(),
         swaps: gens.swaps(),
         rejected: ctl.rejected.get(),
+        panics: ctl.panics.get(),
+        shed: ctl.shed.get(),
     })
 }
 
@@ -519,8 +641,52 @@ fn stats_reply(gens: &GenerationStore, ctl: &Ctl) -> String {
     Json::Object(obj).to_string()
 }
 
+/// The `health` verb's single-line JSON payload: liveness plus every
+/// degradation counter an operator needs to decide whether the daemon
+/// is serving fresh data, stale-but-good data, or shedding load.
+fn health_reply(gens: &GenerationStore, ctl: &Ctl) -> String {
+    let gen = gens.current();
+    let faults = Json::object(
+        faults::global()
+            .fired_counts()
+            .iter()
+            .map(|(name, fired)| (name.as_str(), Json::num(*fired as f64)))
+            .collect::<Vec<_>>(),
+    );
+    Json::object(vec![
+        ("status", Json::str("ok")),
+        ("generation", Json::num(gen.seq() as f64)),
+        ("strategy", Json::str(gen.strategy())),
+        (
+            "store",
+            Json::object(vec![
+                ("n", Json::num(gen.store().n() as f64)),
+                ("dim", Json::num(gen.store().dim() as f64)),
+            ]),
+        ),
+        ("last_swap_result", Json::str(&gens.last_swap_result())),
+        ("swaps", Json::num(gens.swaps() as f64)),
+        ("in_flight", Json::num(ctl.inflight.load(Ordering::Relaxed) as f64)),
+        ("max_inflight", Json::num(ctl.max_inflight as f64)),
+        ("panics", Json::num(ctl.panics.get() as f64)),
+        ("shed", Json::num(ctl.shed.get() as f64)),
+        ("faults", faults),
+    ])
+    .to_string()
+}
+
 /// Answer the queued batch from one generation snapshot, in
 /// request order, errors as per-line `err` responses.
+/// Decrements the in-flight gauge when a batch scope exits, so a
+/// panicking or erroring batch can never leak an admission slot.
+struct InflightSlot<'a>(&'a AtomicU64);
+
+impl Drop for InflightSlot<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 fn flush_batch<W: Write>(
     pending: &mut Vec<Request>,
     gens: &GenerationStore,
@@ -531,6 +697,33 @@ fn flush_batch<W: Write>(
     if pending.is_empty() {
         return Ok(());
     }
+    if faults::armed() {
+        // Both fire *before* the worker fan-out: the scoped pool's
+        // worker closures must never panic (that would abort the
+        // process), so chaos lands here where catch_unwind covers it.
+        faults::maybe_panic("serve.verb.panic");
+        faults::fail_io("serve.stream.write_err")?;
+    }
+    // Admission gate: bound concurrently-executing batches so overload
+    // degrades into fast parseable refusals instead of a latency
+    // collapse. One `err overloaded` line *per pending request* keeps
+    // the N-lines-in / N-replies-out batch contract intact for clients.
+    let prev = ctl.inflight.fetch_add(1, Ordering::Relaxed);
+    let _slot = InflightSlot(&ctl.inflight);
+    if ctl.max_inflight > 0 && prev >= ctl.max_inflight as u64 {
+        ctl.shed.add(pending.len() as u64);
+        for _ in 0..pending.len() {
+            writeln!(
+                w,
+                "err overloaded: {prev} batches in flight (max {}); retry later",
+                ctl.max_inflight
+            )?;
+        }
+        w.flush()?;
+        pending.clear();
+        return Ok(());
+    }
+    faults::sleep_ms("serve.batch.delay_ms");
     let gen = gens.current();
     let n = pending.len() as f64;
     let _span = ctl.trace.span_with("batch", &[("n", Json::num(n))]);
@@ -578,8 +771,12 @@ enum LineRead {
 fn read_line_capped(r: &mut impl BufRead, cap: usize) -> io::Result<LineRead> {
     let mut buf: Vec<u8> = Vec::new();
     loop {
+        if faults::armed() {
+            faults::sleep_ms("serve.stream.delay_ms");
+            faults::fail_io("serve.stream.err")?;
+        }
         let (done, used) = {
-            let available = match r.fill_buf() {
+            let mut available = match r.fill_buf() {
                 Ok(a) => a,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
                 Err(e)
@@ -596,6 +793,15 @@ fn read_line_capped(r: &mut impl BufRead, cap: usize) -> io::Result<LineRead> {
                 } else {
                     LineRead::Line(buf)
                 });
+            }
+            // Chaos: hand back one byte at a time so the loop's
+            // reassembly path (partial reads across fill_buf calls)
+            // gets exercised against a live peer.
+            if available.len() > 1
+                && faults::armed()
+                && faults::check("serve.stream.short_read").is_some()
+            {
+                available = &available[..1];
             }
             match available.iter().position(|&b| b == b'\n') {
                 Some(i) => {
@@ -713,9 +919,23 @@ fn handle_conn(
                                 let _s = ctl.trace.span("verb.metrics");
                                 let t0 = Instant::now();
                                 ctl.registry.gauge("serve.swaps").set(gens.swaps() as f64);
+                                // Fault fire counts surface as `fault.*`
+                                // gauges so the chaos battery can assert
+                                // every armed failpoint actually fired.
+                                for (name, fired) in faults::global().fired_counts() {
+                                    ctl.registry.gauge(&format!("fault.{name}")).set(fired as f64);
+                                }
                                 writeln!(w, "{}", ctl.registry.snapshot().to_string())?;
                                 ctl.registry
                                     .histogram("serve.verb.metrics")
+                                    .record(t0.elapsed().as_micros() as u64);
+                            }
+                            ClientMsg::Health => {
+                                let _s = ctl.trace.span("verb.health");
+                                let t0 = Instant::now();
+                                writeln!(w, "{}", health_reply(gens, ctl))?;
+                                ctl.registry
+                                    .histogram("serve.verb.health")
                                     .record(t0.elapsed().as_micros() as u64);
                             }
                             ClientMsg::Shutdown => {
@@ -750,7 +970,7 @@ fn handle_conn(
 /// Client side of one connection: send `lines`, half-close, read
 /// every reply line. Each call is one fresh connection.
 pub fn client_exchange(addr: &ServeAddr, lines: &[String]) -> Result<Vec<String>> {
-    let stream = connect_stream(addr)?;
+    let stream = connect_stream_retry(addr, &RetryOpts::default())?;
     let mut w = BufWriter::new(stream.try_clone().context("cloning connection stream")?);
     for line in lines {
         writeln!(w, "{line}")?;
@@ -775,7 +995,16 @@ pub struct ClientConn {
 
 impl ClientConn {
     pub fn connect(addr: &ServeAddr) -> Result<ClientConn> {
-        let stream = connect_stream(addr)?;
+        ClientConn::from_stream(connect_stream(addr)?)
+    }
+
+    /// [`ClientConn::connect`] with bounded jittered retries — rides out
+    /// a daemon restart or a briefly-full accept queue.
+    pub fn connect_with_retry(addr: &ServeAddr, opts: &RetryOpts) -> Result<ClientConn> {
+        ClientConn::from_stream(connect_stream_retry(addr, opts)?)
+    }
+
+    fn from_stream(stream: ServeStream) -> Result<ClientConn> {
         let reader = BufReader::new(stream.try_clone().context("cloning connection stream")?);
         Ok(ClientConn {
             reader,

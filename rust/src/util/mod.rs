@@ -1,7 +1,7 @@
 //! Infrastructure substrates: everything the offline build cannot pull
 //! from crates.io — PRNG, alias sampling, fork-join parallelism, JSON,
-//! CLI parsing, table/plot rendering, statistics, timing, and a mini
-//! property-testing harness.
+//! CLI parsing, table/plot rendering, statistics, timing, seeded
+//! retry/backoff, and a mini property-testing harness.
 
 pub mod alias;
 pub mod cli;
@@ -9,6 +9,7 @@ pub mod json;
 pub mod plot;
 pub mod pool;
 pub mod proptest;
+pub mod retry;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,191 @@
+//! Bounded retry with exponential backoff and full jitter.
+//!
+//! The daemon's clients (`client_exchange`, `notify_daemon`, the loadgen
+//! workers) share one policy: a fixed number of attempts, delays growing
+//! as `base * 2^i` capped at `max`, each drawn uniformly from the upper
+//! half of its window ("full jitter", AWS architecture-blog style) by a
+//! seeded [`Rng`] — so a fleet of retrying clients decorrelates instead
+//! of stampeding, and a fixed seed replays the exact schedule in tests.
+//!
+//! ```
+//! use kcore_embed::util::retry::{retry, RetryOpts};
+//!
+//! let mut failures = 2;
+//! let opts = RetryOpts { base: std::time::Duration::from_millis(1), ..RetryOpts::default() };
+//! let v = retry(&opts, "flaky op", |_attempt| {
+//!     if failures > 0 {
+//!         failures -= 1;
+//!         anyhow::bail!("transient");
+//!     }
+//!     Ok(42)
+//! })
+//! .unwrap();
+//! assert_eq!(v, 42);
+//! ```
+
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::time::Duration;
+
+/// Retry policy: attempt count, backoff window, and jitter seed.
+#[derive(Clone, Debug)]
+pub struct RetryOpts {
+    /// Total attempts (first try included). 1 = no retries.
+    pub attempts: usize,
+    /// Backoff before the second attempt; doubles each retry.
+    pub base: Duration,
+    /// Upper bound on any single backoff delay.
+    pub max: Duration,
+    /// Seed for the jitter RNG (fixed seed = replayable schedule).
+    pub seed: u64,
+}
+
+impl Default for RetryOpts {
+    /// Client-facing default: 5 attempts over roughly 0.3–0.6 s
+    /// cumulative — long enough to ride out a daemon restart or a swap
+    /// hiccup, short enough that a genuinely dead daemon fails fast.
+    fn default() -> RetryOpts {
+        RetryOpts {
+            attempts: 5,
+            base: Duration::from_millis(40),
+            max: Duration::from_secs(2),
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl RetryOpts {
+    /// Aggressive profile for throughput tools (loadgen workers): 3
+    /// attempts, 5 ms base, so a flaky connect costs microseconds of
+    /// budget instead of stalling a worker for half a second.
+    pub fn fast(seed: u64) -> RetryOpts {
+        RetryOpts {
+            attempts: 3,
+            base: Duration::from_millis(5),
+            max: Duration::from_millis(100),
+            seed,
+        }
+    }
+}
+
+/// The jittered delay schedule for a policy: `attempts - 1` entries, the
+/// i-th drawn uniformly from `[w/2, w)` where `w = min(base * 2^i, max)`.
+pub fn backoff_delays(opts: &RetryOpts) -> Vec<Duration> {
+    let mut rng = Rng::new(opts.seed);
+    let base_us = opts.base.as_micros().min(u128::from(u64::MAX)) as u64;
+    let max_us = opts.max.as_micros().min(u128::from(u64::MAX)) as u64;
+    (0..opts.attempts.saturating_sub(1))
+        .map(|i| {
+            let exp = base_us
+                .saturating_mul(1u64 << (i as u32).min(20))
+                .min(max_us)
+                .max(1);
+            let half = exp / 2;
+            Duration::from_micros(half + rng.gen_range(exp - half + 1))
+        })
+        .collect()
+}
+
+/// Run `f` up to `opts.attempts` times, sleeping the jittered backoff
+/// between attempts. `f` receives the 0-based attempt index. The final
+/// error is annotated with `"{what} failed after N attempts"`.
+pub fn retry<T>(opts: &RetryOpts, what: &str, mut f: impl FnMut(usize) -> Result<T>) -> Result<T> {
+    let delays = backoff_delays(opts);
+    let total = opts.attempts.max(1);
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..total {
+        if attempt > 0 {
+            std::thread::sleep(delays[attempt - 1]);
+        }
+        match f(attempt) {
+            Ok(v) => return Ok(v),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.expect("at least one attempt ran"))
+        .with_context(|| format!("{what} failed after {total} attempts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_windowed() {
+        let opts = RetryOpts {
+            attempts: 5,
+            base: ms(8),
+            max: ms(20),
+            seed: 9,
+        };
+        let a = backoff_delays(&opts);
+        let b = backoff_delays(&opts);
+        assert_eq!(a, b, "fixed seed replays the schedule");
+        assert_eq!(a.len(), 4);
+        // Windows: [4,8) [8,16) [10,20] [10,20] (16ms and 32ms cap at 20).
+        let windows = [(4u64, 8u64), (8, 16), (10, 20), (10, 20)];
+        for (d, (lo, hi)) in a.iter().zip(windows) {
+            assert!(*d >= ms(lo) && *d <= ms(hi), "{d:?} outside [{lo},{hi}]ms");
+        }
+        let c = backoff_delays(&RetryOpts { seed: 10, ..opts });
+        assert_ne!(a, c, "different seeds jitter differently");
+    }
+
+    #[test]
+    fn single_attempt_has_no_delays() {
+        let opts = RetryOpts {
+            attempts: 1,
+            ..RetryOpts::default()
+        };
+        assert!(backoff_delays(&opts).is_empty());
+        let opts = RetryOpts {
+            attempts: 0,
+            ..RetryOpts::default()
+        };
+        assert!(backoff_delays(&opts).is_empty());
+    }
+
+    #[test]
+    fn succeeds_on_a_later_attempt() {
+        let opts = RetryOpts {
+            attempts: 4,
+            base: ms(1),
+            max: ms(2),
+            seed: 3,
+        };
+        let mut calls = 0;
+        let v = retry(&opts, "op", |attempt| {
+            calls += 1;
+            assert_eq!(attempt + 1, calls);
+            if attempt < 2 {
+                bail!("transient {attempt}");
+            }
+            Ok(attempt)
+        })
+        .unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(calls, 3, "stops as soon as it succeeds");
+    }
+
+    #[test]
+    fn exhaustion_reports_attempt_count_and_last_error() {
+        let opts = RetryOpts {
+            attempts: 3,
+            base: ms(1),
+            max: ms(2),
+            seed: 3,
+        };
+        let err = retry::<()>(&opts, "connect to daemon", |attempt| {
+            bail!("refused ({attempt})")
+        })
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("connect to daemon failed after 3 attempts"), "{msg}");
+        assert!(msg.contains("refused (2)"), "last underlying error kept: {msg}");
+    }
+}

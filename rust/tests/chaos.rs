@@ -1,0 +1,448 @@
+//! Chaos battery (ISSUE 8 / DESIGN.md §Robustness): drive every
+//! failpoint in `obs::faults` against a live daemon and assert the
+//! degradation contract holds —
+//!
+//! 1. the daemon process never dies: a panicking verb handler costs
+//!    one connection, a failed or panicking swap load costs nothing,
+//!    stream faults cost one connection at most;
+//! 2. the last-good generation keeps answering **bit-identically**
+//!    through every injected failure;
+//! 3. every degraded path emits exactly one parseable `err` line per
+//!    affected request (shedding included);
+//! 4. the metrics registry and the `health` verb record each fault
+//!    that fired (`fault.*` gauges, `panics`/`shed` counters).
+//!
+//! Failpoints are process-global, and the test harness runs tests on
+//! multiple threads, so every test serializes on [`FAULT_LOCK`] and
+//! resets the registry on entry and on drop (panic-safe).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use kcore_embed::obs::faults;
+use kcore_embed::serve::server::connect_stream;
+use kcore_embed::serve::{
+    client_exchange, run_server_ready, write_store, ClientConn, EmbeddingStore, ExactScan,
+    GenerationOpts, GenerationStore, Metric, Response, ScanIndex, ServeAddr, ServerOpts,
+    ServerStats, TopKParams,
+};
+use kcore_embed::util::json::Json;
+use kcore_embed::util::retry::RetryOpts;
+use kcore_embed::util::rng::Rng;
+
+/// Serializes tests that touch the process-global fault registry.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Lock + clean registry on entry; clears again on drop even if the
+/// test panics, so one failure cannot poison the rest of the battery.
+struct FaultGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+fn fault_guard() -> FaultGuard {
+    let g = FAULT_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    faults::global().clear();
+    FaultGuard(g)
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        faults::global().clear();
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("kcore_embed_chaos_{name}_{}", std::process::id()));
+    p
+}
+
+fn write_artifact(path: &Path, n: usize, dim: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let vecs: Vec<f32> = (0..n * dim).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+    write_store(path, &vecs, n, dim, None).unwrap();
+}
+
+/// The wire line the daemon must answer `nn node k` with, computed
+/// independently through the exact scan over a fresh mmap of `path`.
+fn expected_nn(path: &Path, node: u32, k: usize) -> String {
+    let store = EmbeddingStore::open_mmap(path).unwrap();
+    let idx = ExactScan::build(&store, TopKParams::default());
+    let hits = idx.top_k_node(&store, node, k, Metric::Cosine);
+    kcore_embed::serve::protocol::encode_response(&Response::Neighbors { node, hits })
+}
+
+fn start_daemon_opts(
+    store: &Path,
+    opts: ServerOpts,
+) -> (thread::JoinHandle<ServerStats>, ServeAddr) {
+    let gens = GenerationStore::open(store, None, GenerationOpts::default()).unwrap();
+    let gens = Arc::new(gens);
+    let (tx, rx) = mpsc::channel();
+    let handle = thread::spawn(move || run_server_ready(gens, &opts, Some(tx)).unwrap());
+    let addr = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("daemon never reported its listen address");
+    (handle, addr)
+}
+
+fn start_tcp_daemon(store: &Path) -> (thread::JoinHandle<ServerStats>, ServeAddr) {
+    start_daemon_opts(store, ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into())))
+}
+
+fn lines(strs: &[&str]) -> Vec<String> {
+    strs.iter().map(|s| s.to_string()).collect()
+}
+
+fn health_json(addr: &ServeAddr) -> Json {
+    let replies = client_exchange(addr, &lines(&["health"])).unwrap();
+    Json::parse(&replies[0]).unwrap()
+}
+
+/// `store.write.torn` truncates the staged tmp file before the atomic
+/// rename, producing a torn artifact on disk. The daemon refuses to
+/// swap to it (validated before publish) and keeps serving the
+/// last-good generation bit-identically.
+#[test]
+fn torn_export_is_rejected_and_last_good_generation_serves() {
+    let _g = fault_guard();
+    let a = tmp("torn_a.kce");
+    let torn = tmp("torn_b.kce");
+    write_artifact(&a, 50, 6, 1);
+    let expected0 = expected_nn(&a, 0, 5);
+    let (daemon, addr) = start_tcp_daemon(&a);
+
+    faults::global().configure("store.write.torn=always", 0).unwrap();
+    write_artifact(&torn, 50, 6, 2);
+    assert!(faults::global().fired("store.write.torn") >= 1, "torn failpoint never fired");
+    faults::global().clear();
+
+    let torn_abs = torn.canonicalize().unwrap();
+    let swap_line = format!("swap {}", torn_abs.display());
+    let replies = client_exchange(&addr, std::slice::from_ref(&swap_line)).unwrap();
+    assert!(replies[0].starts_with("err"), "torn artifact accepted: {}", replies[0]);
+    assert!(!replies[0].contains('\n'));
+
+    let j = health_json(&addr);
+    assert_eq!(j.get("generation").and_then(Json::as_i64), Some(1));
+    let last = j.get("last_swap_result").and_then(Json::as_str).unwrap();
+    assert!(last.starts_with("err"), "{last:?}");
+    assert_eq!(client_exchange(&addr, &lines(&["nn 0 5"])).unwrap(), vec![expected0]);
+
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.swaps, 0);
+    std::fs::remove_file(&a).unwrap();
+    std::fs::remove_file(&torn).unwrap();
+}
+
+/// `serve.verb.panic` panics inside a batch flush: the connection
+/// drops, the process lives, `serve.panics` counts it, and the very
+/// next connection is answered bit-identically.
+#[test]
+fn verb_panic_costs_one_connection_not_the_process() {
+    let _g = fault_guard();
+    let p = tmp("panic.kce");
+    write_artifact(&p, 40, 6, 3);
+    let expected0 = expected_nn(&p, 0, 4);
+    let (daemon, addr) = start_tcp_daemon(&p);
+
+    faults::global().configure("serve.verb.panic=1", 0).unwrap();
+    let mut victim = ClientConn::connect(&addr).unwrap();
+    let err = victim.exchange(&lines(&["nn 0 4"])).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("closed the connection") || msg.to_lowercase().contains("connection"),
+        "panic surfaced as something other than a dropped connection: {msg}"
+    );
+    assert_eq!(faults::global().fired("serve.verb.panic"), 1);
+
+    // The daemon lived; a fresh connection answers bit-identically.
+    assert_eq!(client_exchange(&addr, &lines(&["nn 0 4"])).unwrap(), vec![expected0]);
+    let j = health_json(&addr);
+    assert_eq!(j.get("panics").and_then(Json::as_i64), Some(1), "health: {j:?}");
+    assert!(j.path(&["faults", "serve.verb.panic"]).is_some(), "fault missing from health");
+
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.panics, 1);
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// `swap.load.err` and `swap.load.panic` both leave the last-good
+/// generation serving: the error is answered as one `err` line, the
+/// panic is caught inside the swap path (never poisons the store),
+/// and after the faults clear the same target swaps cleanly.
+#[test]
+fn swap_load_fault_and_panic_keep_last_good_generation() {
+    let _g = fault_guard();
+    let a = tmp("swapfault_a.kce");
+    let b = tmp("swapfault_b.kce");
+    write_artifact(&a, 50, 6, 4);
+    write_artifact(&b, 50, 6, 5);
+    let expected0 = expected_nn(&a, 0, 5);
+    let (daemon, addr) = start_tcp_daemon(&a);
+    let swap_line = format!("swap {}", b.canonicalize().unwrap().display());
+
+    for spec in ["swap.load.err=always", "swap.load.panic=always"] {
+        faults::global().clear();
+        faults::global().configure(spec, 0).unwrap();
+        let replies = client_exchange(&addr, std::slice::from_ref(&swap_line)).unwrap();
+        assert!(replies[0].starts_with("err"), "{spec}: {}", replies[0]);
+        faults::global().clear();
+        // Still generation 1, still bit-identical, still swappable.
+        let j = health_json(&addr);
+        assert_eq!(j.get("generation").and_then(Json::as_i64), Some(1), "{spec}");
+        assert_eq!(client_exchange(&addr, &lines(&["nn 0 5"])).unwrap(), vec![expected0.clone()]);
+    }
+
+    let replies = client_exchange(&addr, std::slice::from_ref(&swap_line)).unwrap();
+    assert!(replies[0].starts_with("ok swap gen"), "{}", replies[0]);
+
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.swaps, 1, "only the clean swap published");
+    assert_eq!(stats.panics, 0, "swap panic is caught inside the swap path, not the handler");
+    std::fs::remove_file(&a).unwrap();
+    std::fs::remove_file(&b).unwrap();
+}
+
+/// Stream-level chaos: `serve.stream.delay_ms` and
+/// `serve.stream.short_read` only slow the wire down — answers stay
+/// bit-identical — while `serve.stream.err` costs one connection with
+/// the daemon intact.
+#[test]
+fn stream_faults_slow_or_drop_one_connection_never_the_daemon() {
+    let _g = fault_guard();
+    let p = tmp("stream.kce");
+    write_artifact(&p, 40, 6, 6);
+    let expected1 = expected_nn(&p, 1, 3);
+    let (daemon, addr) = start_tcp_daemon(&p);
+
+    faults::global()
+        .configure("serve.stream.delay_ms=always:2,serve.stream.short_read=always", 0)
+        .unwrap();
+    let replies = client_exchange(&addr, &lines(&["nn 1 3"])).unwrap();
+    assert_eq!(replies, vec![expected1.clone()], "degraded wire must not change answers");
+    assert!(faults::global().fired("serve.stream.short_read") >= 1);
+
+    faults::global().clear();
+    faults::global().configure("serve.stream.err=1", 0).unwrap();
+    let mut victim = ClientConn::connect(&addr).unwrap();
+    let _ = victim.exchange(&lines(&["nn 1 3"])); // connection dies or errors; either is fine
+    faults::global().clear();
+
+    assert_eq!(client_exchange(&addr, &lines(&["nn 1 3"])).unwrap(), vec![expected1]);
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    daemon.join().unwrap();
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// The admission gate: with `max_inflight = 1` and a 200 ms injected
+/// batch delay, a second concurrent batch is shed with one parseable
+/// `err overloaded` line per request — the client still gets exactly
+/// N replies for N lines — and `health` counts the shed requests.
+#[test]
+fn overload_sheds_with_parseable_err_lines() {
+    let _g = fault_guard();
+    let p = tmp("shed.kce");
+    write_artifact(&p, 40, 6, 7);
+    let mut opts = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
+    opts.max_inflight = 1;
+    let (daemon, addr) = start_daemon_opts(&p, opts);
+
+    faults::global().configure("serve.batch.delay_ms=always:200", 0).unwrap();
+    let slow = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            let mut c = ClientConn::connect(&addr).unwrap();
+            c.exchange(&lines(&["nn 0 4", "nn 1 4"])).unwrap()
+        })
+    };
+    // Let the slow batch enter the gate, then collide with it.
+    thread::sleep(Duration::from_millis(60));
+    let mut c = ClientConn::connect(&addr).unwrap();
+    let replies = c.exchange(&lines(&["nn 2 4", "nn 3 4"])).unwrap();
+    assert_eq!(replies.len(), 2, "shed batch still answers one line per request");
+    for r in &replies {
+        assert!(r.starts_with("err overloaded"), "expected shed line, got {r:?}");
+    }
+    let slow_replies = slow.join().unwrap();
+    assert_eq!(slow_replies.len(), 2);
+    for r in &slow_replies {
+        assert!(!r.starts_with("err"), "admitted batch failed: {r:?}");
+    }
+    faults::global().clear();
+
+    let j = health_json(&addr);
+    assert_eq!(j.get("shed").and_then(Json::as_i64), Some(2), "health: {j:?}");
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.shed, 2);
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// `serve.wake.err` blocks the shutdown self-connect wake entirely;
+/// the bounded-retry-then-force fallback must still complete shutdown
+/// instead of hanging the daemon forever.
+#[test]
+fn shutdown_completes_even_when_the_wake_connection_fails() {
+    let _g = fault_guard();
+    let p = tmp("wake.kce");
+    write_artifact(&p, 40, 6, 8);
+    let (daemon, addr) = start_tcp_daemon(&p);
+
+    faults::global().configure("serve.wake.err=always", 0).unwrap();
+    let replies = client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    assert_eq!(replies, vec!["ok shutdown".to_string()]);
+    let t0 = Instant::now();
+    let stats = daemon.join().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "forced shutdown took {:?}",
+        t0.elapsed()
+    );
+    assert!(faults::global().fired("serve.wake.err") >= 3, "wake retries never consulted fault");
+    assert_eq!(stats.requests, 0);
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// The full schedule: every serving-path failpoint armed at once with
+/// probabilistic rates at a fixed seed. The daemon must survive the
+/// whole storm, and every reply that is not a parseable `err` line
+/// must be bit-identical to the last-good generation's answer.
+#[test]
+fn full_chaos_schedule_survives_and_serves_bit_identically() {
+    let _g = fault_guard();
+    let p = tmp("storm.kce");
+    write_artifact(&p, 60, 6, 9);
+    let k = 4usize;
+    let expected: Vec<String> = (0..60u32).map(|v| expected_nn(&p, v, k)).collect();
+    let mut opts = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
+    opts.max_inflight = 2;
+    let (daemon, addr) = start_daemon_opts(&p, opts);
+
+    let spec = "serve.stream.delay_ms=0.2:1,serve.stream.short_read=0.3,\
+                serve.stream.err=0.05,serve.verb.panic=0.02,\
+                serve.batch.delay_ms=0.2:5,swap.load.err=0.5";
+    faults::global().configure(spec, 0xC0FFEE).unwrap();
+
+    let retry = RetryOpts::fast(0xC0FFEE);
+    let swap_line = format!("swap {}", p.canonicalize().unwrap().display());
+    let mut answered = 0u64;
+    let mut degraded = 0u64;
+    for round in 0..120u32 {
+        let Ok(mut conn) = ClientConn::connect_with_retry(&addr, &retry) else {
+            degraded += 1;
+            continue;
+        };
+        let line = if round % 20 == 19 {
+            swap_line.clone()
+        } else {
+            format!("nn {} {k}", round % 60)
+        };
+        match conn.exchange(std::slice::from_ref(&line)) {
+            Err(_) => degraded += 1, // injected stream death / panic
+            Ok(replies) => {
+                assert_eq!(replies.len(), 1);
+                let r = &replies[0];
+                if r.starts_with("err") {
+                    assert!(!r.contains('\n'), "unparseable err line: {r:?}");
+                    degraded += 1;
+                } else if let Some(want) = expected.get((round % 60) as usize) {
+                    if line.starts_with("nn") {
+                        assert_eq!(r, want, "degraded daemon changed an answer");
+                        answered += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert!(answered > 0, "storm drowned every request");
+    assert!(degraded > 0, "no fault ever fired — chaos schedule inert");
+
+    // Quiet the storm: the daemon must serve cleanly again, and the
+    // metrics registry must have recorded each fault that fired.
+    faults::global().clear();
+    assert_eq!(client_exchange(&addr, &lines(&["nn 0 4"])).unwrap(), vec![expected[0].clone()]);
+    let metrics = client_exchange(&addr, &lines(&["metrics"])).unwrap();
+    let m = Json::parse(&metrics[0]).unwrap();
+    for (name, fired) in faults::global().fired_counts() {
+        if fired > 0 {
+            let g = format!("fault.{name}");
+            let got = m.path(&["gauges", &g]).and_then(Json::as_i64);
+            assert_eq!(got, Some(fired as i64), "metrics missing {g}: {}", metrics[0]);
+        }
+    }
+    let j = health_json(&addr);
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("ok"));
+
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    daemon.join().unwrap();
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// Client-side retry: a connect attempted before the daemon is up
+/// succeeds once it appears, inside the default backoff budget.
+#[test]
+fn client_connect_retries_until_the_daemon_appears() {
+    let _g = fault_guard();
+    let p = tmp("retry.kce");
+    write_artifact(&p, 40, 6, 10);
+    let expected0 = expected_nn(&p, 0, 4);
+
+    // Reserve a concrete port, free it, and start the daemon on it
+    // after a delay — the client's first attempts must fail.
+    let sock = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = sock.local_addr().unwrap().port();
+    drop(sock);
+    let addr = ServeAddr::Tcp(format!("127.0.0.1:{port}"));
+    let daemon = {
+        let p = p.clone();
+        let addr = addr.clone();
+        thread::spawn(move || {
+            thread::sleep(Duration::from_millis(150));
+            let (handle, _) = start_daemon_opts(&p, ServerOpts::new(addr));
+            handle.join().unwrap()
+        })
+    };
+    // Default policy retries ~0.3–0.6 s cumulative: enough to bridge
+    // the 150 ms gap. (A race against another process grabbing the
+    // port is possible but vanishingly unlikely in CI's netns.)
+    let replies = client_exchange(&addr, &lines(&["nn 0 4"])).unwrap();
+    assert_eq!(replies, vec![expected0]);
+
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    daemon.join().unwrap();
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// Hitting a daemon with raw writes while `serve.stream.err` is armed
+/// in count mode: exactly one connection is broken, queued requests on
+/// other connections all answer. (Guards the "one fault = one blast
+/// radius" invariant rather than any specific code path.)
+#[test]
+fn fault_blast_radius_is_one_connection() {
+    let _g = fault_guard();
+    let p = tmp("radius.kce");
+    write_artifact(&p, 40, 6, 11);
+    let expected: Vec<String> = (0..4u32).map(|v| expected_nn(&p, v, 3)).collect();
+    let (daemon, addr) = start_tcp_daemon(&p);
+
+    faults::global().configure("serve.stream.err=1", 0).unwrap();
+    // The victim trips the one-shot fault on its first read poll...
+    let mut victim = connect_stream(&addr).unwrap();
+    victim.write_all(b"nn 0 3\n").unwrap();
+    thread::sleep(Duration::from_millis(100));
+    // ...so these four all pass through an unarmed failpoint.
+    for (v, want) in expected.iter().enumerate() {
+        let line = format!("nn {v} 3");
+        let replies = client_exchange(&addr, std::slice::from_ref(&line)).unwrap();
+        assert_eq!(&replies[0], want, "bystander connection degraded");
+    }
+    faults::global().clear();
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    daemon.join().unwrap();
+    std::fs::remove_file(&p).unwrap();
+}

@@ -524,6 +524,92 @@ fn connection_cap_rejects_with_a_parseable_error_line() {
     std::fs::remove_file(&p).unwrap();
 }
 
+/// Regression (ISSUE 8 satellite): the swap verb validates the target
+/// artifact (header + payload checksum) *before* publishing. A
+/// truncated and a bit-flipped store are both refused with a parseable
+/// `err` line, the swap counter stays untouched, and the last-good
+/// generation keeps answering bit-identically; repairing the file
+/// makes the same path swappable again.
+#[test]
+fn swap_to_corrupt_artifact_is_refused_before_publish() {
+    let a = tmp("swapval_a.kce");
+    let bad = tmp("swapval_bad.kce");
+    write_artifact(&a, 50, 6, 31);
+    let expected0 = expected_nn(&a, 0, 5);
+    let (daemon, addr) = start_tcp_daemon(&a);
+
+    write_artifact(&bad, 50, 6, 32);
+    let good_bytes = std::fs::read(&bad).unwrap();
+    let mut flipped = good_bytes.clone();
+    let last = flipped.len() - 1;
+    flipped[last] ^= 0x01;
+    let corrupt = [good_bytes[..good_bytes.len() / 2].to_vec(), flipped];
+
+    for bytes in &corrupt {
+        std::fs::write(&bad, bytes).unwrap();
+        let err = notify_swap(&addr, &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("daemon refused swap"), "{err:#}");
+        // Last-good generation still answers, bit-identically.
+        let replies = client_exchange(&addr, &lines(&["nn 0 5"])).unwrap();
+        assert_eq!(replies, vec![expected0.clone()]);
+    }
+    let replies = client_exchange(&addr, &lines(&["stats"])).unwrap();
+    let j = Json::parse(&replies[0]).unwrap();
+    assert_eq!(j.get("gen").and_then(Json::as_i64), Some(1), "{}", replies[0]);
+    assert_eq!(j.get("swaps").and_then(Json::as_i64), Some(0), "{}", replies[0]);
+
+    // Repair the artifact: the very same path now swaps cleanly.
+    write_artifact(&bad, 50, 6, 32);
+    let ack = notify_swap(&addr, &bad).unwrap();
+    assert!(ack.starts_with("ok swap gen"), "{ack}");
+
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.swaps, 1, "only the repaired swap published");
+    std::fs::remove_file(&a).unwrap();
+    std::fs::remove_file(&bad).unwrap();
+}
+
+/// The `health` verb answers one JSON line with liveness plus every
+/// degradation counter, and `last_swap_result` tracks a refused swap.
+#[test]
+fn health_verb_reports_liveness_and_last_swap_result() {
+    let p = tmp("health.kce");
+    write_artifact(&p, 40, 6, 33);
+    let (daemon, addr) = start_tcp_daemon(&p);
+    let mut conn = ClientConn::connect(&addr).unwrap();
+
+    let replies = conn.exchange(&lines(&["health"])).unwrap();
+    assert_eq!(replies.len(), 1);
+    assert!(!replies[0].contains('\n'));
+    let j = Json::parse(&replies[0]).unwrap();
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("ok"), "{}", replies[0]);
+    assert_eq!(j.get("generation").and_then(Json::as_i64), Some(1));
+    assert_eq!(j.get("last_swap_result").and_then(Json::as_str), Some("ok gen 1"));
+    assert_eq!(j.path(&["store", "n"]).and_then(Json::as_usize), Some(40));
+    for key in ["strategy", "swaps", "in_flight", "max_inflight", "panics", "shed", "faults"] {
+        assert!(j.get(key).is_some(), "health reply missing {key}: {}", replies[0]);
+    }
+
+    // A refused swap shows up as a single-line err in last_swap_result.
+    let missing = tmp("health_missing.kce");
+    let swap_line = format!("swap {}", missing.display());
+    let swap_replies = conn.exchange(std::slice::from_ref(&swap_line)).unwrap();
+    assert!(swap_replies[0].starts_with("err"), "{}", swap_replies[0]);
+    let replies = conn.exchange(&lines(&["health"])).unwrap();
+    let j = Json::parse(&replies[0]).unwrap();
+    let last = j.get("last_swap_result").and_then(Json::as_str).unwrap();
+    assert!(last.starts_with("err"), "refused swap not recorded: {last:?}");
+    assert_eq!(j.get("generation").and_then(Json::as_i64), Some(1));
+
+    drop(conn);
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.panics, 0);
+    assert_eq!(stats.shed, 0);
+    std::fs::remove_file(&p).unwrap();
+}
+
 /// Regression (ISSUE 6 satellite): `shutdown` must complete — draining
 /// pending batches — even while idle connections sit open with no read
 /// timeout, on either transport. Before the transport refactor the

@@ -1,0 +1,38 @@
+#!/usr/bin/env python3
+"""Parse-check a daemon `health` reply (one-line JSON liveness report).
+
+Reads the reply from stdin and asserts the shape DESIGN.md §Robustness
+promises: status "ok", the serving generation, the last swap outcome,
+the admission-gate state, the degradation counters, and a fault table
+(a dict of failpoint name -> fire count; empty when nothing is armed).
+"""
+import json
+import sys
+
+health = json.loads(sys.stdin.read().strip())
+for key in (
+    "status",
+    "generation",
+    "strategy",
+    "store",
+    "last_swap_result",
+    "swaps",
+    "in_flight",
+    "max_inflight",
+    "panics",
+    "shed",
+    "faults",
+):
+    assert key in health, f"missing key {key}"
+assert health["status"] == "ok", f"status {health['status']!r}"
+assert health["generation"] >= 1, f"generation {health['generation']}"
+assert isinstance(health["faults"], dict), "faults is not a name->count table"
+last = health["last_swap_result"]
+assert last.startswith(("ok", "err")), f"unparseable last_swap_result {last!r}"
+assert "\n" not in last, "last_swap_result spans lines"
+fired = {k: v for k, v in health["faults"].items() if v > 0}
+print(
+    f"health ok: gen {health['generation']}, last swap {last!r}, "
+    f"{health['panics']:.0f} panics, {health['shed']:.0f} shed, "
+    f"{len(fired)} failpoints fired"
+)
