@@ -21,45 +21,55 @@ bench-train:
 bench-train-quick:
 	cd rust && cargo bench --bench hotpaths -- --train-only --quick --json ../BENCH_train.json
 
-# Serving latency snapshot: run the daemon on loopback TCP and drive
-# the loadgen scenarios against the exact scan path, then again with
-# --quantized, merging both under their labels into BENCH_serve.json
-# (DESIGN.md §Serving). Fan-out is 8 clients x 125 batches = 1000
-# batches per labelled pass; loadgen exits non-zero on any failed
-# batch.
+# Serving latency snapshot (DESIGN.md §Serving): run the daemon on
+# loopback TCP under BOTH accept models and drive the same seeded
+# scenarios against each, merging results under the model's label in
+# BENCH_serve.json. Per model: baseline+fanout (8 clients x 125
+# batches x 8 lines = 1000 batches), then idleherd (1000 mostly-idle
+# connections carrying sparse poisson traffic while the daemon's own
+# proc.threads / proc.open_fds gauges are sampled mid-run — the
+# thread-per-connection vs event-loop cost difference in two numbers).
+# scripts/check_bench_serve.py asserts both labels, all three
+# scenarios, zero failed batches, and prints the threads-vs-eventloop
+# p99 comparison.
 bench-serve: build
 	set -e; \
+	  rm -f BENCH_serve.json; \
 	  ./rust/target/release/kcore-embed embed --graph cora \
 	    --backend native --walks 2 --walk-length 10 --dim 32 \
 	    --out /tmp/bench_serve_emb.tsv --store /tmp/bench_serve_emb.kce; \
-	  for label in exact quantized; do \
-	    if [ $$label = quantized ]; then QFLAG=--quantized; PORT=47318; \
-	    else QFLAG=; PORT=47317; fi; \
+	  for model in threads eventloop; do \
+	    if [ $$model = eventloop ]; then PORT=47318; else PORT=47317; fi; \
 	    ./rust/target/release/kcore-embed serve --store /tmp/bench_serve_emb.kce \
-	      $$QFLAG --listen-tcp 127.0.0.1:$$PORT & DPID=$$!; \
+	      --accept-model $$model --max-conns 1100 \
+	      --listen-tcp 127.0.0.1:$$PORT & DPID=$$!; \
 	    trap 'kill $$DPID 2>/dev/null || true' EXIT; \
 	    for i in $$(seq 100); do \
 	      ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:$$PORT \
 	        --control stats >/dev/null 2>&1 && break; sleep 0.1; \
 	    done; \
 	    ./rust/target/release/loadgen --connect-tcp 127.0.0.1:$$PORT \
-	      --scenario all --clients 8 --batches 125 --batch 8 --seed 7 \
-	      --json BENCH_serve.json --label $$label; \
+	      --scenario baseline,fanout --clients 8 --batches 125 --batch 8 --seed 7 \
+	      --json BENCH_serve.json --label $$model; \
+	    ./rust/target/release/loadgen --connect-tcp 127.0.0.1:$$PORT \
+	      --scenario idleherd --idle-conns 1000 --rate 50 \
+	      --clients 8 --batches 25 --batch 1 --seed 7 \
+	      --json BENCH_serve.json --label $$model; \
 	    ./rust/target/release/kcore-embed query --connect-tcp 127.0.0.1:$$PORT \
 	      --control shutdown; \
 	    wait $$DPID; \
 	  done
-	python3 -m json.tool BENCH_serve.json > /dev/null
+	python3 scripts/check_bench_serve.py BENCH_serve.json
 	@echo "BENCH_serve.json written"
 
 # Chaos drill (DESIGN.md §Robustness): first the in-process chaos
-# battery (tests/chaos.rs — every failpoint against a live daemon,
-# bit-identical last-good answers, parseable degradation), then a
-# scripted pass against a real daemon process with failpoints armed at
-# a fixed seed: queries under stream chaos must either succeed or fail
-# parseably, the daemon must survive to answer a clean `health` probe
-# (shape-checked by scripts/check_health.py) after the storm, and
-# shutdown must exit 0.
+# battery (tests/chaos.rs — every failpoint against a live daemon
+# under BOTH accept models, bit-identical last-good answers, parseable
+# degradation), then a scripted pass against a real event-loop daemon
+# process with failpoints armed at a fixed seed: queries under stream
+# chaos must either succeed or fail parseably, the daemon must survive
+# to answer a clean `health` probe (shape-checked by
+# scripts/check_health.py) after the storm, and shutdown must exit 0.
 chaos: build
 	cd rust && cargo test --release -q --test chaos
 	set -e; \
@@ -67,7 +77,8 @@ chaos: build
 	    --backend native --walks 2 --walk-length 10 --dim 32 \
 	    --out /tmp/chaos_emb.tsv --store /tmp/chaos_emb.kce; \
 	  ./rust/target/release/kcore-embed serve --store /tmp/chaos_emb.kce \
-	    --listen-tcp 127.0.0.1:47321 --max-inflight 4 --fault-seed 3405691582 \
+	    --listen-tcp 127.0.0.1:47321 --accept-model eventloop \
+	    --max-inflight 4 --fault-seed 3405691582 \
 	    --faults 'serve.stream.delay_ms=0.2:1,serve.stream.short_read=0.3,serve.stream.err=0.05' \
 	    & DPID=$$!; \
 	  trap 'kill $$DPID 2>/dev/null || true' EXIT; \

@@ -10,7 +10,7 @@
 //! ```text
 //! loadgen --connect-tcp 127.0.0.1:7878 --scenario fanout \
 //!         --clients 8 --batches 125 --batch 8 \
-//!         --json BENCH_serve.json --label exact
+//!         --json BENCH_serve.json --label threads
 //! ```
 
 use kcore_embed::serve::loadtest;
@@ -21,7 +21,7 @@ loadgen — drive a running kcore-embed serving daemon with load scenarios
 
 USAGE: loadgen (--connect ADDR | --connect-tcp HOST:PORT) [options]
 
-  --scenario S      baseline|fanout|fanin|poisson, comma list, or 'all'
+  --scenario S      baseline|fanout|fanin|poisson|idleherd, comma list, or 'all'
   --clients N       concurrent client connections (default 8)
   --batches N       batches per client (default 50)
   --batch N         request lines per batch (default 8)
@@ -31,12 +31,15 @@ USAGE: loadgen (--connect ADDR | --connect-tcp HOST:PORT) [options]
   --rate R          poisson arrivals per client per second (default 200)
   --edge-frac F     edge-verb fraction in the poisson mix (default 0.25)
   --stats-frac F    stats-verb fraction in the poisson mix (default 0.02)
+  --idle-conns N    idleherd: persistent connections to hold open (default 1000)
   --json PATH       merge results into PATH as {label: {scenario: ...}}
   --label NAME      label inside the json file (default: transport name)
   --allow-failures  exit 0 even when batches failed
 
 Each scenario prints one single-line JSON object with per-batch latency
 percentiles (p50/p90/p99/max microseconds), throughput and error counts.
+The idleherd scenario also samples the daemon's own proc.threads and
+proc.open_fds gauges mid-run, showing what N idle connections cost.
 ";
 
 fn main() {

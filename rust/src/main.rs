@@ -33,9 +33,9 @@ use kcore_embed::graph::{generators, io, metrics, Graph};
 use kcore_embed::obs::trace::Tracer;
 use kcore_embed::runtime::{default_artifacts_dir, Manifest, Runtime};
 use kcore_embed::serve::{
-    client_exchange, loadtest, notify_swap, run_server, ClientMsg, EdgeScorer, EdgeScorerParams,
-    EmbeddingStore, GenerationOpts, GenerationStore, Metric, QueryService, Request, Response,
-    ServeAddr, ServeOpts, ServerOpts, TopKParams,
+    client_exchange, loadtest, notify_swap, run_server, AcceptModel, ClientMsg, EdgeScorer,
+    EdgeScorerParams, EmbeddingStore, GenerationOpts, GenerationStore, Metric, QueryService,
+    Request, Response, ServeAddr, ServeOpts, ServerOpts, TopKParams,
 };
 use kcore_embed::util::cli::Args;
 
@@ -61,6 +61,7 @@ COMMANDS
             [--quantized] [--batch N] [--top-k K] [--in-memory]
             [--threads N] [(--graph NAME | --edges PATH) [--op OP]]
             [--listen SOCKET | --listen-tcp HOST:PORT]  (daemon mode)
+            [--accept-model threads|eventloop]
             [--max-conns N] [--read-timeout-ms MS] [--trace-out PATH]
             [--max-inflight N] [--faults SPEC] [--fault-seed N]
   query     --store ARTIFACT (--node V [--top-k K] | --edge U,V)
@@ -71,9 +72,10 @@ COMMANDS
             --control swap --store ARTIFACT |
             --control stats|metrics|health|shutdown)
   loadgen   (--connect ADDR | --connect-tcp HOST:PORT)
-            [--scenario baseline|fanout|fanin|poisson|all] [--clients N]
-            [--batches N] [--batch N] [--seed N] [--rate R]
-            [--json PATH --label NAME]   (see `loadgen --help`)
+            [--scenario baseline|fanout|fanin|poisson|idleherd|all]
+            [--clients N] [--batches N] [--batch N] [--seed N] [--rate R]
+            [--idle-conns N] [--json PATH --label NAME]
+            (see `loadgen --help`)
   bench     --exp NAME [--trials T] [--walks N] [--backend pjrt|native]
             [--seed N] [--out-dir DIR] [--quick]
 
@@ -107,7 +109,12 @@ sends queries or the swap/stats/metrics/health/shutdown control verbs
 (stats, metrics and health answer one-line JSON). --max-conns caps live
 connections (over-capacity clients get one parseable err line; 0 =
 unlimited, default 256) and --read-timeout-ms closes connections idle
-past the limit (0 disables, default 30000).
+past the limit (0 disables, default 30000). --accept-model picks the
+connection multiplexing model: `threads` (default) runs one handler
+thread per connection, `eventloop` (Linux) multiplexes every connection
+over one epoll loop plus a fixed worker pool, so N mostly-idle clients
+cost N file descriptors instead of N threads. Both models speak the
+same protocol and answer identical replies.
 
 Robustness (DESIGN.md §Robustness): the daemon degrades instead of
 dying — a panicking connection handler is caught (one connection drops,
@@ -128,9 +135,10 @@ verb snapshots its full metrics registry (per-verb latency histograms,
 connection counters) as one JSON line.
 
 Load testing: `loadgen` drives a running daemon with deterministic
-multi-client scenarios and records latency histograms; `make
-bench-serve` snapshots BENCH_serve.json for the exact and quantized
-scan paths.
+multi-client scenarios (including the idleherd mostly-idle herd) and
+records latency histograms; `make bench-serve` snapshots
+BENCH_serve.json for both accept models under the `threads` and
+`eventloop` labels.
 
 Run `make artifacts` once before using the pjrt backend.
 ";
@@ -501,6 +509,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map_err(anyhow::Error::msg)?;
         let trace_out = args.opt_str("trace-out").map(PathBuf::from);
         let max_inflight = args.get_usize("max-inflight", 0).map_err(anyhow::Error::msg)?;
+        let accept_model = AcceptModel::parse(&args.get_str("accept-model", "threads"))?;
         let fault_spec = args.opt_str("faults");
         let fault_seed = args.get_u64("fault-seed", 0).map_err(anyhow::Error::msg)?;
         args.finish().map_err(anyhow::Error::msg)?;
@@ -552,6 +561,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_conns,
             max_inflight,
             trace: Tracer::from_trace_out(trace_out.as_deref())?,
+            accept_model,
         };
         let stats = run_server(Arc::new(gens), &server_opts)?;
         eprintln!(

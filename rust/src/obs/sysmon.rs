@@ -1,21 +1,29 @@
 //! Background `/proc` resource sampler (DESIGN.md §Observability).
 //!
-//! On Linux, [`sample_proc`] reads two files for the current process:
+//! On Linux, [`sample_proc`] reads three sources for the current
+//! process:
 //!
 //! - `/proc/self/statm` — field 2 is resident pages; × page size
 //!   (`sysconf(_SC_PAGESIZE)`) gives RSS in bytes.
 //! - `/proc/self/stat` — `utime`/`stime` (the 14th/15th fields, i.e.
 //!   tokens 11/12 after the parenthesised, possibly space-containing
 //!   `comm` field); their sum ÷ `sysconf(_SC_CLK_TCK)` gives total CPU
-//!   seconds consumed.
+//!   seconds consumed. `num_threads` (overall field 20, token 17 after
+//!   the `comm`) gives the live OS thread count — the before/after
+//!   number for the accept-model comparison (`loadgen --scenario
+//!   idleherd`).
+//! - `/proc/self/fd` — one directory entry per open file descriptor;
+//!   the count includes the sampling iterator's own fd, an off-by-one
+//!   that never matters at the scales being compared.
 //!
-//! [`Sysmon::start`] spawns a thread that records both into a
-//! [`Registry`] — gauges `proc.rss_bytes` / `proc.cpu_secs` hold the
-//! latest value, time series of the same names hold the curve. One
-//! sample is taken synchronously at start and one more at stop, so any
-//! monitored region yields ≥ 2 points no matter how short it runs.
-//! On non-Linux targets [`sample_proc`] returns `None` and the monitor
-//! records nothing (graceful no-op, nothing else to configure).
+//! [`Sysmon::start`] spawns a thread that records all of them into a
+//! [`Registry`] — gauges `proc.rss_bytes` / `proc.cpu_secs` /
+//! `proc.threads` / `proc.open_fds` hold the latest value, time series
+//! of the same names hold the curve. One sample is taken synchronously
+//! at start and one more at stop, so any monitored region yields ≥ 2
+//! points no matter how short it runs. On non-Linux targets
+//! [`sample_proc`] returns `None` and the monitor records nothing
+//! (graceful no-op, nothing else to configure).
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -30,12 +38,21 @@ pub struct ProcSample {
     pub rss_bytes: u64,
     /// Total CPU time (user + system, all threads) in seconds.
     pub cpu_secs: f64,
+    /// Live OS threads in this process (`num_threads` from
+    /// `/proc/self/stat`).
+    pub threads: u64,
+    /// Open file descriptors (entries in `/proc/self/fd`).
+    pub open_fds: u64,
 }
 
 /// Gauge/series name for resident set size.
 pub const RSS_METRIC: &str = "proc.rss_bytes";
 /// Gauge/series name for cumulative CPU seconds.
 pub const CPU_METRIC: &str = "proc.cpu_secs";
+/// Gauge/series name for the live OS thread count.
+pub const THREADS_METRIC: &str = "proc.threads";
+/// Gauge/series name for the open file-descriptor count.
+pub const FDS_METRIC: &str = "proc.open_fds";
 
 #[cfg(target_os = "linux")]
 mod linux {
@@ -78,13 +95,25 @@ mod linux {
         let after = &stat[stat.rfind(')')? + 1..];
         let fields: Vec<&str> = after.split_whitespace().collect();
         // After ')': state is token 0, so utime (overall field 14) is
-        // token 11 and stime token 12.
+        // token 11, stime token 12, and num_threads (overall field 20)
+        // token 17.
         let utime: u64 = fields.get(11)?.parse().ok()?;
         let stime: u64 = fields.get(12)?.parse().ok()?;
+        let threads: u64 = fields.get(17)?.parse().ok()?;
+
+        // One entry per open fd; counting through read_dir briefly
+        // holds a directory fd of its own, so the result overcounts by
+        // one — irrelevant against the hundreds-to-thousands this
+        // series exists to show.
+        let open_fds = std::fs::read_dir("/proc/self/fd")
+            .map(|entries| entries.count() as u64)
+            .unwrap_or(0);
 
         Some(ProcSample {
             rss_bytes: resident_pages * page_size(),
             cpu_secs: (utime + stime) as f64 / clock_ticks_per_sec(),
+            threads,
+            open_fds,
         })
     }
 }
@@ -179,6 +208,10 @@ fn record_sample(registry: &Registry) {
         registry.series(RSS_METRIC).record(s.rss_bytes as f64);
         registry.gauge(CPU_METRIC).set(s.cpu_secs);
         registry.series(CPU_METRIC).record(s.cpu_secs);
+        registry.gauge(THREADS_METRIC).set(s.threads as f64);
+        registry.series(THREADS_METRIC).record(s.threads as f64);
+        registry.gauge(FDS_METRIC).set(s.open_fds as f64);
+        registry.series(FDS_METRIC).record(s.open_fds as f64);
     }
 }
 
@@ -203,6 +236,10 @@ mod tests {
         let s2 = sample_proc().unwrap();
         assert!(s2.cpu_secs >= s.cpu_secs);
         assert!(s2.rss_bytes > 0);
+        // The test harness itself runs at least one thread, and a
+        // running process holds at least stdin/stdout/stderr.
+        assert!(s.threads >= 1, "threads={}", s.threads);
+        assert!(s.open_fds >= 3, "open_fds={}", s.open_fds);
     }
 
     #[cfg(target_os = "linux")]
@@ -224,6 +261,10 @@ mod tests {
         }
         // Gauges hold the latest values.
         assert!(reg.gauge(RSS_METRIC).get() > 0.0);
+        assert!(reg.gauge(THREADS_METRIC).get() >= 1.0);
+        assert!(reg.gauge(FDS_METRIC).get() >= 3.0);
+        assert!(reg.series(THREADS_METRIC).len() >= 2);
+        assert!(reg.series(FDS_METRIC).len() >= 2);
     }
 
     #[test]

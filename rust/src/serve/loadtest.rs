@@ -2,7 +2,7 @@
 //! §Serving): the library behind the `loadgen` binary and the
 //! `kcore-embed loadgen` subcommand.
 //!
-//! Four scenarios, all driving the blank-line batch protocol over
+//! Five scenarios, all driving the blank-line batch protocol over
 //! either transport ([`ServeAddr`]):
 //!
 //! - `baseline` — one client, back-to-back batches: the daemon's
@@ -14,6 +14,14 @@
 //! - `poisson` — per-client Poisson arrivals (exponential inter-batch
 //!   gaps at `rate` batches/s) of mixed `nn`/`edge`/`stats` verbs:
 //!   the open-loop shape real traffic has.
+//! - `idleherd` — a large herd of mostly-idle persistent connections
+//!   (`--idle-conns`, default 1000, spread over the driver threads)
+//!   carrying sparse Poisson traffic. While the herd is connected the
+//!   daemon's `metrics` verb is probed once for its `proc.threads` /
+//!   `proc.open_fds` gauges (recorded by `obs::sysmon`), so the
+//!   result shows what N idle clients *cost* the daemon — N handler
+//!   threads under `--accept-model threads`, N file descriptors and a
+//!   fixed worker pool under `eventloop`.
 //!
 //! Determinism contract: workloads and schedules are *planned* by pure
 //! functions of `(seed, worker)` ([`plan_worker_batches`],
@@ -41,14 +49,14 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::obs::metrics::Histogram;
 use crate::serve::server::{client_exchange, ClientConn, ServeAddr};
-use crate::util::retry::RetryOpts;
 use crate::util::cli::Args;
 use crate::util::json::Json;
+use crate::util::retry::RetryOpts;
 use crate::util::rng::Rng;
 
 /// Scenario names `run_scenario` accepts, in the order `--scenario
 /// all` runs them.
-pub const SCENARIOS: [&str; 4] = ["baseline", "fanout", "fanin", "poisson"];
+pub const SCENARIOS: [&str; 5] = ["baseline", "fanout", "fanin", "poisson", "idleherd"];
 
 /// Knobs shared by every scenario. Scenario-specific shaping (client
 /// count, verb mix) is applied on top by [`run_scenario`].
@@ -75,6 +83,9 @@ pub struct LoadOpts {
     pub edge_frac: f64,
     /// Fraction of `stats` lines in the poisson mix.
     pub stats_frac: f64,
+    /// Total persistent connections the `idleherd` scenario keeps
+    /// open, spread over the `clients` driver threads.
+    pub idle_conns: usize,
 }
 
 impl LoadOpts {
@@ -90,6 +101,7 @@ impl LoadOpts {
             rate: 200.0,
             edge_frac: 0.25,
             stats_frac: 0.02,
+            idle_conns: 1000,
         }
     }
 }
@@ -119,6 +131,14 @@ pub struct ScenarioResult {
     pub p99_us: f64,
     pub max_us: f64,
     pub seed: u64,
+    /// Herd size (`idleherd` only; 0 for the other scenarios).
+    pub idle_conns: usize,
+    /// Daemon OS-thread count sampled mid-run from its `proc.threads`
+    /// gauge (`idleherd` only; -1 when unavailable).
+    pub daemon_threads: i64,
+    /// Daemon open-fd count sampled mid-run from its `proc.open_fds`
+    /// gauge (`idleherd` only; -1 when unavailable).
+    pub daemon_open_fds: i64,
 }
 
 impl ScenarioResult {
@@ -141,6 +161,9 @@ impl ScenarioResult {
             ("p99_us", Json::num(self.p99_us)),
             ("max_us", Json::num(self.max_us)),
             ("seed", Json::num(self.seed as f64)),
+            ("idle_conns", Json::num(self.idle_conns as f64)),
+            ("daemon_threads", Json::num(self.daemon_threads as f64)),
+            ("daemon_open_fds", Json::num(self.daemon_open_fds as f64)),
         ])
     }
 }
@@ -217,6 +240,16 @@ pub fn fanin_jitter_us(seed: u64, worker: usize, rounds: usize) -> Vec<u64> {
     (0..rounds).map(|_| rng.gen_range(2000)).collect()
 }
 
+/// Distribute the `idleherd` connections over the driver threads:
+/// `idle_conns / clients` each, remainder spread over the first
+/// drivers. Sums to exactly `idle_conns`.
+pub fn herd_split(idle_conns: usize, clients: usize) -> Vec<usize> {
+    assert!(clients > 0, "herd needs at least one driver");
+    (0..clients)
+        .map(|w| idle_conns / clients + usize::from(w < idle_conns % clients))
+        .collect()
+}
+
 // ---------------------------------------------------------------------------
 // Execution
 // ---------------------------------------------------------------------------
@@ -252,7 +285,7 @@ fn shaped(opts: &LoadOpts, scenario: &str) -> Result<LoadOpts> {
             o.edge_frac = 0.0;
             o.stats_frac = 0.0;
         }
-        "fanout" | "fanin" => {
+        "fanout" | "fanin" | "idleherd" => {
             o.edge_frac = 0.0;
             o.stats_frac = 0.0;
         }
@@ -334,30 +367,131 @@ fn worker_run(
     out
 }
 
-/// Run one scenario against a live daemon and aggregate the results.
-pub fn run_scenario(scenario: &str, opts: &LoadOpts) -> Result<ScenarioResult> {
-    let o = shaped(opts, scenario)?;
-    ensure!(
-        o.clients > 0 && o.batches > 0 && o.batch_size > 0,
-        "clients, batches and batch size must all be positive"
-    );
-    let nodes = if o.nodes > 0 {
-        o.nodes
-    } else {
-        probe_nodes(&o.addr)?
-    };
-    ensure!(nodes > 0, "daemon reports an empty store");
+/// One driver thread of the `idleherd` scenario: open `own` herd
+/// connections, hold them all for the scenario's whole lifetime, and
+/// send this driver's planned batches sparsely (Poisson gaps) over
+/// randomly chosen owned connections. Two barrier rounds bracket the
+/// run: everyone connected (so the daemon sees the full herd before
+/// any traffic or the /proc probe), and everyone-plus-probe done (so
+/// no driver disbands its share of the herd early).
+fn idle_driver(
+    o: &LoadOpts,
+    worker: usize,
+    own: usize,
+    nodes: usize,
+    barrier: &Barrier,
+) -> WorkerOut {
+    let batches = plan_worker_batches(o, worker, nodes);
+    let mut gap_rng = Rng::new(o.seed ^ 0x9E37).fork(worker as u64);
+    let gaps = poisson_gaps_us(&mut gap_rng, o.rate.max(1e-6), batches.len());
+    let mut pick = Rng::new(o.seed ^ 0x1D7E).fork(worker as u64);
+    let retry = RetryOpts::fast(o.seed ^ 0xFA57 ^ worker as u64);
+    let mut out = WorkerOut::default();
+    let mut conns: Vec<ClientConn> = Vec::with_capacity(own);
+    for _ in 0..own {
+        match ClientConn::connect_with_retry(&o.addr, &retry) {
+            Ok(c) => conns.push(c),
+            // A herd connection that never opened must surface in the
+            // result (the run's whole point is N live connections);
+            // fold it into failed_batches so `loadgen` exits nonzero
+            // without --allow-failures.
+            Err(_) => out.failed_batches += 1,
+        }
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for (i, batch) in batches.iter().enumerate() {
+        thread::sleep(Duration::from_micros(gaps[i]));
+        if conns.is_empty() {
+            out.failed_batches += 1;
+            continue;
+        }
+        let idx = pick.gen_index(conns.len());
+        let bt = Instant::now();
+        match conns[idx].exchange(batch) {
+            Ok(replies) => {
+                out.latency.record(bt.elapsed().as_micros() as u64);
+                out.requests += replies.len() as u64;
+                out.errors += replies.iter().filter(|r| r.starts_with("err")).count() as u64;
+            }
+            Err(_) => {
+                out.failed_batches += 1;
+                // Keep the herd at size: replace the broken connection.
+                if let Ok(c) = ClientConn::connect_with_retry(&o.addr, &retry) {
+                    conns[idx] = c;
+                }
+            }
+        }
+    }
+    out.elapsed_s = t0.elapsed().as_secs_f64();
+    barrier.wait();
+    drop(conns);
+    out
+}
 
-    let barrier = Arc::new(Barrier::new(o.clients));
+/// Read the daemon's own `/proc` gauges (recorded by `obs::sysmon`,
+/// exported by the `metrics` verb) over one fresh exchange:
+/// `(proc.threads, proc.open_fds)`, or -1 per value when unavailable
+/// (non-Linux daemon, or a failed probe).
+fn probe_daemon_proc(addr: &ServeAddr) -> (i64, i64) {
+    let Ok(replies) = client_exchange(addr, &["metrics".to_string()]) else {
+        return (-1, -1);
+    };
+    let Some(line) = replies.first() else {
+        return (-1, -1);
+    };
+    let Ok(j) = Json::parse(line.trim()) else {
+        return (-1, -1);
+    };
+    let gauge = |name: &str| {
+        j.path(&["gauges", name])
+            .and_then(Json::as_f64)
+            .map(|v| v as i64)
+            .unwrap_or(-1)
+    };
+    (gauge("proc.threads"), gauge("proc.open_fds"))
+}
+
+/// The `idleherd` scenario runner: drivers hold the herd open while
+/// the main thread probes the daemon's thread/fd gauges mid-run.
+fn run_idleherd(o: &LoadOpts, nodes: usize) -> Result<ScenarioResult> {
+    ensure!(
+        o.idle_conns >= o.clients,
+        "idleherd needs --idle-conns >= --clients ({} < {})",
+        o.idle_conns,
+        o.clients
+    );
+    let split = herd_split(o.idle_conns, o.clients);
+    // Drivers + this thread: the probe runs only once the herd is
+    // fully connected, and the herd outlives the probe.
+    let barrier = Arc::new(Barrier::new(o.clients + 1));
     let mut handles = Vec::with_capacity(o.clients);
-    for w in 0..o.clients {
+    for (w, &own) in split.iter().enumerate() {
         let o = o.clone();
         let barrier = Arc::clone(&barrier);
-        let scenario = scenario.to_string();
         handles.push(thread::spawn(move || {
-            worker_run(&scenario, &o, w, nodes, &barrier)
+            idle_driver(&o, w, own, nodes, &barrier)
         }));
     }
+    barrier.wait();
+    // Give the daemon's 100ms sysmon cadence a beat to observe the
+    // fully-connected herd before reading its gauges back.
+    thread::sleep(Duration::from_millis(250));
+    let (daemon_threads, daemon_open_fds) = probe_daemon_proc(&o.addr);
+    barrier.wait();
+    let mut res = aggregate("idleherd", o, handles)?;
+    res.idle_conns = o.idle_conns;
+    res.daemon_threads = daemon_threads;
+    res.daemon_open_fds = daemon_open_fds;
+    Ok(res)
+}
+
+/// Join the worker handles and fold their outputs into one result.
+fn aggregate(
+    scenario: &str,
+    o: &LoadOpts,
+    handles: Vec<thread::JoinHandle<WorkerOut>>,
+) -> Result<ScenarioResult> {
     let lat = Histogram::new();
     let (mut requests, mut errors, mut failed) = (0u64, 0u64, 0u64);
     let mut elapsed = 0f64;
@@ -391,13 +525,46 @@ pub fn run_scenario(scenario: &str, opts: &LoadOpts) -> Result<ScenarioResult> {
         p99_us: lat.quantile(0.99) as f64,
         max_us: lat.max() as f64,
         seed: o.seed,
+        idle_conns: 0,
+        daemon_threads: -1,
+        daemon_open_fds: -1,
     })
+}
+
+/// Run one scenario against a live daemon and aggregate the results.
+pub fn run_scenario(scenario: &str, opts: &LoadOpts) -> Result<ScenarioResult> {
+    let o = shaped(opts, scenario)?;
+    ensure!(
+        o.clients > 0 && o.batches > 0 && o.batch_size > 0,
+        "clients, batches and batch size must all be positive"
+    );
+    let nodes = if o.nodes > 0 {
+        o.nodes
+    } else {
+        probe_nodes(&o.addr)?
+    };
+    ensure!(nodes > 0, "daemon reports an empty store");
+    if scenario == "idleherd" {
+        return run_idleherd(&o, nodes);
+    }
+
+    let barrier = Arc::new(Barrier::new(o.clients));
+    let mut handles = Vec::with_capacity(o.clients);
+    for w in 0..o.clients {
+        let o = o.clone();
+        let barrier = Arc::clone(&barrier);
+        let scenario = scenario.to_string();
+        handles.push(thread::spawn(move || {
+            worker_run(&scenario, &o, w, nodes, &barrier)
+        }));
+    }
+    aggregate(scenario, &o, handles)
 }
 
 /// Merge scenario results into a bench JSON file as
 /// `{label: {scenario: result}}`, preserving other labels already
-/// recorded (the Makefile runs `exact` and `quantized` passes against
-/// the same file). The file stays single-line.
+/// recorded (the Makefile runs `threads` and `eventloop` passes
+/// against the same file). The file stays single-line.
 pub fn merge_results_file(path: &Path, label: &str, results: &[ScenarioResult]) -> Result<()> {
     let mut map = match std::fs::read_to_string(path)
         .ok()
@@ -452,6 +619,9 @@ pub fn run_cli(args: &Args) -> Result<()> {
         .map_err(anyhow::Error::msg)?;
     opts.stats_frac = args
         .get_f64("stats-frac", opts.stats_frac)
+        .map_err(anyhow::Error::msg)?;
+    opts.idle_conns = args
+        .get_usize("idle-conns", opts.idle_conns)
         .map_err(anyhow::Error::msg)?;
     let label = args.get_str("label", opts.addr.transport());
     let json_path = args.opt_str("json");
@@ -586,6 +756,9 @@ mod tests {
             p99_us: 1100.0,
             max_us: 2400.0,
             seed: 7,
+            idle_conns: 0,
+            daemon_threads: -1,
+            daemon_open_fds: -1,
         };
         let line = r.to_json().to_string();
         assert!(!line.contains('\n'));
@@ -606,6 +779,9 @@ mod tests {
             "p99_us",
             "max_us",
             "seed",
+            "idle_conns",
+            "daemon_threads",
+            "daemon_open_fds",
         ] {
             assert!(parsed.get(key).is_some(), "missing {key} in {line}");
         }
@@ -633,6 +809,9 @@ mod tests {
             p99_us: 3.0,
             max_us: 4.0,
             seed: 7,
+            idle_conns: 0,
+            daemon_threads: -1,
+            daemon_open_fds: -1,
         };
         merge_results_file(&path, "exact", &[r("baseline"), r("fanout")]).unwrap();
         merge_results_file(&path, "quantized", &[r("fanout")]).unwrap();
@@ -657,5 +836,21 @@ mod tests {
         let p = shaped(&o, "poisson").unwrap();
         assert_eq!(p.clients, o.clients);
         assert!(p.edge_frac > 0.0);
+        // idleherd keeps the driver count but purifies the verb mix.
+        let h = shaped(&o, "idleherd").unwrap();
+        assert_eq!(h.clients, o.clients);
+        assert_eq!(h.edge_frac, 0.0);
+        assert_eq!(h.stats_frac, 0.0);
+        assert_eq!(h.idle_conns, o.idle_conns);
+    }
+
+    #[test]
+    fn herd_split_sums_and_front_loads_the_remainder() {
+        assert_eq!(herd_split(1000, 8).iter().sum::<usize>(), 1000);
+        assert_eq!(herd_split(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(herd_split(3, 8), vec![1, 1, 1, 0, 0, 0, 0, 0]);
+        assert_eq!(herd_split(8, 8), vec![1; 8]);
+        // Deterministic: same inputs, same split.
+        assert_eq!(herd_split(1000, 7), herd_split(1000, 7));
     }
 }

@@ -21,10 +21,15 @@
 //! `obs::metrics` registry), and [`server`] runs one
 //! transport-generic serve loop over a
 //! unix socket or TCP listener ([`ServeAddr`]) — the CLI exposes it as
-//! `serve --listen`/`--listen-tcp` and `query --connect`. [`loadtest`]
-//! drives a live daemon with deterministic multi-client scenarios
-//! (fan-out, bursty fan-in, Poisson arrivals) and records latency
-//! histograms — the `loadgen` binary. Degradation paths (panic
+//! `serve --listen`/`--listen-tcp` and `query --connect`. Connections
+//! are multiplexed by a selectable [`AcceptModel`]: thread-per-
+//! connection, or the epoll readiness loop + fixed worker pool in
+//! [`reactor`] (`--accept-model eventloop`, Linux), under which N
+//! mostly-idle clients cost N file descriptors instead of N threads.
+//! [`loadtest`] drives a live daemon with deterministic multi-client
+//! scenarios (fan-out, bursty fan-in, Poisson arrivals, the idle-herd
+//! fd-vs-thread proof) and records latency histograms — the `loadgen`
+//! binary. Degradation paths (panic
 //! isolation, load shedding, swap validation, failpoint injection) are
 //! described in DESIGN.md §Robustness and driven by `tests/chaos.rs`.
 //!
@@ -38,6 +43,8 @@ pub mod linkpred;
 pub mod loadtest;
 pub mod protocol;
 pub mod query;
+#[cfg(target_os = "linux")]
+pub mod reactor;
 pub mod server;
 pub mod store;
 pub mod topk;
@@ -48,8 +55,8 @@ pub use loadtest::{LoadOpts, ScenarioResult, SCENARIOS};
 pub use protocol::ClientMsg;
 pub use query::{BatchReport, QueryService, Request, Response, ServeOpts};
 pub use server::{
-    client_exchange, connect_stream_retry, notify_swap, run_server, run_server_ready, ClientConn,
-    ServeAddr, ServerOpts, ServerStats, MAX_LINE_BYTES,
+    client_exchange, connect_stream_retry, notify_swap, run_server, run_server_ready, AcceptModel,
+    ClientConn, ServeAddr, ServerOpts, ServerStats, MAX_LINE_BYTES,
 };
 pub use store::{read_header, write_store, EmbeddingStore, StoreHeader};
 pub use topk::{build_scan_index, ExactScan, Metric, QuantizedScan, ScanIndex, TopKParams};

@@ -1,0 +1,1131 @@
+//! Epoll event-loop accept model (`serve --accept-model eventloop`,
+//! DESIGN.md §Serving): thousands of idle clients for the price of
+//! file descriptors.
+//!
+//! ```text
+//!              ┌──────────────── epoll_wait (≤200 ms tick) ─────────────┐
+//!   listener ──┤ readiness │ conn fds │ eventfd wake │ deadline heap    │
+//!              └─────┬─────┴────┬─────┴──────┬───────┴───────┬──────────┘
+//!                 accept     read/write   completions     read timeouts
+//!                    │          │              ▲               │
+//!                    ▼          ▼              │               ▼
+//!                 Conn { rbuf → lines → units (FIFO) → wbuf } per fd
+//!                               │  complete Batch / control Verb
+//!                               ▼
+//!                  bounded worker pool (batch_threads threads)
+//!                  catch_unwind · failpoints · GenerationStore
+//! ```
+//!
+//! One loop thread owns every connection: nonblocking reads fill a
+//! per-connection buffer that is cut into capped protocol lines
+//! (identical semantics to the threads model's `read_line_capped` —
+//! 64 KiB cap, per-line UTF-8 rejection, `\r` stripping, unterminated
+//! final line served before EOF), complete **work units** (a request
+//! batch, a control verb, or a loop-side error line) queue FIFO per
+//! connection, and replies accumulate in a write buffer flushed on
+//! write-readiness. At most one unit per connection executes at a
+//! time, so replies come back in request order exactly as the
+//! thread-per-connection model produced them.
+//!
+//! The worker pool runs the shared [`server::execute_batch_core`] /
+//! [`server::execute_verb`] code — the same failpoints, spans,
+//! histograms and reply strings as the threads model, so the daemon
+//! and chaos batteries pass against both models with bit-identical
+//! non-error answers. `catch_unwind` moves from the per-connection
+//! spawn wrapper into the worker: a panicking verb costs that one
+//! connection (closed without replies, `serve.panics` counts it), and
+//! the `max_inflight` admission gate is checked on the loop at
+//! dispatch, so shed `err overloaded` lines never wait behind a busy
+//! worker.
+//!
+//! Time-driven work replaces per-thread blocking state: read timeouts
+//! live in a lazily-invalidated deadline min-heap (instead of
+//! `SO_RCVTIMEO` per socket), the watched-artifact reload poll runs as
+//! a loop timer tick handed to a worker (instead of at every
+//! connection start), and shutdown is an eventfd wake plus a bounded
+//! 5 s drain grace — the loop's bounded `epoll_wait` tick observes the
+//! shutdown flag even when every wake path is dead, so shutdown is
+//! hang-proof by construction (the `serve.wake.err` failpoint drill
+//! from the threads model runs against this path too).
+//!
+//! Raw `libc` epoll over a dependency: the repo's zero-dependency rule
+//! (see the mmap bindings in `serve::store`) — `epoll_create1`,
+//! `epoll_ctl`, `epoll_wait`, `eventfd` and `close` are the five
+//! symbols needed, all stable Linux ABI for two decades.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::Shutdown;
+use std::os::raw::c_int;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::obs::faults;
+use crate::obs::metrics::{Counter, Registry};
+use crate::obs::sysmon::Sysmon;
+use crate::serve::generation::GenerationStore;
+use crate::serve::protocol::{self, ClientMsg};
+use crate::serve::query::Request;
+use crate::serve::server::{
+    self as server, Acceptor, Ctl, InflightSlot, ServeAddr, ServeStream, ServerOpts, ServerStats,
+    MAX_LINE_BYTES,
+};
+
+/// Loop timer tick: upper bound on `epoll_wait`, cadence of the
+/// watched-artifact reload poll, and the shutdown flag's worst-case
+/// observation latency.
+const TICK: Duration = Duration::from_millis(200);
+
+/// How long shutdown waits for open connections to drain their queued
+/// units and write buffers before force-closing them.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(5);
+
+/// Bytes read per `read(2)` call on a ready connection.
+const READ_CHUNK: usize = 4096;
+
+/// Reads per readiness event before yielding back to the loop, so one
+/// fire-hosing client cannot starve the rest (level-triggered epoll
+/// re-reports whatever is left).
+const READS_PER_EVENT: usize = 16;
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+mod sys {
+    //! The epoll/eventfd ABI, declared directly (std already links
+    //! libc; same precedent as the store's mmap bindings).
+    use std::os::raw::{c_int, c_void};
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EFD_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_NONBLOCK: c_int = 0o4000;
+
+    /// `struct epoll_event`; packed on x86-64 (the kernel ABI really
+    /// is unaligned there), naturally aligned elsewhere. Fields are
+    /// only ever copied out by value, never borrowed.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout_ms: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: u32, flags: c_int) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    }
+}
+
+/// Thin RAII epoll instance.
+struct Epoll {
+    fd: c_int,
+}
+
+impl Epoll {
+    fn new() -> io::Result<Epoll> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: c_int, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = sys::EpollEvent { events, data: token };
+        let rc = unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn add(&self, fd: c_int, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    fn modify(&self, fd: c_int, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    fn del(&self, fd: c_int) -> io::Result<()> {
+        // A non-null event pointer keeps pre-2.6.9 kernel semantics
+        // happy; the contents are ignored for DEL.
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    fn wait(&self, events: &mut [sys::EpollEvent], timeout_ms: c_int) -> io::Result<usize> {
+        loop {
+            let rc = unsafe {
+                sys::epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, timeout_ms)
+            };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let e = io::Error::last_os_error();
+            if e.kind() != io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.fd) };
+    }
+}
+
+/// Nonblocking eventfd: how workers (and the shutdown path) wake a
+/// loop parked in `epoll_wait`.
+struct EventFd {
+    fd: c_int,
+}
+
+impl EventFd {
+    fn new() -> io::Result<EventFd> {
+        let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(EventFd { fd })
+    }
+
+    /// Bump the counter; wakes the loop. Best-effort — the loop's
+    /// bounded tick catches anything a lost wake would have signalled.
+    fn ring(&self) {
+        let one: u64 = 1;
+        let _ =
+            unsafe { sys::write(self.fd, (&one as *const u64).cast(), std::mem::size_of::<u64>()) };
+    }
+
+    /// Reset the counter so level-triggered epoll stops reporting it.
+    fn drain(&self) {
+        let mut v: u64 = 0;
+        loop {
+            let n = unsafe {
+                sys::read(self.fd, (&mut v as *mut u64).cast(), std::mem::size_of::<u64>())
+            };
+            if n <= 0 {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.fd) };
+    }
+}
+
+/// One parsed piece of per-connection work, queued FIFO so replies
+/// keep request order.
+enum WorkUnit {
+    /// A complete request batch (blank line / verb / EOF terminated) —
+    /// runs on a worker.
+    Batch(Vec<Request>),
+    /// A control verb — runs on a worker.
+    Verb(ClientMsg),
+    /// A reply line produced by the loop itself (parse error, UTF-8
+    /// rejection, timeout/oversize goodbye) — written directly.
+    ErrLine(String),
+}
+
+/// What worker threads pull off the shared queue.
+enum Job {
+    Unit { conn: u64, unit: WorkUnit },
+    /// Watched-artifact reload poll (the loop schedules at most one at
+    /// a time, on the timer tick and on new connections).
+    Reload,
+}
+
+/// What workers post back to the loop.
+enum Done {
+    /// Reply lines for the connection's completed unit.
+    Replies { conn: u64, lines: Vec<String> },
+    /// The shutdown verb: write the ack, then stop the daemon.
+    Shutdown { conn: u64, reply: String },
+    /// The unit failed connection-fatally (`serve.stream.write_err`):
+    /// log and close, no replies.
+    ConnError { conn: u64, msg: String },
+    /// The unit panicked (already counted and logged by the worker):
+    /// drop the connection, daemon lives.
+    Panicked { conn: u64 },
+    Reloaded,
+}
+
+/// State shared between the loop and the worker pool.
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    stop: AtomicBool,
+    completions: Mutex<Vec<Done>>,
+    wake: Arc<EventFd>,
+}
+
+impl PoolShared {
+    fn submit(&self, job: Job) {
+        self.queue.lock().expect("job queue").push_back(job);
+        self.available.notify_one();
+    }
+
+    fn post(&self, done: Done) {
+        self.completions.lock().expect("completions").push(done);
+        self.wake.ring();
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, gens: Arc<GenerationStore>, ctl: Arc<Ctl>, threads: usize) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().expect("job queue");
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.available.wait(q).expect("job queue");
+            }
+        };
+        let done = match job {
+            Job::Reload => {
+                // Same messages as the threads model's per-connection
+                // poll; errors keep the current generation serving.
+                match gens.maybe_reload() {
+                    Ok(Some(gen)) => {
+                        eprintln!("serve: watched artifact changed, now {}", gen.stats_line());
+                    }
+                    Ok(None) => {}
+                    Err(e) => {
+                        eprintln!("serve: watch check failed: {e:#} (keeping current generation)");
+                    }
+                }
+                Done::Reloaded
+            }
+            Job::Unit { conn, unit } => {
+                // Panic isolation parity with the threads model's spawn
+                // wrapper: a panicking verb (a bug, or serve.verb.panic)
+                // costs one connection, never the process.
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    exec_unit(unit, &gens, &ctl, threads)
+                }));
+                match result {
+                    Ok(kind) => kind.with_conn(conn),
+                    Err(payload) => {
+                        ctl.panics.inc();
+                        eprintln!(
+                            "serve: connection handler panicked: {} (connection dropped, daemon alive)",
+                            faults::panic_message(payload.as_ref())
+                        );
+                        Done::Panicked { conn }
+                    }
+                }
+            }
+        };
+        shared.post(done);
+    }
+}
+
+/// A [`Done`] minus the connection id (filled in by the worker loop).
+enum DoneKind {
+    Replies(Vec<String>),
+    Shutdown(String),
+    ConnError(String),
+}
+
+impl DoneKind {
+    fn with_conn(self, conn: u64) -> Done {
+        match self {
+            DoneKind::Replies(lines) => Done::Replies { conn, lines },
+            DoneKind::Shutdown(reply) => Done::Shutdown { conn, reply },
+            DoneKind::ConnError(msg) => Done::ConnError { conn, msg },
+        }
+    }
+}
+
+fn exec_unit(unit: WorkUnit, gens: &GenerationStore, ctl: &Ctl, threads: usize) -> DoneKind {
+    match unit {
+        WorkUnit::Batch(reqs) => {
+            // The admission slot was taken at dispatch on the loop;
+            // release it when this scope exits — including by panic,
+            // so a panicking batch can never leak an admission slot.
+            let _slot = InflightSlot(&ctl.inflight);
+            match server::execute_batch_core(&reqs, gens, ctl, threads) {
+                Ok(lines) => DoneKind::Replies(lines),
+                Err(e) => DoneKind::ConnError(format!("{e}")),
+            }
+        }
+        WorkUnit::Verb(msg) => match server::execute_verb(msg, gens, ctl) {
+            server::VerbOutcome::Reply(line) => DoneKind::Replies(vec![line]),
+            server::VerbOutcome::Shutdown(reply) => DoneKind::Shutdown(reply),
+        },
+        WorkUnit::ErrLine(_) => unreachable!("error lines are written by the loop"),
+    }
+}
+
+/// Per-connection state machine: read buffer → parsed units → write
+/// buffer, plus the flags the loop steers it by.
+struct Conn {
+    stream: ServeStream,
+    fd: c_int,
+    /// Bytes read but not yet cut into lines.
+    rbuf: Vec<u8>,
+    /// Encoded reply bytes not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    /// Prefix of `wbuf` already written.
+    wpos: usize,
+    /// Query requests accumulated toward the current batch.
+    pending: Vec<Request>,
+    /// Parsed work units awaiting dispatch, FIFO.
+    units: VecDeque<WorkUnit>,
+    /// A worker owns one of this connection's units right now.
+    busy: bool,
+    /// No more reads (EOF, timeout, oversize, or shutdown drain).
+    read_closed: bool,
+    /// Close once units, job and write buffer are all drained.
+    closing: bool,
+    /// Epoll interest currently registered for `fd`.
+    interest: u32,
+    /// Bumped on every read/reply activity; stale deadline-heap
+    /// entries (smaller generation) are discarded when popped.
+    deadline_gen: u64,
+}
+
+impl Conn {
+    fn queue_line(&mut self, line: &str) {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    /// Move the accumulated batch (if any) into the unit queue.
+    fn flush_pending(&mut self) {
+        if !self.pending.is_empty() {
+            let reqs = std::mem::take(&mut self.pending);
+            self.units.push_back(WorkUnit::Batch(reqs));
+        }
+    }
+
+    fn write_idle(&self) -> bool {
+        self.wpos >= self.wbuf.len()
+    }
+
+    fn drained(&self) -> bool {
+        !self.busy && self.units.is_empty() && self.write_idle()
+    }
+}
+
+struct EventLoop {
+    epoll: Epoll,
+    wake: Arc<EventFd>,
+    acceptor: Acceptor,
+    ctl: Arc<Ctl>,
+    shared: Arc<PoolShared>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    /// Min-heap of (deadline, conn, deadline_gen); entries whose
+    /// generation no longer matches the connection are skipped.
+    deadlines: BinaryHeap<Reverse<(Instant, u64, u64)>>,
+    read_timeout: Option<Duration>,
+    max_conns: usize,
+    /// At most one watched-artifact reload job in flight.
+    reload_busy: bool,
+    last_reload: Instant,
+    shutting_down: bool,
+    shutdown_at: Option<Instant>,
+    listener_registered: bool,
+    // Loop health counters (`serve.loop.*`).
+    wakeups: Arc<Counter>,
+    ready_events: Arc<Counter>,
+    timeouts: Arc<Counter>,
+}
+
+/// Serve with the epoll event loop until a `shutdown` verb arrives.
+/// Same contract as the threads model: blocks the caller, returns the
+/// daemon's lifetime counters on clean exit.
+pub(crate) fn serve(
+    gens: Arc<GenerationStore>,
+    opts: &ServerOpts,
+    acceptor: Acceptor,
+    resolved: ServeAddr,
+    ready: Option<Sender<ServeAddr>>,
+) -> Result<ServerStats> {
+    let registry = Arc::new(Registry::new());
+    let ctl = Arc::new(Ctl::new(resolved.clone(), Arc::clone(&registry), opts));
+    let sysmon = Sysmon::start(Arc::clone(&registry), Duration::from_millis(100));
+
+    acceptor.set_nonblocking(true)?;
+    let epoll = Epoll::new()?;
+    let wake = Arc::new(EventFd::new()?);
+    epoll.add(acceptor.raw_fd(), sys::EPOLLIN, TOKEN_LISTENER)?;
+    epoll.add(wake.fd, sys::EPOLLIN, TOKEN_WAKE)?;
+
+    let shared = Arc::new(PoolShared {
+        queue: Mutex::new(VecDeque::new()),
+        available: Condvar::new(),
+        stop: AtomicBool::new(false),
+        completions: Mutex::new(Vec::new()),
+        wake: Arc::clone(&wake),
+    });
+    let worker_count = opts.batch_threads.max(1);
+    let workers: Vec<std::thread::JoinHandle<()>> = (0..worker_count)
+        .map(|i| {
+            let shared = Arc::clone(&shared);
+            let gens = Arc::clone(&gens);
+            let ctl = Arc::clone(&ctl);
+            let threads = opts.batch_threads;
+            std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || worker_loop(shared, gens, ctl, threads))
+                .expect("spawn serve worker")
+        })
+        .collect();
+
+    if let Some(tx) = ready {
+        let _ = tx.send(resolved.clone());
+    }
+
+    let mut lp = EventLoop {
+        epoll,
+        wake,
+        acceptor,
+        ctl: Arc::clone(&ctl),
+        shared: Arc::clone(&shared),
+        conns: HashMap::new(),
+        next_token: FIRST_CONN_TOKEN,
+        deadlines: BinaryHeap::new(),
+        read_timeout: opts.read_timeout,
+        max_conns: opts.max_conns,
+        reload_busy: false,
+        last_reload: Instant::now(),
+        shutting_down: false,
+        shutdown_at: None,
+        listener_registered: true,
+        wakeups: registry.counter("serve.loop.wakeups"),
+        ready_events: registry.counter("serve.loop.ready_events"),
+        timeouts: registry.counter("serve.loop.timeouts"),
+    };
+    let outcome = lp.run();
+
+    // Workers drain the queue (FIFO pop happens before the stop
+    // check), then exit; nothing is left to answer once the loop has
+    // closed every connection. The teardown runs even when the loop
+    // errored, so an epoll failure never leaks threads or the socket
+    // file.
+    shared.stop.store(true, Ordering::Release);
+    shared.available.notify_all();
+    for h in workers {
+        let _ = h.join();
+    }
+    drop(lp);
+    if let ServeAddr::Unix(path) = &resolved {
+        let _ = std::fs::remove_file(path);
+    }
+    drop(sysmon);
+    outcome?;
+    Ok(ctl.final_stats(&gens))
+}
+
+impl EventLoop {
+    fn run(&mut self) -> Result<()> {
+        let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 256];
+        loop {
+            let timeout_ms = self.wait_timeout_ms();
+            let n = self.epoll.wait(&mut events, timeout_ms)?;
+            self.wakeups.inc();
+            self.ready_events.add(n as u64);
+            for ev in events.iter().take(n) {
+                // Copy out of the (possibly packed) ABI struct before
+                // use; never borrow its fields.
+                let token = ev.data;
+                let bits = ev.events;
+                match token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKE => self.wake.drain(),
+                    id => self.conn_event(id, bits),
+                }
+            }
+            self.drain_completions();
+            self.expire_deadlines();
+            self.tick_reload();
+            if self.shutting_down {
+                if self.conns.is_empty() {
+                    return Ok(());
+                }
+                let expired = self
+                    .shutdown_at
+                    .map(|t| t.elapsed() >= SHUTDOWN_GRACE)
+                    .unwrap_or(false);
+                if expired {
+                    // Bounded drain: whatever is still open after the
+                    // grace is force-closed, mirroring the threads
+                    // model's hard fallback.
+                    let ids: Vec<u64> = self.conns.keys().copied().collect();
+                    for id in ids {
+                        self.close_conn(id);
+                    }
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// Milliseconds until the next thing the loop must do on its own:
+    /// the 200 ms tick, the earliest live read deadline, or a snappier
+    /// cadence while a shutdown drain is in progress.
+    fn wait_timeout_ms(&mut self) -> c_int {
+        let now = Instant::now();
+        let mut timeout = TICK;
+        // Drop stale heap entries so they cannot cause early wakeups.
+        while let Some(&Reverse((t, id, gen))) = self.deadlines.peek() {
+            match self.conns.get(&id) {
+                Some(c) if c.deadline_gen == gen && !c.read_closed => {
+                    timeout = timeout.min(t.saturating_duration_since(now));
+                    break;
+                }
+                _ => {
+                    self.deadlines.pop();
+                }
+            }
+        }
+        if self.shutting_down {
+            timeout = timeout.min(Duration::from_millis(50));
+        }
+        timeout.as_millis() as c_int
+    }
+
+    fn accept_ready(&mut self) {
+        if self.shutting_down {
+            return;
+        }
+        loop {
+            match self.acceptor.accept() {
+                Ok(stream) => self.admit(stream),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    eprintln!("serve: accept failed: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: ServeStream) {
+        let live = self.conns.len();
+        if self.max_conns > 0 && live >= self.max_conns {
+            // Over capacity: one parseable error line, no
+            // registration. The socket is still blocking here, and the
+            // write is bounded by a timeout so a client that never
+            // reads cannot stall the loop (same shape as the threads
+            // model's rejection).
+            self.ctl.rejected.inc();
+            let mut s = stream;
+            let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
+            let _ = writeln!(s, "{}", server::capacity_line(live, self.max_conns));
+            let _ = s.shutdown(Shutdown::Both);
+            return;
+        }
+        if let Err(e) = stream.set_nonblocking(true) {
+            eprintln!("serve: accept failed: {e}");
+            return;
+        }
+        let fd = stream.raw_fd();
+        let id = self.next_token;
+        if let Err(e) = self.epoll.add(fd, sys::EPOLLIN, id) {
+            eprintln!("serve: accept failed: {e}");
+            return;
+        }
+        self.next_token += 1;
+        self.ctl.connections.inc();
+        let conn = Conn {
+            stream,
+            fd,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: Vec::new(),
+            units: VecDeque::new(),
+            busy: false,
+            read_closed: false,
+            closing: false,
+            interest: sys::EPOLLIN,
+            deadline_gen: 0,
+        };
+        if let Some(t) = self.read_timeout {
+            self.deadlines
+                .push(Reverse((Instant::now() + t, id, conn.deadline_gen)));
+        }
+        self.conns.insert(id, conn);
+        self.ctl.open_conns.set(self.conns.len() as f64);
+        // Parity with the threads model, where every new connection
+        // polls the watched path before serving.
+        self.schedule_reload();
+    }
+
+    fn conn_event(&mut self, id: u64, bits: u32) {
+        if !self.conns.contains_key(&id) {
+            return;
+        }
+        if bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+            // Peer fully gone: replies are undeliverable, drop it.
+            self.close_conn(id);
+            return;
+        }
+        if bits & sys::EPOLLOUT != 0 && !self.try_write(id) {
+            return;
+        }
+        if bits & sys::EPOLLIN != 0 && !self.read_ready(id) {
+            return;
+        }
+        self.dispatch_units(id);
+        self.finish_event(id);
+    }
+
+    /// Flush as much of the write buffer as the socket accepts.
+    /// Returns false when the connection was closed on a write error.
+    fn try_write(&mut self, id: u64) -> bool {
+        let Some(conn) = self.conns.get_mut(&id) else {
+            return false;
+        };
+        while conn.wpos < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                Ok(0) => {
+                    self.close_conn(id);
+                    return false;
+                }
+                Ok(n) => conn.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    eprintln!("serve: connection error: {e}");
+                    self.close_conn(id);
+                    return false;
+                }
+            }
+        }
+        if conn.wpos >= conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+        }
+        true
+    }
+
+    /// Drain ready bytes into the connection's line parser. Returns
+    /// false when the connection was closed on a read error.
+    fn read_ready(&mut self, id: u64) -> bool {
+        let mut chunk = [0u8; READ_CHUNK];
+        for _ in 0..READS_PER_EVENT {
+            let Some(conn) = self.conns.get_mut(&id) else {
+                return false;
+            };
+            if conn.read_closed {
+                return true;
+            }
+            // The same chaos failpoints the threads model fires per
+            // fill_buf: a delay, a hard read error, and a 1-byte short
+            // read that exercises cross-read line reassembly.
+            if faults::armed() {
+                faults::sleep_ms("serve.stream.delay_ms");
+                if let Err(e) = faults::fail_io("serve.stream.err") {
+                    eprintln!("serve: connection error: {e}");
+                    self.close_conn(id);
+                    return false;
+                }
+            }
+            let cap = if faults::armed() && faults::check("serve.stream.short_read").is_some() {
+                1
+            } else {
+                READ_CHUNK
+            };
+            match conn.stream.read(&mut chunk[..cap]) {
+                Ok(0) => {
+                    self.handle_eof(id);
+                    return true;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&chunk[..n]);
+                    self.touch_deadline(id);
+                    self.parse_lines(id);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                Err(e) => {
+                    eprintln!("serve: connection error: {e}");
+                    self.close_conn(id);
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Restart the connection's read deadline after activity.
+    fn touch_deadline(&mut self, id: u64) {
+        let Some(t) = self.read_timeout else {
+            return;
+        };
+        let Some(conn) = self.conns.get_mut(&id) else {
+            return;
+        };
+        conn.deadline_gen += 1;
+        if !conn.read_closed {
+            self.deadlines
+                .push(Reverse((Instant::now() + t, id, conn.deadline_gen)));
+        }
+    }
+
+    /// Cut `rbuf` into protocol lines — `read_line_capped` semantics:
+    /// 64 KiB cap (terminated or not), strip one trailing `\r`, reject
+    /// invalid UTF-8 per line without losing stream sync.
+    fn parse_lines(&mut self, id: u64) {
+        loop {
+            let Some(conn) = self.conns.get_mut(&id) else {
+                return;
+            };
+            if conn.read_closed {
+                conn.rbuf.clear();
+                return;
+            }
+            match conn.rbuf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if pos > MAX_LINE_BYTES {
+                        self.oversized(id);
+                        return;
+                    }
+                    let mut line: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+                    line.pop(); // the \n
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    self.process_line(id, &line);
+                }
+                None => {
+                    if conn.rbuf.len() > MAX_LINE_BYTES {
+                        self.oversized(id);
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// An over-cap line: flush what is complete, say why, close —
+    /// byte-identical to the threads model's goodbye.
+    fn oversized(&mut self, id: u64) {
+        let Some(conn) = self.conns.get_mut(&id) else {
+            return;
+        };
+        conn.rbuf.clear();
+        conn.read_closed = true;
+        conn.flush_pending();
+        conn.units.push_back(WorkUnit::ErrLine(server::oversize_line()));
+        conn.closing = true;
+    }
+
+    fn process_line(&mut self, id: u64, bytes: &[u8]) {
+        let Some(conn) = self.conns.get_mut(&id) else {
+            return;
+        };
+        let Ok(line) = std::str::from_utf8(bytes) else {
+            // Reject per line — the terminator was found, so the
+            // stream is still in sync.
+            conn.units
+                .push_back(WorkUnit::ErrLine(server::UTF8_ERR_LINE.to_string()));
+            return;
+        };
+        if line.trim().is_empty() {
+            conn.flush_pending();
+            return;
+        }
+        match ClientMsg::parse(line) {
+            Ok(None) => {}
+            Ok(Some(ClientMsg::Query(req))) => conn.pending.push(req),
+            Ok(Some(msg)) => {
+                // Control verbs act on a consistent point in the
+                // stream: the queued batch goes first.
+                conn.flush_pending();
+                conn.units.push_back(WorkUnit::Verb(msg));
+            }
+            Err(e) => {
+                // Malformed line: report and keep the connection.
+                conn.units
+                    .push_back(WorkUnit::ErrLine(protocol::encode_error(&e)));
+            }
+        }
+    }
+
+    /// EOF: serve the unterminated final line (if any), flush the
+    /// pending batch, and close once everything queued has drained.
+    fn handle_eof(&mut self, id: u64) {
+        let Some(conn) = self.conns.get_mut(&id) else {
+            return;
+        };
+        conn.read_closed = true;
+        if !conn.rbuf.is_empty() {
+            // read_line_capped serves the final unterminated bytes as
+            // a line (no \r strip — there was no terminator).
+            let bytes = std::mem::take(&mut conn.rbuf);
+            if bytes.len() > MAX_LINE_BYTES {
+                self.oversized(id);
+                return;
+            }
+            self.process_line(id, &bytes);
+        }
+        let Some(conn) = self.conns.get_mut(&id) else {
+            return;
+        };
+        conn.flush_pending();
+        conn.closing = true;
+    }
+
+    /// Fire expired read deadlines: flush the pending batch, send the
+    /// timeout goodbye, close after drain — the slow-loris answer.
+    fn expire_deadlines(&mut self) {
+        let now = Instant::now();
+        loop {
+            let Some(&Reverse((t, id, gen))) = self.deadlines.peek() else {
+                return;
+            };
+            if t > now {
+                return;
+            }
+            self.deadlines.pop();
+            let Some(conn) = self.conns.get_mut(&id) else {
+                continue;
+            };
+            if conn.deadline_gen != gen || conn.read_closed {
+                continue;
+            }
+            if conn.busy {
+                // A worker owns this connection's current unit; time
+                // spent executing does not count against the read
+                // timeout (SO_RCVTIMEO is per-read-call in the threads
+                // model). The reply completion re-arms the deadline.
+                continue;
+            }
+            self.timeouts.inc();
+            conn.read_closed = true;
+            conn.rbuf.clear();
+            conn.flush_pending();
+            conn.units
+                .push_back(WorkUnit::ErrLine(server::timeout_line(self.read_timeout)));
+            conn.closing = true;
+            self.dispatch_units(id);
+            self.finish_event(id);
+        }
+    }
+
+    /// Hand the head unit to a worker (one per connection at a time),
+    /// writing loop-side lines and shed refusals directly.
+    fn dispatch_units(&mut self, id: u64) {
+        loop {
+            let Some(conn) = self.conns.get_mut(&id) else {
+                return;
+            };
+            if conn.busy {
+                return;
+            }
+            let Some(unit) = conn.units.pop_front() else {
+                return;
+            };
+            match unit {
+                WorkUnit::ErrLine(line) => conn.queue_line(&line),
+                WorkUnit::Batch(reqs) => {
+                    // Admission gate at dispatch: shed refusals are
+                    // written by the loop immediately, never queued
+                    // behind a busy worker. One line per request keeps
+                    // the N-in/N-out batch contract.
+                    let prev = self.ctl.inflight.fetch_add(1, Ordering::Relaxed);
+                    if self.ctl.max_inflight > 0 && prev >= self.ctl.max_inflight as u64 {
+                        self.ctl.inflight.fetch_sub(1, Ordering::Relaxed);
+                        self.ctl.shed.add(reqs.len() as u64);
+                        let line = server::shed_line(prev, self.ctl.max_inflight);
+                        for _ in 0..reqs.len() {
+                            conn.queue_line(&line);
+                        }
+                        continue;
+                    }
+                    conn.busy = true;
+                    self.shared.submit(Job::Unit {
+                        conn: id,
+                        unit: WorkUnit::Batch(reqs),
+                    });
+                    return;
+                }
+                WorkUnit::Verb(msg) => {
+                    conn.busy = true;
+                    self.shared.submit(Job::Unit {
+                        conn: id,
+                        unit: WorkUnit::Verb(msg),
+                    });
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Post-event bookkeeping for one connection: flush, re-arm epoll
+    /// interest, close if fully drained.
+    fn finish_event(&mut self, id: u64) {
+        if !self.try_write(id) {
+            return;
+        }
+        let Some(conn) = self.conns.get_mut(&id) else {
+            return;
+        };
+        if conn.closing && conn.drained() {
+            self.close_conn(id);
+            return;
+        }
+        let mut want = 0u32;
+        if !conn.read_closed {
+            want |= sys::EPOLLIN;
+        }
+        if !conn.write_idle() {
+            want |= sys::EPOLLOUT;
+        }
+        if want != conn.interest {
+            let fd = conn.fd;
+            conn.interest = want;
+            if let Err(e) = self.epoll.modify(fd, want, id) {
+                eprintln!("serve: connection error: {e}");
+                self.close_conn(id);
+            }
+        }
+    }
+
+    fn close_conn(&mut self, id: u64) {
+        if let Some(conn) = self.conns.remove(&id) {
+            let _ = self.epoll.del(conn.fd);
+            // Dropping the stream closes the fd. A worker still
+            // running this connection's unit posts a completion for a
+            // token that no longer resolves; it is discarded.
+            drop(conn);
+            self.ctl.open_conns.set(self.conns.len() as f64);
+        }
+    }
+
+    fn drain_completions(&mut self) {
+        let done: Vec<Done> =
+            std::mem::take(&mut *self.shared.completions.lock().expect("completions"));
+        for d in done {
+            match d {
+                Done::Replies { conn: id, lines } => {
+                    let Some(conn) = self.conns.get_mut(&id) else {
+                        continue;
+                    };
+                    conn.busy = false;
+                    for line in &lines {
+                        conn.queue_line(line);
+                    }
+                    // Replying counts as activity: a client that waits
+                    // for a slow batch is not a slow loris.
+                    self.touch_deadline(id);
+                    self.dispatch_units(id);
+                    self.finish_event(id);
+                }
+                Done::Shutdown { conn: id, reply } => {
+                    if let Some(conn) = self.conns.get_mut(&id) {
+                        conn.busy = false;
+                        conn.queue_line(&reply);
+                        conn.closing = true;
+                        self.dispatch_units(id);
+                        self.finish_event(id);
+                    }
+                    self.begin_shutdown();
+                }
+                Done::ConnError { conn: id, msg } => {
+                    eprintln!("serve: connection error: {msg}");
+                    self.close_conn(id);
+                }
+                Done::Panicked { conn: id } => self.close_conn(id),
+                Done::Reloaded => self.reload_busy = false,
+            }
+        }
+    }
+
+    /// Watched-path reload cadence: at most one poll job in flight, at
+    /// most one per tick interval (plus one per new connection, for
+    /// parity with the threads model's connection-start poll).
+    fn tick_reload(&mut self) {
+        if self.last_reload.elapsed() >= TICK {
+            self.schedule_reload();
+        }
+    }
+
+    fn schedule_reload(&mut self) {
+        if self.reload_busy || self.shutting_down {
+            return;
+        }
+        self.reload_busy = true;
+        self.last_reload = Instant::now();
+        self.shared.submit(Job::Reload);
+    }
+
+    /// Stop accepting, wake everything, drain every open connection.
+    fn begin_shutdown(&mut self) {
+        if self.shutting_down {
+            return;
+        }
+        self.shutting_down = true;
+        self.shutdown_at = Some(Instant::now());
+        if self.listener_registered {
+            let _ = self.epoll.del(self.acceptor.raw_fd());
+            self.listener_registered = false;
+        }
+        // Wake-path parity with the threads model's bounded
+        // self-connect attempts: consult the same failpoint up to
+        // three times so the chaos drill can prove shutdown survives a
+        // dead wake path in either model. If every attempt is blocked,
+        // no wake is sent at all — the loop's bounded tick observes
+        // the shutdown state regardless, so this cannot hang.
+        for attempt in 0..3u32 {
+            if faults::check("serve.wake.err").is_none() {
+                self.wake.ring();
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5 << attempt));
+        }
+        // EOF-equivalent drain of every open connection: pending
+        // batches are flushed and answered, then the connection
+        // closes — identical to the threads model's read-side
+        // half-close sweep.
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            if let Some(conn) = self.conns.get_mut(&id) {
+                conn.read_closed = true;
+                conn.rbuf.clear();
+                conn.flush_pending();
+                conn.closing = true;
+                self.dispatch_units(id);
+                self.finish_event(id);
+            }
+        }
+    }
+}

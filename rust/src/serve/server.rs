@@ -17,15 +17,26 @@
 //!           GenerationStore ── Arc<Generation> per batch
 //! ```
 //!
-//! Concurrency shape: one thread per connection; each **batch** (the
-//! lines queued up to a blank line / control verb / EOF) grabs one
-//! `Arc<Generation>` and fans its requests over
-//! [`pool::parallel_tasks`], so answers come back in request order, a
-//! hot-swap never blocks readers, and no batch mixes generations. The
-//! watched-path poll runs at the start of each connection's handler —
-//! never on the acceptor thread — and skips (try-lock) when a swap is
-//! already in flight, so neither accepts nor other connections stall
-//! behind a generation build.
+//! Concurrency shape — two selectable accept models
+//! ([`AcceptModel`], `serve --accept-model threads|eventloop`):
+//!
+//! - **threads** (default): one thread per connection; each **batch**
+//!   (the lines queued up to a blank line / control verb / EOF) grabs
+//!   one `Arc<Generation>` and fans its requests over
+//!   [`pool::parallel_tasks`], so answers come back in request order, a
+//!   hot-swap never blocks readers, and no batch mixes generations. The
+//!   watched-path poll runs at the start of each connection's handler —
+//!   never on the acceptor thread — and skips (try-lock) when a swap is
+//!   already in flight, so neither accepts nor other connections stall
+//!   behind a generation build.
+//! - **eventloop** (Linux): one epoll-driven loop owns every
+//!   connection's read/write buffers and hands complete batches and
+//!   control verbs to a fixed pool of `batch_threads` workers
+//!   ([`crate::serve::reactor`], DESIGN.md §Serving), so N mostly-idle
+//!   clients cost N file descriptors instead of N threads. Both models
+//!   share the protocol, verb, batch and failpoint code below, and the
+//!   daemon/chaos test batteries run against both — answers are
+//!   bit-identical at fixed seeds.
 //!
 //! Robustness at the edge of the socket: request lines are read
 //! through a capped reader ([`MAX_LINE_BYTES`]), so an oversized line
@@ -79,13 +90,13 @@ use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::obs::faults;
-use crate::obs::metrics::{Counter, Registry};
+use crate::obs::metrics::{Counter, Gauge, Registry};
 use crate::obs::sysmon::Sysmon;
 use crate::obs::trace::Tracer;
 use crate::serve::generation::GenerationStore;
@@ -149,6 +160,42 @@ impl fmt::Display for ServeAddr {
     }
 }
 
+/// How accepted connections are multiplexed onto OS threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AcceptModel {
+    /// One handler thread per connection (the original model): simple,
+    /// every platform, but N idle clients cost N threads.
+    Threads,
+    /// One epoll readiness loop plus a fixed worker pool (Linux):
+    /// N idle clients cost N file descriptors and ~constant threads.
+    EventLoop,
+}
+
+impl AcceptModel {
+    /// Parse a `--accept-model` value (`threads` / `eventloop`).
+    pub fn parse(spec: &str) -> Result<AcceptModel> {
+        match spec {
+            "threads" => Ok(AcceptModel::Threads),
+            "eventloop" => Ok(AcceptModel::EventLoop),
+            other => bail!("unknown accept model {other:?} (threads|eventloop)"),
+        }
+    }
+
+    /// Stable name, reported by the `stats`/`health` verbs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AcceptModel::Threads => "threads",
+            AcceptModel::EventLoop => "eventloop",
+        }
+    }
+}
+
+impl fmt::Display for AcceptModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Daemon configuration.
 #[derive(Debug, Clone)]
 pub struct ServerOpts {
@@ -175,6 +222,8 @@ pub struct ServerOpts {
     /// Span tracer for verb/batch timing (`serve --trace-out`);
     /// disabled by default.
     pub trace: Tracer,
+    /// Connection multiplexing model (see [`AcceptModel`]).
+    pub accept_model: AcceptModel,
 }
 
 impl ServerOpts {
@@ -186,6 +235,7 @@ impl ServerOpts {
             max_conns: 0,
             max_inflight: 0,
             trace: Tracer::disabled(),
+            accept_model: AcceptModel::Threads,
         }
     }
 }
@@ -247,6 +297,26 @@ impl ServeStream {
             #[cfg(unix)]
             ServeStream::Unix(s) => s.set_write_timeout(dur),
             ServeStream::Tcp(s) => s.set_write_timeout(dur),
+        }
+    }
+
+    /// Switch blocking mode — the event loop runs every connection
+    /// nonblocking and multiplexes readiness over epoll.
+    pub fn set_nonblocking(&self, nonblocking: bool) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            ServeStream::Unix(s) => s.set_nonblocking(nonblocking),
+            ServeStream::Tcp(s) => s.set_nonblocking(nonblocking),
+        }
+    }
+
+    /// Raw fd for epoll registration (the stream keeps ownership).
+    #[cfg(unix)]
+    pub fn raw_fd(&self) -> std::os::raw::c_int {
+        use std::os::unix::io::AsRawFd;
+        match self {
+            ServeStream::Unix(s) => s.as_raw_fd(),
+            ServeStream::Tcp(s) => s.as_raw_fd(),
         }
     }
 }
@@ -325,7 +395,7 @@ pub fn connect_stream_retry(addr: &ServeAddr, opts: &RetryOpts) -> Result<ServeS
     retry::retry(opts, &format!("connecting to {addr}"), |_| connect_stream(addr))
 }
 
-enum Acceptor {
+pub(crate) enum Acceptor {
     #[cfg(unix)]
     Unix(UnixListener),
     Tcp(TcpListener),
@@ -361,7 +431,7 @@ impl Acceptor {
     /// the kernel-assigned one and an unspecified host becomes
     /// loopback, so the result is always something `connect_stream`
     /// (and the shutdown self-wake) can dial.
-    fn bind(listen: &ServeAddr) -> Result<(Acceptor, ServeAddr)> {
+    pub(crate) fn bind(listen: &ServeAddr) -> Result<(Acceptor, ServeAddr)> {
         match listen {
             #[cfg(unix)]
             ServeAddr::Unix(path) => Ok((
@@ -393,7 +463,7 @@ impl Acceptor {
         }
     }
 
-    fn accept(&self) -> io::Result<ServeStream> {
+    pub(crate) fn accept(&self) -> io::Result<ServeStream> {
         match self {
             #[cfg(unix)]
             Acceptor::Unix(l) => l.accept().map(|(s, _)| ServeStream::Unix(s)),
@@ -404,10 +474,21 @@ impl Acceptor {
         }
     }
 
+    /// Nonblocking accepts for the event loop (a readiness event may
+    /// race a client that already disconnected; accept must not block).
+    pub(crate) fn set_nonblocking(&self, nonblocking: bool) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Acceptor::Unix(l) => l.set_nonblocking(nonblocking),
+            Acceptor::Tcp(l) => l.set_nonblocking(nonblocking),
+        }
+    }
+
     /// The listener's raw fd, kept by [`Ctl`] so the shutdown fallback
-    /// can force a blocked `accept` to return via `shutdown(2)`.
+    /// can force a blocked `accept` to return via `shutdown(2)`, and
+    /// used by the event loop for epoll registration.
     #[cfg(unix)]
-    fn raw_fd(&self) -> std::os::raw::c_int {
+    pub(crate) fn raw_fd(&self) -> std::os::raw::c_int {
         use std::os::unix::io::AsRawFd;
         match self {
             Acceptor::Unix(l) => l.as_raw_fd(),
@@ -420,7 +501,7 @@ impl Acceptor {
 // Serve loop
 // ---------------------------------------------------------------------------
 
-struct Ctl {
+pub(crate) struct Ctl {
     /// Resolved listen address; what the shutdown self-wake dials.
     wake: ServeAddr,
     shutdown: AtomicBool,
@@ -428,25 +509,32 @@ struct Ctl {
     /// Deliberately per-instance rather than process-global: tests run
     /// many daemons in one process, and their counters must not bleed
     /// into each other.
-    registry: Arc<Registry>,
+    pub(crate) registry: Arc<Registry>,
     // Lifecycle counters, registered in `registry` (handles cached
     // here so hot paths never re-lock the name map).
-    connections: Arc<Counter>,
-    requests: Arc<Counter>,
-    rejected: Arc<Counter>,
-    /// Connection handlers that panicked (caught in the spawn wrapper).
-    panics: Arc<Counter>,
+    pub(crate) connections: Arc<Counter>,
+    pub(crate) requests: Arc<Counter>,
+    pub(crate) rejected: Arc<Counter>,
+    /// Connection handlers that panicked (caught in the spawn wrapper
+    /// in the threads model, in the worker in the event loop).
+    pub(crate) panics: Arc<Counter>,
     /// Requests shed at the admission gate.
-    shed: Arc<Counter>,
+    pub(crate) shed: Arc<Counter>,
+    /// Currently-open admitted connections (both models report it; the
+    /// idleherd scenario and the reaping regression test watch it).
+    pub(crate) open_conns: Arc<Gauge>,
     /// Request batches currently executing (admission gate state).
-    inflight: AtomicU64,
+    pub(crate) inflight: AtomicU64,
     /// Gate bound; 0 = unlimited (see [`ServerOpts::max_inflight`]).
-    max_inflight: usize,
+    pub(crate) max_inflight: usize,
+    /// Which accept model is serving (reported by `stats`/`health`).
+    pub(crate) accept_model: AcceptModel,
     /// Span tracer (`--trace-out`); disabled unless configured.
-    trace: Tracer,
+    pub(crate) trace: Tracer,
     /// Live connections by id, so shutdown can half-close readers
     /// that are idle-blocked in a read and would otherwise hang
     /// the final join forever. Handlers remove their own entry.
+    /// (Threads model only; the event loop owns its streams.)
     conns: Mutex<HashMap<u64, ServeStream>>,
     /// Raw listener fd for the shutdown fallback (`shutdown(2)` wakes
     /// a blocked `accept` when the self-connect wake cannot).
@@ -455,6 +543,49 @@ struct Ctl {
 }
 
 impl Ctl {
+    /// Build the shared control block both accept models serve verbs
+    /// through. Counter handles are resolved once, here. The threads
+    /// model additionally records the listener fd afterwards (see
+    /// [`Ctl::set_listener_fd`]) for its forced-shutdown fallback.
+    pub(crate) fn new(wake: ServeAddr, registry: Arc<Registry>, opts: &ServerOpts) -> Ctl {
+        Ctl {
+            wake,
+            shutdown: AtomicBool::new(false),
+            connections: registry.counter("serve.connections"),
+            requests: registry.counter("serve.requests"),
+            rejected: registry.counter("serve.rejected"),
+            panics: registry.counter("serve.panics"),
+            shed: registry.counter("serve.shed"),
+            open_conns: registry.gauge("serve.open_conns"),
+            inflight: AtomicU64::new(0),
+            max_inflight: opts.max_inflight,
+            accept_model: opts.accept_model,
+            trace: opts.trace.clone(),
+            registry,
+            conns: Mutex::new(HashMap::new()),
+            #[cfg(unix)]
+            listener_fd: -1,
+        }
+    }
+
+    #[cfg(unix)]
+    fn set_listener_fd(&mut self, fd: std::os::raw::c_int) {
+        self.listener_fd = fd;
+    }
+
+    /// Assemble the final counter report (both models exit through
+    /// this, so `make smoke`'s "clean shutdown" line can't drift).
+    pub(crate) fn final_stats(&self, gens: &GenerationStore) -> ServerStats {
+        ServerStats {
+            connections: self.connections.get(),
+            requests: self.requests.get(),
+            swaps: gens.swaps(),
+            rejected: self.rejected.get(),
+            panics: self.panics.get(),
+            shed: self.shed.get(),
+        }
+    }
+
     fn begin_shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
         // The acceptor blocks in accept(); a throwaway connection over
@@ -506,41 +637,94 @@ pub fn run_server_ready(
     ready: Option<Sender<ServeAddr>>,
 ) -> Result<ServerStats> {
     let (acceptor, resolved) = Acceptor::bind(&opts.listen)?;
-    eprintln!("serve: listening on {} ({})", resolved, resolved.transport());
+    eprintln!(
+        "serve: listening on {} ({}, accept model {})",
+        resolved,
+        resolved.transport(),
+        opts.accept_model
+    );
+    match opts.accept_model {
+        AcceptModel::Threads => serve_threads(gens, opts, acceptor, resolved, ready),
+        #[cfg(target_os = "linux")]
+        AcceptModel::EventLoop => {
+            crate::serve::reactor::serve(gens, opts, acceptor, resolved, ready)
+        }
+        #[cfg(not(target_os = "linux"))]
+        AcceptModel::EventLoop => {
+            drop((acceptor, resolved, gens, ready));
+            bail!("--accept-model eventloop needs Linux epoll; use --accept-model threads")
+        }
+    }
+}
+
+/// Wait-for-zero counter replacing the old `Vec<JoinHandle>`: handler
+/// threads are spawned detached and check out on exit, so a long-lived
+/// daemon holds **no** per-connection state for finished handlers (the
+/// old vec only reaped finished handles on the *next* accept — an idle
+/// daemon accumulated one dead JoinHandle per connection ever served).
+pub(crate) struct WaitGroup {
+    count: Mutex<u64>,
+    zero: Condvar,
+}
+
+impl WaitGroup {
+    pub(crate) fn new() -> WaitGroup {
+        WaitGroup {
+            count: Mutex::new(0),
+            zero: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn enter(&self) {
+        *self.count.lock().expect("waitgroup") += 1;
+    }
+
+    pub(crate) fn exit(&self) {
+        let mut n = self.count.lock().expect("waitgroup");
+        *n -= 1;
+        if *n == 0 {
+            self.zero.notify_all();
+        }
+    }
+
+    /// Block until every entered handler has exited.
+    pub(crate) fn wait(&self) {
+        let mut n = self.count.lock().expect("waitgroup");
+        while *n != 0 {
+            n = self.zero.wait(n).expect("waitgroup");
+        }
+    }
+}
+
+/// The original thread-per-connection accept loop.
+fn serve_threads(
+    gens: Arc<GenerationStore>,
+    opts: &ServerOpts,
+    acceptor: Acceptor,
+    resolved: ServeAddr,
+    ready: Option<Sender<ServeAddr>>,
+) -> Result<ServerStats> {
     let registry = Arc::new(Registry::new());
-    let ctl = Arc::new(Ctl {
-        wake: resolved.clone(),
-        shutdown: AtomicBool::new(false),
-        connections: registry.counter("serve.connections"),
-        requests: registry.counter("serve.requests"),
-        rejected: registry.counter("serve.rejected"),
-        panics: registry.counter("serve.panics"),
-        shed: registry.counter("serve.shed"),
-        inflight: AtomicU64::new(0),
-        max_inflight: opts.max_inflight,
-        trace: opts.trace.clone(),
-        registry: Arc::clone(&registry),
-        conns: Mutex::new(HashMap::new()),
-        #[cfg(unix)]
-        listener_fd: acceptor.raw_fd(),
-    });
-    // RSS/CPU curves for the whole daemon lifetime; the `metrics` verb
-    // reports them as `proc.*` series (no-op off Linux).
+    let mut ctl = Ctl::new(resolved.clone(), Arc::clone(&registry), opts);
+    #[cfg(unix)]
+    ctl.set_listener_fd(acceptor.raw_fd());
+    let ctl = Arc::new(ctl);
+    // RSS/CPU/thread/fd curves for the whole daemon lifetime; the
+    // `metrics` verb reports them as `proc.*` series (no-op off Linux).
     let sysmon = Sysmon::start(registry, Duration::from_millis(100));
     if let Some(tx) = ready {
         let _ = tx.send(resolved.clone());
     }
     let mut next_conn_id = 0u64;
-    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    // Shutdown needs "every handler exited", not the handles
+    // themselves; detached threads + a WaitGroup give exactly that
+    // with nothing to reap.
+    let handlers = Arc::new(WaitGroup::new());
     loop {
         let stream = acceptor.accept();
         if ctl.shutdown.load(Ordering::SeqCst) {
             break;
         }
-        // Reap finished connection threads so a long-lived daemon
-        // does not accumulate one JoinHandle per connection ever
-        // served.
-        handles.retain(|h| !h.is_finished());
         let stream = match stream {
             Ok(s) => s,
             Err(e) => {
@@ -556,11 +740,7 @@ pub fn run_server_ready(
             ctl.rejected.inc();
             let mut s = stream;
             let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
-            let _ = writeln!(
-                s,
-                "err server at capacity ({live} of {} connections in use); retry later",
-                opts.max_conns
-            );
+            let _ = writeln!(s, "{}", capacity_line(live, opts.max_conns));
             let _ = s.shutdown(Shutdown::Both);
             continue;
         }
@@ -569,13 +749,17 @@ pub fn run_server_ready(
         next_conn_id += 1;
         let _ = stream.set_read_timeout(opts.read_timeout);
         if let Ok(clone) = stream.try_clone() {
-            ctl.conns.lock().expect("conn registry").insert(conn_id, clone);
+            let mut conns = ctl.conns.lock().expect("conn registry");
+            conns.insert(conn_id, clone);
+            ctl.open_conns.set(conns.len() as f64);
         }
         let gens = Arc::clone(&gens);
         let ctl = Arc::clone(&ctl);
         let threads = opts.batch_threads;
         let read_timeout = opts.read_timeout;
-        handles.push(std::thread::spawn(move || {
+        handlers.enter();
+        let handlers = Arc::clone(&handlers);
+        std::thread::spawn(move || {
             // Panic isolation: a panicking handler (a bug, or the
             // serve.verb.panic failpoint) costs one connection, never
             // the process. The registry cleanup below runs either way,
@@ -594,42 +778,63 @@ pub fn run_server_ready(
                     );
                 }
             }
-            ctl.conns.lock().expect("conn registry").remove(&conn_id);
-        }));
+            {
+                let mut conns = ctl.conns.lock().expect("conn registry");
+                conns.remove(&conn_id);
+                ctl.open_conns.set(conns.len() as f64);
+            }
+            handlers.exit();
+        });
     }
     // Graceful: flush what in-flight connections have queued, then
     // wait for them. Half-closing the read side unblocks handlers
     // whose client went idle without disconnecting (they see EOF,
     // flush pending responses and return) — without it one wedged
-    // client would hang the join below forever. Works identically on
+    // client would hang the wait below forever. Works identically on
     // both transports.
     for conn in ctl.conns.lock().expect("conn registry").values() {
         let _ = conn.shutdown(Shutdown::Read);
     }
-    for h in handles {
-        let _ = h.join();
-    }
+    handlers.wait();
     drop(acceptor);
     if let ServeAddr::Unix(path) = &resolved {
         let _ = std::fs::remove_file(path);
     }
-    // Stop the sampler (takes its final RSS/CPU sample) before the
-    // counters are read out.
+    // Stop the sampler (takes its final sample) before the counters
+    // are read out.
     drop(sysmon);
-    Ok(ServerStats {
-        connections: ctl.connections.get(),
-        requests: ctl.requests.get(),
-        swaps: gens.swaps(),
-        rejected: ctl.rejected.get(),
-        panics: ctl.panics.get(),
-        shed: ctl.shed.get(),
-    })
+    Ok(ctl.final_stats(&gens))
 }
+
+/// The `err server at capacity ...` rejection line — one format for
+/// both accept models (pinned byte-for-byte by `tests/daemon.rs`).
+pub(crate) fn capacity_line(live: usize, max_conns: usize) -> String {
+    format!("err server at capacity ({live} of {max_conns} connections in use); retry later")
+}
+
+/// The `err overloaded ...` shed line (pinned by `tests/chaos.rs`).
+pub(crate) fn shed_line(prev: u64, max_inflight: usize) -> String {
+    format!("err overloaded: {prev} batches in flight (max {max_inflight}); retry later")
+}
+
+/// The read-timeout goodbye line (pinned by the slow-loris test).
+pub(crate) fn timeout_line(read_timeout: Option<Duration>) -> String {
+    let ms = read_timeout.map(|d| d.as_millis()).unwrap_or(0);
+    format!("err connection idle past the {ms}ms read timeout; closing")
+}
+
+/// The oversized-line goodbye line.
+pub(crate) fn oversize_line() -> String {
+    format!("err request line exceeds {MAX_LINE_BYTES} bytes; closing")
+}
+
+/// Per-line UTF-8 rejection (the connection survives it).
+pub(crate) const UTF8_ERR_LINE: &str = "err request line is not valid UTF-8";
 
 /// The `stats` verb's single-line JSON payload: the current
 /// generation's identity + latency summary with the server's
 /// connection counters merged in.
-fn stats_reply(gens: &GenerationStore, ctl: &Ctl) -> String {
+pub(crate) fn stats_reply(gens: &GenerationStore, ctl: &Ctl) -> String {
     let mut obj = match gens.current().stats_json() {
         Json::Object(m) => m,
         _ => unreachable!("stats_json returns an object"),
@@ -638,13 +843,17 @@ fn stats_reply(gens: &GenerationStore, ctl: &Ctl) -> String {
     obj.insert("requests".to_string(), Json::num(ctl.requests.get() as f64));
     obj.insert("swaps".to_string(), Json::num(gens.swaps() as f64));
     obj.insert("rejected".to_string(), Json::num(ctl.rejected.get() as f64));
+    obj.insert(
+        "accept_model".to_string(),
+        Json::str(ctl.accept_model.name()),
+    );
     Json::Object(obj).to_string()
 }
 
 /// The `health` verb's single-line JSON payload: liveness plus every
 /// degradation counter an operator needs to decide whether the daemon
 /// is serving fresh data, stale-but-good data, or shedding load.
-fn health_reply(gens: &GenerationStore, ctl: &Ctl) -> String {
+pub(crate) fn health_reply(gens: &GenerationStore, ctl: &Ctl) -> String {
     let gen = gens.current();
     let faults = Json::object(
         faults::global()
@@ -655,6 +864,7 @@ fn health_reply(gens: &GenerationStore, ctl: &Ctl) -> String {
     );
     Json::object(vec![
         ("status", Json::str("ok")),
+        ("accept_model", Json::str(ctl.accept_model.name())),
         ("generation", Json::num(gen.seq() as f64)),
         ("strategy", Json::str(gen.strategy())),
         (
@@ -679,12 +889,62 @@ fn health_reply(gens: &GenerationStore, ctl: &Ctl) -> String {
 /// request order, errors as per-line `err` responses.
 /// Decrements the in-flight gauge when a batch scope exits, so a
 /// panicking or erroring batch can never leak an admission slot.
-struct InflightSlot<'a>(&'a AtomicU64);
+pub(crate) struct InflightSlot<'a>(pub(crate) &'a AtomicU64);
 
 impl Drop for InflightSlot<'_> {
     fn drop(&mut self) {
         self.0.fetch_sub(1, Ordering::Relaxed);
     }
+}
+
+/// Execute one admitted batch — failpoints, generation snapshot, span,
+/// per-verb latency histograms, request fan-out — and return one
+/// encoded reply line per request, in request order. The shared core
+/// of both accept models: the threads model writes the lines straight
+/// to its connection, the event loop queues them on the connection's
+/// write buffer. Panics (the `serve.verb.panic` failpoint, or a bug)
+/// unwind out of here into each model's `catch_unwind`; the
+/// `serve.stream.write_err` failpoint surfaces as the `Err`.
+pub(crate) fn execute_batch_core(
+    reqs: &[Request],
+    gens: &GenerationStore,
+    ctl: &Ctl,
+    threads: usize,
+) -> io::Result<Vec<String>> {
+    if faults::armed() {
+        // Both fire *before* the worker fan-out: the scoped pool's
+        // worker closures must never panic (that would abort the
+        // process), so chaos lands here where catch_unwind covers it.
+        faults::maybe_panic("serve.verb.panic");
+        faults::fail_io("serve.stream.write_err")?;
+    }
+    faults::sleep_ms("serve.batch.delay_ms");
+    let gen = gens.current();
+    let n = reqs.len() as f64;
+    let _span = ctl.trace.span_with("batch", &[("n", Json::num(n))]);
+    // Per-verb wire latency, recorded inside the fan-out so queue wait
+    // under thread contention counts (handles resolved once per batch).
+    let h_nn = ctl.registry.histogram("serve.verb.nn");
+    let h_edge = ctl.registry.histogram("serve.verb.edge");
+    let results = pool::parallel_tasks(reqs.len(), threads.max(1), |i| {
+        let t0 = Instant::now();
+        let out = gen.execute(&reqs[i]);
+        let us = t0.elapsed().as_micros() as u64;
+        match reqs[i] {
+            Request::Neighbors { .. } => h_nn.record(us),
+            Request::EdgeScore { .. } => h_edge.record(us),
+        }
+        out
+    });
+    let lines = results
+        .iter()
+        .map(|r| match r {
+            Ok(resp) => protocol::encode_response(resp),
+            Err(e) => protocol::encode_error(e),
+        })
+        .collect();
+    ctl.requests.add(reqs.len() as u64);
+    Ok(lines)
 }
 
 fn flush_batch<W: Write>(
@@ -697,13 +957,6 @@ fn flush_batch<W: Write>(
     if pending.is_empty() {
         return Ok(());
     }
-    if faults::armed() {
-        // Both fire *before* the worker fan-out: the scoped pool's
-        // worker closures must never panic (that would abort the
-        // process), so chaos lands here where catch_unwind covers it.
-        faults::maybe_panic("serve.verb.panic");
-        faults::fail_io("serve.stream.write_err")?;
-    }
     // Admission gate: bound concurrently-executing batches so overload
     // degrades into fast parseable refusals instead of a latency
     // collapse. One `err overloaded` line *per pending request* keeps
@@ -713,44 +966,92 @@ fn flush_batch<W: Write>(
     if ctl.max_inflight > 0 && prev >= ctl.max_inflight as u64 {
         ctl.shed.add(pending.len() as u64);
         for _ in 0..pending.len() {
-            writeln!(
-                w,
-                "err overloaded: {prev} batches in flight (max {}); retry later",
-                ctl.max_inflight
-            )?;
+            writeln!(w, "{}", shed_line(prev, ctl.max_inflight))?;
         }
         w.flush()?;
         pending.clear();
         return Ok(());
     }
-    faults::sleep_ms("serve.batch.delay_ms");
-    let gen = gens.current();
-    let n = pending.len() as f64;
-    let _span = ctl.trace.span_with("batch", &[("n", Json::num(n))]);
-    // Per-verb wire latency, recorded inside the fan-out so queue wait
-    // under thread contention counts (handles resolved once per batch).
-    let h_nn = ctl.registry.histogram("serve.verb.nn");
-    let h_edge = ctl.registry.histogram("serve.verb.edge");
-    let results = pool::parallel_tasks(pending.len(), threads.max(1), |i| {
-        let t0 = Instant::now();
-        let out = gen.execute(&pending[i]);
-        let us = t0.elapsed().as_micros() as u64;
-        match pending[i] {
-            Request::Neighbors { .. } => h_nn.record(us),
-            Request::EdgeScore { .. } => h_edge.record(us),
-        }
-        out
-    });
-    for r in &results {
-        match r {
-            Ok(resp) => writeln!(w, "{}", protocol::encode_response(resp))?,
-            Err(e) => writeln!(w, "{}", protocol::encode_error(e))?,
-        }
+    for line in execute_batch_core(pending, gens, ctl, threads)? {
+        writeln!(w, "{line}")?;
     }
     w.flush()?;
-    ctl.requests.add(pending.len() as u64);
     pending.clear();
     Ok(())
+}
+
+/// What a control verb asks of the connection loop after its reply.
+pub(crate) enum VerbOutcome {
+    /// Write the reply line; the connection continues.
+    Reply(String),
+    /// Write the reply line, flush, then begin daemon shutdown.
+    Shutdown(String),
+}
+
+/// Execute one control verb (anything but `Query`) — swap / stats /
+/// metrics / health / shutdown, each traced and latency-recorded —
+/// and return its reply line. Shared verbatim by both accept models,
+/// so their JSON payloads and swap acks cannot drift apart.
+pub(crate) fn execute_verb(msg: ClientMsg, gens: &GenerationStore, ctl: &Ctl) -> VerbOutcome {
+    match msg {
+        ClientMsg::Swap(path) => {
+            let _s = ctl.trace.span("verb.swap");
+            let t0 = Instant::now();
+            let reply = match gens.swap_to(path.as_deref()) {
+                Ok(gen) => format!(
+                    "ok swap gen {} store {}x{} {}",
+                    gen.seq(),
+                    gen.store().n(),
+                    gen.store().dim(),
+                    gen.strategy()
+                ),
+                Err(e) => protocol::encode_error(&e),
+            };
+            ctl.registry
+                .histogram("serve.verb.swap")
+                .record(t0.elapsed().as_micros() as u64);
+            VerbOutcome::Reply(reply)
+        }
+        ClientMsg::Stats => {
+            let _s = ctl.trace.span("verb.stats");
+            let t0 = Instant::now();
+            let reply = stats_reply(gens, ctl);
+            ctl.registry
+                .histogram("serve.verb.stats")
+                .record(t0.elapsed().as_micros() as u64);
+            VerbOutcome::Reply(reply)
+        }
+        ClientMsg::Metrics => {
+            let _s = ctl.trace.span("verb.metrics");
+            let t0 = Instant::now();
+            ctl.registry.gauge("serve.swaps").set(gens.swaps() as f64);
+            // Fault fire counts surface as `fault.*` gauges so the
+            // chaos battery can assert every armed failpoint actually
+            // fired.
+            for (name, fired) in faults::global().fired_counts() {
+                ctl.registry.gauge(&format!("fault.{name}")).set(fired as f64);
+            }
+            let reply = ctl.registry.snapshot().to_string();
+            ctl.registry
+                .histogram("serve.verb.metrics")
+                .record(t0.elapsed().as_micros() as u64);
+            VerbOutcome::Reply(reply)
+        }
+        ClientMsg::Health => {
+            let _s = ctl.trace.span("verb.health");
+            let t0 = Instant::now();
+            let reply = health_reply(gens, ctl);
+            ctl.registry
+                .histogram("serve.verb.health")
+                .record(t0.elapsed().as_micros() as u64);
+            VerbOutcome::Reply(reply)
+        }
+        ClientMsg::Shutdown => {
+            let _s = ctl.trace.span("verb.shutdown");
+            VerbOutcome::Shutdown("ok shutdown".to_string())
+        }
+        ClientMsg::Query(_) => unreachable!("queries batch; they never reach execute_verb"),
+    }
 }
 
 /// One `\n`-terminated line read through the cap.
@@ -858,14 +1159,13 @@ fn handle_conn(
                 // Slow-loris / wedged client: answer what is complete,
                 // say why, and give the thread back.
                 flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
-                let ms = read_timeout.map(|d| d.as_millis()).unwrap_or(0);
-                writeln!(w, "err connection idle past the {ms}ms read timeout; closing")?;
+                writeln!(w, "{}", timeout_line(read_timeout))?;
                 w.flush()?;
                 return Ok(());
             }
             LineRead::Oversized => {
                 flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
-                writeln!(w, "err request line exceeds {MAX_LINE_BYTES} bytes; closing")?;
+                writeln!(w, "{}", oversize_line())?;
                 w.flush()?;
                 return Ok(());
             }
@@ -873,7 +1173,7 @@ fn handle_conn(
                 let Ok(line) = std::str::from_utf8(&bytes) else {
                     // Reject per line — the terminator was found, so
                     // the stream is still in sync.
-                    writeln!(w, "err request line is not valid UTF-8")?;
+                    writeln!(w, "{UTF8_ERR_LINE}")?;
                     w.flush()?;
                     continue;
                 };
@@ -888,66 +1188,18 @@ fn handle_conn(
                         // Control verbs act on a consistent point in the
                         // stream: drain queued requests first.
                         flush_batch(&mut pending, gens, ctl, threads, &mut w)?;
-                        match msg {
-                            ClientMsg::Swap(path) => {
-                                let _s = ctl.trace.span("verb.swap");
-                                let t0 = Instant::now();
-                                match gens.swap_to(path.as_deref()) {
-                                    Ok(gen) => writeln!(
-                                        w,
-                                        "ok swap gen {} store {}x{} {}",
-                                        gen.seq(),
-                                        gen.store().n(),
-                                        gen.store().dim(),
-                                        gen.strategy()
-                                    )?,
-                                    Err(e) => writeln!(w, "{}", protocol::encode_error(&e))?,
-                                }
-                                ctl.registry
-                                    .histogram("serve.verb.swap")
-                                    .record(t0.elapsed().as_micros() as u64);
+                        match execute_verb(msg, gens, ctl) {
+                            VerbOutcome::Reply(reply) => {
+                                writeln!(w, "{reply}")?;
+                                w.flush()?;
                             }
-                            ClientMsg::Stats => {
-                                let _s = ctl.trace.span("verb.stats");
-                                let t0 = Instant::now();
-                                writeln!(w, "{}", stats_reply(gens, ctl))?;
-                                ctl.registry
-                                    .histogram("serve.verb.stats")
-                                    .record(t0.elapsed().as_micros() as u64);
-                            }
-                            ClientMsg::Metrics => {
-                                let _s = ctl.trace.span("verb.metrics");
-                                let t0 = Instant::now();
-                                ctl.registry.gauge("serve.swaps").set(gens.swaps() as f64);
-                                // Fault fire counts surface as `fault.*`
-                                // gauges so the chaos battery can assert
-                                // every armed failpoint actually fired.
-                                for (name, fired) in faults::global().fired_counts() {
-                                    ctl.registry.gauge(&format!("fault.{name}")).set(fired as f64);
-                                }
-                                writeln!(w, "{}", ctl.registry.snapshot().to_string())?;
-                                ctl.registry
-                                    .histogram("serve.verb.metrics")
-                                    .record(t0.elapsed().as_micros() as u64);
-                            }
-                            ClientMsg::Health => {
-                                let _s = ctl.trace.span("verb.health");
-                                let t0 = Instant::now();
-                                writeln!(w, "{}", health_reply(gens, ctl))?;
-                                ctl.registry
-                                    .histogram("serve.verb.health")
-                                    .record(t0.elapsed().as_micros() as u64);
-                            }
-                            ClientMsg::Shutdown => {
-                                let _s = ctl.trace.span("verb.shutdown");
-                                writeln!(w, "ok shutdown")?;
+                            VerbOutcome::Shutdown(reply) => {
+                                writeln!(w, "{reply}")?;
                                 w.flush()?;
                                 ctl.begin_shutdown();
                                 return Ok(());
                             }
-                            ClientMsg::Query(_) => unreachable!("queries queue above"),
                         }
-                        w.flush()?;
                     }
                     Err(e) => {
                         // Malformed line: report and keep the connection.

@@ -23,7 +23,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use kcore_embed::obs::faults;
-use kcore_embed::serve::server::connect_stream;
+use kcore_embed::serve::server::{connect_stream, AcceptModel};
 use kcore_embed::serve::{
     client_exchange, run_server_ready, write_store, ClientConn, EmbeddingStore, ExactScan,
     GenerationOpts, GenerationStore, Metric, Response, ScanIndex, ServeAddr, ServerOpts,
@@ -91,6 +91,27 @@ fn start_tcp_daemon(store: &Path) -> (thread::JoinHandle<ServerStats>, ServeAddr
     start_daemon_opts(store, ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into())))
 }
 
+/// An ephemeral loopback TCP daemon under a specific accept model.
+fn start_tcp_daemon_model(
+    store: &Path,
+    model: AcceptModel,
+) -> (thread::JoinHandle<ServerStats>, ServeAddr) {
+    let mut opts = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
+    opts.accept_model = model;
+    start_daemon_opts(store, opts)
+}
+
+/// The accept models this platform can exercise (the epoll reactor is
+/// Linux-only). The degradation contract is model-independent, so the
+/// chaos battery runs once per model with identical fault schedules.
+fn models() -> Vec<AcceptModel> {
+    if cfg!(target_os = "linux") {
+        vec![AcceptModel::Threads, AcceptModel::EventLoop]
+    } else {
+        vec![AcceptModel::Threads]
+    }
+}
+
 fn lines(strs: &[&str]) -> Vec<String> {
     strs.iter().map(|s| s.to_string()).collect()
 }
@@ -142,11 +163,17 @@ fn torn_export_is_rejected_and_last_good_generation_serves() {
 /// next connection is answered bit-identically.
 #[test]
 fn verb_panic_costs_one_connection_not_the_process() {
+    for model in models() {
+        verb_panic_with(model);
+    }
+}
+
+fn verb_panic_with(model: AcceptModel) {
     let _g = fault_guard();
-    let p = tmp("panic.kce");
+    let p = tmp(&format!("panic_{}.kce", model.name()));
     write_artifact(&p, 40, 6, 3);
     let expected0 = expected_nn(&p, 0, 4);
-    let (daemon, addr) = start_tcp_daemon(&p);
+    let (daemon, addr) = start_tcp_daemon_model(&p, model);
 
     faults::global().configure("serve.verb.panic=1", 0).unwrap();
     let mut victim = ClientConn::connect(&addr).unwrap();
@@ -176,13 +203,19 @@ fn verb_panic_costs_one_connection_not_the_process() {
 /// and after the faults clear the same target swaps cleanly.
 #[test]
 fn swap_load_fault_and_panic_keep_last_good_generation() {
+    for model in models() {
+        swap_load_faults_with(model);
+    }
+}
+
+fn swap_load_faults_with(model: AcceptModel) {
     let _g = fault_guard();
-    let a = tmp("swapfault_a.kce");
-    let b = tmp("swapfault_b.kce");
+    let a = tmp(&format!("swapfault_a_{}.kce", model.name()));
+    let b = tmp(&format!("swapfault_b_{}.kce", model.name()));
     write_artifact(&a, 50, 6, 4);
     write_artifact(&b, 50, 6, 5);
     let expected0 = expected_nn(&a, 0, 5);
-    let (daemon, addr) = start_tcp_daemon(&a);
+    let (daemon, addr) = start_tcp_daemon_model(&a, model);
     let swap_line = format!("swap {}", b.canonicalize().unwrap().display());
 
     for spec in ["swap.load.err=always", "swap.load.panic=always"] {
@@ -214,11 +247,17 @@ fn swap_load_fault_and_panic_keep_last_good_generation() {
 /// the daemon intact.
 #[test]
 fn stream_faults_slow_or_drop_one_connection_never_the_daemon() {
+    for model in models() {
+        stream_faults_with(model);
+    }
+}
+
+fn stream_faults_with(model: AcceptModel) {
     let _g = fault_guard();
-    let p = tmp("stream.kce");
+    let p = tmp(&format!("stream_{}.kce", model.name()));
     write_artifact(&p, 40, 6, 6);
     let expected1 = expected_nn(&p, 1, 3);
-    let (daemon, addr) = start_tcp_daemon(&p);
+    let (daemon, addr) = start_tcp_daemon_model(&p, model);
 
     faults::global()
         .configure("serve.stream.delay_ms=always:2,serve.stream.short_read=always", 0)
@@ -245,11 +284,18 @@ fn stream_faults_slow_or_drop_one_connection_never_the_daemon() {
 /// N replies for N lines — and `health` counts the shed requests.
 #[test]
 fn overload_sheds_with_parseable_err_lines() {
+    for model in models() {
+        overload_sheds_with(model);
+    }
+}
+
+fn overload_sheds_with(model: AcceptModel) {
     let _g = fault_guard();
-    let p = tmp("shed.kce");
+    let p = tmp(&format!("shed_{}.kce", model.name()));
     write_artifact(&p, 40, 6, 7);
     let mut opts = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
     opts.max_inflight = 1;
+    opts.accept_model = model;
     let (daemon, addr) = start_daemon_opts(&p, opts);
 
     faults::global().configure("serve.batch.delay_ms=always:200", 0).unwrap();
@@ -288,10 +334,16 @@ fn overload_sheds_with_parseable_err_lines() {
 /// instead of hanging the daemon forever.
 #[test]
 fn shutdown_completes_even_when_the_wake_connection_fails() {
+    for model in models() {
+        wake_failure_with(model);
+    }
+}
+
+fn wake_failure_with(model: AcceptModel) {
     let _g = fault_guard();
-    let p = tmp("wake.kce");
+    let p = tmp(&format!("wake_{}.kce", model.name()));
     write_artifact(&p, 40, 6, 8);
-    let (daemon, addr) = start_tcp_daemon(&p);
+    let (daemon, addr) = start_tcp_daemon_model(&p, model);
 
     faults::global().configure("serve.wake.err=always", 0).unwrap();
     let replies = client_exchange(&addr, &lines(&["shutdown"])).unwrap();
@@ -314,13 +366,20 @@ fn shutdown_completes_even_when_the_wake_connection_fails() {
 /// must be bit-identical to the last-good generation's answer.
 #[test]
 fn full_chaos_schedule_survives_and_serves_bit_identically() {
+    for model in models() {
+        full_chaos_schedule_with(model);
+    }
+}
+
+fn full_chaos_schedule_with(model: AcceptModel) {
     let _g = fault_guard();
-    let p = tmp("storm.kce");
+    let p = tmp(&format!("storm_{}.kce", model.name()));
     write_artifact(&p, 60, 6, 9);
     let k = 4usize;
     let expected: Vec<String> = (0..60u32).map(|v| expected_nn(&p, v, k)).collect();
     let mut opts = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
     opts.max_inflight = 2;
+    opts.accept_model = model;
     let (daemon, addr) = start_daemon_opts(&p, opts);
 
     let spec = "serve.stream.delay_ms=0.2:1,serve.stream.short_read=0.3,\
@@ -424,11 +483,17 @@ fn client_connect_retries_until_the_daemon_appears() {
 /// radius" invariant rather than any specific code path.)
 #[test]
 fn fault_blast_radius_is_one_connection() {
+    for model in models() {
+        blast_radius_with(model);
+    }
+}
+
+fn blast_radius_with(model: AcceptModel) {
     let _g = fault_guard();
-    let p = tmp("radius.kce");
+    let p = tmp(&format!("radius_{}.kce", model.name()));
     write_artifact(&p, 40, 6, 11);
     let expected: Vec<String> = (0..4u32).map(|v| expected_nn(&p, v, 3)).collect();
-    let (daemon, addr) = start_tcp_daemon(&p);
+    let (daemon, addr) = start_tcp_daemon_model(&p, model);
 
     faults::global().configure("serve.stream.err=1", 0).unwrap();
     // The victim trips the one-shot fault on its first read poll...

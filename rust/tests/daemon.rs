@@ -25,7 +25,7 @@ use std::time::Duration;
 
 use kcore_embed::serve::loadtest::{self, LoadOpts};
 use kcore_embed::serve::protocol::{encode_response, parse_response};
-use kcore_embed::serve::server::connect_stream;
+use kcore_embed::serve::server::{connect_stream, AcceptModel};
 use kcore_embed::serve::{
     client_exchange, notify_swap, run_server_ready, write_store, ClientConn, ClientMsg,
     EmbeddingStore, ExactScan, GenerationOpts, GenerationStore, Metric, Request, Response,
@@ -79,6 +79,28 @@ fn start_daemon(store: &Path, listen: ServeAddr) -> (thread::JoinHandle<ServerSt
 /// An ephemeral loopback TCP daemon.
 fn start_tcp_daemon(store: &Path) -> (thread::JoinHandle<ServerStats>, ServeAddr) {
     start_daemon(store, ServeAddr::Tcp("127.0.0.1:0".into()))
+}
+
+/// An ephemeral loopback TCP daemon under a specific accept model.
+fn start_tcp_daemon_model(
+    store: &Path,
+    model: AcceptModel,
+) -> (thread::JoinHandle<ServerStats>, ServeAddr) {
+    let mut opts = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
+    opts.accept_model = model;
+    start_daemon_opts(store, opts)
+}
+
+/// The accept models this platform can exercise: both on Linux, only
+/// thread-per-connection elsewhere (the epoll reactor is Linux-only).
+/// Parametrized tests loop over this so every behavioral contract is
+/// pinned against both multiplexing models with identical inputs.
+fn models() -> Vec<AcceptModel> {
+    if cfg!(target_os = "linux") {
+        vec![AcceptModel::Threads, AcceptModel::EventLoop]
+    } else {
+        vec![AcceptModel::Threads]
+    }
 }
 
 fn lines(strs: &[&str]) -> Vec<String> {
@@ -213,9 +235,15 @@ fn tcp_round_trips_every_verb_against_a_live_daemon() {
 /// per-verb latency histograms and (on Linux) `/proc` RSS/CPU series.
 #[test]
 fn stats_and_metrics_verbs_answer_single_line_json() {
-    let p = tmp("metrics.kce");
+    for model in models() {
+        stats_and_metrics_with(model);
+    }
+}
+
+fn stats_and_metrics_with(model: AcceptModel) {
+    let p = tmp(&format!("metrics_{}.kce", model.name()));
     write_artifact(&p, 50, 6, 21);
-    let (daemon, addr) = start_tcp_daemon(&p);
+    let (daemon, addr) = start_tcp_daemon_model(&p, model);
 
     // Traffic first, so the per-verb histograms have samples.
     let mut conn = ClientConn::connect(&addr).unwrap();
@@ -231,9 +259,26 @@ fn stats_and_metrics_verbs_answer_single_line_json() {
     assert_eq!(stats.get("queries").and_then(Json::as_i64), Some(2));
     assert_eq!(stats.get("requests").and_then(Json::as_i64), Some(2));
     assert_eq!(stats.get("swaps").and_then(Json::as_i64), Some(0));
+    // The serving model is an operator-visible fact, not a deploy flag
+    // someone has to go find.
+    assert_eq!(
+        stats.get("accept_model").and_then(Json::as_str),
+        Some(model.name()),
+        "{}",
+        replies[0]
+    );
     for key in ["strategy", "mean_us", "max_us", "p50_us", "p99_us", "connections", "rejected"] {
         assert!(stats.get(key).is_some(), "stats reply missing {key}: {}", replies[0]);
     }
+
+    let replies = conn.exchange(&lines(&["health"])).unwrap();
+    let h = Json::parse(&replies[0]).unwrap();
+    assert_eq!(
+        h.get("accept_model").and_then(Json::as_str),
+        Some(model.name()),
+        "{}",
+        replies[0]
+    );
 
     let replies = conn.exchange(&lines(&["metrics"])).unwrap();
     assert_eq!(replies.len(), 1);
@@ -249,11 +294,28 @@ fn stats_and_metrics_verbs_answer_single_line_json() {
         }
     }
     assert_eq!(m.path(&["gauges", "serve.swaps"]).and_then(Json::as_i64), Some(0));
+    // The one live connection is this test's own.
+    assert_eq!(m.path(&["gauges", "serve.open_conns"]).and_then(Json::as_i64), Some(1));
+    if model == AcceptModel::EventLoop {
+        // The reactor's own loop counters: it woke up at least once per
+        // exchange and saw at least one readiness event per wakeup.
+        let wakeups = m.path(&["counters", "serve.loop.wakeups"]).and_then(Json::as_i64);
+        let ready = m.path(&["counters", "serve.loop.ready_events"]).and_then(Json::as_i64);
+        assert!(wakeups.unwrap_or(0) >= 1, "no loop wakeups: {}", replies[0]);
+        assert!(ready.unwrap_or(0) >= 1, "no ready events: {}", replies[0]);
+        assert!(
+            m.path(&["counters", "serve.loop.timeouts"]).is_some(),
+            "no loop timeout counter: {}",
+            replies[0]
+        );
+    }
     // The /proc sampler took at least its synchronous startup sample.
     #[cfg(target_os = "linux")]
     {
         let n = m.path(&["series", "proc.rss_bytes", "n"]).and_then(Json::as_i64);
         assert!(n.unwrap_or(0) >= 1, "no rss samples: {}", replies[0]);
+        let threads = m.path(&["gauges", "proc.threads"]).and_then(Json::as_i64);
+        assert!(threads.unwrap_or(0) >= 1, "no thread gauge: {}", replies[0]);
     }
 
     drop(conn);
@@ -268,9 +330,15 @@ fn stats_and_metrics_verbs_answer_single_line_json() {
 /// other clients afterwards.
 #[test]
 fn adversarial_inputs_get_err_lines_without_killing_the_daemon() {
-    let p = tmp("adversarial.kce");
+    for model in models() {
+        adversarial_inputs_with(model);
+    }
+}
+
+fn adversarial_inputs_with(model: AcceptModel) {
+    let p = tmp(&format!("adversarial_{}.kce", model.name()));
     write_artifact(&p, 40, 6, 10);
-    let (daemon, addr) = start_tcp_daemon(&p);
+    let (daemon, addr) = start_tcp_daemon_model(&p, model);
     let expected0 = expected_nn(&p, 0, 5);
 
     // One connection, escalating abuse, still answering queries.
@@ -332,10 +400,17 @@ fn adversarial_inputs_get_err_lines_without_killing_the_daemon() {
 /// connection closes, and its handler thread exits (shutdown joins).
 #[test]
 fn slow_loris_hits_the_read_timeout_and_gets_flushed() {
-    let p = tmp("loris.kce");
+    for model in models() {
+        slow_loris_with(model);
+    }
+}
+
+fn slow_loris_with(model: AcceptModel) {
+    let p = tmp(&format!("loris_{}.kce", model.name()));
     write_artifact(&p, 40, 6, 11);
     let mut opts = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
     opts.read_timeout = Some(Duration::from_millis(250));
+    opts.accept_model = model;
     let (daemon, addr) = start_daemon_opts(&p, opts);
 
     let mut stream = connect_stream(&addr).unwrap();
@@ -364,9 +439,15 @@ fn slow_loris_hits_the_read_timeout_and_gets_flushed() {
 /// clients, every batch completes, zero failures, sane histograms.
 #[test]
 fn tcp_fanout_load_completes_with_zero_failed_batches() {
-    let p = tmp("fanout.kce");
+    for model in models() {
+        tcp_fanout_with(model);
+    }
+}
+
+fn tcp_fanout_with(model: AcceptModel) {
+    let p = tmp(&format!("fanout_{}.kce", model.name()));
     write_artifact(&p, 80, 8, 12);
-    let (daemon, addr) = start_tcp_daemon(&p);
+    let (daemon, addr) = start_tcp_daemon_model(&p, model);
 
     let mut opts = LoadOpts::new(addr.clone());
     opts.clients = 8;
@@ -395,8 +476,14 @@ fn tcp_fanout_load_completes_with_zero_failed_batches() {
 /// client sees a failure.
 #[test]
 fn hot_swap_under_tcp_load_never_tears_a_batch() {
-    let a = tmp("tear_a.kce");
-    let b = tmp("tear_b.kce");
+    for model in models() {
+        hot_swap_under_load_with(model);
+    }
+}
+
+fn hot_swap_under_load_with(model: AcceptModel) {
+    let a = tmp(&format!("tear_a_{}.kce", model.name()));
+    let b = tmp(&format!("tear_b_{}.kce", model.name()));
     let (n, dim, k) = (30usize, 6usize, 4usize);
     write_artifact(&a, n, dim, 13);
     write_artifact(&b, n, dim, 14);
@@ -404,7 +491,7 @@ fn hot_swap_under_tcp_load_never_tears_a_batch() {
     let expected_b: Vec<String> = (0..n as u32).map(|v| expected_nn(&b, v, k)).collect();
     assert_ne!(expected_a, expected_b, "artifacts too similar to detect tearing");
 
-    let (daemon, addr) = start_tcp_daemon(&a);
+    let (daemon, addr) = start_tcp_daemon_model(&a, model);
     let stop = Arc::new(AtomicBool::new(false));
     let mut workers = Vec::new();
     for w in 0..3usize {
@@ -466,10 +553,17 @@ fn hot_swap_under_tcp_load_never_tears_a_batch() {
 /// when a held connection closes.
 #[test]
 fn connection_cap_rejects_with_a_parseable_error_line() {
-    let p = tmp("cap.kce");
+    for model in models() {
+        connection_cap_with(model);
+    }
+}
+
+fn connection_cap_with(model: AcceptModel) {
+    let p = tmp(&format!("cap_{}.kce", model.name()));
     write_artifact(&p, 40, 6, 15);
     let mut opts = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
     opts.max_conns = 2;
+    opts.accept_model = model;
     let (daemon, addr) = start_daemon_opts(&p, opts);
     let expected0 = expected_nn(&p, 0, 4);
 
@@ -614,9 +708,14 @@ fn health_verb_reports_liveness_and_last_swap_result() {
 /// pending batches — even while idle connections sit open with no read
 /// timeout, on either transport. Before the transport refactor the
 /// wake-up only worked for unix sockets.
-fn shutdown_drains_idle_connections(listen: ServeAddr, artifact: &Path) -> ServerStats {
+fn shutdown_drains_idle_connections(
+    listen: ServeAddr,
+    artifact: &Path,
+    model: AcceptModel,
+) -> ServerStats {
     let mut opts = ServerOpts::new(listen);
     opts.read_timeout = None; // idle conns block their handlers forever
+    opts.accept_model = model;
     let (daemon, addr) = start_daemon_opts(artifact, opts);
 
     // Two idle connections that never send a byte.
@@ -653,21 +752,25 @@ fn shutdown_drains_idle_connections(listen: ServeAddr, artifact: &Path) -> Serve
 
 #[test]
 fn shutdown_completes_with_idle_tcp_connections_open() {
-    let p = tmp("idle_tcp.kce");
-    write_artifact(&p, 40, 6, 16);
-    shutdown_drains_idle_connections(ServeAddr::Tcp("127.0.0.1:0".into()), &p);
-    std::fs::remove_file(&p).unwrap();
+    for model in models() {
+        let p = tmp(&format!("idle_tcp_{}.kce", model.name()));
+        write_artifact(&p, 40, 6, 16);
+        shutdown_drains_idle_connections(ServeAddr::Tcp("127.0.0.1:0".into()), &p, model);
+        std::fs::remove_file(&p).unwrap();
+    }
 }
 
 #[cfg(unix)]
 #[test]
 fn shutdown_completes_with_idle_unix_connections_open() {
-    let p = tmp("idle_unix.kce");
-    let sock = tmp("idle_unix.sock");
-    write_artifact(&p, 40, 6, 17);
-    shutdown_drains_idle_connections(ServeAddr::Unix(sock.clone()), &p);
-    assert!(!sock.exists(), "socket file not removed on shutdown");
-    std::fs::remove_file(&p).unwrap();
+    for model in models() {
+        let p = tmp(&format!("idle_unix_{}.kce", model.name()));
+        let sock = tmp(&format!("idle_unix_{}.sock", model.name()));
+        write_artifact(&p, 40, 6, 17);
+        shutdown_drains_idle_connections(ServeAddr::Unix(sock.clone()), &p, model);
+        assert!(!sock.exists(), "socket file not removed on shutdown");
+        std::fs::remove_file(&p).unwrap();
+    }
 }
 
 #[cfg(unix)]
@@ -728,22 +831,43 @@ fn daemon_hot_swaps_and_shuts_down_cleanly() {
 
 #[test]
 fn watched_reexport_is_picked_up_without_a_verb() {
-    let p = tmp("watch.kce");
+    for model in models() {
+        watched_reexport_with(model);
+    }
+}
+
+fn watched_reexport_with(model: AcceptModel) {
+    let p = tmp(&format!("watch_{}.kce", model.name()));
     write_artifact(&p, 50, 6, 3);
     let expected_old = expected_nn(&p, 2, 4);
 
     // Over TCP: the watched-path reload is transport-independent.
-    let (daemon, addr) = start_tcp_daemon(&p);
+    let (daemon, addr) = start_tcp_daemon_model(&p, model);
     let replies = client_exchange(&addr, &lines(&["nn 2 4"])).unwrap();
     assert_eq!(replies, vec![expected_old.clone()]);
 
-    // Re-export over the watched path (atomic rename inside): the next
-    // accepted connection reloads before answering.
+    // Re-export over the watched path (atomic rename inside). The
+    // threads model checks the watch on every accept; the event loop
+    // checks it on its ~200ms loop tick and runs the reload on a
+    // worker — asynchronous either way, so poll until the new
+    // generation answers.
     write_artifact(&p, 50, 6, 4);
     let expected_new = expected_nn(&p, 2, 4);
     assert_ne!(expected_old, expected_new);
-    let replies = client_exchange(&addr, &lines(&["nn 2 4"])).unwrap();
-    assert_eq!(replies, vec![expected_new]);
+    let mut reloaded = false;
+    for _ in 0..100 {
+        let replies = client_exchange(&addr, &lines(&["nn 2 4"])).unwrap();
+        assert!(
+            replies == vec![expected_old.clone()] || replies == vec![expected_new.clone()],
+            "reply from neither generation: {replies:?}"
+        );
+        if replies == vec![expected_new.clone()] {
+            reloaded = true;
+            break;
+        }
+        thread::sleep(Duration::from_millis(50));
+    }
+    assert!(reloaded, "watched re-export never picked up");
 
     let replies = client_exchange(&addr, &lines(&["stats"])).unwrap();
     let j = Json::parse(&replies[0]).unwrap();
@@ -823,4 +947,88 @@ fn concurrent_clients_never_fail_or_block_across_swaps() {
     assert_eq!(stats.requests, total_ok);
     std::fs::remove_file(&a).unwrap();
     std::fs::remove_file(&b).unwrap();
+}
+
+/// Both accept models are the same daemon to a client: an identical
+/// request battery (multi-batch, malformed, out-of-range, every query
+/// verb) against the same artifact answers byte-identically under
+/// thread-per-connection and under the event loop.
+#[test]
+fn accept_models_answer_bit_identically() {
+    let p = tmp("parity.kce");
+    write_artifact(&p, 60, 6, 19);
+    let battery = lines(&[
+        "nn 0 5",
+        "edge 1 2",
+        "",
+        "nn 59 3",
+        "bogus verb",
+        "nn 999 3",
+        "",
+        "edge 7 7",
+        "nn 12 1",
+    ]);
+
+    let mut per_model: Vec<(AcceptModel, Vec<String>)> = Vec::new();
+    for model in models() {
+        let (daemon, addr) = start_tcp_daemon_model(&p, model);
+        let replies = client_exchange(&addr, &battery).unwrap();
+        client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+        daemon.join().unwrap();
+        per_model.push((model, replies));
+    }
+
+    let (_, reference) = &per_model[0];
+    // 7 query/err replies: blank lines flush, they do not answer.
+    assert_eq!(reference.len(), 7, "{reference:?}");
+    for (model, replies) in &per_model[1..] {
+        assert_eq!(replies, reference, "{} diverged from threads", model.name());
+    }
+    std::fs::remove_file(&p).unwrap();
+}
+
+/// Regression: serving a connection must not leave anything behind
+/// once it closes. The `serve.open_conns` gauge returns to exactly the
+/// probing connection after a churn of short-lived clients — with no
+/// intervening accept required to reap them (the old accept loop only
+/// collected finished handler threads on the *next* accept).
+#[test]
+fn closed_connections_are_reaped_without_a_new_accept() {
+    for model in models() {
+        closed_connections_reaped_with(model);
+    }
+}
+
+fn closed_connections_reaped_with(model: AcceptModel) {
+    let p = tmp(&format!("reap_{}.kce", model.name()));
+    write_artifact(&p, 40, 6, 18);
+    let (daemon, addr) = start_tcp_daemon_model(&p, model);
+
+    for _ in 0..20 {
+        let replies = client_exchange(&addr, &lines(&["nn 0 4"])).unwrap();
+        assert_eq!(replies.len(), 1);
+    }
+
+    // Deregistration is asynchronous in both models (handler exit /
+    // loop close event), so poll. The probe's own connection is the
+    // one the gauge is allowed to show.
+    let mut open = -1;
+    for _ in 0..200 {
+        let replies = client_exchange(&addr, &lines(&["metrics"])).unwrap();
+        let m = Json::parse(&replies[0]).unwrap();
+        open = m
+            .path(&["gauges", "serve.open_conns"])
+            .and_then(Json::as_i64)
+            .unwrap_or(-1);
+        if open == 1 {
+            break;
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(open, 1, "closed connections never reaped under {}", model.name());
+
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    let stats = daemon.join().unwrap();
+    assert!(stats.connections >= 21, "{stats:?}");
+    std::fs::remove_file(&p).unwrap();
 }

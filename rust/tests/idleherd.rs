@@ -1,0 +1,157 @@
+//! Acceptance (ISSUE 9 tentpole): N mostly-idle clients cost the
+//! event-loop daemon N file descriptors, **not** N threads.
+//!
+//! A 1000-connection idle herd is held open against an in-process
+//! `--accept-model eventloop` daemon while the `idleherd` load
+//! scenario probes the daemon's own `/proc` gauges mid-run. The
+//! daemon, the drivers and this test share one process, so the
+//! thread-count delta over the pre-daemon baseline bounds what the
+//! reactor added: one loop thread, a fixed worker pool and the sysmon
+//! sampler — a constant, not a function of the herd size. Under
+//! thread-per-connection the same herd would add ~1000 threads, which
+//! is exactly what the bound rules out.
+//!
+//! Linux-only: the epoll reactor and `/proc` are.
+#![cfg(target_os = "linux")]
+
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use kcore_embed::serve::loadtest::{self, LoadOpts};
+use kcore_embed::serve::server::AcceptModel;
+use kcore_embed::serve::{
+    client_exchange, run_server_ready, write_store, GenerationOpts, GenerationStore, ServeAddr,
+    ServerOpts, ServerStats,
+};
+use kcore_embed::util::rng::Rng;
+
+/// How many threads the reactor is allowed to add over the pre-daemon
+/// baseline while the herd is fully connected: loop + workers + sysmon
+/// + the scenario's own driver threads, with headroom. A
+/// thread-per-connection daemon would blow through this by ~975.
+const THREAD_BUDGET: i64 = 24;
+
+const HERD: usize = 1000;
+
+#[repr(C)]
+struct RLimit {
+    cur: u64,
+    max: u64,
+}
+
+extern "C" {
+    fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+}
+
+const RLIMIT_NOFILE: i32 = 7;
+
+/// Raise the soft fd limit to the hard limit (both herd ends live in
+/// this process: ~2N fds plus slack) and return the resulting soft
+/// limit.
+fn raise_nofile_limit() -> u64 {
+    let mut lim = RLimit { cur: 0, max: 0 };
+    unsafe {
+        if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
+            return 0;
+        }
+        if lim.cur < lim.max {
+            let want = RLimit { cur: lim.max, max: lim.max };
+            if setrlimit(RLIMIT_NOFILE, &want) == 0 {
+                lim.cur = lim.max;
+            }
+        }
+    }
+    lim.cur
+}
+
+/// Threads in this process right now, counted the same way the
+/// daemon's sysmon gauge is derived (one task dir per thread).
+fn process_threads() -> i64 {
+    std::fs::read_dir("/proc/self/task")
+        .map(|d| d.count() as i64)
+        .unwrap_or(-1)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("kcore_embed_idleherd_{name}_{}", std::process::id()));
+    p
+}
+
+fn write_artifact(path: &Path, n: usize, dim: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let vecs: Vec<f32> = (0..n * dim).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+    write_store(path, &vecs, n, dim, None).unwrap();
+}
+
+#[test]
+fn thousand_idle_connections_cost_fds_not_threads() {
+    let fd_limit = raise_nofile_limit();
+    assert!(
+        fd_limit >= (2 * HERD + 512) as u64,
+        "fd limit {fd_limit} too low to hold a {HERD}-connection herd in-process"
+    );
+
+    let p = tmp("herd.kce");
+    write_artifact(&p, 60, 6, 23);
+    let baseline = process_threads();
+    assert!(baseline > 0, "cannot read /proc/self/task");
+
+    let gens = GenerationStore::open(&p, None, GenerationOpts::default()).unwrap();
+    let gens = Arc::new(gens);
+    let mut opts = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
+    opts.accept_model = AcceptModel::EventLoop;
+    opts.batch_threads = 4;
+    // The herd is idle by design; a read timeout would cull it.
+    opts.read_timeout = None;
+    let (tx, rx) = mpsc::channel();
+    let daemon: thread::JoinHandle<ServerStats> =
+        thread::spawn(move || run_server_ready(gens, &opts, Some(tx)).unwrap());
+    let addr = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("daemon never reported its listen address");
+
+    let mut load = LoadOpts::new(addr.clone());
+    load.clients = 4;
+    load.batches = 10;
+    load.batch_size = 1;
+    load.top_k = 5;
+    load.seed = 7;
+    load.rate = 50.0;
+    load.idle_conns = HERD;
+    let res = loadtest::run_scenario("idleherd", &load).unwrap();
+
+    assert_eq!(res.idle_conns, HERD);
+    assert_eq!(res.failed_batches, 0, "herd traffic failed: {res:?}");
+    assert_eq!(res.errors, 0, "err replies under the herd: {res:?}");
+    assert_eq!(res.requests, 40, "4 drivers x 10 single-line batches");
+
+    // The daemon observed the whole herd: both ends of every
+    // connection live in this process, so its open-fd gauge must be
+    // at least herd-sized (in practice ~2x).
+    assert!(
+        res.daemon_open_fds >= HERD as i64,
+        "daemon saw {} open fds for a {HERD}-connection herd",
+        res.daemon_open_fds
+    );
+
+    // The tentpole claim: thread count mid-herd is a small constant
+    // over the pre-daemon baseline, not a function of the herd size.
+    assert!(res.daemon_threads > 0, "thread probe failed: {res:?}");
+    let delta = res.daemon_threads - baseline;
+    assert!(
+        delta <= THREAD_BUDGET,
+        "event-loop daemon grew {delta} threads (baseline {baseline}, \
+         mid-herd {}) for {HERD} idle connections",
+        res.daemon_threads
+    );
+
+    let replies = client_exchange(&addr, &["shutdown".to_string()]).unwrap();
+    assert_eq!(replies, vec!["ok shutdown".to_string()]);
+    let stats = daemon.join().unwrap();
+    assert!(stats.connections >= HERD as u64, "{stats:?}");
+    std::fs::remove_file(&p).unwrap();
+}

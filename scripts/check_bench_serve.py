@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Validate BENCH_serve.json produced by `make bench-serve`.
+
+The bench file is {label: {scenario: result}}; the bench target runs
+the daemon once per accept model, so both the "threads" and
+"eventloop" labels must be present, each with the baseline, fanout and
+idleherd scenarios. Every entry must carry the full histogram schema
+and zero failed batches; idleherd entries must additionally have the
+daemon's mid-run proc.threads / proc.open_fds samples (Linux-only
+gauges — -1 elsewhere). Prints the threads-vs-eventloop p99 comparison
+per scenario and the idle-herd thread/fd cost; the latency comparison
+is recorded, not gated, so a noisy CI box cannot flake the build.
+"""
+import json
+import sys
+
+LABELS = ("threads", "eventloop")
+SCENARIOS = ("baseline", "fanout", "idleherd")
+KEYS = (
+    "scenario",
+    "transport",
+    "clients",
+    "batches",
+    "batch_size",
+    "requests",
+    "errors",
+    "failed_batches",
+    "elapsed_s",
+    "throughput_rps",
+    "p50_us",
+    "p90_us",
+    "p99_us",
+    "max_us",
+    "seed",
+    "idle_conns",
+    "daemon_threads",
+    "daemon_open_fds",
+)
+
+path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_serve.json"
+with open(path) as f:
+    bench = json.load(f)
+
+for label in LABELS:
+    assert label in bench, f"missing accept-model label {label!r} in {path}"
+    for scenario in SCENARIOS:
+        assert scenario in bench[label], f"{label} is missing scenario {scenario!r}"
+        entry = bench[label][scenario]
+        for key in KEYS:
+            assert key in entry, f"{label}/{scenario} missing key {key}"
+        assert entry["failed_batches"] == 0, (
+            f"{label}/{scenario} recorded {entry['failed_batches']} failed batches"
+        )
+        assert entry["requests"] > 0, f"{label}/{scenario} served no requests"
+
+for label in LABELS:
+    herd = bench[label]["idleherd"]
+    assert herd["idle_conns"] >= 1000, f"{label} herd held only {herd['idle_conns']} connections"
+    if sys.platform.startswith("linux"):
+        assert herd["daemon_threads"] > 0, f"{label} idleherd missed the proc.threads sample"
+        assert herd["daemon_open_fds"] > 0, f"{label} idleherd missed the proc.open_fds sample"
+
+for scenario in ("baseline", "fanout"):
+    t = bench["threads"][scenario]["p99_us"]
+    e = bench["eventloop"][scenario]["p99_us"]
+    ratio = e / t if t else float("inf")
+    print(f"{scenario}: p99 threads {t:.0f}us, eventloop {e:.0f}us ({ratio:.2f}x)")
+for label in LABELS:
+    herd = bench[label]["idleherd"]
+    print(
+        f"idleherd[{label}]: {herd['idle_conns']:.0f} idle conns -> "
+        f"{herd['daemon_threads']:.0f} daemon threads, "
+        f"{herd['daemon_open_fds']:.0f} open fds"
+    )
+print(f"bench-serve ok: {len(LABELS)} labels x {len(SCENARIOS)} scenarios")

@@ -2,7 +2,8 @@
 """Parse-check a daemon `health` reply (one-line JSON liveness report).
 
 Reads the reply from stdin and asserts the shape DESIGN.md §Robustness
-promises: status "ok", the serving generation, the last swap outcome,
+promises: status "ok", the accept model, the serving generation, the
+last swap outcome,
 the admission-gate state, the degradation counters, and a fault table
 (a dict of failpoint name -> fire count; empty when nothing is armed).
 """
@@ -12,6 +13,7 @@ import sys
 health = json.loads(sys.stdin.read().strip())
 for key in (
     "status",
+    "accept_model",
     "generation",
     "strategy",
     "store",

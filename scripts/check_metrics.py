@@ -3,8 +3,9 @@
 
 Reads the snapshot from stdin and asserts the shape DESIGN.md
 §Observability promises: connection counters, per-verb latency
-histograms with p50/p90/p99, the swap gauge, and (on Linux) /proc
-RSS/CPU series with at least two samples.
+histograms with p50/p90/p99, the swap and open-connection gauges, and
+(on Linux) /proc RSS/CPU series with at least two samples plus live
+thread/fd gauges.
 """
 import json
 import sys
@@ -21,8 +22,11 @@ for name in verbs:
     for key in ("count", "mean", "p50", "p90", "p99", "max"):
         assert key in hist, f"{name} missing {key}"
 assert "serve.swaps" in snap["gauges"], "missing serve.swaps gauge"
+assert "serve.open_conns" in snap["gauges"], "missing serve.open_conns gauge"
 if sys.platform.startswith("linux"):
     for series in ("proc.rss_bytes", "proc.cpu_secs"):
         n = snap["series"].get(series, {}).get("n", 0)
         assert n >= 2, f"{series} has {n} < 2 samples"
+    for gauge in ("proc.threads", "proc.open_fds"):
+        assert snap["gauges"].get(gauge, 0) > 0, f"{gauge} gauge missing or zero"
 print(f"metrics ok: {len(verbs)} verb histograms")
