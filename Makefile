@@ -1,6 +1,6 @@
 # Convenience targets; everything also works as plain cargo/python calls.
 
-.PHONY: build test bench bench-train bench-train-quick bench-serve artifacts smoke chaos
+.PHONY: build test bench bench-train bench-train-quick bench-serve artifacts smoke chaos crash
 
 build:
 	cd rust && cargo build --release
@@ -34,7 +34,7 @@ bench-train-quick:
 # p99 comparison.
 bench-serve: build
 	set -e; \
-	  rm -f BENCH_serve.json; \
+	  rm -f BENCH_serve.json /tmp/bench_serve_emb.kce.current; \
 	  ./rust/target/release/kcore-embed embed --graph cora \
 	    --backend native --walks 2 --walk-length 10 --dim 32 \
 	    --out /tmp/bench_serve_emb.tsv --store /tmp/bench_serve_emb.kce; \
@@ -73,6 +73,7 @@ bench-serve: build
 chaos: build
 	cd rust && cargo test --release -q --test chaos
 	set -e; \
+	  rm -f /tmp/chaos_emb.kce.current; \
 	  ./rust/target/release/kcore-embed embed --graph cora \
 	    --backend native --walks 2 --walk-length 10 --dim 32 \
 	    --out /tmp/chaos_emb.tsv --store /tmp/chaos_emb.kce; \
@@ -104,6 +105,40 @@ chaos: build
 	  done; \
 	  wait $$DPID
 	@echo "chaos drill survived"
+
+# Crash-safety drill (DESIGN.md §Robustness, "Crash safety & resume"):
+# three lives of one --job-dir embed job. Life 1 dies at a durable
+# phase boundary (deterministic abort failpoint — the library-level
+# battery in tests/crash.rs kills at EVERY boundary the same way).
+# Life 2 is a true `kill -9` at a random instant mid-run. Life 3
+# resumes with faults disarmed and must finish. scripts/check_resume.py
+# then asserts the final .kce/.tsv artifacts are byte-identical to an
+# uninterrupted baseline at the same seed and that the job manifest
+# records every phase. CI runs exactly this target.
+crash: build
+	set -e; \
+	  rm -rf /tmp/crash_job; \
+	  rm -f /tmp/crash_base.kce /tmp/crash_base.tsv /tmp/crash_run.kce \
+	    /tmp/crash_run.tsv /tmp/crash_resume.log; \
+	  EMBED="./rust/target/release/kcore-embed embed --graph cora --seed 7 \
+	    --backend native --train-threads 1 --walks 2 --walk-length 10 \
+	    --dim 32 --epochs 3 --k0 2"; \
+	  $$EMBED --out /tmp/crash_base.tsv --store /tmp/crash_base.kce; \
+	  if KCORE_FAULTS=pipeline.walks.crash=1 $$EMBED --job-dir /tmp/crash_job \
+	    --ckpt-every 1 --out /tmp/crash_run.tsv --store /tmp/crash_run.kce \
+	    2>/dev/null; then \
+	    echo "armed run did not crash" >&2; exit 1; \
+	  fi; \
+	  $$EMBED --job-dir /tmp/crash_job --ckpt-every 1 \
+	    --out /tmp/crash_run.tsv --store /tmp/crash_run.kce \
+	    2>/tmp/crash_resume.log & DPID=$$!; \
+	  sleep 0.2; kill -9 $$DPID 2>/dev/null || true; wait $$DPID || true; \
+	  $$EMBED --job-dir /tmp/crash_job --ckpt-every 1 \
+	    --out /tmp/crash_run.tsv --store /tmp/crash_run.kce \
+	    2>>/tmp/crash_resume.log; \
+	  python3 scripts/check_resume.py /tmp/crash_base.kce /tmp/crash_run.kce \
+	    /tmp/crash_base.tsv /tmp/crash_run.tsv /tmp/crash_job /tmp/crash_resume.log
+	@echo "crash drill survived"
 
 # AOT-compile the PJRT HLO artifacts (requires the python toolchain;
 # rust falls back to --backend native without them).
@@ -145,7 +180,7 @@ smoke: build
 	printf 'nn 0 5\nnn 1 3\n' | \
 	  ./rust/target/release/kcore-embed serve --store /tmp/smoke_emb.kce
 	set -e; \
-	  rm -f /tmp/smoke_daemon.sock; \
+	  rm -f /tmp/smoke_daemon.sock /tmp/smoke_emb.kce.current; \
 	  ./rust/target/release/kcore-embed serve --store /tmp/smoke_emb.kce \
 	    --listen /tmp/smoke_daemon.sock & DPID=$$!; \
 	  trap 'kill $$DPID 2>/dev/null || true' EXIT; \

@@ -102,6 +102,15 @@ pub struct PipelineConfig {
     /// Write a span-trace JSONL file ([`crate::obs::trace`]) covering
     /// every pipeline phase to this path. None = tracing off.
     pub trace_out: Option<std::path::PathBuf>,
+    /// Durable job directory for crash-safe resume: the pipeline keeps
+    /// a checksummed manifest, sealed corpus shards, per-phase
+    /// artifacts and the trainer checkpoint here, and a rerun with the
+    /// same `--job-dir` + semantic config skips completed phases
+    /// ([`crate::coordinator::manifest`]). None = no durability.
+    pub job_dir: Option<std::path::PathBuf>,
+    /// Snapshot the serial trainer every N completed epochs when a job
+    /// dir is set (see [`crate::embed::checkpoint`]); 0 = default (1).
+    pub ckpt_every: usize,
 }
 
 impl Default for PipelineConfig {
@@ -125,6 +134,8 @@ impl Default for PipelineConfig {
             export_store: None,
             notify_daemon: None,
             trace_out: None,
+            job_dir: None,
+            ckpt_every: 0,
         }
     }
 }
@@ -207,6 +218,14 @@ impl PipelineConfig {
                     .map(|p| Json::str(&p.to_string_lossy()))
                     .unwrap_or(Json::Null),
             ),
+            (
+                "job_dir",
+                self.job_dir
+                    .as_ref()
+                    .map(|p| Json::str(&p.to_string_lossy()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("ckpt_every", Json::num(self.ckpt_every as f64)),
         ];
         if let Embedder::Node2Vec { p, q } = self.embedder {
             fields.push(("p", Json::num(p)));
@@ -272,8 +291,54 @@ impl PipelineConfig {
             .get("trace_out")
             .and_then(Json::as_str)
             .map(std::path::PathBuf::from);
+        cfg.job_dir = j
+            .get("job_dir")
+            .and_then(Json::as_str)
+            .map(std::path::PathBuf::from);
+        cfg.ckpt_every = get_u("ckpt_every", cfg.ckpt_every);
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Hash of every knob that determines the *bytes* of the final
+    /// artifact — the resume gate: a manifest written under a different
+    /// semantic config must never donate phase outputs to this run.
+    ///
+    /// Excluded on purpose: execution-shape knobs that the determinism
+    /// contract guarantees cannot change output (`threads`, shard
+    /// budget/spill dir), reporting knobs (`loss_poll`, `trace_out`),
+    /// and destinations (`export_store`, `notify_daemon`, `job_dir`,
+    /// `ckpt_every`). Training thread count folds in only as the
+    /// serial-vs-hogwild bit, which is the actual byte boundary.
+    pub fn config_hash(&self) -> u64 {
+        let embedder = match self.embedder {
+            Embedder::Node2Vec { p, q } => {
+                format!("node2vec p={:016x} q={:016x}", p.to_bits(), q.to_bits())
+            }
+            ref e => e.name().to_string(),
+        };
+        let desc = format!(
+            "v1 embedder={embedder} backend={} k0={:?} wpn={} wl={} dim={} window={} neg={} \
+             lr0={:08x} lr_min={:08x} epochs={} prop_iters={} prop_tol={:08x} seed={} \
+             bridge={} shards={} serial_train={}",
+            self.backend.name(),
+            self.k0,
+            self.walks_per_node,
+            self.walk_length,
+            self.sgns.dim,
+            self.sgns.window,
+            self.sgns.negatives,
+            self.sgns.lr0.to_bits(),
+            self.sgns.lr_min.to_bits(),
+            self.sgns.epochs,
+            self.propagation.iterations,
+            self.propagation.tolerance.to_bits(),
+            self.seed,
+            self.bridge_walks,
+            self.corpus_shards,
+            self.train_threads_resolved() == 1,
+        );
+        crate::util::fsio::fnv1a64(&[desc.as_bytes()])
     }
 
     /// Worker count the native trainer actually runs with:
@@ -378,6 +443,43 @@ mod tests {
         assert_eq!(back.train_threads_resolved(), 1);
         let j = Json::parse(r#"{"train_threads": 8}"#).unwrap();
         assert_eq!(PipelineConfig::from_json(&j).unwrap().train_threads, 8);
+    }
+
+    #[test]
+    fn job_dir_round_trips_and_config_hash_is_semantic() {
+        let cfg = PipelineConfig {
+            job_dir: Some(std::path::PathBuf::from("/scratch/job1")),
+            ckpt_every: 3,
+            threads: 2,
+            train_threads: 1,
+            ..Default::default()
+        };
+        let back = PipelineConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.job_dir, cfg.job_dir);
+        assert_eq!(back.ckpt_every, 3);
+
+        // Hash ignores destinations and execution-shape knobs...
+        let mut other = cfg.clone();
+        other.job_dir = Some(std::path::PathBuf::from("/elsewhere"));
+        other.ckpt_every = 1;
+        other.spill_dir = Some(std::path::PathBuf::from("/tmp/spill"));
+        other.export_store = Some(std::path::PathBuf::from("out.kce"));
+        other.corpus_budget_mb = 8;
+        assert_eq!(other.config_hash(), cfg.config_hash());
+        // ...but any byte-determining knob changes it.
+        for mutate in [
+            |c: &mut PipelineConfig| c.seed = 99,
+            |c: &mut PipelineConfig| c.walks_per_node += 1,
+            |c: &mut PipelineConfig| c.sgns.epochs += 1,
+            |c: &mut PipelineConfig| c.k0 = Some(3),
+            |c: &mut PipelineConfig| c.corpus_shards = 7,
+            |c: &mut PipelineConfig| c.train_threads = 4,
+            |c: &mut PipelineConfig| c.embedder = Embedder::Node2Vec { p: 0.5, q: 2.0 },
+        ] {
+            let mut m = cfg.clone();
+            mutate(&mut m);
+            assert_ne!(m.config_hash(), cfg.config_hash());
+        }
     }
 
     #[test]

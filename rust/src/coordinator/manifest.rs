@@ -1,0 +1,470 @@
+//! Durable job manifest: the pipeline's crash-safety ledger.
+//!
+//! `embed --job-dir <dir>` keeps a single manifest file in the job
+//! directory recording the semantic config hash
+//! ([`super::PipelineConfig::config_hash`]) and, per completed phase, a
+//! completion record: output files with sizes + checksums, sealed
+//! corpus shard metadata, and scalar facts the resume path needs. The
+//! manifest is rewritten through [`fsio::write_atomic_durable`] after
+//! each phase, so at every instant the file on disk is a complete,
+//! checksummed description of exactly the phases whose outputs are
+//! durable.
+//!
+//! On-disk format — a self-checking header line, then a JSON body:
+//!
+//! ```text
+//! KCEMANIFEST1 <fnv1a64-of-body, 16 hex digits>\n
+//! { "config_hash": "...", "phases": { ... } }
+//! ```
+//!
+//! The checksum-in-header shape means loading never depends on
+//! re-serializing the body byte-identically; the body is hashed as raw
+//! bytes. Any defect — truncation, a flipped bit, a different config
+//! hash — surfaces as a typed [`ManifestError`], and the pipeline
+//! falls back to a fresh run rather than trusting stale phase outputs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::fsio;
+use crate::util::json::Json;
+use crate::walks::SealedShardMeta;
+
+/// Manifest file name inside a job directory.
+pub const MANIFEST_FILE: &str = "MANIFEST";
+const HEADER_TAG: &str = "KCEMANIFEST1";
+
+/// Path of the manifest inside `job_dir`.
+pub fn manifest_path(job_dir: &Path) -> PathBuf {
+    job_dir.join(MANIFEST_FILE)
+}
+
+/// Why a manifest could not be used for resume. Every variant means
+/// "start fresh", but callers log which gate tripped.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ManifestError {
+    /// No manifest file — a brand-new job dir.
+    Missing,
+    /// File too short to even hold the header line.
+    Truncated,
+    /// Header tag is not ours (or the header line is malformed).
+    BadMagic,
+    /// Body bytes do not hash to the header checksum.
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// Body is not the JSON shape we write.
+    Parse(String),
+    /// Manifest belongs to a different semantic configuration.
+    ConfigHashMismatch { manifest: u64, current: u64 },
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ManifestError::Missing => write!(f, "no manifest"),
+            ManifestError::Truncated => write!(f, "manifest truncated"),
+            ManifestError::BadMagic => write!(f, "not a job manifest (bad header)"),
+            ManifestError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "manifest checksum mismatch: header {stored:016x}, body {computed:016x}"
+            ),
+            ManifestError::Parse(msg) => write!(f, "manifest body unreadable: {msg}"),
+            ManifestError::ConfigHashMismatch { manifest, current } => write!(
+                f,
+                "manifest config hash {manifest:016x} != current {current:016x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+/// One output file of a completed phase. `path` is relative to the job
+/// dir unless absolute (the export artifact lives wherever
+/// `--export-store` pointed).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactRecord {
+    pub path: String,
+    pub bytes: u64,
+    pub checksum: u64,
+}
+
+impl ArtifactRecord {
+    /// Record `path` (relative to `job_dir` unless absolute) as it
+    /// exists on disk right now.
+    pub fn capture(job_dir: &Path, path: &str) -> Result<ArtifactRecord> {
+        let full = resolve(job_dir, path);
+        let bytes = std::fs::metadata(&full)
+            .with_context(|| format!("stat {}", full.display()))?
+            .len();
+        let checksum = fsio::file_checksum(&full)
+            .with_context(|| format!("checksumming {}", full.display()))?;
+        Ok(ArtifactRecord {
+            path: path.to_string(),
+            bytes,
+            checksum,
+        })
+    }
+
+    /// Does the file still exist with the recorded size and checksum?
+    pub fn verify(&self, job_dir: &Path) -> bool {
+        let full = resolve(job_dir, &self.path);
+        match std::fs::metadata(&full) {
+            Ok(m) if m.len() == self.bytes => {
+                matches!(fsio::file_checksum(&full), Ok(c) if c == self.checksum)
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Resolve a manifest-recorded path against the job dir.
+pub fn resolve(job_dir: &Path, path: &str) -> PathBuf {
+    let p = Path::new(path);
+    if p.is_absolute() {
+        p.to_path_buf()
+    } else {
+        job_dir.join(p)
+    }
+}
+
+/// Completion record of one pipeline phase.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhaseRecord {
+    /// Output files with integrity metadata.
+    pub artifacts: Vec<ArtifactRecord>,
+    /// Sealed corpus shards (walks phase only).
+    pub shards: Vec<SealedShardMeta>,
+    /// Phase-specific scalar facts (counts, k0, ...) for the resume
+    /// path and for humans reading the manifest.
+    pub info: Vec<(String, f64)>,
+}
+
+impl PhaseRecord {
+    pub fn info(&self, key: &str) -> Option<f64> {
+        self.info.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+}
+
+/// The manifest: config binding + per-phase completion records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub config_hash: u64,
+    pub seed: u64,
+    phases: BTreeMap<String, PhaseRecord>,
+}
+
+impl Manifest {
+    pub fn new(config_hash: u64, seed: u64) -> Manifest {
+        Manifest {
+            config_hash,
+            seed,
+            phases: BTreeMap::new(),
+        }
+    }
+
+    /// Completion record of `phase`, if that phase finished durably.
+    pub fn phase(&self, phase: &str) -> Option<&PhaseRecord> {
+        self.phases.get(phase)
+    }
+
+    /// Number of durably completed phases.
+    pub fn n_phases(&self) -> usize {
+        self.phases.len()
+    }
+
+    /// Record `phase` as complete. Call [`Self::store`] afterwards —
+    /// a phase is only *durably* complete once the manifest rewrite
+    /// lands.
+    pub fn record_phase(&mut self, phase: &str, record: PhaseRecord) {
+        self.phases.insert(phase.to_string(), record);
+    }
+
+    /// Drop a phase record (and, implicitly, everything recorded for
+    /// phases that depend on it being re-run).
+    pub fn clear_phase(&mut self, phase: &str) {
+        self.phases.remove(phase);
+    }
+
+    fn to_json(&self) -> Json {
+        let phases: BTreeMap<String, Json> = self
+            .phases
+            .iter()
+            .map(|(name, rec)| {
+                let artifacts = rec
+                    .artifacts
+                    .iter()
+                    .map(|a| {
+                        Json::object(vec![
+                            ("path", Json::str(&a.path)),
+                            ("bytes", Json::num(a.bytes as f64)),
+                            ("checksum", Json::str(&format!("{:016x}", a.checksum))),
+                        ])
+                    })
+                    .collect();
+                let shards = rec.shards.iter().map(shard_to_json).collect();
+                let info: BTreeMap<String, Json> = rec
+                    .info
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::num(*v)))
+                    .collect();
+                (
+                    name.clone(),
+                    Json::object(vec![
+                        ("artifacts", Json::Array(artifacts)),
+                        ("shards", Json::Array(shards)),
+                        ("info", Json::Object(info)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::object(vec![
+            ("config_hash", Json::str(&format!("{:016x}", self.config_hash))),
+            ("seed", Json::num(self.seed as f64)),
+            ("phases", Json::Object(phases)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Manifest, ManifestError> {
+        let bad = |msg: &str| ManifestError::Parse(msg.to_string());
+        let config_hash = j
+            .get("config_hash")
+            .and_then(Json::as_str)
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| bad("config_hash"))?;
+        let seed = j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let mut phases = BTreeMap::new();
+        if let Some(Json::Object(m)) = j.get("phases") {
+            for (name, rec) in m {
+                let mut out = PhaseRecord::default();
+                for a in rec.get("artifacts").and_then(Json::as_array).unwrap_or(&[]) {
+                    out.artifacts.push(ArtifactRecord {
+                        path: a
+                            .get("path")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| bad("artifact path"))?
+                            .to_string(),
+                        bytes: a
+                            .get("bytes")
+                            .and_then(Json::as_f64)
+                            .ok_or_else(|| bad("artifact bytes"))?
+                            as u64,
+                        checksum: a
+                            .get("checksum")
+                            .and_then(Json::as_str)
+                            .and_then(|s| u64::from_str_radix(s, 16).ok())
+                            .ok_or_else(|| bad("artifact checksum"))?,
+                    });
+                }
+                for s in rec.get("shards").and_then(Json::as_array).unwrap_or(&[]) {
+                    out.shards.push(shard_from_json(s).ok_or_else(|| bad("shard"))?);
+                }
+                if let Some(Json::Object(info)) = rec.get("info") {
+                    for (k, v) in info {
+                        out.info.push((k.clone(), v.as_f64().ok_or_else(|| bad("info value"))?));
+                    }
+                }
+                phases.insert(name.clone(), out);
+            }
+        }
+        Ok(Manifest {
+            config_hash,
+            seed,
+            phases,
+        })
+    }
+
+    /// Serialize and write durably (tmp → fsync → rename → dir fsync).
+    pub fn store(&self, path: &Path) -> Result<()> {
+        let body = self.to_json().to_string();
+        let checksum = fsio::fnv1a64(&[body.as_bytes()]);
+        let text = format!("{HEADER_TAG} {checksum:016x}\n{body}\n");
+        fsio::write_atomic_durable(path, text.as_bytes())
+            .with_context(|| format!("writing job manifest {}", path.display()))
+    }
+
+    /// Load and fully validate a manifest: header tag, body checksum,
+    /// JSON shape, and the semantic config hash. Every failure is a
+    /// typed [`ManifestError`] — the caller logs it and starts fresh.
+    pub fn load(path: &Path, current_config_hash: u64) -> Result<Manifest, ManifestError> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(ManifestError::Missing)
+            }
+            Err(e) => return Err(ManifestError::Parse(e.to_string())),
+        };
+        let Some((header, body)) = text.split_once('\n') else {
+            return Err(ManifestError::Truncated);
+        };
+        let Some((tag, hex)) = header.split_once(' ') else {
+            return Err(ManifestError::BadMagic);
+        };
+        if tag != HEADER_TAG {
+            return Err(ManifestError::BadMagic);
+        }
+        let stored = u64::from_str_radix(hex.trim(), 16).map_err(|_| ManifestError::BadMagic)?;
+        let body = body.strip_suffix('\n').unwrap_or(body);
+        let computed = fsio::fnv1a64(&[body.as_bytes()]);
+        if stored != computed {
+            return Err(ManifestError::ChecksumMismatch { stored, computed });
+        }
+        let json = Json::parse(body).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let manifest = Manifest::from_json(&json)?;
+        if manifest.config_hash != current_config_hash {
+            return Err(ManifestError::ConfigHashMismatch {
+                manifest: manifest.config_hash,
+                current: current_config_hash,
+            });
+        }
+        Ok(manifest)
+    }
+}
+
+fn shard_to_json(s: &SealedShardMeta) -> Json {
+    Json::object(vec![
+        ("n_walks", Json::num(s.n_walks as f64)),
+        ("n_tokens", Json::num(s.n_tokens as f64)),
+        (
+            "len_hist",
+            Json::Array(s.len_hist.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
+        ("bytes", Json::num(s.bytes as f64)),
+        ("checksum", Json::str(&format!("{:016x}", s.checksum))),
+    ])
+}
+
+fn shard_from_json(j: &Json) -> Option<SealedShardMeta> {
+    Some(SealedShardMeta {
+        n_walks: j.get("n_walks")?.as_f64()? as u64,
+        n_tokens: j.get("n_tokens")?.as_f64()? as u64,
+        len_hist: j
+            .get("len_hist")?
+            .as_array()?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as u64))
+            .collect::<Option<Vec<u64>>>()?,
+        bytes: j.get("bytes")?.as_f64()? as u64,
+        checksum: u64::from_str_radix(j.get("checksum")?.as_str()?, 16).ok()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("kcore_manifest_{}_{}", name, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> Manifest {
+        let mut m = Manifest::new(0xDEAD_BEEF_1234_5678, 7);
+        m.record_phase(
+            "walks",
+            PhaseRecord {
+                artifacts: vec![],
+                shards: vec![SealedShardMeta {
+                    n_walks: 10,
+                    n_tokens: 100,
+                    len_hist: vec![0, 0, 0, 4, 6],
+                    bytes: 440,
+                    checksum: 0xFFFF_0000_ABCD_0001,
+                }],
+                info: vec![("n_walks".into(), 10.0)],
+            },
+        );
+        m.record_phase(
+            "train",
+            PhaseRecord {
+                artifacts: vec![ArtifactRecord {
+                    path: "train.kce".into(),
+                    bytes: 4096,
+                    checksum: 0x0123_4567_89AB_CDEF,
+                }],
+                shards: vec![],
+                info: vec![("n_pairs".into(), 5000.0)],
+            },
+        );
+        m
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let d = tmp_dir("roundtrip");
+        let p = manifest_path(&d);
+        let m = sample();
+        m.store(&p).unwrap();
+        let back = Manifest::load(&p, m.config_hash).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.phase("train").unwrap().info("n_pairs"), Some(5000.0));
+        assert_eq!(back.phase("walks").unwrap().shards[0].checksum, 0xFFFF_0000_ABCD_0001);
+        assert!(back.phase("export").is_none());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_truncated_tampered_and_mismatched_are_typed() {
+        let d = tmp_dir("tamper");
+        let p = manifest_path(&d);
+        let m = sample();
+
+        assert_eq!(Manifest::load(&p, m.config_hash), Err(ManifestError::Missing));
+
+        // Truncated: cut the file mid-body.
+        m.store(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        std::fs::write(&p, &text[..text.len() / 2]).unwrap();
+        assert!(matches!(
+            Manifest::load(&p, m.config_hash),
+            Err(ManifestError::ChecksumMismatch { .. })
+        ));
+
+        // Header-only truncation (no newline at all).
+        std::fs::write(&p, "KCEMANIFEST1 0123").unwrap();
+        assert_eq!(Manifest::load(&p, m.config_hash), Err(ManifestError::Truncated));
+
+        // Bit flip inside the body.
+        m.store(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let off = bytes.len() - 10;
+        bytes[off] ^= 0x20;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(
+            Manifest::load(&p, m.config_hash),
+            Err(ManifestError::ChecksumMismatch { .. })
+        ));
+
+        // Wrong magic.
+        std::fs::write(&p, "NOTAMANIFEST 0123456789abcdef\n{}").unwrap();
+        assert_eq!(Manifest::load(&p, m.config_hash), Err(ManifestError::BadMagic));
+
+        // Intact file, different semantic config.
+        m.store(&p).unwrap();
+        assert!(matches!(
+            Manifest::load(&p, m.config_hash ^ 1),
+            Err(ManifestError::ConfigHashMismatch { .. })
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn artifact_capture_and_verify_detect_drift() {
+        let d = tmp_dir("artifacts");
+        std::fs::write(d.join("out.bin"), b"payload-bytes").unwrap();
+        let rec = ArtifactRecord::capture(&d, "out.bin").unwrap();
+        assert!(rec.verify(&d));
+        // Same length, different bytes: checksum catches it.
+        std::fs::write(d.join("out.bin"), b"payload-BYTES").unwrap();
+        assert!(!rec.verify(&d));
+        // Gone entirely.
+        std::fs::remove_file(d.join("out.bin")).unwrap();
+        assert!(!rec.verify(&d));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod config;
 pub mod experiment;
+pub mod manifest;
 pub mod pipeline;
 pub mod report;
 

@@ -24,14 +24,17 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::coordinator::config::{Backend, Embedder, PipelineConfig};
+use crate::coordinator::manifest::{self as jobman, ArtifactRecord, ManifestError, PhaseRecord};
 use crate::cores::{core_decomposition, subcore, CoreDecomposition};
 use crate::embed::{native, trainer, Embedding};
 use crate::graph::Graph;
+use crate::obs::faults;
 use crate::obs::metrics::Registry;
 use crate::obs::sysmon::{Sysmon, CPU_METRIC, RSS_METRIC};
 use crate::obs::trace::Tracer;
 use crate::propagate::propagate_mean;
 use crate::runtime::{Manifest, Runtime};
+use crate::util::fsio;
 use crate::util::json::Json;
 use crate::util::timer::PhaseTimer;
 use crate::walks::{
@@ -46,6 +49,9 @@ pub const PHASE_TRAIN: &str = "train";
 pub const PHASE_PROP: &str = "propagation";
 /// Serving-artifact export (only when `export_store` is set).
 pub const PHASE_EXPORT: &str = "export";
+/// Manifest-only phase: k0-core extraction (cheap, always recomputed;
+/// the record certifies completion for the resume decision table).
+pub const PHASE_K0: &str = "k0_extract";
 
 /// Everything a pipeline run produces.
 pub struct PipelineOutput {
@@ -113,6 +119,27 @@ pub fn run_pipeline_traced(
     // zero-length walks) — config/CLI parsing validates too, but tests
     // and library callers construct `PipelineConfig` directly.
     cfg.validate()?;
+    // Crash-safety bookkeeping (`--job-dir`, DESIGN.md §Robustness):
+    // sweep temp files orphaned by dead runs, then open (or start) the
+    // durable job manifest. A rejected manifest — truncated, tampered,
+    // or from a different semantic config — is reported and ignored:
+    // resume never trusts stale phase outputs.
+    let mut orphans_removed = 0usize;
+    if let Some(d) = &cfg.spill_dir {
+        orphans_removed += fsio::sweep_orphans(d);
+    }
+    let mut job = match &cfg.job_dir {
+        Some(dir) => {
+            let j = Job::open(dir, cfg)?;
+            orphans_removed += fsio::sweep_orphans(&j.dir);
+            orphans_removed += fsio::sweep_orphans(&j.shards_dir());
+            Some(j)
+        }
+        None => None,
+    };
+    if cfg.job_dir.is_some() || cfg.spill_dir.is_some() {
+        eprintln!("pipeline: orphans_removed={orphans_removed}");
+    }
     let mut timer = PhaseTimer::new();
     let root = tracer.span_with(
         "pipeline",
@@ -135,7 +162,11 @@ pub fn run_pipeline_traced(
     let needs_decomp = cfg.k0.is_some() || matches!(cfg.embedder, Embedder::CoreWalk);
     let decomp: Option<CoreDecomposition> = {
         let _s = tracer.span_with(PHASE_DECOMP, &[("skipped", Json::Bool(!needs_decomp))]);
-        needs_decomp.then(|| timer.time(PHASE_DECOMP, || core_decomposition(g)))
+        if needs_decomp {
+            Some(full_decomposition(g, &mut job, &mut timer)?)
+        } else {
+            None
+        }
     };
     let degeneracy = decomp.as_ref().map(|d| d.degeneracy).unwrap_or(0);
 
@@ -155,72 +186,133 @@ pub fn run_pipeline_traced(
             (sub, Some(map), Some(k0))
         }
     };
-
-    // Phase 3: walk schedule + corpus on the target graph.
-    let mut walks_span = tracer.span(PHASE_WALKS);
-    let schedule = match cfg.embedder {
-        Embedder::DeepWalk | Embedder::Node2Vec { .. } => {
-            WalkSchedule::uniform(target.n_nodes(), cfg.walks_per_node)
-        }
-        Embedder::CoreWalk => {
-            // Core indices *of the embedded graph*: recompute on the
-            // target (for the full graph this equals `decomp`).
-            let d_target = if cfg.k0.is_none() {
-                decomp.clone().unwrap()
-            } else {
-                core_decomposition(&target)
-            };
-            corewalk::corewalk_schedule(&d_target, cfg.walks_per_node)
-        }
-    };
-    let mut shard_opts = ShardOpts::with_budget_mb(cfg.corpus_shards, cfg.corpus_budget_mb);
-    shard_opts.spill_dir = cfg.spill_dir.clone();
-    let mut corpus: ShardedCorpus = timer.time(PHASE_WALKS, || match cfg.embedder {
-        // Both walkers are shard-native: walks stream straight through
-        // bounded-memory ShardWriters — no materialized corpus, no
-        // re-shard copy, peak corpus RSS O(budget) either way.
-        Embedder::Node2Vec { p, q } => node2vec::generate_node2vec_shards(
-            &target,
-            &schedule,
-            &node2vec::Node2VecParams {
-                p,
-                q,
-                walk_length: cfg.walk_length,
-                seed: cfg.seed ^ 0xA11CE,
-                threads: cfg.threads,
-            },
-            &shard_opts,
-        ),
-        _ => generate_walk_shards(
-            &target,
-            &schedule,
-            &WalkParams {
-                walk_length: cfg.walk_length,
-                seed: cfg.seed ^ 0xA11CE,
-                threads: cfg.threads,
-            },
-            &shard_opts,
-        ),
-    });
-
-    // Phase 3b: bridge walks for disconnected cores (paper §4 extension),
-    // appended as one extra shard at the end of the canonical order.
-    if cfg.bridge_walks > 0 {
-        if let Some(map) = &core_nodes {
-            let (bridges, _) = timer.time(PHASE_WALKS, || {
-                let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xB21D);
-                crate::walks::bridge::bridge_walks(
-                    g,
-                    &target,
-                    map,
-                    cfg.bridge_walks,
-                    cfg.walk_length / 4,
-                    &mut rng,
-                )
-            });
-            corpus.push_shard(CorpusShard::from_corpus(bridges));
+    // k0 extraction is cheap and always recomputed; its manifest record
+    // is a completion certificate only (resume decision table).
+    if let (Some(j), Some(k0)) = (job.as_mut(), k0_used) {
+        if j.completed(PHASE_K0).is_none() {
+            j.commit(
+                PHASE_K0,
+                PhaseRecord {
+                    info: vec![
+                        ("k0_used".into(), k0 as f64),
+                        ("core_size".into(), target.n_nodes() as f64),
+                    ],
+                    ..Default::default()
+                },
+            )?;
         }
     }
+
+    // Phase 3: walk schedule + corpus on the target graph. With a job
+    // dir, a committed walks phase reopens its sealed shard files
+    // (checksummed in the manifest) instead of regenerating.
+    let mut walks_span = tracer.span(PHASE_WALKS);
+    let resumed_corpus: Option<ShardedCorpus> = job.as_ref().and_then(|j| {
+        let rec = j.completed(PHASE_WALKS)?;
+        if rec.shards.is_empty() {
+            return None;
+        }
+        match ShardedCorpus::open_sealed_dir(&j.shards_dir(), target.n_nodes(), &rec.shards) {
+            Ok(c) => {
+                eprintln!(
+                    "pipeline: resume: skipping {PHASE_WALKS} ({} sealed shards)",
+                    rec.shards.len()
+                );
+                Some(c)
+            }
+            Err(e) => {
+                eprintln!("pipeline: sealed shards unusable ({e:#}); regenerating walks");
+                None
+            }
+        }
+    });
+    let corpus: ShardedCorpus = match resumed_corpus {
+        Some(c) => c,
+        None => {
+            let schedule = match cfg.embedder {
+                Embedder::DeepWalk | Embedder::Node2Vec { .. } => {
+                    WalkSchedule::uniform(target.n_nodes(), cfg.walks_per_node)
+                }
+                Embedder::CoreWalk => {
+                    // Core indices *of the embedded graph*: recompute on the
+                    // target (for the full graph this equals `decomp`).
+                    let d_target = if cfg.k0.is_none() {
+                        decomp.clone().unwrap()
+                    } else {
+                        core_decomposition(&target)
+                    };
+                    corewalk::corewalk_schedule(&d_target, cfg.walks_per_node)
+                }
+            };
+            let mut shard_opts =
+                ShardOpts::with_budget_mb(cfg.corpus_shards, cfg.corpus_budget_mb);
+            shard_opts.spill_dir = cfg.spill_dir.clone();
+            let mut corpus: ShardedCorpus = timer.time(PHASE_WALKS, || match cfg.embedder {
+                // Both walkers are shard-native: walks stream straight through
+                // bounded-memory ShardWriters — no materialized corpus, no
+                // re-shard copy, peak corpus RSS O(budget) either way.
+                Embedder::Node2Vec { p, q } => node2vec::generate_node2vec_shards(
+                    &target,
+                    &schedule,
+                    &node2vec::Node2VecParams {
+                        p,
+                        q,
+                        walk_length: cfg.walk_length,
+                        seed: cfg.seed ^ 0xA11CE,
+                        threads: cfg.threads,
+                    },
+                    &shard_opts,
+                ),
+                _ => generate_walk_shards(
+                    &target,
+                    &schedule,
+                    &WalkParams {
+                        walk_length: cfg.walk_length,
+                        seed: cfg.seed ^ 0xA11CE,
+                        threads: cfg.threads,
+                    },
+                    &shard_opts,
+                ),
+            });
+
+            // Phase 3b: bridge walks for disconnected cores (paper §4
+            // extension), appended as one extra shard at the end of the
+            // canonical order.
+            if cfg.bridge_walks > 0 {
+                if let Some(map) = &core_nodes {
+                    let (bridges, _) = timer.time(PHASE_WALKS, || {
+                        let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xB21D);
+                        crate::walks::bridge::bridge_walks(
+                            g,
+                            &target,
+                            map,
+                            cfg.bridge_walks,
+                            cfg.walk_length / 4,
+                            &mut rng,
+                        )
+                    });
+                    corpus.push_shard(CorpusShard::from_corpus(bridges));
+                }
+            }
+            // Seal the corpus (bridge shard included) into named,
+            // fsynced shard files and commit the phase.
+            if let Some(j) = job.as_mut() {
+                let metas = corpus.seal_to_dir(&j.shards_dir())?;
+                j.commit(
+                    PHASE_WALKS,
+                    PhaseRecord {
+                        shards: metas,
+                        info: vec![
+                            ("n_walks".into(), corpus.n_walks() as f64),
+                            ("n_tokens".into(), corpus.n_tokens() as f64),
+                        ],
+                        ..Default::default()
+                    },
+                )?;
+            }
+            corpus
+        }
+    };
     let (n_walks, n_tokens) = (corpus.n_walks(), corpus.n_tokens());
     walks_span.field("walks", Json::num(n_walks as f64));
     walks_span.field("tokens", Json::num(n_tokens as f64));
@@ -232,32 +324,94 @@ pub fn run_pipeline_traced(
         tracer.span_with(PHASE_TRAIN, &[("backend", Json::str(cfg.backend.name()))]);
     let mut sgns = cfg.sgns.clone();
     sgns.seed = cfg.seed ^ 0x7EA1;
-    let (core_embedding, n_pairs, loss_curve) = match cfg.backend {
-        Backend::Pjrt => {
-            let (rt, manifest) = match runtime {
-                Some(x) => x,
-                None => bail!("PJRT backend requires a Runtime + Manifest"),
-            };
-            let r = timer.time(PHASE_TRAIN, || {
-                trainer::train_pjrt(rt, manifest, &corpus, target.n_nodes(), &sgns, cfg.loss_poll)
-            })?;
-            (r.w_in, r.n_pairs, r.loss_curve)
+    let resumed_train: Option<(Embedding, u64)> = job.as_ref().and_then(|j| {
+        let rec = j.completed(PHASE_TRAIN)?;
+        let art = rec.artifacts.first()?;
+        if !art.verify(&j.dir) {
+            return None;
         }
-        Backend::Native => {
-            // Trainer fan-out is its own knob: `train_threads` (0 =
-            // follow `threads`); 1 routes to the deterministic serial
-            // trainer, >1 runs hogwild over the racy shared matrix
-            // (DESIGN.md §Training).
-            let train_threads = cfg.train_threads_resolved();
-            let r = timer.time(PHASE_TRAIN, || {
-                native::train_native_parallel_sharded(
-                    &corpus,
-                    target.n_nodes(),
-                    &sgns,
-                    train_threads,
-                )
-            });
-            (r.w_in, r.n_pairs, Vec::new())
+        match read_embedding_artifact(
+            &jobman::resolve(&j.dir, &art.path),
+            target.n_nodes(),
+            sgns.dim,
+        ) {
+            Ok(emb) => {
+                eprintln!("pipeline: resume: skipping {PHASE_TRAIN}");
+                Some((emb, rec.info("n_pairs").unwrap_or(0.0) as u64))
+            }
+            Err(e) => {
+                eprintln!("pipeline: train artifact unusable ({e:#}); retraining");
+                None
+            }
+        }
+    });
+    let (core_embedding, n_pairs, loss_curve) = match resumed_train {
+        Some((emb, pairs)) => (emb, pairs, Vec::new()),
+        None => {
+            let (emb, pairs, curve) = match cfg.backend {
+                Backend::Pjrt => {
+                    let (rt, manifest) = match runtime {
+                        Some(x) => x,
+                        None => bail!("PJRT backend requires a Runtime + Manifest"),
+                    };
+                    let r = timer.time(PHASE_TRAIN, || {
+                        trainer::train_pjrt(
+                            rt,
+                            manifest,
+                            &corpus,
+                            target.n_nodes(),
+                            &sgns,
+                            cfg.loss_poll,
+                        )
+                    })?;
+                    (r.w_in, r.n_pairs, r.loss_curve)
+                }
+                Backend::Native => {
+                    // Trainer fan-out is its own knob: `train_threads` (0 =
+                    // follow `threads`); 1 routes to the deterministic serial
+                    // trainer, >1 runs hogwild over the racy shared matrix
+                    // (DESIGN.md §Training). With a job dir the serial
+                    // trainer also writes a durable mid-train checkpoint
+                    // every `ckpt_every` epochs, so a crash resumes from
+                    // the last epoch boundary instead of epoch 0.
+                    let train_threads = cfg.train_threads_resolved();
+                    let ckpt = job.as_ref().map(|j| native::TrainCkpt {
+                        path: j.dir.join(Job::CKPT_FILE),
+                        every: cfg.ckpt_every.max(1),
+                    });
+                    let r = timer.time(PHASE_TRAIN, || {
+                        native::train_native_parallel_sharded_ckpt(
+                            &corpus,
+                            target.n_nodes(),
+                            &sgns,
+                            train_threads,
+                            ckpt.as_ref(),
+                        )
+                    });
+                    (r.w_in, r.n_pairs, Vec::new())
+                }
+            };
+            if let Some(j) = job.as_mut() {
+                crate::serve::store::write_store(
+                    &j.dir.join(Job::TRAIN_FILE),
+                    emb.data(),
+                    emb.n(),
+                    emb.dim(),
+                    None,
+                )?;
+                let art = ArtifactRecord::capture(&j.dir, Job::TRAIN_FILE)?;
+                // The phase is complete; its mid-train checkpoint is spent.
+                let _ = std::fs::remove_file(j.dir.join(Job::CKPT_FILE));
+                j.commit(
+                    PHASE_TRAIN,
+                    PhaseRecord {
+                        artifacts: vec![art],
+                        info: vec![("n_pairs".into(), pairs as f64)],
+                        ..Default::default()
+                    },
+                )?;
+            }
+            (emb, pairs, curve)
         }
     };
     train_span.field("pairs", Json::num(n_pairs as f64));
@@ -271,14 +425,74 @@ pub fn run_pipeline_traced(
         let _s = tracer.span_with(PHASE_PROP, &[("skipped", Json::Bool(!prop_runs))]);
         match (&core_nodes, k0_used) {
             (Some(map), Some(k0)) => {
-                let d = decomp.as_ref().unwrap();
-                timer
-                    .time(PHASE_PROP, || {
-                        propagate_mean(g, d, k0, map, &core_embedding, &cfg.propagation)
-                    })
-                    .0
+                let resumed_prop: Option<Embedding> = job.as_ref().and_then(|j| {
+                    let rec = j.completed(PHASE_PROP)?;
+                    let art = rec.artifacts.first()?;
+                    if !art.verify(&j.dir) {
+                        return None;
+                    }
+                    match read_embedding_artifact(
+                        &jobman::resolve(&j.dir, &art.path),
+                        g.n_nodes(),
+                        sgns.dim,
+                    ) {
+                        Ok(emb) => {
+                            eprintln!("pipeline: resume: skipping {PHASE_PROP}");
+                            Some(emb)
+                        }
+                        Err(e) => {
+                            eprintln!("pipeline: prop artifact unusable ({e:#}); repropagating");
+                            None
+                        }
+                    }
+                });
+                match resumed_prop {
+                    Some(emb) => emb,
+                    None => {
+                        let d = decomp.as_ref().unwrap();
+                        let emb = timer
+                            .time(PHASE_PROP, || {
+                                propagate_mean(g, d, k0, map, &core_embedding, &cfg.propagation)
+                            })
+                            .0;
+                        if let Some(j) = job.as_mut() {
+                            crate::serve::store::write_store(
+                                &j.dir.join(Job::PROP_FILE),
+                                emb.data(),
+                                emb.n(),
+                                emb.dim(),
+                                None,
+                            )?;
+                            let art = ArtifactRecord::capture(&j.dir, Job::PROP_FILE)?;
+                            j.commit(
+                                PHASE_PROP,
+                                PhaseRecord {
+                                    artifacts: vec![art],
+                                    info: vec![("ran".into(), 1.0)],
+                                    ..Default::default()
+                                },
+                            )?;
+                        }
+                        emb
+                    }
+                }
             }
-            _ => core_embedding,
+            _ => {
+                // Propagation skipped by config: commit a certificate so
+                // the resume decision table still sees the phase.
+                if let Some(j) = job.as_mut() {
+                    if j.completed(PHASE_PROP).is_none() {
+                        j.commit(
+                            PHASE_PROP,
+                            PhaseRecord {
+                                info: vec![("ran".into(), 0.0)],
+                                ..Default::default()
+                            },
+                        )?;
+                    }
+                }
+                core_embedding
+            }
         }
     };
 
@@ -290,23 +504,52 @@ pub fn run_pipeline_traced(
         let skipped = cfg.export_store.is_none();
         let _s = tracer.span_with(PHASE_EXPORT, &[("skipped", Json::Bool(skipped))]);
         if let Some(path) = &cfg.export_store {
-            let full_decomp;
-            let cores: &[u32] = match &decomp {
-                Some(d) => &d.core,
-                None => {
-                    full_decomp = timer.time(PHASE_DECOMP, || core_decomposition(g));
-                    &full_decomp.core
-                }
+            // Manifest records hold the absolutized export path — the
+            // resume run may start from a different working directory.
+            let abs = if path.is_absolute() {
+                path.clone()
+            } else {
+                std::env::current_dir()?.join(path)
             };
-            timer.time(PHASE_EXPORT, || {
-                crate::serve::store::write_store(
-                    path,
-                    embedding.data(),
-                    embedding.n(),
-                    embedding.dim(),
-                    Some(cores),
-                )
-            })?;
+            let already = job
+                .as_ref()
+                .and_then(|j| {
+                    let rec = j.completed(PHASE_EXPORT)?;
+                    let art = rec.artifacts.first()?;
+                    (art.path == abs.to_string_lossy() && art.verify(&j.dir)).then_some(())
+                })
+                .is_some();
+            if already {
+                eprintln!("pipeline: resume: skipping {PHASE_EXPORT}");
+            } else {
+                let full_decomp;
+                let cores: &[u32] = match &decomp {
+                    Some(d) => &d.core,
+                    None => {
+                        full_decomp = full_decomposition(g, &mut job, &mut timer)?;
+                        &full_decomp.core
+                    }
+                };
+                timer.time(PHASE_EXPORT, || {
+                    crate::serve::store::write_store(
+                        path,
+                        embedding.data(),
+                        embedding.n(),
+                        embedding.dim(),
+                        Some(cores),
+                    )
+                })?;
+                if let Some(j) = job.as_mut() {
+                    let art = ArtifactRecord::capture(&j.dir, &abs.to_string_lossy())?;
+                    j.commit(
+                        PHASE_EXPORT,
+                        PhaseRecord {
+                            artifacts: vec![art],
+                            ..Default::default()
+                        },
+                    )?;
+                }
+            }
         }
     }
 
@@ -365,6 +608,191 @@ pub fn run_pipeline_traced(
         trace_summary,
         timer,
     })
+}
+
+/// Crash-safe job state (`--job-dir`): the durable manifest plus the
+/// directory layout every phase publishes into. All writes go through
+/// write-tmp-fsync-rename; the manifest is rewritten (durably) after
+/// each phase, so a kill at any instant leaves either the old or the
+/// new manifest — never a torn one.
+struct Job {
+    dir: std::path::PathBuf,
+    manifest_file: std::path::PathBuf,
+    manifest: jobman::Manifest,
+}
+
+impl Job {
+    const CORES_FILE: &'static str = "cores.bin";
+    const TRAIN_FILE: &'static str = "train.kce";
+    const PROP_FILE: &'static str = "prop.kce";
+    const CKPT_FILE: &'static str = "train.ckpt";
+    const SHARDS_DIR: &'static str = "shards";
+
+    fn open(dir: &std::path::Path, cfg: &PipelineConfig) -> Result<Job> {
+        std::fs::create_dir_all(dir.join(Self::SHARDS_DIR))
+            .map_err(|e| anyhow::anyhow!("creating job dir {}: {e}", dir.display()))?;
+        let manifest_file = jobman::manifest_path(dir);
+        let hash = cfg.config_hash();
+        let manifest = match jobman::Manifest::load(&manifest_file, hash) {
+            Ok(m) => {
+                eprintln!(
+                    "pipeline: job manifest found ({} completed phases); resuming",
+                    m.n_phases()
+                );
+                m
+            }
+            Err(ManifestError::Missing) => jobman::Manifest::new(hash, cfg.seed),
+            Err(e) => {
+                eprintln!("pipeline: manifest rejected ({e}); starting fresh");
+                jobman::Manifest::new(hash, cfg.seed)
+            }
+        };
+        Ok(Job {
+            dir: dir.to_path_buf(),
+            manifest_file,
+            manifest,
+        })
+    }
+
+    fn shards_dir(&self) -> std::path::PathBuf {
+        self.dir.join(Self::SHARDS_DIR)
+    }
+
+    /// Completed-phase record, if the manifest has one.
+    fn completed(&self, phase: &str) -> Option<&PhaseRecord> {
+        self.manifest.phase(phase)
+    }
+
+    /// Record `phase` complete and make it durable. The crash failpoint
+    /// sits right after the fsynced rename: it is the kill site the
+    /// crash battery uses for "died at a phase boundary".
+    fn commit(&mut self, phase: &str, record: PhaseRecord) -> Result<()> {
+        self.manifest.record_phase(phase, record);
+        self.manifest.store(&self.manifest_file)?;
+        faults::maybe_crash(&format!("pipeline.{phase}.crash"));
+        Ok(())
+    }
+
+    /// Reload the phase-1 decomposition from a verified `cores.bin`,
+    /// or None when the record/artifact is absent or fails its checks.
+    fn try_load_decomp(&self, n: usize) -> Option<CoreDecomposition> {
+        let rec = self.completed(PHASE_DECOMP)?;
+        let art = rec.artifacts.first()?;
+        if !art.verify(&self.dir) {
+            return None;
+        }
+        match read_decomp(&jobman::resolve(&self.dir, &art.path), n) {
+            Ok(d) => {
+                eprintln!("pipeline: resume: skipping {PHASE_DECOMP}");
+                Some(d)
+            }
+            Err(e) => {
+                eprintln!("pipeline: cores artifact unusable ({e:#}); recomputing");
+                None
+            }
+        }
+    }
+}
+
+/// Full-graph decomposition, manifest-aware: a valid `cores.bin` in
+/// the job dir short-circuits recomputation; otherwise compute (timed),
+/// persist durably and commit the phase record. Also used by the
+/// export step's fresh-decomposition fallback so a baseline run with
+/// `--export-store` caches its core table too.
+fn full_decomposition(
+    g: &Graph,
+    job: &mut Option<Job>,
+    timer: &mut PhaseTimer,
+) -> Result<CoreDecomposition> {
+    if let Some(j) = job.as_ref() {
+        if let Some(d) = j.try_load_decomp(g.n_nodes()) {
+            return Ok(d);
+        }
+    }
+    let d = timer.time(PHASE_DECOMP, || core_decomposition(g));
+    if let Some(j) = job.as_mut() {
+        write_decomp(&j.dir.join(Job::CORES_FILE), &d)?;
+        let art = ArtifactRecord::capture(&j.dir, Job::CORES_FILE)?;
+        j.commit(
+            PHASE_DECOMP,
+            PhaseRecord {
+                artifacts: vec![art],
+                info: vec![("degeneracy".into(), d.degeneracy as f64)],
+                ..Default::default()
+            },
+        )?;
+    }
+    Ok(d)
+}
+
+/// `cores.bin` layout: magic, `n` u64, degeneracy u32, reserved u32,
+/// then `core[n]` and `order[n]` as LE u32. Integrity comes from the
+/// manifest's size+checksum record, not from the file itself.
+const CORES_MAGIC: &[u8; 8] = b"KCECORE\0";
+
+fn write_decomp(path: &std::path::Path, d: &CoreDecomposition) -> Result<()> {
+    let n = d.core.len();
+    let mut buf = Vec::with_capacity(24 + n * 8);
+    buf.extend_from_slice(CORES_MAGIC);
+    buf.extend_from_slice(&(n as u64).to_le_bytes());
+    buf.extend_from_slice(&d.degeneracy.to_le_bytes());
+    buf.extend_from_slice(&0u32.to_le_bytes());
+    for &c in &d.core {
+        buf.extend_from_slice(&c.to_le_bytes());
+    }
+    for &v in &d.order {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fsio::write_atomic_durable(path, &buf)
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+}
+
+fn read_decomp(path: &std::path::Path, n_expect: usize) -> Result<CoreDecomposition> {
+    let buf = std::fs::read(path)?;
+    if buf.len() < 24 || &buf[..8] != CORES_MAGIC {
+        bail!("{}: not a cores artifact", path.display());
+    }
+    let n = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    let degeneracy = u32::from_le_bytes(buf[16..20].try_into().unwrap());
+    if n != n_expect || buf.len() != 24 + n * 8 {
+        bail!(
+            "{}: cores artifact shape mismatch (n={n}, expected {n_expect})",
+            path.display()
+        );
+    }
+    let word = |i: usize| u32::from_le_bytes(buf[24 + i * 4..28 + i * 4].try_into().unwrap());
+    let core: Vec<u32> = (0..n).map(word).collect();
+    let order: Vec<u32> = (0..n).map(|i| word(n + i)).collect();
+    Ok(CoreDecomposition {
+        core,
+        degeneracy,
+        order,
+    })
+}
+
+/// Reload a phase-output embedding from a `.kce` artifact (the store
+/// format doubles as the pipeline's phase-output container).
+fn read_embedding_artifact(
+    path: &std::path::Path,
+    n_expect: usize,
+    dim_expect: usize,
+) -> Result<Embedding> {
+    let store = crate::serve::EmbeddingStore::open_in_memory(path)?;
+    if store.n() != n_expect || store.dim() != dim_expect {
+        bail!(
+            "{}: embedding artifact shape mismatch ({}x{}, expected {}x{})",
+            path.display(),
+            store.n(),
+            store.dim(),
+            n_expect,
+            dim_expect
+        );
+    }
+    let mut data = Vec::with_capacity(n_expect * dim_expect);
+    for v in 0..n_expect as u32 {
+        data.extend_from_slice(store.row(v));
+    }
+    Ok(Embedding::from_data(data, n_expect, dim_expect))
 }
 
 #[cfg(test)]

@@ -1,0 +1,247 @@
+//! Durable mid-train checkpoint for the serial SGNS trainer.
+//!
+//! The train phase is the long pole of the pipeline, so crash-safety at
+//! phase granularity alone would still lose hours: a job killed at
+//! epoch 9 of 10 restarts training from zero. The serial trainer
+//! therefore snapshots its *complete* cross-epoch state every N epochs
+//! (`--ckpt-every`): both matrices plus the emitted-pair counter and
+//! loss accumulator that drive the linear lr decay and mean loss.
+//!
+//! That state is sufficient for **bit-exact** resume because of how the
+//! trainer derives randomness: the init RNG is fully consumed by
+//! `word2vec_init`, and every per-epoch RNG (negative sampling, dynamic
+//! windows) is freshly seeded from `params.seed ^ f(epoch)` — no RNG
+//! state crosses an epoch boundary, so none needs to be serialized.
+//! The hogwild path is nondeterministic by contract and takes no
+//! checkpoints; resumed multi-threaded jobs retrain the phase.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! offset  size       field
+//! 0       8          magic  b"KCECKPT\0"
+//! 8       4          format version (1)
+//! 12      4          epochs_done (u32)
+//! 16      8          n_nodes (u64)
+//! 24      4          dim (u32)
+//! 28      4          reserved (0)
+//! 32      8          params digest (FNV-1a of the training config)
+//! 40      8          emitted pairs (u64)
+//! 48      8          loss_sum (f64 bits)
+//! 56      n*dim*4    w_in rows (f32)
+//! ..      n*dim*4    w_out rows (f32)
+//! end-8   8          FNV-1a 64 of every preceding byte
+//! ```
+//!
+//! Writes go through [`fsio::write_atomic_durable`]; a crash mid-write
+//! leaves the previous checkpoint intact. Loads verify magic, version,
+//! shape, params digest and trailing checksum — any mismatch is a typed
+//! error and the caller falls back to training from zero rather than
+//! resuming from a lying file.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::fsio;
+
+use super::batches::SgnsParams;
+use super::matrix::Embedding;
+
+const MAGIC: [u8; 8] = *b"KCECKPT\0";
+const VERSION: u32 = 1;
+const HEADER_BYTES: usize = 56;
+
+/// Complete cross-epoch trainer state at an epoch boundary.
+pub struct TrainCheckpoint {
+    pub epochs_done: u32,
+    pub emitted: u64,
+    pub loss_sum: f64,
+    pub w_in: Embedding,
+    pub w_out: Embedding,
+}
+
+/// Digest binding a checkpoint to its training configuration: a file
+/// written under different hyperparameters (or a different node count)
+/// must never seed a resume.
+pub fn params_digest(n_nodes: usize, params: &SgnsParams) -> u64 {
+    let desc = format!(
+        "n={} dim={} window={} negatives={} lr0={:08x} lr_min={:08x} epochs={} seed={}",
+        n_nodes,
+        params.dim,
+        params.window,
+        params.negatives,
+        params.lr0.to_bits(),
+        params.lr_min.to_bits(),
+        params.epochs,
+        params.seed,
+    );
+    fsio::fnv1a64(&[desc.as_bytes()])
+}
+
+/// Atomically and durably write `state` to `path`.
+pub fn save(path: &Path, digest: u64, state: &TrainCheckpoint) -> Result<()> {
+    let n_nodes = state.w_in.n();
+    let dim = state.w_in.dim();
+    assert_eq!(state.w_out.n(), n_nodes);
+    assert_eq!(state.w_out.dim(), dim);
+    let mut buf = Vec::with_capacity(HEADER_BYTES + n_nodes * dim * 8 + 8);
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&state.epochs_done.to_le_bytes());
+    buf.extend_from_slice(&(n_nodes as u64).to_le_bytes());
+    buf.extend_from_slice(&(dim as u32).to_le_bytes());
+    buf.extend_from_slice(&0u32.to_le_bytes());
+    buf.extend_from_slice(&digest.to_le_bytes());
+    buf.extend_from_slice(&state.emitted.to_le_bytes());
+    buf.extend_from_slice(&state.loss_sum.to_bits().to_le_bytes());
+    debug_assert_eq!(buf.len(), HEADER_BYTES);
+    for &x in state.w_in.data() {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    for &x in state.w_out.data() {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    let checksum = fsio::fnv1a64(&[&buf]);
+    buf.extend_from_slice(&checksum.to_le_bytes());
+    fsio::write_atomic_durable(path, &buf)
+        .with_context(|| format!("writing train checkpoint {}", path.display()))
+}
+
+/// Load a checkpoint, verifying integrity and that it belongs to this
+/// exact training configuration. `Ok(None)` when no checkpoint exists;
+/// `Err` when one exists but cannot be trusted.
+pub fn load(path: &Path, digest: u64) -> Result<Option<TrainCheckpoint>> {
+    let buf = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("reading checkpoint {}", path.display())),
+    };
+    if buf.len() < HEADER_BYTES + 8 {
+        bail!("train checkpoint truncated: {} bytes", buf.len());
+    }
+    if buf[..8] != MAGIC {
+        bail!("not a train checkpoint (bad magic)");
+    }
+    let rd_u32 = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
+    let rd_u64 = |o: usize| u64::from_le_bytes(buf[o..o + 8].try_into().unwrap());
+    let version = rd_u32(8);
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let (body, tail) = buf.split_at(buf.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let actual = fsio::fnv1a64(&[body]);
+    if stored != actual {
+        bail!("train checkpoint checksum mismatch: stored {stored:016x}, computed {actual:016x}");
+    }
+    let epochs_done = rd_u32(12);
+    let n_nodes = rd_u64(16) as usize;
+    let dim = rd_u32(24) as usize;
+    let file_digest = rd_u64(32);
+    if file_digest != digest {
+        bail!(
+            "train checkpoint belongs to a different config: digest {file_digest:016x} != {digest:016x}"
+        );
+    }
+    let emitted = rd_u64(40);
+    let loss_sum = f64::from_bits(rd_u64(48));
+    let expect = HEADER_BYTES + n_nodes * dim * 8 + 8;
+    if buf.len() != expect {
+        bail!(
+            "train checkpoint size mismatch: {} bytes, shape says {expect}",
+            buf.len()
+        );
+    }
+    let read_matrix = |off: usize| -> Embedding {
+        let mut data = Vec::with_capacity(n_nodes * dim);
+        for i in 0..n_nodes * dim {
+            let o = off + i * 4;
+            data.push(f32::from_le_bytes(buf[o..o + 4].try_into().unwrap()));
+        }
+        Embedding::from_data(data, n_nodes, dim)
+    };
+    let w_in = read_matrix(HEADER_BYTES);
+    let w_out = read_matrix(HEADER_BYTES + n_nodes * dim * 4);
+    Ok(Some(TrainCheckpoint {
+        epochs_done,
+        emitted,
+        loss_sum,
+        w_in,
+        w_out,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("kcore_ckpt_{}_{}.bin", name, std::process::id()))
+    }
+
+    fn params() -> SgnsParams {
+        SgnsParams {
+            dim: 4,
+            window: 2,
+            negatives: 3,
+            lr0: 0.05,
+            lr_min: 1e-4,
+            epochs: 5,
+            seed: 11,
+        }
+    }
+
+    fn sample_state() -> TrainCheckpoint {
+        let mut rng = Rng::new(3);
+        TrainCheckpoint {
+            epochs_done: 2,
+            emitted: 12345,
+            loss_sum: 67.25,
+            w_in: Embedding::word2vec_init(6, 4, &mut rng),
+            w_out: Embedding::word2vec_init(6, 4, &mut rng),
+        }
+    }
+
+    #[test]
+    fn round_trip_is_exact() {
+        let p = tmp("roundtrip");
+        let digest = params_digest(6, &params());
+        let state = sample_state();
+        save(&p, digest, &state).unwrap();
+        let back = load(&p, digest).unwrap().expect("checkpoint exists");
+        assert_eq!(back.epochs_done, 2);
+        assert_eq!(back.emitted, 12345);
+        assert_eq!(back.loss_sum.to_bits(), state.loss_sum.to_bits());
+        assert_eq!(back.w_in, state.w_in);
+        assert_eq!(back.w_out, state.w_out);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn absent_is_none_and_tampering_is_an_error() {
+        let p = tmp("tamper");
+        let _ = std::fs::remove_file(&p);
+        let digest = params_digest(6, &params());
+        assert!(load(&p, digest).unwrap().is_none());
+
+        save(&p, digest, &sample_state()).unwrap();
+        // Bit-flip a payload byte: checksum must catch it.
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[70] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p, digest).is_err());
+
+        // Intact file but a different config digest: refused.
+        save(&p, digest, &sample_state()).unwrap();
+        assert!(load(&p, digest ^ 1).is_err());
+
+        // Truncation: refused.
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&p, digest).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

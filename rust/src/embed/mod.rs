@@ -5,6 +5,7 @@
 //! unroll-by-4 kernels in [`kernels`] (DESIGN.md §Training).
 
 pub mod batches;
+pub mod checkpoint;
 pub mod kernels;
 pub mod matrix;
 pub mod native;

@@ -25,10 +25,12 @@
 
 use std::slice::{from_raw_parts, from_raw_parts_mut};
 
+use crate::obs::faults;
 use crate::util::rng::Rng;
 use crate::walks::{Corpus, PairStream, ShardedCorpus};
 
 use super::batches::SgnsParams;
+use super::checkpoint::{self, TrainCheckpoint};
 use super::kernels::{self, SigmoidTable};
 use super::matrix::{Embedding, HogwildMatrix};
 use super::sampler::NegativeSampler;
@@ -39,6 +41,17 @@ pub struct NativeTrainResult {
     pub w_out: Embedding,
     pub mean_loss: f64,
     pub n_pairs: u64,
+}
+
+/// Epoch-boundary checkpointing policy for the serial trainer (the
+/// `--job-dir`/`--ckpt-every` knobs). Resume from `path` is bit-exact:
+/// all cross-epoch state lives in the checkpoint and every per-epoch
+/// RNG is derived fresh from the seed (see [`super::checkpoint`]).
+pub struct TrainCkpt {
+    /// Checkpoint file (conventionally `<job-dir>/train.ckpt`).
+    pub path: std::path::PathBuf,
+    /// Snapshot after every `every` completed epochs (>= 1).
+    pub every: usize,
 }
 
 /// Serial SGD over any per-epoch pair source — the shared core of
@@ -53,6 +66,7 @@ fn train_serial_with_pairs<I, F>(
     counts: &[u64],
     total_pairs: u64,
     mut pairs_for_epoch: F,
+    ckpt: Option<&TrainCkpt>,
 ) -> NativeTrainResult
 where
     I: Iterator<Item = (u32, u32)>,
@@ -67,11 +81,35 @@ where
     let total_pairs = total_pairs.max(1);
     let mut emitted = 0u64;
     let mut loss_sum = 0f64;
+    let mut start_epoch = 0usize;
+    let digest = checkpoint::params_digest(n_nodes, params);
+    if let Some(c) = ckpt {
+        match checkpoint::load(&c.path, digest) {
+            Ok(Some(state)) if state.w_in.n() == n_nodes && state.w_in.dim() == params.dim => {
+                eprintln!(
+                    "train: resuming from checkpoint {} ({} epochs done)",
+                    c.path.display(),
+                    state.epochs_done
+                );
+                start_epoch = state.epochs_done as usize;
+                emitted = state.emitted;
+                loss_sum = state.loss_sum;
+                w_in = state.w_in;
+                w_out = state.w_out;
+            }
+            Ok(Some(_)) | Ok(None) => {}
+            Err(e) => {
+                // An untrusted checkpoint never seeds a resume — train
+                // from zero and overwrite it at the next snapshot.
+                eprintln!("train: ignoring unusable checkpoint: {e:#}");
+            }
+        }
+    }
     let dim = params.dim;
     let mut neg_buf: Vec<u32> = Vec::with_capacity(params.negatives);
     let mut grad_h = vec![0f32; dim];
 
-    for epoch in 0..params.epochs {
+    for epoch in start_epoch..params.epochs {
         let mut neg_rng = Rng::new(params.seed ^ (0x5EED + epoch as u64));
         for (center, context) in pairs_for_epoch(epoch) {
             let lr = lr_at(params, emitted, total_pairs);
@@ -97,6 +135,24 @@ where
             kernels::axpy(w_in.row_mut(center), &grad_h, -lr);
             emitted += 1;
         }
+        if let Some(c) = ckpt {
+            let done = epoch + 1;
+            if done < params.epochs && done % c.every.max(1) == 0 {
+                let state = TrainCheckpoint {
+                    epochs_done: done as u32,
+                    emitted,
+                    loss_sum,
+                    w_in: w_in.clone(),
+                    w_out: w_out.clone(),
+                };
+                if let Err(e) = checkpoint::save(&c.path, digest, &state) {
+                    eprintln!("train: checkpoint write failed (continuing): {e:#}");
+                }
+                // Crash-battery hook: die *after* the snapshot is
+                // durable, so a resumed run proves the mid-train path.
+                faults::maybe_crash("train.checkpoint.crash");
+            }
+        }
     }
     NativeTrainResult {
         w_in,
@@ -114,13 +170,20 @@ where
 pub fn train_native(corpus: &Corpus, n_nodes: usize, params: &SgnsParams) -> NativeTrainResult {
     let total_pairs = corpus.exact_pair_count(params.window) * params.epochs as u64;
     let counts = corpus.node_counts();
-    train_serial_with_pairs(n_nodes, params, &counts, total_pairs, |epoch| {
-        PairStream::new(
-            corpus,
-            params.window,
-            Rng::new(params.seed ^ (0x9A1C + epoch as u64)),
-        )
-    })
+    train_serial_with_pairs(
+        n_nodes,
+        params,
+        &counts,
+        total_pairs,
+        |epoch| {
+            PairStream::new(
+                corpus,
+                params.window,
+                Rng::new(params.seed ^ (0x9A1C + epoch as u64)),
+            )
+        },
+        None,
+    )
 }
 
 /// Train SGNS streaming a sharded corpus (serial, deterministic): pairs
@@ -132,14 +195,34 @@ pub fn train_native_sharded(
     n_nodes: usize,
     params: &SgnsParams,
 ) -> NativeTrainResult {
+    train_native_sharded_ckpt(corpus, n_nodes, params, None)
+}
+
+/// [`train_native_sharded`] with optional epoch-boundary checkpointing:
+/// resumes from `ckpt.path` when a valid checkpoint for this exact
+/// config exists, and snapshots every `ckpt.every` epochs. Bit-exact
+/// with an uninterrupted run at the same seed.
+pub fn train_native_sharded_ckpt(
+    corpus: &ShardedCorpus,
+    n_nodes: usize,
+    params: &SgnsParams,
+    ckpt: Option<&TrainCkpt>,
+) -> NativeTrainResult {
     let total_pairs = corpus.exact_pair_count(params.window) * params.epochs as u64;
     let counts = corpus.node_counts();
-    train_serial_with_pairs(n_nodes, params, &counts, total_pairs, |epoch| {
-        corpus.pair_stream(
-            params.window,
-            Rng::new(params.seed ^ (0x9A1C + epoch as u64)),
-        )
-    })
+    train_serial_with_pairs(
+        n_nodes,
+        params,
+        &counts,
+        total_pairs,
+        |epoch| {
+            corpus.pair_stream(
+                params.window,
+                Rng::new(params.seed ^ (0x9A1C + epoch as u64)),
+            )
+        },
+        ckpt,
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -205,9 +288,23 @@ pub fn train_native_parallel_sharded(
     params: &SgnsParams,
     threads: usize,
 ) -> NativeTrainResult {
+    train_native_parallel_sharded_ckpt(corpus, n_nodes, params, threads, None)
+}
+
+/// [`train_native_parallel_sharded`] with optional checkpointing.
+/// Only the deterministic serial route (`threads == 1`) takes and
+/// resumes checkpoints; hogwild results are nondeterministic anyway, so
+/// a resumed multi-threaded job retrains the phase from zero.
+pub fn train_native_parallel_sharded_ckpt(
+    corpus: &ShardedCorpus,
+    n_nodes: usize,
+    params: &SgnsParams,
+    threads: usize,
+    ckpt: Option<&TrainCkpt>,
+) -> NativeTrainResult {
     let threads = threads.max(1);
     if threads == 1 {
-        return train_native_sharded(corpus, n_nodes, params);
+        return train_native_sharded_ckpt(corpus, n_nodes, params, ckpt);
     }
     let dim = params.dim;
     let mut seed_rng = Rng::new(params.seed);
@@ -512,6 +609,52 @@ mod tests {
         assert!(a.mean_loss < 4.16);
         let (adj, far) = ring_separation(&a.w_in, n);
         assert!(adj > far + 0.2, "adjacent {adj} vs antipodal {far}");
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_exact() {
+        // Run once with epoch-boundary checkpoints: the last snapshot
+        // lands after epoch 3 of 4. A second run over the same config
+        // resumes from it, trains only the final epoch, and must land
+        // on exactly the same matrices, pair count and mean loss as the
+        // uninterrupted run.
+        let n = 24;
+        let g = generators::ring(n);
+        let sharded = || {
+            generate_walk_shards(
+                &g,
+                &WalkSchedule::uniform(n, 10),
+                &WalkParams {
+                    walk_length: 10,
+                    seed: 5,
+                    threads: 2,
+                },
+                &ShardOpts {
+                    shards: 3,
+                    ..Default::default()
+                },
+            )
+        };
+        let mut params = small_params(8);
+        params.epochs = 4;
+        let ckpt_path =
+            std::env::temp_dir().join(format!("kcore_resume_test_{}.ckpt", std::process::id()));
+        let _ = std::fs::remove_file(&ckpt_path);
+        let ckpt = TrainCkpt {
+            path: ckpt_path.clone(),
+            every: 1,
+        };
+        let full = train_native_sharded_ckpt(&sharded(), n, &params, Some(&ckpt));
+        let on_disk = checkpoint::load(&ckpt_path, checkpoint::params_digest(n, &params))
+            .unwrap()
+            .expect("checkpoint written");
+        assert_eq!(on_disk.epochs_done, 3, "snapshots stop before the last epoch");
+        let resumed = train_native_sharded_ckpt(&sharded(), n, &params, Some(&ckpt));
+        assert_eq!(resumed.w_in, full.w_in);
+        assert_eq!(resumed.w_out, full.w_out);
+        assert_eq!(resumed.n_pairs, full.n_pairs);
+        assert_eq!(resumed.mean_loss.to_bits(), full.mean_loss.to_bits());
+        let _ = std::fs::remove_file(&ckpt_path);
     }
 
     #[test]

@@ -53,6 +53,7 @@ COMMANDS
             [--dim D] [--window W] [--epochs E] [--seed N]
             [--threads N] [--train-threads N]
             [--shards S] [--corpus-budget-mb M] [--spill-dir DIR]
+            [--job-dir DIR [--ckpt-every N]]
             [--store ARTIFACT [--notify ADDR]] [--trace-out PATH] --out PATH
   eval      (--graph NAME | --edges PATH) [--remove FRAC] [--trials T]
             [--embedder ...] [--k0 K] [--cores K1,K2,...] [--backend ...]
@@ -115,6 +116,20 @@ thread per connection, `eventloop` (Linux) multiplexes every connection
 over one epoll loop plus a fixed worker pool, so N mostly-idle clients
 cost N file descriptors instead of N threads. Both models speak the
 same protocol and answer identical replies.
+
+Crash safety (DESIGN.md §Robustness, \"Crash safety & resume\"): `embed
+--job-dir DIR` makes the pipeline crash-only — each phase commits its
+outputs to a checksummed KCEMANIFEST1 manifest under DIR with
+write-tmp-fsync-rename discipline, so a killed run re-invoked with the
+same --job-dir and config skips every completed phase and resumes
+where it died. --ckpt-every N additionally checkpoints the serial
+trainer every N epochs for mid-train resume (requires
+--train-threads 1 for bit-exact replay). Stale temp/spill files from
+dead runs are swept at startup (`pipeline: orphans_removed=N`).
+`make crash` runs the kill-9 drill end to end. A restarted daemon
+reopens the last-good generation recorded in the artifact's `.current`
+lineage file; `health` reports recovered, lineage_generation,
+start_time and uptime_secs.
 
 Robustness (DESIGN.md §Robustness): the daemon degrades instead of
 dying — a panicking connection handler is caught (one connection drops,
@@ -305,6 +320,13 @@ fn cmd_embed(args: &Args) -> Result<()> {
     let mut cfg = build_config(args)?;
     cfg.export_store = args.opt_str("store").map(PathBuf::from);
     cfg.notify_daemon = args.opt_str("notify");
+    // Crash-safe jobs (DESIGN.md §Robustness): --job-dir makes every
+    // phase commit durably to a manifest and lets a rerun resume;
+    // --ckpt-every N sets the serial trainer's epoch checkpoint cadence.
+    cfg.job_dir = args.opt_str("job-dir").map(PathBuf::from);
+    cfg.ckpt_every = args
+        .get_usize("ckpt-every", 0)
+        .map_err(anyhow::Error::msg)?;
     cfg.trace_out = trace_out;
     cfg.validate()?; // --notify without --store is a usage error
     let out = args
@@ -535,6 +557,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             seed,
             in_memory,
             verify_on_load: true,
+            // Daemons keep a `<store>.current` lineage file so a
+            // restart reopens the last-good generation (health reports
+            // `recovered: true`). Batch `serve`/`query` leave it off.
+            lineage: true,
         };
         let has_graph = graph.is_some();
         let gens = GenerationStore::open(Path::new(&store_path), graph, opts)?;

@@ -295,6 +295,18 @@ pub fn maybe_panic(name: &str) {
     }
 }
 
+/// Probe a global failpoint and `abort()` the whole process if it fires —
+/// simulates kill -9 at an exact code location for the crash-recovery
+/// battery (`tests/crash.rs`). Unlike `maybe_panic` nothing can catch
+/// this: destructors do not run, buffers are not flushed, exactly like
+/// SIGKILL or power loss.
+pub fn maybe_crash(name: &str) {
+    if GLOBAL.check(name).is_some() {
+        eprintln!("faults: injected crash at {name} (abort)");
+        std::process::abort();
+    }
+}
+
 /// Best-effort text of a `catch_unwind` payload (`&str` / `String` panics;
 /// anything else gets a placeholder).
 pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {

@@ -36,6 +36,7 @@ use crate::eval::operators::EdgeOp;
 use crate::graph::Graph;
 use crate::obs::faults;
 use crate::obs::metrics::Histogram;
+use crate::util::fsio;
 use crate::util::json::Json;
 
 use super::linkpred::{EdgeScorer, EdgeScorerParams};
@@ -59,6 +60,12 @@ pub struct GenerationOpts {
     /// garbage rows; the daemon always verifies swap targets up front
     /// (the in-memory loader verifies as a side effect of decoding).
     pub verify_on_load: bool,
+    /// Keep a durable lineage file (`<store>.current`) recording the
+    /// last-good published artifact. A restarted store reopens that
+    /// artifact — even if the configured path has since been replaced
+    /// by something unloadable — and reports `recovered` in `health`
+    /// (DESIGN.md §Robustness).
+    pub lineage: bool,
 }
 
 impl Default for GenerationOpts {
@@ -69,8 +76,32 @@ impl Default for GenerationOpts {
             seed: 0,
             in_memory: false,
             verify_on_load: true,
+            lineage: false,
         }
     }
+}
+
+/// Where the lineage file for a watched artifact lives.
+pub fn lineage_path(store: &Path) -> PathBuf {
+    let mut s = store.as_os_str().to_os_string();
+    s.push(".current");
+    PathBuf::from(s)
+}
+
+const LINEAGE_TAG: &str = "KCECURRENT1";
+
+/// Parse a lineage file: `(artifact path, cross-restart generation)`.
+/// Any malformed or checksum-failing content reads as "no lineage".
+fn read_lineage(path: &Path) -> Option<(PathBuf, u64)> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let rest = text.strip_prefix(LINEAGE_TAG)?.strip_prefix(' ')?;
+    let (sum, body) = rest.trim_end_matches('\n').split_once(' ')?;
+    let stored = u64::from_str_radix(sum, 16).ok()?;
+    if fsio::fnv1a64(&[body.as_bytes()]) != stored {
+        return None;
+    }
+    let (gen, artifact) = body.split_once(' ')?;
+    Some((PathBuf::from(artifact), gen.parse().ok()?))
 }
 
 /// One immutable, fully-loaded artifact generation.
@@ -242,27 +273,106 @@ pub struct GenerationStore {
     /// `"err: .."`), surfaced by the `health` verb so operators can see
     /// *why* the daemon is still on an old generation.
     last_swap: Mutex<String>,
+    /// Lineage file (when `opts.lineage`), rewritten durably after the
+    /// initial load and after every publish.
+    lineage: Option<PathBuf>,
+    /// Cross-restart generation counter: continues from the lineage
+    /// file's value instead of restarting at 1 with the process.
+    lineage_gen: AtomicU64,
+    /// True when this store reopened state recorded by a previous
+    /// process via the lineage file.
+    recovered: bool,
 }
 
 impl GenerationStore {
-    /// Load generation 1 from `path` and start watching it.
+    /// Load generation 1 from `path` and start watching it. With
+    /// `opts.lineage`, a valid lineage file next to `path` wins: the
+    /// store reopens the last-good artifact it names (falling back to
+    /// `path` if that artifact no longer loads) and marks itself
+    /// `recovered`.
     pub fn open(
         path: &Path,
         graph: Option<Graph>,
         opts: GenerationOpts,
     ) -> Result<GenerationStore> {
-        let first = Generation::load(path, 1, &opts, graph.as_ref())
-            .with_context(|| format!("loading initial generation from {}", path.display()))?;
-        Ok(GenerationStore {
+        let lineage = opts.lineage.then(|| lineage_path(path));
+        let mut open_path = path.to_path_buf();
+        let mut recovered = false;
+        let mut prev_gen = 0u64;
+        if let Some((last_good, gen)) = lineage.as_ref().and_then(|lf| read_lineage(lf)) {
+            prev_gen = gen;
+            open_path = last_good;
+            recovered = true;
+        }
+        let first = if recovered && open_path != path {
+            // The lineage target outranks the configured path, but its
+            // artifact may have been deleted since: degrade to a normal
+            // (non-recovered) open rather than failing the daemon.
+            match Generation::load(&open_path, 1, &opts, graph.as_ref()) {
+                Ok(g) => g,
+                Err(e) => {
+                    eprintln!(
+                        "serve: lineage artifact {} unusable ({e:#}); opening {}",
+                        open_path.display(),
+                        path.display()
+                    );
+                    recovered = false;
+                    open_path = path.to_path_buf();
+                    Generation::load(path, 1, &opts, graph.as_ref()).with_context(|| {
+                        format!("loading initial generation from {}", path.display())
+                    })?
+                }
+            }
+        } else {
+            Generation::load(&open_path, 1, &opts, graph.as_ref()).with_context(|| {
+                format!("loading initial generation from {}", open_path.display())
+            })?
+        };
+        let store = GenerationStore {
             opts,
             graph,
-            watch: Mutex::new(path.to_path_buf()),
+            watch: Mutex::new(open_path.clone()),
             current: RwLock::new(Arc::new(first)),
             swap_lock: Mutex::new(()),
             next_seq: AtomicU64::new(2),
             swaps: AtomicU64::new(0),
             last_swap: Mutex::new("ok gen 1".to_string()),
-        })
+            lineage,
+            lineage_gen: AtomicU64::new(prev_gen + 1),
+            recovered,
+        };
+        store.write_lineage(&open_path);
+        Ok(store)
+    }
+
+    /// True when the initial generation came from a lineage file left
+    /// by a previous process (`health` reports this).
+    pub fn recovered(&self) -> bool {
+        self.recovered
+    }
+
+    /// Cross-restart generation counter (0 when lineage is off).
+    pub fn lineage_generation(&self) -> u64 {
+        if self.lineage.is_none() {
+            return 0;
+        }
+        self.lineage_gen.load(Ordering::Relaxed)
+    }
+
+    /// Durably record the serving artifact in the lineage file.
+    /// Failures are warned, not fatal: lineage is a recovery aid, a
+    /// read-only filesystem must not take down serving.
+    fn write_lineage(&self, artifact: &Path) {
+        let Some(lf) = &self.lineage else { return };
+        let body = format!(
+            "{} {}",
+            self.lineage_gen.load(Ordering::Relaxed),
+            artifact.display()
+        );
+        let line = format!("{LINEAGE_TAG} {:016x} {body}\n", fsio::fnv1a64(&[body.as_bytes()]));
+        if let Err(e) = fsio::write_atomic_durable(lf, line.as_bytes()) {
+            eprintln!("serve: lineage write to {} failed: {e}", lf.display());
+        }
     }
 
     /// The generation requests should be answered from, as an owning
@@ -400,9 +510,13 @@ impl GenerationStore {
                 cur.seq()
             ),
         };
-        *self.watch.lock().expect("watch lock") = path;
         *self.current.write().expect("generation lock") = gen.clone();
         self.swaps.fetch_add(1, Ordering::Relaxed);
+        if self.lineage.is_some() {
+            self.lineage_gen.fetch_add(1, Ordering::Relaxed);
+            self.write_lineage(&path);
+        }
+        *self.watch.lock().expect("watch lock") = path;
         Ok(Some(gen))
     }
 }
@@ -534,6 +648,73 @@ mod tests {
         assert_eq!(gens.last_swap_result(), format!("ok gen {}", gen.seq()));
         std::fs::remove_file(&a).unwrap();
         std::fs::remove_file(&b).unwrap();
+    }
+
+    #[test]
+    fn lineage_recovers_last_good_generation_across_restart() {
+        let a = tmp("lineage_a.kce");
+        let b = tmp("lineage_b.kce");
+        write_artifact(&a, 30, 4, 21);
+        write_artifact(&b, 30, 4, 22);
+        let opts = GenerationOpts {
+            lineage: true,
+            ..Default::default()
+        };
+        // First life: open A (no lineage yet -> not a recovery), swap
+        // to B; the lineage file must now name B.
+        let gens = GenerationStore::open(&a, None, opts.clone()).unwrap();
+        assert!(!gens.recovered());
+        assert_eq!(gens.lineage_generation(), 1);
+        gens.swap_to(Some(&b)).unwrap();
+        assert_eq!(gens.lineage_generation(), 2);
+        let req = Request::Neighbors { node: 0, k: 3 };
+        let last_good = gens.current().execute(&req).unwrap();
+        drop(gens);
+
+        // Second life, restarted against the *original* path: the
+        // lineage file wins — the store reopens B, reports recovered,
+        // and continues the cross-restart generation count.
+        let gens = GenerationStore::open(&a, None, opts.clone()).unwrap();
+        assert!(gens.recovered());
+        assert_eq!(gens.lineage_generation(), 3);
+        assert_eq!(gens.watched_path(), b);
+        assert_eq!(gens.current().execute(&req).unwrap(), last_good);
+        drop(gens);
+
+        // If the last-good artifact vanished, degrade to a normal open
+        // of the configured path instead of failing the daemon.
+        std::fs::remove_file(&b).unwrap();
+        let gens = GenerationStore::open(&a, None, opts.clone()).unwrap();
+        assert!(!gens.recovered());
+        assert_eq!(gens.watched_path(), a);
+
+        // Lineage off: no file is read or written, nothing recovered.
+        let plain = GenerationStore::open(&a, None, GenerationOpts::default()).unwrap();
+        assert!(!plain.recovered());
+        assert_eq!(plain.lineage_generation(), 0);
+
+        std::fs::remove_file(&a).unwrap();
+        std::fs::remove_file(lineage_path(&a)).unwrap();
+    }
+
+    #[test]
+    fn tampered_lineage_file_reads_as_no_lineage() {
+        let p = tmp("lineage_tamper.kce");
+        write_artifact(&p, 20, 4, 23);
+        let opts = GenerationOpts {
+            lineage: true,
+            ..Default::default()
+        };
+        drop(GenerationStore::open(&p, None, opts.clone()).unwrap());
+        let lf = lineage_path(&p);
+        let mut text = std::fs::read_to_string(&lf).unwrap();
+        text = text.replace("KCECURRENT1", "KCECURRENT9");
+        std::fs::write(&lf, &text).unwrap();
+        let gens = GenerationStore::open(&p, None, opts).unwrap();
+        assert!(!gens.recovered(), "bad magic must not read as lineage");
+        assert_eq!(gens.lineage_generation(), 1);
+        std::fs::remove_file(&p).unwrap();
+        std::fs::remove_file(&lf).unwrap();
     }
 
     #[test]

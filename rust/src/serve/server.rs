@@ -529,6 +529,10 @@ pub(crate) struct Ctl {
     pub(crate) max_inflight: usize,
     /// Which accept model is serving (reported by `stats`/`health`).
     pub(crate) accept_model: AcceptModel,
+    /// Process start marks for `health`'s uptime/start-time fields
+    /// (monotonic for the duration, wall clock for the timestamp).
+    pub(crate) started: Instant,
+    pub(crate) start_unix: u64,
     /// Span tracer (`--trace-out`); disabled unless configured.
     pub(crate) trace: Tracer,
     /// Live connections by id, so shutdown can half-close readers
@@ -560,6 +564,11 @@ impl Ctl {
             inflight: AtomicU64::new(0),
             max_inflight: opts.max_inflight,
             accept_model: opts.accept_model,
+            started: Instant::now(),
+            start_unix: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
             trace: opts.trace.clone(),
             registry,
             conns: Mutex::new(HashMap::new()),
@@ -876,6 +885,13 @@ pub(crate) fn health_reply(gens: &GenerationStore, ctl: &Ctl) -> String {
         ),
         ("last_swap_result", Json::str(&gens.last_swap_result())),
         ("swaps", Json::num(gens.swaps() as f64)),
+        // Restart-recovery lineage (DESIGN.md §Robustness): whether
+        // this process reopened a previous instance's last-good
+        // generation, and the cross-restart generation counter.
+        ("recovered", Json::Bool(gens.recovered())),
+        ("lineage_generation", Json::num(gens.lineage_generation() as f64)),
+        ("start_time", Json::num(ctl.start_unix as f64)),
+        ("uptime_secs", Json::num(ctl.started.elapsed().as_secs_f64())),
         ("in_flight", Json::num(ctl.inflight.load(Ordering::Relaxed) as f64)),
         ("max_inflight", Json::num(ctl.max_inflight as f64)),
         ("panics", Json::num(ctl.panics.get() as f64)),

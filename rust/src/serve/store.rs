@@ -32,7 +32,8 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::obs::faults;
-use anyhow::{bail, Context, Result};
+use crate::util::fsio;
+use anyhow::{anyhow, bail, Context, Result};
 
 /// File magic (8 bytes).
 pub const MAGIC: [u8; 8] = *b"KCEMBED\0";
@@ -167,7 +168,18 @@ fn stage_and_publish(
         w.write_all(&x.to_le_bytes())?;
     }
     w.flush()?;
-    drop(w);
+    let file = w
+        .into_inner()
+        .map_err(|e| anyhow!("flushing staged store {}: {}", tmp.display(), e.error()))?;
+    // Durability: flush the payload to stable storage before the rename
+    // (a rename can otherwise land pointing at unwritten blocks after
+    // power loss) and the directory entry after it (so the rename itself
+    // survives). Without both, "atomic publish" only means atomic
+    // against concurrent readers, not against crashes.
+    faults::fail_io("store.write.sync_err")
+        .and_then(|()| file.sync_all())
+        .with_context(|| format!("syncing staged store {}", tmp.display()))?;
+    drop(file);
     if faults::check("store.write.torn").is_some() {
         // Chaos hook: truncate the staged bytes before the rename —
         // a crash that still "publishes" a torn artifact. Loaders must
@@ -178,6 +190,8 @@ fn stage_and_publish(
     }
     std::fs::rename(tmp, path)
         .with_context(|| format!("publishing embedding store {}", path.display()))?;
+    fsio::fsync_parent(path)
+        .with_context(|| format!("syncing parent dir of {}", path.display()))?;
     Ok(())
 }
 

@@ -1,0 +1,249 @@
+//! Durable filesystem primitives shared by the crash-safe pipeline and
+//! the serving tier: fsync-through atomic writes, directory syncs,
+//! streaming FNV-1a checksums, and the startup orphan sweep.
+//!
+//! Crash-safety contract: a file published through
+//! [`write_atomic_durable`] is either absent or complete after a crash
+//! at any instruction — the payload is flushed (`sync_all`) before the
+//! rename, and the parent directory entry is flushed after it, so the
+//! rename itself survives power loss.
+
+use std::fs::{self, File};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// FNV-1a 64-bit over a sequence of byte chunks. Same parameters as the
+/// artifact-store header checksum so every on-disk integrity check in
+/// the tree speaks one hash.
+pub fn fnv1a64(chunks: &[&[u8]]) -> u64 {
+    let mut h = Fnv1a64::new();
+    for c in chunks {
+        h.update(c);
+    }
+    h.finish()
+}
+
+/// Incremental FNV-1a 64-bit hasher for streaming checksums.
+pub struct Fnv1a64 {
+    h: u64,
+}
+
+impl Fnv1a64 {
+    pub fn new() -> Fnv1a64 {
+        Fnv1a64 {
+            h: 0xcbf2_9ce4_8422_2325,
+        }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for b in bytes {
+            self.h ^= u64::from(*b);
+            self.h = self.h.wrapping_mul(0x0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+impl Default for Fnv1a64 {
+    fn default() -> Fnv1a64 {
+        Fnv1a64::new()
+    }
+}
+
+/// Streaming FNV-1a checksum of a whole file.
+pub fn file_checksum(path: &Path) -> io::Result<u64> {
+    let mut f = File::open(path)?;
+    let mut h = Fnv1a64::new();
+    let mut buf = [0u8; 64 * 1024];
+    loop {
+        let n = f.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        h.update(&buf[..n]);
+    }
+    Ok(h.finish())
+}
+
+/// fsync a directory so a rename within it is durable. On platforms
+/// where directories cannot be opened for sync this degrades to a
+/// no-op rather than an error.
+pub fn fsync_dir(dir: &Path) -> io::Result<()> {
+    match File::open(dir) {
+        Ok(d) => d.sync_all(),
+        Err(_) => Ok(()),
+    }
+}
+
+/// fsync the parent directory of `path` (no-op when it has none).
+pub fn fsync_parent(path: &Path) -> io::Result<()> {
+    match path.parent() {
+        Some(dir) if !dir.as_os_str().is_empty() => fsync_dir(dir),
+        _ => Ok(()),
+    }
+}
+
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Staging-file path for an atomic publish of `path`: same directory
+/// (so the rename cannot cross filesystems), tagged with pid + sequence
+/// so concurrent writers never collide and the orphan sweep can tell
+/// dead owners from live ones.
+pub fn staging_path(path: &Path) -> PathBuf {
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let mut name = path.file_name().map(|s| s.to_os_string()).unwrap_or_default();
+    name.push(format!(".tmp.{}.{}", std::process::id(), seq));
+    path.with_file_name(name)
+}
+
+/// Write `bytes` to `path` atomically and durably: stage to a temp file
+/// in the same directory, `sync_all`, rename over the target, then
+/// fsync the parent directory. After a crash at any point the target is
+/// either the old content or the complete new content, never a torn
+/// mix.
+pub fn write_atomic_durable(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let tmp = staging_path(path);
+    let res = (|| {
+        let mut f = File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        drop(f);
+        fs::rename(&tmp, path)?;
+        fsync_parent(path)
+    })();
+    if res.is_err() {
+        let _ = fs::remove_file(&tmp);
+    }
+    res
+}
+
+/// True when `pid` belongs to a live process. Linux answers via
+/// `/proc`; elsewhere we conservatively report alive so the orphan
+/// sweep never deletes a file someone may still own.
+fn pid_alive(pid: u32) -> bool {
+    if pid == std::process::id() {
+        return true;
+    }
+    if cfg!(target_os = "linux") {
+        Path::new(&format!("/proc/{pid}")).exists()
+    } else {
+        true
+    }
+}
+
+/// Extract the owning pid encoded in an orphan-candidate file name:
+/// either a staging file (`<name>.tmp.<pid>.<seq>`) or an unsealed
+/// spill shard (`kcore_embed_shard_<pid>_<seq>.bin`).
+fn orphan_owner(name: &str) -> Option<u32> {
+    if let Some(rest) = name.strip_prefix("kcore_embed_shard_") {
+        let pid = rest.split('_').next()?;
+        return pid.parse().ok();
+    }
+    if let Some((_, rest)) = name.split_once(".tmp.") {
+        let pid = rest.split('.').next()?;
+        return pid.parse().ok();
+    }
+    None
+}
+
+/// Remove stale staging files and unsealed spill shards left behind by
+/// crashed runs in `dir`. Only files whose encoded owner pid is dead
+/// are touched; live writers (including this process) keep theirs.
+/// Returns the number of files removed.
+pub fn sweep_orphans(dir: &Path) -> usize {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return 0;
+    };
+    let mut removed = 0;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(pid) = orphan_owner(name) else {
+            continue;
+        };
+        if !pid_alive(pid) && fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("kcore_fsio_{}_{}", name, std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn fnv_matches_incremental() {
+        let one = fnv1a64(&[b"hello world"]);
+        let two = fnv1a64(&[b"hello ", b"world"]);
+        assert_eq!(one, two);
+        let mut h = Fnv1a64::new();
+        h.update(b"hello");
+        h.update(b" world");
+        assert_eq!(h.finish(), one);
+    }
+
+    #[test]
+    fn file_checksum_streams_whole_file() {
+        let d = tmp_dir("cksum");
+        let p = d.join("blob.bin");
+        let payload: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        fs::write(&p, &payload).unwrap();
+        assert_eq!(file_checksum(&p).unwrap(), fnv1a64(&[&payload]));
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_cleans_staging() {
+        let d = tmp_dir("atomic");
+        let p = d.join("out.txt");
+        write_atomic_durable(&p, b"v1").unwrap();
+        write_atomic_durable(&p, b"v2").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"v2");
+        let leftovers: Vec<_> = fs::read_dir(&d)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "staging files must not survive");
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn orphan_sweep_removes_dead_owners_only() {
+        let d = tmp_dir("orphans");
+        // Pid 1 is init — alive, must be kept. A huge pid is dead.
+        let live = d.join("kcore_embed_shard_1_0.bin");
+        let dead = d.join("kcore_embed_shard_4294000000_0.bin");
+        let dead_tmp = d.join("manifest.json.tmp.4294000000.3");
+        let mine = d.join(format!("store.kce.tmp.{}.0", std::process::id()));
+        let plain = d.join("keep.txt");
+        for p in [&live, &dead, &dead_tmp, &mine, &plain] {
+            fs::write(p, b"x").unwrap();
+        }
+        let removed = sweep_orphans(&d);
+        assert_eq!(removed, 2);
+        assert!(live.exists() && mine.exists() && plain.exists());
+        assert!(!dead.exists() && !dead_tmp.exists());
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn orphan_owner_parses_both_shapes() {
+        assert_eq!(orphan_owner("kcore_embed_shard_123_7.bin"), Some(123));
+        assert_eq!(orphan_owner("store.kce.tmp.42.9"), Some(42));
+        assert_eq!(orphan_owner("store.kce"), None);
+        assert_eq!(orphan_owner("kcore_embed_shard_x_1.bin"), None);
+    }
+}

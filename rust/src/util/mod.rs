@@ -5,6 +5,7 @@
 
 pub mod alias;
 pub mod cli;
+pub mod fsio;
 pub mod json;
 pub mod plot;
 pub mod pool;

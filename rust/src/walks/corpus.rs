@@ -21,6 +21,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use crate::util::fsio;
 use crate::util::rng::Rng;
 
 /// A set of random walks over nodes `0..n_nodes`.
@@ -231,6 +232,10 @@ pub struct ShardStats {
 enum ShardStorage {
     Resident { tokens: Vec<u32>, offsets: Vec<usize> },
     Spilled { path: PathBuf },
+    /// A named, durable, checksummed shard file under a `--job-dir`:
+    /// same record format as `Spilled`, but owned by the job manifest —
+    /// it survives drop so a resumed run can re-open it.
+    Sealed { path: PathBuf },
 }
 
 /// One bounded-memory chunk of a [`ShardedCorpus`]: either resident
@@ -254,6 +259,11 @@ fn pairs_in_walk(l: usize, window: usize) -> u64 {
         total += (c.min(window) + (l - 1 - c).min(window)) as u64;
     }
     total
+}
+
+/// Canonical file name of sealed shard `i` inside a job's shard dir.
+pub fn sealed_shard_name(i: usize) -> String {
+    format!("shard_{i:04}.walks")
 }
 
 static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
@@ -315,9 +325,13 @@ impl CorpusShard {
         self.n_tokens
     }
 
-    /// Whether this shard's walks live on disk.
+    /// Whether this shard's walks live on disk (anonymous spill file or
+    /// a sealed job-dir shard).
     pub fn is_spilled(&self) -> bool {
-        matches!(self.storage, ShardStorage::Spilled { .. })
+        matches!(
+            self.storage,
+            ShardStorage::Spilled { .. } | ShardStorage::Sealed { .. }
+        )
     }
 
     /// Bytes of walk data this shard keeps resident in RAM.
@@ -326,13 +340,13 @@ impl CorpusShard {
             ShardStorage::Resident { tokens, offsets } => {
                 tokens.len() * 4 + offsets.len() * std::mem::size_of::<usize>()
             }
-            ShardStorage::Spilled { .. } => 0,
+            ShardStorage::Spilled { .. } | ShardStorage::Sealed { .. } => 0,
         }
     }
 
-    /// A pull-based walk reader over this shard. Spilled shards stream
-    /// from disk through a buffered reader; resident shards copy out of
-    /// their slices. Panics if a spill file vanished from under us.
+    /// A pull-based walk reader over this shard. On-disk shards stream
+    /// through a buffered reader; resident shards copy out of their
+    /// slices. Panics if a spill file vanished from under us.
     pub fn reader(&self) -> ShardReader<'_> {
         match &self.storage {
             ShardStorage::Resident { tokens, offsets } => ShardReader {
@@ -342,7 +356,7 @@ impl CorpusShard {
                 byte_buf: Vec::new(),
                 remaining: self.n_walks,
             },
-            ShardStorage::Spilled { path } => ShardReader {
+            ShardStorage::Spilled { path } | ShardStorage::Sealed { path } => ShardReader {
                 resident: None,
                 next_idx: 0,
                 file: Some(std::io::BufReader::new(File::open(path).unwrap_or_else(
@@ -352,6 +366,125 @@ impl CorpusShard {
                 remaining: self.n_walks,
             },
         }
+    }
+
+    /// Promote this shard to a named, durable, checksummed file at
+    /// `path` (the job manifest records the returned metadata so a
+    /// resumed run can [`CorpusShard::open_sealed`] it).
+    ///
+    /// Resident shards write their records out but stay resident — the
+    /// current run keeps its zero-I/O reads; the file exists for the
+    /// *next* run. Spilled shards rename their anonymous temp file into
+    /// place (same filesystem when `--spill-dir` is inside the job dir,
+    /// else a copy) and become `Sealed`, so drop no longer deletes it.
+    /// Every seal ends with file + parent-directory fsync.
+    pub fn seal_to(&mut self, path: &std::path::Path) -> std::io::Result<SealedShardMeta> {
+        match &self.storage {
+            ShardStorage::Resident { tokens, offsets } => {
+                let mut hasher = fsio::Fnv1a64::new();
+                let file = File::create(path)?;
+                let mut w = BufWriter::new(file);
+                let mut bytes = 0u64;
+                for i in 0..self.n_walks {
+                    let walk = &tokens[offsets[i]..offsets[i + 1]];
+                    let len = (walk.len() as u32).to_le_bytes();
+                    hasher.update(&len);
+                    w.write_all(&len)?;
+                    for &t in walk {
+                        let tb = t.to_le_bytes();
+                        hasher.update(&tb);
+                        w.write_all(&tb)?;
+                    }
+                    bytes += 4 + walk.len() as u64 * 4;
+                }
+                w.flush()?;
+                w.into_inner()
+                    .map_err(|e| std::io::Error::other(e.error().to_string()))?
+                    .sync_all()?;
+                fsio::fsync_parent(path)?;
+                Ok(SealedShardMeta {
+                    n_walks: self.n_walks as u64,
+                    n_tokens: self.n_tokens as u64,
+                    len_hist: self.len_hist.clone(),
+                    bytes,
+                    checksum: hasher.finish(),
+                })
+            }
+            ShardStorage::Spilled { path: spill } => {
+                if std::fs::rename(spill, path).is_err() {
+                    // Cross-filesystem spill dir: fall back to a copy.
+                    std::fs::copy(spill, path)?;
+                    let _ = std::fs::remove_file(spill);
+                }
+                let f = File::open(path)?;
+                f.sync_all()?;
+                fsio::fsync_parent(path)?;
+                let bytes = std::fs::metadata(path)?.len();
+                let checksum = fsio::file_checksum(path)?;
+                self.storage = ShardStorage::Sealed {
+                    path: path.to_path_buf(),
+                };
+                Ok(SealedShardMeta {
+                    n_walks: self.n_walks as u64,
+                    n_tokens: self.n_tokens as u64,
+                    len_hist: self.len_hist.clone(),
+                    bytes,
+                    checksum,
+                })
+            }
+            ShardStorage::Sealed { path: existing } => {
+                // Already sealed (idempotent re-seal into the same dir).
+                assert_eq!(existing, path, "shard sealed under a different path");
+                let bytes = std::fs::metadata(path)?.len();
+                let checksum = fsio::file_checksum(path)?;
+                Ok(SealedShardMeta {
+                    n_walks: self.n_walks as u64,
+                    n_tokens: self.n_tokens as u64,
+                    len_hist: self.len_hist.clone(),
+                    bytes,
+                    checksum,
+                })
+            }
+        }
+    }
+
+    /// Re-open a sealed shard file written by a previous run, verifying
+    /// size and checksum against the manifest's metadata before trusting
+    /// a single byte of it.
+    pub fn open_sealed(
+        path: &std::path::Path,
+        n_nodes: usize,
+        meta: &SealedShardMeta,
+    ) -> anyhow::Result<CorpusShard> {
+        use anyhow::Context as _;
+        let actual = std::fs::metadata(path)
+            .with_context(|| format!("opening sealed shard {}", path.display()))?
+            .len();
+        if actual != meta.bytes {
+            anyhow::bail!(
+                "sealed shard {} is {actual} bytes, manifest says {}",
+                path.display(),
+                meta.bytes
+            );
+        }
+        let checksum = fsio::file_checksum(path)
+            .with_context(|| format!("checksumming sealed shard {}", path.display()))?;
+        if checksum != meta.checksum {
+            anyhow::bail!(
+                "sealed shard {} checksum {checksum:016x} != manifest {:016x}",
+                path.display(),
+                meta.checksum
+            );
+        }
+        Ok(CorpusShard {
+            n_nodes,
+            n_walks: meta.n_walks as usize,
+            n_tokens: meta.n_tokens as usize,
+            len_hist: meta.len_hist.clone(),
+            storage: ShardStorage::Sealed {
+                path: path.to_path_buf(),
+            },
+        })
     }
 
     /// Visit every walk in order.
@@ -365,11 +498,27 @@ impl CorpusShard {
 }
 
 impl Drop for CorpusShard {
+    /// Anonymous spill files die with the shard; sealed job-dir shards
+    /// are durable artifacts owned by the manifest and survive.
     fn drop(&mut self) {
         if let ShardStorage::Spilled { path } = &self.storage {
             let _ = std::fs::remove_file(path);
         }
     }
+}
+
+/// Manifest-side description of one sealed shard file: enough to
+/// re-open it ([`CorpusShard::open_sealed`]) with integrity checked and
+/// pair counts available without re-reading the walks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SealedShardMeta {
+    pub n_walks: u64,
+    pub n_tokens: u64,
+    pub len_hist: Vec<u64>,
+    /// Exact file size in bytes.
+    pub bytes: u64,
+    /// FNV-1a 64 over the whole file.
+    pub checksum: u64,
 }
 
 /// Streaming walk reader over one shard (see [`CorpusShard::reader`]).
@@ -719,6 +868,47 @@ impl ShardedCorpus {
             }
         }
         corpus
+    }
+
+    /// Seal every shard into named, checksummed files under `dir`
+    /// (`shard_0000.walks`, ...) and return their metadata in canonical
+    /// shard order for the job manifest. See [`CorpusShard::seal_to`].
+    pub fn seal_to_dir(&mut self, dir: &std::path::Path) -> anyhow::Result<Vec<SealedShardMeta>> {
+        use anyhow::Context as _;
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating shard dir {}", dir.display()))?;
+        let mut metas = Vec::with_capacity(self.shards.len());
+        for (i, shard) in self.shards.iter_mut().enumerate() {
+            let path = dir.join(sealed_shard_name(i));
+            let meta = shard
+                .seal_to(&path)
+                .with_context(|| format!("sealing corpus shard {}", path.display()))?;
+            metas.push(meta);
+        }
+        // Seals rename/create files in `dir`; one directory fsync makes
+        // the whole batch of entries durable.
+        fsio::fsync_dir(dir).with_context(|| format!("syncing shard dir {}", dir.display()))?;
+        self.stats.spilled_shards = self.shards.iter().filter(|s| s.is_spilled()).count();
+        Ok(metas)
+    }
+
+    /// Re-open a corpus previously sealed by [`Self::seal_to_dir`],
+    /// verifying every shard against the manifest metadata.
+    pub fn open_sealed_dir(
+        dir: &std::path::Path,
+        n_nodes: usize,
+        metas: &[SealedShardMeta],
+    ) -> anyhow::Result<ShardedCorpus> {
+        let mut shards = Vec::with_capacity(metas.len());
+        for (i, meta) in metas.iter().enumerate() {
+            let path = dir.join(sealed_shard_name(i));
+            shards.push(CorpusShard::open_sealed(&path, n_nodes, meta)?);
+        }
+        Ok(ShardedCorpus::from_shards(
+            n_nodes,
+            shards,
+            ShardStats::default(),
+        ))
     }
 
     /// Streaming skip-gram pairs over all shards with the same dynamic

@@ -13,7 +13,8 @@ pub mod engine;
 pub mod node2vec;
 
 pub use corpus::{
-    Corpus, CorpusShard, PairStream, ShardStats, ShardWriter, ShardedCorpus, ShardedPairStream,
+    Corpus, CorpusShard, PairStream, SealedShardMeta, ShardStats, ShardWriter, ShardedCorpus,
+    ShardedPairStream,
 };
 pub use engine::{
     generate_walk_shards, generate_walks, ShardOpts, WalkParams, WalkSchedule,

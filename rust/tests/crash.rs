@@ -1,0 +1,275 @@
+//! Kill-9 crash battery (DESIGN.md §Robustness, "Crash safety &
+//! resume"): the embed pipeline must be crash-only. Each scenario
+//! spawns the real CLI as a child process with a `*.crash` failpoint
+//! armed via `KCORE_FAULTS` — the failpoint calls `abort()` right
+//! after a phase's durable manifest commit (or right after a mid-train
+//! checkpoint), which is as close to `kill -9` as a deterministic test
+//! can get. The battery then re-runs the same command against the same
+//! `--job-dir` with faults disarmed and asserts the final artifacts
+//! are byte-identical to an uninterrupted run at the same seed.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_kcore-embed")
+}
+
+fn scratch(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("kcore_embed_crash_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+/// One pipeline invocation with the battery's fixed tiny config. Every
+/// phase is exercised: k0 forces decomposition + extraction +
+/// propagation, `--store` forces export, `--train-threads 1` selects
+/// the deterministic serial trainer the checkpoint contract requires.
+fn embed_cmd(out: &Path, store: &Path, job: Option<&Path>, fault: Option<&str>) -> Command {
+    let mut c = Command::new(bin());
+    c.args([
+        "embed",
+        "--graph",
+        "cora",
+        "--seed",
+        "7",
+        "--backend",
+        "native",
+        "--train-threads",
+        "1",
+        "--threads",
+        "2",
+        "--walks",
+        "2",
+        "--walk-length",
+        "10",
+        "--dim",
+        "8",
+        "--window",
+        "2",
+        "--epochs",
+        "3",
+        "--shards",
+        "2",
+        "--k0",
+        "2",
+    ]);
+    c.arg("--out").arg(out).arg("--store").arg(store);
+    if let Some(j) = job {
+        c.arg("--job-dir").arg(j).args(["--ckpt-every", "1"]);
+    }
+    // The battery must control fault arming exactly: inherited fault
+    // env would re-kill the resume run.
+    c.env_remove("KCORE_FAULTS").env_remove("KCORE_FAULT_SEED");
+    if let Some(f) = fault {
+        c.env("KCORE_FAULTS", format!("{f}=1"));
+    }
+    c
+}
+
+fn run(mut cmd: Command) -> Output {
+    cmd.output().expect("spawning kcore-embed")
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+/// The armed child must die by abort (SIGABRT), not exit cleanly and
+/// not fail with an ordinary error.
+fn assert_aborted(out: &Output, what: &str) {
+    assert!(!out.status.success(), "{what}: expected a crash, got success");
+    #[cfg(unix)]
+    {
+        use std::os::unix::process::ExitStatusExt;
+        assert_eq!(
+            out.status.signal(),
+            Some(6),
+            "{what}: expected SIGABRT, got {:?}\nstderr:\n{}",
+            out.status,
+            stderr_of(out)
+        );
+    }
+}
+
+fn assert_ok(out: &Output, what: &str) {
+    assert!(
+        out.status.success(),
+        "{what} failed ({:?})\nstderr:\n{}",
+        out.status,
+        stderr_of(out)
+    );
+}
+
+#[test]
+#[cfg(unix)]
+fn kill9_at_every_phase_boundary_resumes_to_identical_bytes() {
+    let dir = scratch("battery");
+    // Uninterrupted baseline, no job dir: the reference bytes.
+    let base_out = dir.join("base.emb");
+    let base_store = dir.join("base.kce");
+    assert_ok(
+        &run(embed_cmd(&base_out, &base_store, None, None)),
+        "baseline",
+    );
+    let want_out = std::fs::read(&base_out).unwrap();
+    let want_store = std::fs::read(&base_store).unwrap();
+
+    // Job-dir mode without any crash must not change a single byte —
+    // sealing, checkpointing and manifest commits are bookkeeping only.
+    let job0 = dir.join("job_clean");
+    let clean_out = dir.join("clean.emb");
+    let clean_store = dir.join("clean.kce");
+    assert_ok(
+        &run(embed_cmd(&clean_out, &clean_store, Some(&job0), None)),
+        "clean job run",
+    );
+    assert_eq!(std::fs::read(&clean_out).unwrap(), want_out, "job mode changed .emb bytes");
+    assert_eq!(
+        std::fs::read(&clean_store).unwrap(),
+        want_store,
+        "job mode changed .kce bytes"
+    );
+
+    // Kill at every phase boundary (right after the durable commit)
+    // plus mid-train (right after an epoch checkpoint), then resume.
+    let faults = [
+        "pipeline.core_decomposition.crash",
+        "pipeline.k0_extract.crash",
+        "pipeline.walks.crash",
+        "train.checkpoint.crash",
+        "pipeline.train.crash",
+        "pipeline.propagation.crash",
+        "pipeline.export.crash",
+    ];
+    for fault in faults {
+        let job = dir.join(format!("job_{}", fault.replace('.', "_")));
+        let out = dir.join(format!("{fault}.emb"));
+        let store = dir.join(format!("{fault}.kce"));
+        let crashed = run(embed_cmd(&out, &store, Some(&job), Some(fault)));
+        assert_aborted(&crashed, fault);
+        assert!(
+            stderr_of(&crashed).contains("injected crash"),
+            "{fault}: crash not injected\nstderr:\n{}",
+            stderr_of(&crashed)
+        );
+
+        let resumed = run(embed_cmd(&out, &store, Some(&job), None));
+        assert_ok(&resumed, &format!("resume after {fault}"));
+        let err = stderr_of(&resumed);
+        assert!(
+            err.contains("job manifest found"),
+            "{fault}: resume did not pick up the manifest\nstderr:\n{err}"
+        );
+        assert_eq!(
+            std::fs::read(&out).unwrap(),
+            want_out,
+            "{fault}: resumed .emb differs from uninterrupted run"
+        );
+        assert_eq!(
+            std::fs::read(&store).unwrap(),
+            want_store,
+            "{fault}: resumed .kce differs from uninterrupted run"
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A resume must never trust damaged state: a truncated manifest falls
+/// back to a fresh run, a tampered phase artifact forces that phase to
+/// re-run — and both still land on the baseline bytes.
+#[test]
+#[cfg(unix)]
+fn resume_rejects_damaged_state_and_still_converges() {
+    let dir = scratch("tamper");
+    let base_out = dir.join("base.emb");
+    let base_store = dir.join("base.kce");
+    assert_ok(
+        &run(embed_cmd(&base_out, &base_store, None, None)),
+        "baseline",
+    );
+    let want_store = std::fs::read(&base_store).unwrap();
+
+    // Crash mid-pipeline, then truncate the manifest: the resume run
+    // must warn, start fresh, and still match.
+    let job = dir.join("job_trunc");
+    let out = dir.join("trunc.emb");
+    let store = dir.join("trunc.kce");
+    assert_aborted(
+        &run(embed_cmd(&out, &store, Some(&job), Some("pipeline.train.crash"))),
+        "crash before manifest tamper",
+    );
+    let manifest = job.join("MANIFEST");
+    let text = std::fs::read(&manifest).unwrap();
+    std::fs::write(&manifest, &text[..text.len() / 2]).unwrap();
+    let resumed = run(embed_cmd(&out, &store, Some(&job), None));
+    assert_ok(&resumed, "resume after manifest truncation");
+    assert!(
+        stderr_of(&resumed).contains("manifest rejected"),
+        "truncated manifest not rejected\nstderr:\n{}",
+        stderr_of(&resumed)
+    );
+    assert_eq!(std::fs::read(&store).unwrap(), want_store);
+
+    // Crash after train, flip a bit in the committed train artifact:
+    // the checksum gate must catch it and retrain instead of exporting
+    // garbage.
+    let job = dir.join("job_flip");
+    let out = dir.join("flip.emb");
+    let store = dir.join("flip.kce");
+    assert_aborted(
+        &run(embed_cmd(&out, &store, Some(&job), Some("pipeline.train.crash"))),
+        "crash before artifact tamper",
+    );
+    let train = job.join("train.kce");
+    let mut bytes = std::fs::read(&train).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    std::fs::write(&train, &bytes).unwrap();
+    let resumed = run(embed_cmd(&out, &store, Some(&job), None));
+    assert_ok(&resumed, "resume after artifact tamper");
+    assert_eq!(
+        std::fs::read(&store).unwrap(),
+        want_store,
+        "tampered train artifact leaked into the export"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Startup orphan sweep: stale staging/spill files named for a dead
+/// pid are removed (and counted on stderr); files owned by live pids
+/// or with foreign names are left alone.
+#[test]
+fn startup_sweeps_orphaned_temp_files() {
+    let dir = scratch("orphans");
+    let job = dir.join("job");
+    std::fs::create_dir_all(&job).unwrap();
+    // Dead-pid staging + spill leftovers (pid far above pid_max).
+    let dead_tmp = job.join("train.kce.tmp.4294000001.3");
+    let dead_spill = job.join("kcore_embed_shard_4294000001_0.bin");
+    // A live pid (our own) and an unrelated name must survive.
+    let live_tmp = job.join(format!("x.tmp.{}.1", std::process::id()));
+    let foreign = job.join("keep.bin");
+    for f in [&dead_tmp, &dead_spill, &live_tmp, &foreign] {
+        std::fs::write(f, b"junk").unwrap();
+    }
+
+    let out = run(embed_cmd(
+        &dir.join("o.emb"),
+        &dir.join("o.kce"),
+        Some(&job),
+        None,
+    ));
+    assert_ok(&out, "embed with orphaned files");
+    let err = stderr_of(&out);
+    assert!(
+        err.contains("orphans_removed=2"),
+        "sweep not reported\nstderr:\n{err}"
+    );
+    assert!(!dead_tmp.exists(), "dead-pid staging file survived");
+    assert!(!dead_spill.exists(), "dead-pid spill file survived");
+    assert!(live_tmp.exists(), "live-pid staging file was swept");
+    assert!(foreign.exists(), "unrelated file was swept");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -684,6 +684,13 @@ fn health_verb_reports_liveness_and_last_swap_result() {
     for key in ["strategy", "swaps", "in_flight", "max_inflight", "panics", "shed", "faults"] {
         assert!(j.get(key).is_some(), "health reply missing {key}: {}", replies[0]);
     }
+    // Restart-recovery fields: this daemon runs lineage-off
+    // (GenerationOpts::default()), so it reports a cold start —
+    // recovered=false, lineage_generation 0 — plus sane clocks.
+    assert_eq!(j.get("recovered").and_then(Json::as_bool), Some(false));
+    assert_eq!(j.get("lineage_generation").and_then(Json::as_i64), Some(0));
+    assert!(j.get("start_time").and_then(Json::as_f64).unwrap_or(-1.0) > 0.0);
+    assert!(j.get("uptime_secs").and_then(Json::as_f64).unwrap_or(-1.0) >= 0.0);
 
     // A refused swap shows up as a single-line err in last_swap_result.
     let missing = tmp("health_missing.kce");
@@ -702,6 +709,67 @@ fn health_verb_reports_liveness_and_last_swap_result() {
     assert_eq!(stats.panics, 0);
     assert_eq!(stats.shed, 0);
     std::fs::remove_file(&p).unwrap();
+}
+
+/// Restart recovery (DESIGN.md §Robustness): with lineage enabled, a
+/// daemon that swapped to B and died serves B again when restarted
+/// against its original `--store A`, and `health` says so.
+#[test]
+fn restarted_daemon_recovers_last_good_generation() {
+    let a = tmp("recover_a.kce");
+    let b = tmp("recover_b.kce");
+    write_artifact(&a, 40, 6, 41);
+    write_artifact(&b, 40, 6, 42);
+    let opts = GenerationOpts {
+        lineage: true,
+        ..Default::default()
+    };
+
+    // First life: open A, hot-swap to B, remember B's answer, die.
+    let gens = Arc::new(GenerationStore::open(&a, None, opts.clone()).unwrap());
+    let (tx, rx) = mpsc::channel();
+    let srv = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
+    let daemon = {
+        let gens = Arc::clone(&gens);
+        thread::spawn(move || run_server_ready(gens, &srv, Some(tx)).unwrap())
+    };
+    let addr = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    let swap_line = format!("swap {}", b.display());
+    let replies = client_exchange(&addr, &lines(&[&swap_line, "nn 0 3"])).unwrap();
+    assert!(replies[0].starts_with("ok"), "{}", replies[0]);
+    let last_good = replies[1].clone();
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    daemon.join().unwrap();
+    drop(gens);
+
+    // Second life, same configured store path A: lineage wins.
+    let gens = Arc::new(GenerationStore::open(&a, None, opts).unwrap());
+    assert!(gens.recovered());
+    let (tx, rx) = mpsc::channel();
+    let srv = ServerOpts::new(ServeAddr::Tcp("127.0.0.1:0".into()));
+    let daemon = {
+        let gens = Arc::clone(&gens);
+        thread::spawn(move || run_server_ready(gens, &srv, Some(tx)).unwrap())
+    };
+    let addr = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    let replies = client_exchange(&addr, &lines(&["health", "nn 0 3"])).unwrap();
+    let j = Json::parse(&replies[0]).unwrap();
+    assert_eq!(j.get("recovered").and_then(Json::as_bool), Some(true), "{}", replies[0]);
+    assert!(
+        j.get("lineage_generation").and_then(Json::as_i64).unwrap_or(0) >= 2,
+        "{}",
+        replies[0]
+    );
+    assert_eq!(replies[1], last_good, "restart did not reopen last-good generation");
+    client_exchange(&addr, &lines(&["shutdown"])).unwrap();
+    daemon.join().unwrap();
+
+    for f in [&a, &b] {
+        std::fs::remove_file(f).unwrap();
+    }
+    let mut cur = a.clone().into_os_string();
+    cur.push(".current");
+    std::fs::remove_file(PathBuf::from(cur)).unwrap();
 }
 
 /// Regression (ISSUE 6 satellite): `shutdown` must complete — draining

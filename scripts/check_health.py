@@ -24,11 +24,19 @@ for key in (
     "panics",
     "shed",
     "faults",
+    "recovered",
+    "lineage_generation",
+    "start_time",
+    "uptime_secs",
 ):
     assert key in health, f"missing key {key}"
 assert health["status"] == "ok", f"status {health['status']!r}"
 assert health["generation"] >= 1, f"generation {health['generation']}"
 assert isinstance(health["faults"], dict), "faults is not a name->count table"
+assert isinstance(health["recovered"], bool), "recovered is not a bool"
+assert health["lineage_generation"] >= 0, "negative lineage_generation"
+assert health["start_time"] > 0, "start_time not a unix timestamp"
+assert health["uptime_secs"] >= 0, "negative uptime"
 last = health["last_swap_result"]
 assert last.startswith(("ok", "err")), f"unparseable last_swap_result {last!r}"
 assert "\n" not in last, "last_swap_result spans lines"

@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Shape-check the `make crash` kill-9 resume drill.
+
+Usage:
+  check_resume.py BASE.kce RUN.kce BASE.tsv RUN.tsv JOB_DIR RESUME_LOG
+
+Asserts the crash-safety contract from DESIGN.md §Robustness:
+  * the resumed job's final artifacts (.kce serving store and .tsv
+    embedding dump) are byte-identical to the uninterrupted baseline
+    at the same seed;
+  * the job manifest survived, carries the KCEMANIFEST1 header with a
+    valid FNV-1a body checksum, and records every pipeline phase;
+  * the resume log shows at least one run actually resumed from the
+    manifest rather than starting fresh.
+"""
+import json
+import sys
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def main() -> None:
+    base_kce, run_kce, base_tsv, run_tsv, job_dir, log_path = sys.argv[1:7]
+
+    with open(base_kce, "rb") as f:
+        want_store = f.read()
+    with open(run_kce, "rb") as f:
+        got_store = f.read()
+    assert want_store == got_store, "resumed .kce differs from uninterrupted baseline"
+    with open(base_tsv, "rb") as f:
+        want_emb = f.read()
+    with open(run_tsv, "rb") as f:
+        got_emb = f.read()
+    assert want_emb == got_emb, "resumed .tsv differs from uninterrupted baseline"
+
+    with open(f"{job_dir}/MANIFEST", "r", encoding="utf-8") as f:
+        text = f.read()
+    header, body = text.split("\n", 1)
+    tag, checksum = header.split(" ")
+    assert tag == "KCEMANIFEST1", f"bad manifest magic {tag!r}"
+    body = body.rstrip("\n")
+    assert int(checksum, 16) == fnv1a64(body.encode()), "manifest body checksum mismatch"
+    manifest = json.loads(body)
+    phases = set(manifest["phases"].keys())
+    expected = {
+        "core_decomposition",
+        "k0_extract",
+        "walks",
+        "train",
+        "propagation",
+        "export",
+    }
+    missing = expected - phases
+    assert not missing, f"manifest missing phases: {sorted(missing)}"
+
+    with open(log_path, "r", encoding="utf-8") as f:
+        log = f.read()
+    assert "job manifest found" in log, "no run resumed from the manifest"
+
+    print(
+        f"resume ok: {len(phases)} phases committed, artifacts byte-identical "
+        f"({len(want_store)} bytes .kce, {len(want_emb)} bytes .tsv)"
+    )
+
+
+if __name__ == "__main__":
+    main()
