@@ -2,7 +2,8 @@
 //!
 //! `embed --job-dir <dir>` keeps a single manifest file in the job
 //! directory recording the semantic config hash
-//! ([`super::PipelineConfig::config_hash`]) and, per completed phase, a
+//! ([`super::PipelineConfig::config_hash`]), the input-graph
+//! fingerprint ([`crate::graph::Graph::fingerprint`]) and, per completed phase, a
 //! completion record: output files with sizes + checksums, sealed
 //! corpus shard metadata, and scalar facts the resume path needs. The
 //! manifest is rewritten through [`fsio::write_atomic_durable`] after
@@ -14,14 +15,15 @@
 //!
 //! ```text
 //! KCEMANIFEST1 <fnv1a64-of-body, 16 hex digits>\n
-//! { "config_hash": "...", "phases": { ... } }
+//! { "config_hash": "...", "graph_hash": "...", "phases": { ... } }
 //! ```
 //!
 //! The checksum-in-header shape means loading never depends on
 //! re-serializing the body byte-identically; the body is hashed as raw
 //! bytes. Any defect — truncation, a flipped bit, a different config
-//! hash — surfaces as a typed [`ManifestError`], and the pipeline
-//! falls back to a fresh run rather than trusting stale phase outputs.
+//! hash, a different input graph — surfaces as a typed
+//! [`ManifestError`], and the pipeline falls back to a fresh run
+//! rather than trusting stale phase outputs.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -58,6 +60,10 @@ pub enum ManifestError {
     Parse(String),
     /// Manifest belongs to a different semantic configuration.
     ConfigHashMismatch { manifest: u64, current: u64 },
+    /// Manifest was written for a different input graph — same knobs,
+    /// different edges (the dynamic-graph rerun case): its phase
+    /// outputs must never be donated to this run.
+    GraphHashMismatch { manifest: u64, current: u64 },
 }
 
 impl fmt::Display for ManifestError {
@@ -74,6 +80,11 @@ impl fmt::Display for ManifestError {
             ManifestError::ConfigHashMismatch { manifest, current } => write!(
                 f,
                 "manifest config hash {manifest:016x} != current {current:016x}"
+            ),
+            ManifestError::GraphHashMismatch { manifest, current } => write!(
+                f,
+                "manifest graph hash {manifest:016x} != current {current:016x} \
+                 (input graph changed)"
             ),
         }
     }
@@ -148,18 +159,23 @@ impl PhaseRecord {
     }
 }
 
-/// The manifest: config binding + per-phase completion records.
+/// The manifest: config + input-graph binding, plus per-phase
+/// completion records.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Manifest {
     pub config_hash: u64,
+    /// Fingerprint of the input graph the recorded phases were computed
+    /// from ([`crate::graph::Graph::fingerprint`]).
+    pub graph_hash: u64,
     pub seed: u64,
     phases: BTreeMap<String, PhaseRecord>,
 }
 
 impl Manifest {
-    pub fn new(config_hash: u64, seed: u64) -> Manifest {
+    pub fn new(config_hash: u64, graph_hash: u64, seed: u64) -> Manifest {
         Manifest {
             config_hash,
+            graph_hash,
             seed,
             phases: BTreeMap::new(),
         }
@@ -222,6 +238,7 @@ impl Manifest {
             .collect();
         Json::object(vec![
             ("config_hash", Json::str(&format!("{:016x}", self.config_hash))),
+            ("graph_hash", Json::str(&format!("{:016x}", self.graph_hash))),
             ("seed", Json::num(self.seed as f64)),
             ("phases", Json::Object(phases)),
         ])
@@ -234,6 +251,11 @@ impl Manifest {
             .and_then(Json::as_str)
             .and_then(|s| u64::from_str_radix(s, 16).ok())
             .ok_or_else(|| bad("config_hash"))?;
+        let graph_hash = j
+            .get("graph_hash")
+            .and_then(Json::as_str)
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| bad("graph_hash"))?;
         let seed = j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
         let mut phases = BTreeMap::new();
         if let Some(Json::Object(m)) = j.get("phases") {
@@ -271,6 +293,7 @@ impl Manifest {
         }
         Ok(Manifest {
             config_hash,
+            graph_hash,
             seed,
             phases,
         })
@@ -286,9 +309,14 @@ impl Manifest {
     }
 
     /// Load and fully validate a manifest: header tag, body checksum,
-    /// JSON shape, and the semantic config hash. Every failure is a
-    /// typed [`ManifestError`] — the caller logs it and starts fresh.
-    pub fn load(path: &Path, current_config_hash: u64) -> Result<Manifest, ManifestError> {
+    /// JSON shape, the semantic config hash, and the input-graph
+    /// fingerprint. Every failure is a typed [`ManifestError`] — the
+    /// caller logs it and starts fresh.
+    pub fn load(
+        path: &Path,
+        current_config_hash: u64,
+        current_graph_hash: u64,
+    ) -> Result<Manifest, ManifestError> {
         let text = match std::fs::read_to_string(path) {
             Ok(t) => t,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
@@ -317,6 +345,12 @@ impl Manifest {
             return Err(ManifestError::ConfigHashMismatch {
                 manifest: manifest.config_hash,
                 current: current_config_hash,
+            });
+        }
+        if manifest.graph_hash != current_graph_hash {
+            return Err(ManifestError::GraphHashMismatch {
+                manifest: manifest.graph_hash,
+                current: current_graph_hash,
             });
         }
         Ok(manifest)
@@ -364,7 +398,7 @@ mod tests {
     }
 
     fn sample() -> Manifest {
-        let mut m = Manifest::new(0xDEAD_BEEF_1234_5678, 7);
+        let mut m = Manifest::new(0xDEAD_BEEF_1234_5678, 0xFACE_0FF0_5511_AA22, 7);
         m.record_phase(
             "walks",
             PhaseRecord {
@@ -400,7 +434,7 @@ mod tests {
         let p = manifest_path(&d);
         let m = sample();
         m.store(&p).unwrap();
-        let back = Manifest::load(&p, m.config_hash).unwrap();
+        let back = Manifest::load(&p, m.config_hash, m.graph_hash).unwrap();
         assert_eq!(back, m);
         assert_eq!(back.phase("train").unwrap().info("n_pairs"), Some(5000.0));
         assert_eq!(back.phase("walks").unwrap().shards[0].checksum, 0xFFFF_0000_ABCD_0001);
@@ -414,20 +448,26 @@ mod tests {
         let p = manifest_path(&d);
         let m = sample();
 
-        assert_eq!(Manifest::load(&p, m.config_hash), Err(ManifestError::Missing));
+        assert_eq!(
+            Manifest::load(&p, m.config_hash, m.graph_hash),
+            Err(ManifestError::Missing)
+        );
 
         // Truncated: cut the file mid-body.
         m.store(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         std::fs::write(&p, &text[..text.len() / 2]).unwrap();
         assert!(matches!(
-            Manifest::load(&p, m.config_hash),
+            Manifest::load(&p, m.config_hash, m.graph_hash),
             Err(ManifestError::ChecksumMismatch { .. })
         ));
 
         // Header-only truncation (no newline at all).
         std::fs::write(&p, "KCEMANIFEST1 0123").unwrap();
-        assert_eq!(Manifest::load(&p, m.config_hash), Err(ManifestError::Truncated));
+        assert_eq!(
+            Manifest::load(&p, m.config_hash, m.graph_hash),
+            Err(ManifestError::Truncated)
+        );
 
         // Bit flip inside the body.
         m.store(&p).unwrap();
@@ -436,20 +476,33 @@ mod tests {
         bytes[off] ^= 0x20;
         std::fs::write(&p, &bytes).unwrap();
         assert!(matches!(
-            Manifest::load(&p, m.config_hash),
+            Manifest::load(&p, m.config_hash, m.graph_hash),
             Err(ManifestError::ChecksumMismatch { .. })
         ));
 
         // Wrong magic.
         std::fs::write(&p, "NOTAMANIFEST 0123456789abcdef\n{}").unwrap();
-        assert_eq!(Manifest::load(&p, m.config_hash), Err(ManifestError::BadMagic));
+        assert_eq!(
+            Manifest::load(&p, m.config_hash, m.graph_hash),
+            Err(ManifestError::BadMagic)
+        );
 
         // Intact file, different semantic config.
         m.store(&p).unwrap();
         assert!(matches!(
-            Manifest::load(&p, m.config_hash ^ 1),
+            Manifest::load(&p, m.config_hash ^ 1, m.graph_hash),
             Err(ManifestError::ConfigHashMismatch { .. })
         ));
+
+        // Intact file, same config, different input graph: the
+        // dynamic-graph rerun case must refuse to donate phase outputs.
+        assert_eq!(
+            Manifest::load(&p, m.config_hash, m.graph_hash ^ 1),
+            Err(ManifestError::GraphHashMismatch {
+                manifest: m.graph_hash,
+                current: m.graph_hash ^ 1,
+            })
+        );
         let _ = std::fs::remove_dir_all(&d);
     }
 

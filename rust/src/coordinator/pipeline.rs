@@ -130,7 +130,7 @@ pub fn run_pipeline_traced(
     }
     let mut job = match &cfg.job_dir {
         Some(dir) => {
-            let j = Job::open(dir, cfg)?;
+            let j = Job::open(dir, cfg, g.fingerprint())?;
             orphans_removed += fsio::sweep_orphans(&j.dir);
             orphans_removed += fsio::sweep_orphans(&j.shards_dir());
             Some(j)
@@ -628,12 +628,17 @@ impl Job {
     const CKPT_FILE: &'static str = "train.ckpt";
     const SHARDS_DIR: &'static str = "shards";
 
-    fn open(dir: &std::path::Path, cfg: &PipelineConfig) -> Result<Job> {
+    /// `graph_hash` is the input graph's [`Graph::fingerprint`]: the
+    /// manifest binds phase outputs to the *(config, graph)* pair, so a
+    /// rerun against an updated or different graph in the same job dir
+    /// is rejected and starts fresh instead of silently reusing sealed
+    /// shards and train artifacts computed from other edges.
+    fn open(dir: &std::path::Path, cfg: &PipelineConfig, graph_hash: u64) -> Result<Job> {
         std::fs::create_dir_all(dir.join(Self::SHARDS_DIR))
             .map_err(|e| anyhow::anyhow!("creating job dir {}: {e}", dir.display()))?;
         let manifest_file = jobman::manifest_path(dir);
         let hash = cfg.config_hash();
-        let manifest = match jobman::Manifest::load(&manifest_file, hash) {
+        let manifest = match jobman::Manifest::load(&manifest_file, hash, graph_hash) {
             Ok(m) => {
                 eprintln!(
                     "pipeline: job manifest found ({} completed phases); resuming",
@@ -641,10 +646,10 @@ impl Job {
                 );
                 m
             }
-            Err(ManifestError::Missing) => jobman::Manifest::new(hash, cfg.seed),
+            Err(ManifestError::Missing) => jobman::Manifest::new(hash, graph_hash, cfg.seed),
             Err(e) => {
                 eprintln!("pipeline: manifest rejected ({e}); starting fresh");
-                jobman::Manifest::new(hash, cfg.seed)
+                jobman::Manifest::new(hash, graph_hash, cfg.seed)
             }
         };
         Ok(Job {
@@ -1069,6 +1074,43 @@ mod tests {
             .unwrap();
         let n = walks.path(&["fields", "walks"]).and_then(Json::as_f64);
         assert_eq!(n, Some(out.n_walks as f64));
+    }
+
+    #[test]
+    fn job_dir_rejects_manifest_from_different_graph() {
+        // The reviewer scenario: same job dir, same semantic config,
+        // *different input graph* (the dynamic-graph rerun workflow).
+        // The manifest must be rejected — never donate sealed shards or
+        // train artifacts across graphs — and the second run must land
+        // on exactly the bytes a fresh run of the new graph produces.
+        let g1 = generators::holme_kim(120, 3, 0.4, &mut crate::util::rng::Rng::new(1));
+        let g2 = generators::holme_kim(90, 3, 0.4, &mut crate::util::rng::Rng::new(2));
+        let dir = std::env::temp_dir().join(format!(
+            "kcore_embed_pipeline_jobgraph_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = tiny_cfg();
+        cfg.train_threads = 1; // deterministic trainer: bytes comparable
+        cfg.job_dir = Some(dir.clone());
+        run_pipeline(&g1, &cfg, None).unwrap();
+
+        let resumed = run_pipeline(&g2, &cfg, None).unwrap();
+        let mut fresh_cfg = cfg.clone();
+        fresh_cfg.job_dir = None;
+        let fresh = run_pipeline(&g2, &fresh_cfg, None).unwrap();
+        assert_eq!(resumed.embedding.n(), 90);
+        assert_eq!(resumed.n_walks, fresh.n_walks);
+        assert_eq!(
+            resumed.embedding, fresh.embedding,
+            "rerun on a new graph reused stale job-dir outputs"
+        );
+
+        // Same graph again: now the manifest *is* reusable and the
+        // walks phase resumes from its sealed shards.
+        let again = run_pipeline(&g2, &cfg, None).unwrap();
+        assert_eq!(again.embedding, fresh.embedding);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -123,6 +123,24 @@ impl Graph {
             .collect()
     }
 
+    /// Structural identity digest: FNV-1a 64 over the node count and
+    /// both CSR arrays. Because construction canonicalizes (edges
+    /// deduplicated, rows sorted), two graphs fingerprint equal iff
+    /// they have the same node set and edge set — the resume gate the
+    /// job manifest uses so sealed phase outputs are never reused for
+    /// a different input graph.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::fsio::Fnv1a64::new();
+        h.update(&(self.n_nodes() as u64).to_le_bytes());
+        for &o in &self.offsets {
+            h.update(&o.to_le_bytes());
+        }
+        for &t in &self.targets {
+            h.update(&t.to_le_bytes());
+        }
+        h.finish()
+    }
+
     /// Induced subgraph on `nodes` (need not be sorted; duplicates
     /// rejected). Returns the subgraph plus the old-id list indexed by
     /// new id (`new -> old`); the inverse map is derivable.
@@ -243,5 +261,19 @@ mod tests {
         assert_eq!(g.n_nodes(), 0);
         assert_eq!(g.n_edges(), 0);
         assert_eq!(g.max_degree(), 0);
+    }
+
+    #[test]
+    fn fingerprint_tracks_structure_not_input_order() {
+        // Same edge set in any orientation/order: same identity.
+        let a = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let b = Graph::from_edges(4, &[(3, 2), (1, 0), (2, 1), (0, 1)]);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Different edge set, node count, or even an extra isolated
+        // node: different identity.
+        let c = Graph::from_edges(4, &[(0, 1), (1, 2), (0, 3)]);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let d = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3)]);
+        assert_ne!(a.fingerprint(), d.fingerprint());
     }
 }

@@ -7,6 +7,12 @@
 //! at any instruction — the payload is flushed (`sync_all`) before the
 //! rename, and the parent directory entry is flushed after it, so the
 //! rename itself survives power loss.
+//!
+//! Orphan-sweep scope: owner liveness is answered from this process's
+//! `/proc`, so directories holding staging/spill files (`--job-dir`,
+//! `--spill-dir`) must be private to one pid namespace on one host —
+//! never a scratch volume shared between containers, where another
+//! namespace's live pids are invisible and its files would be swept.
 
 use std::fs::{self, File};
 use std::io::{self, Read, Write};
@@ -89,14 +95,45 @@ pub fn fsync_parent(path: &Path) -> io::Result<()> {
 
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
+/// Start time of process `pid` in clock ticks since boot, from field 22
+/// of `/proc/<pid>/stat`. None off-Linux or when the file is
+/// unreadable (racing exit, restricted /proc).
+fn proc_start_time(pid: u32) -> Option<u64> {
+    if !cfg!(target_os = "linux") {
+        return None;
+    }
+    let stat = fs::read_to_string(format!("/proc/{pid}/stat")).ok()?;
+    // comm (field 2) may itself contain spaces or ')': split on the
+    // *last* ')' so the remaining tokens start at field 3 (state).
+    let rest = stat.rsplit_once(')')?.1;
+    rest.split_whitespace().nth(19)?.parse().ok()
+}
+
+/// Owner token embedded in staging/spill file names:
+/// `<pid>-<starttime>` (or bare `<pid>` where /proc is unavailable).
+/// The start time makes the token unique per process *incarnation*, so
+/// the orphan sweep is immune to pid reuse: a recycled pid number with
+/// a different start time is recognized as a dead owner.
+pub fn owner_token() -> &'static str {
+    use std::sync::OnceLock;
+    static TOKEN: OnceLock<String> = OnceLock::new();
+    TOKEN.get_or_init(|| {
+        let pid = std::process::id();
+        match proc_start_time(pid) {
+            Some(start) => format!("{pid}-{start}"),
+            None => pid.to_string(),
+        }
+    })
+}
+
 /// Staging-file path for an atomic publish of `path`: same directory
-/// (so the rename cannot cross filesystems), tagged with pid + sequence
-/// so concurrent writers never collide and the orphan sweep can tell
-/// dead owners from live ones.
+/// (so the rename cannot cross filesystems), tagged with the owner
+/// token + sequence so concurrent writers never collide and the orphan
+/// sweep can tell dead owners from live ones.
 pub fn staging_path(path: &Path) -> PathBuf {
     let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
     let mut name = path.file_name().map(|s| s.to_os_string()).unwrap_or_default();
-    name.push(format!(".tmp.{}.{}", std::process::id(), seq));
+    name.push(format!(".tmp.{}.{}", owner_token(), seq));
     path.with_file_name(name)
 }
 
@@ -121,10 +158,22 @@ pub fn write_atomic_durable(path: &Path, bytes: &[u8]) -> io::Result<()> {
     res
 }
 
-/// True when `pid` belongs to a live process. Linux answers via
-/// `/proc`; elsewhere we conservatively report alive so the orphan
-/// sweep never deletes a file someone may still own.
-fn pid_alive(pid: u32) -> bool {
+/// True when the `(pid, start-time)` owner token still names a live
+/// process. Linux answers via `/proc`; elsewhere we conservatively
+/// report alive so the orphan sweep never deletes a file someone may
+/// still own. When the token carries a start time, a matching pid with
+/// a *different* start time is a recycled pid — the original owner is
+/// dead, so its leftovers are sweepable instead of leaking forever.
+///
+/// Limitation (by construction): liveness is answered from *this*
+/// process's `/proc`, so `--spill-dir`/`--job-dir` must not be shared
+/// across pid namespaces or hosts (e.g. containers sharing one scratch
+/// volume) — another namespace's live pid is invisible here and its
+/// files would look orphaned. Give each container its own directories.
+fn pid_alive(pid: u32, start: Option<u64>) -> bool {
+    if let (Some(want), Some(got)) = (start, proc_start_time(pid)) {
+        return want == got;
+    }
     if pid == std::process::id() {
         return true;
     }
@@ -135,24 +184,27 @@ fn pid_alive(pid: u32) -> bool {
     }
 }
 
-/// Extract the owning pid encoded in an orphan-candidate file name:
-/// either a staging file (`<name>.tmp.<pid>.<seq>`) or an unsealed
-/// spill shard (`kcore_embed_shard_<pid>_<seq>.bin`).
-fn orphan_owner(name: &str) -> Option<u32> {
-    if let Some(rest) = name.strip_prefix("kcore_embed_shard_") {
-        let pid = rest.split('_').next()?;
-        return pid.parse().ok();
+/// Extract the owner token encoded in an orphan-candidate file name:
+/// either a staging file (`<name>.tmp.<token>.<seq>`) or an unsealed
+/// spill shard (`kcore_embed_shard_<token>_<seq>.bin`), where `<token>`
+/// is `<pid>` or `<pid>-<starttime>` (see [`owner_token`]).
+fn orphan_owner(name: &str) -> Option<(u32, Option<u64>)> {
+    let token = if let Some(rest) = name.strip_prefix("kcore_embed_shard_") {
+        rest.split('_').next()?
+    } else if let Some((_, rest)) = name.split_once(".tmp.") {
+        rest.split('.').next()?
+    } else {
+        return None;
+    };
+    match token.split_once('-') {
+        Some((pid, start)) => Some((pid.parse().ok()?, Some(start.parse().ok()?))),
+        None => Some((token.parse().ok()?, None)),
     }
-    if let Some((_, rest)) = name.split_once(".tmp.") {
-        let pid = rest.split('.').next()?;
-        return pid.parse().ok();
-    }
-    None
 }
 
 /// Remove stale staging files and unsealed spill shards left behind by
-/// crashed runs in `dir`. Only files whose encoded owner pid is dead
-/// are touched; live writers (including this process) keep theirs.
+/// crashed runs in `dir`. Only files whose encoded owner is dead are
+/// touched; live writers (including this process) keep theirs.
 /// Returns the number of files removed.
 pub fn sweep_orphans(dir: &Path) -> usize {
     let Ok(entries) = fs::read_dir(dir) else {
@@ -162,10 +214,10 @@ pub fn sweep_orphans(dir: &Path) -> usize {
     for entry in entries.flatten() {
         let name = entry.file_name();
         let Some(name) = name.to_str() else { continue };
-        let Some(pid) = orphan_owner(name) else {
+        let Some((pid, start)) = orphan_owner(name) else {
             continue;
         };
-        if !pid_alive(pid) && fs::remove_file(entry.path()).is_ok() {
+        if !pid_alive(pid, start) && fs::remove_file(entry.path()).is_ok() {
             removed += 1;
         }
     }
@@ -228,22 +280,57 @@ mod tests {
         let dead = d.join("kcore_embed_shard_4294000000_0.bin");
         let dead_tmp = d.join("manifest.json.tmp.4294000000.3");
         let mine = d.join(format!("store.kce.tmp.{}.0", std::process::id()));
+        let mine_tokened = d.join(staging_path(&d.join("store.kce")).file_name().unwrap());
         let plain = d.join("keep.txt");
-        for p in [&live, &dead, &dead_tmp, &mine, &plain] {
+        for p in [&live, &dead, &dead_tmp, &mine, &mine_tokened, &plain] {
             fs::write(p, b"x").unwrap();
         }
         let removed = sweep_orphans(&d);
         assert_eq!(removed, 2);
-        assert!(live.exists() && mine.exists() && plain.exists());
+        assert!(live.exists() && mine.exists() && mine_tokened.exists() && plain.exists());
         assert!(!dead.exists() && !dead_tmp.exists());
         let _ = fs::remove_dir_all(&d);
     }
 
     #[test]
-    fn orphan_owner_parses_both_shapes() {
-        assert_eq!(orphan_owner("kcore_embed_shard_123_7.bin"), Some(123));
-        assert_eq!(orphan_owner("store.kce.tmp.42.9"), Some(42));
+    #[cfg(target_os = "linux")]
+    fn orphan_sweep_detects_pid_reuse_via_start_time() {
+        let d = tmp_dir("pidreuse");
+        // Our own pid but an impossible start time: a *previous
+        // incarnation* of this pid number — dead owner, sweepable even
+        // though /proc/<pid> exists.
+        let recycled = d.join(format!("x.tmp.{}-1.0", std::process::id()));
+        // Our real token survives (start time matches).
+        let current = d.join(format!("y.tmp.{}.0", owner_token()));
+        fs::write(&recycled, b"x").unwrap();
+        fs::write(&current, b"x").unwrap();
+        assert_eq!(sweep_orphans(&d), 1);
+        assert!(!recycled.exists(), "recycled-pid leftovers must be swept");
+        assert!(current.exists(), "live incarnation's file was swept");
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn orphan_owner_parses_all_shapes() {
+        assert_eq!(orphan_owner("kcore_embed_shard_123_7.bin"), Some((123, None)));
+        assert_eq!(orphan_owner("store.kce.tmp.42.9"), Some((42, None)));
+        assert_eq!(
+            orphan_owner("kcore_embed_shard_123-777_7.bin"),
+            Some((123, Some(777)))
+        );
+        assert_eq!(orphan_owner("store.kce.tmp.42-9001.9"), Some((42, Some(9001))));
         assert_eq!(orphan_owner("store.kce"), None);
         assert_eq!(orphan_owner("kcore_embed_shard_x_1.bin"), None);
+        assert_eq!(orphan_owner("store.kce.tmp.42-x.9"), None);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn owner_token_carries_our_start_time() {
+        let tok = owner_token();
+        let (pid, start) = orphan_owner(&format!("a.tmp.{tok}.0")).unwrap();
+        assert_eq!(pid, std::process::id());
+        assert_eq!(start, proc_start_time(pid));
+        assert!(start.is_some());
     }
 }

@@ -270,6 +270,9 @@ static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Next spill-file path inside `dir` (None = the OS temp dir; the
 /// `--spill-dir` knob routes deployments to a dedicated scratch disk).
+/// The name embeds this process's [`fsio::owner_token`] so the startup
+/// orphan sweep can reclaim leftovers of dead runs without touching a
+/// live writer's files (even across pid reuse).
 fn spill_path(dir: Option<&std::path::Path>) -> PathBuf {
     let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
     let base = match dir {
@@ -278,7 +281,7 @@ fn spill_path(dir: Option<&std::path::Path>) -> PathBuf {
     };
     base.join(format!(
         "kcore_embed_shard_{}_{seq}.bin",
-        std::process::id()
+        fsio::owner_token()
     ))
 }
 
@@ -377,50 +380,83 @@ impl CorpusShard {
     /// *next* run. Spilled shards rename their anonymous temp file into
     /// place (same filesystem when `--spill-dir` is inside the job dir,
     /// else a copy) and become `Sealed`, so drop no longer deletes it.
-    /// Every seal ends with file + parent-directory fsync.
+    ///
+    /// Both paths follow the write-tmp-fsync-rename discipline
+    /// (DESIGN.md §Robustness): records land in a
+    /// [`fsio::staging_path`] first and are fsynced *before* the rename
+    /// publishes the final name, so a crash mid-seal never leaves a
+    /// torn file at a name the orphan sweep cannot identify — only a
+    /// `.tmp.<owner>.<seq>` file the next run garbage-collects.
     pub fn seal_to(&mut self, path: &std::path::Path) -> std::io::Result<SealedShardMeta> {
         match &self.storage {
             ShardStorage::Resident { tokens, offsets } => {
-                let mut hasher = fsio::Fnv1a64::new();
-                let file = File::create(path)?;
-                let mut w = BufWriter::new(file);
-                let mut bytes = 0u64;
-                for i in 0..self.n_walks {
-                    let walk = &tokens[offsets[i]..offsets[i + 1]];
-                    let len = (walk.len() as u32).to_le_bytes();
-                    hasher.update(&len);
-                    w.write_all(&len)?;
-                    for &t in walk {
-                        let tb = t.to_le_bytes();
-                        hasher.update(&tb);
-                        w.write_all(&tb)?;
+                let tmp = fsio::staging_path(path);
+                let staged = (|| -> std::io::Result<(u64, u64)> {
+                    let mut hasher = fsio::Fnv1a64::new();
+                    let file = File::create(&tmp)?;
+                    let mut w = BufWriter::new(file);
+                    let mut bytes = 0u64;
+                    for i in 0..self.n_walks {
+                        let walk = &tokens[offsets[i]..offsets[i + 1]];
+                        let len = (walk.len() as u32).to_le_bytes();
+                        hasher.update(&len);
+                        w.write_all(&len)?;
+                        for &t in walk {
+                            let tb = t.to_le_bytes();
+                            hasher.update(&tb);
+                            w.write_all(&tb)?;
+                        }
+                        bytes += 4 + walk.len() as u64 * 4;
                     }
-                    bytes += 4 + walk.len() as u64 * 4;
-                }
-                w.flush()?;
-                w.into_inner()
-                    .map_err(|e| std::io::Error::other(e.error().to_string()))?
-                    .sync_all()?;
-                fsio::fsync_parent(path)?;
+                    w.flush()?;
+                    w.into_inner()
+                        .map_err(|e| std::io::Error::other(e.error().to_string()))?
+                        .sync_all()?;
+                    std::fs::rename(&tmp, path)?;
+                    fsio::fsync_parent(path)?;
+                    Ok((bytes, hasher.finish()))
+                })();
+                let (bytes, checksum) = match staged {
+                    Ok(x) => x,
+                    Err(e) => {
+                        let _ = std::fs::remove_file(&tmp);
+                        return Err(e);
+                    }
+                };
                 Ok(SealedShardMeta {
                     n_walks: self.n_walks as u64,
                     n_tokens: self.n_tokens as u64,
                     len_hist: self.len_hist.clone(),
                     bytes,
-                    checksum: hasher.finish(),
+                    checksum,
                 })
             }
             ShardStorage::Spilled { path: spill } => {
-                if std::fs::rename(spill, path).is_err() {
-                    // Cross-filesystem spill dir: fall back to a copy.
-                    std::fs::copy(spill, path)?;
-                    let _ = std::fs::remove_file(spill);
-                }
-                let f = File::open(path)?;
-                f.sync_all()?;
-                fsio::fsync_parent(path)?;
-                let bytes = std::fs::metadata(path)?.len();
-                let checksum = fsio::file_checksum(path)?;
+                // Stage next to the final name (same directory, so the
+                // publishing rename cannot cross filesystems), fsync the
+                // staged bytes, then rename into place.
+                let tmp = fsio::staging_path(path);
+                let staged = (|| -> std::io::Result<(u64, u64)> {
+                    if std::fs::rename(spill, &tmp).is_err() {
+                        // Cross-filesystem spill dir: fall back to a copy.
+                        std::fs::copy(spill, &tmp)?;
+                        let _ = std::fs::remove_file(spill);
+                    }
+                    let f = File::open(&tmp)?;
+                    f.sync_all()?;
+                    std::fs::rename(&tmp, path)?;
+                    fsio::fsync_parent(path)?;
+                    let bytes = std::fs::metadata(path)?.len();
+                    let checksum = fsio::file_checksum(path)?;
+                    Ok((bytes, checksum))
+                })();
+                let (bytes, checksum) = match staged {
+                    Ok(x) => x,
+                    Err(e) => {
+                        let _ = std::fs::remove_file(&tmp);
+                        return Err(e);
+                    }
+                };
                 self.storage = ShardStorage::Sealed {
                     path: path.to_path_buf(),
                 };
@@ -449,8 +485,15 @@ impl CorpusShard {
     }
 
     /// Re-open a sealed shard file written by a previous run, verifying
-    /// size and checksum against the manifest's metadata before trusting
-    /// a single byte of it.
+    /// size, checksum, record structure and token range against the
+    /// manifest's metadata before trusting a single byte of it.
+    ///
+    /// The file is fully read for the checksum anyway, so the same pass
+    /// decodes every `[len][tokens]` record and range-checks each token
+    /// against `n_nodes`: a shard reused under the wrong node space (or
+    /// with a torn record) fails *here* with an error — the caller
+    /// regenerates walks — instead of panicking or corrupting counts
+    /// deep inside training.
     pub fn open_sealed(
         path: &std::path::Path,
         n_nodes: usize,
@@ -467,13 +510,57 @@ impl CorpusShard {
                 meta.bytes
             );
         }
-        let checksum = fsio::file_checksum(path)
-            .with_context(|| format!("checksumming sealed shard {}", path.display()))?;
+        let file = File::open(path)
+            .with_context(|| format!("opening sealed shard {}", path.display()))?;
+        let mut r = std::io::BufReader::new(file);
+        let mut hasher = fsio::Fnv1a64::new();
+        let (mut n_walks, mut n_tokens, mut consumed) = (0u64, 0u64, 0u64);
+        let mut buf = Vec::new();
+        while consumed < actual {
+            let mut len_bytes = [0u8; 4];
+            r.read_exact(&mut len_bytes)
+                .with_context(|| format!("reading sealed shard {}", path.display()))?;
+            hasher.update(&len_bytes);
+            let len = u32::from_le_bytes(len_bytes) as u64;
+            consumed += 4;
+            if consumed + len * 4 > actual {
+                anyhow::bail!(
+                    "sealed shard {}: truncated record (walk of {len} tokens past EOF)",
+                    path.display()
+                );
+            }
+            buf.resize(len as usize * 4, 0);
+            r.read_exact(&mut buf)
+                .with_context(|| format!("reading sealed shard {}", path.display()))?;
+            hasher.update(&buf);
+            for c in buf.chunks_exact(4) {
+                let t = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                if t as usize >= n_nodes {
+                    anyhow::bail!(
+                        "sealed shard {}: token {t} out of range for n_nodes={n_nodes}",
+                        path.display()
+                    );
+                }
+            }
+            consumed += len * 4;
+            n_walks += 1;
+            n_tokens += len;
+        }
+        let checksum = hasher.finish();
         if checksum != meta.checksum {
             anyhow::bail!(
                 "sealed shard {} checksum {checksum:016x} != manifest {:016x}",
                 path.display(),
                 meta.checksum
+            );
+        }
+        if n_walks != meta.n_walks || n_tokens != meta.n_tokens {
+            anyhow::bail!(
+                "sealed shard {}: {n_walks} walks / {n_tokens} tokens on disk, \
+                 manifest says {} / {}",
+                path.display(),
+                meta.n_walks,
+                meta.n_tokens
             );
         }
         Ok(CorpusShard {
@@ -1242,6 +1329,82 @@ mod tests {
         let back = sharded.into_corpus();
         assert_eq!(back.n_walks(), c.n_walks());
         assert!(back.walks().zip(c.walks()).all(|(x, y)| x == y));
+    }
+
+    fn seal_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "kcore_corpus_seal_{name}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn staging_leftovers(dir: &std::path::Path) -> usize {
+        std::fs::read_dir(dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .count()
+    }
+
+    #[test]
+    fn seal_and_open_sealed_verify_integrity() {
+        let d = seal_dir("verify");
+        let path = d.join(sealed_shard_name(0));
+        let mut shard = CorpusShard::from_corpus(corpus_of(&[&[0, 5, 6], &[2, 3]], 7));
+        let meta = shard.seal_to(&path).unwrap();
+        // The publish is staged: no `.tmp.` files survive a clean seal.
+        assert_eq!(staging_leftovers(&d), 0);
+
+        // Clean re-open under the right node space round-trips walks.
+        let back = CorpusShard::open_sealed(&path, 7, &meta).unwrap();
+        assert_eq!(collect_walks(&back), vec![vec![0, 5, 6], vec![2, 3]]);
+
+        // Wrong node space (the input graph shrank between runs): a
+        // typed error here, not an index panic mid-train.
+        let err = CorpusShard::open_sealed(&path, 5, &meta).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+
+        // Manifest metadata that lies about record counts is caught.
+        let mut bad = meta.clone();
+        bad.n_walks += 1;
+        assert!(CorpusShard::open_sealed(&path, 7, &bad).is_err());
+
+        // A flipped token bit fails the checksum gate.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = CorpusShard::open_sealed(&path, 7, &meta).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn sealing_spilled_shard_promotes_and_round_trips() {
+        let d = seal_dir("spill");
+        let mut w = ShardWriter::new_in(3, 8, MemGauge::default(), Some(d.clone()));
+        for _ in 0..10 {
+            w.push_walk(&[0, 1, 2]);
+        }
+        let mut shard = w.finish();
+        let spill = match &shard.storage {
+            ShardStorage::Spilled { path } => path.clone(),
+            _ => panic!("expected spill"),
+        };
+        let path = d.join(sealed_shard_name(0));
+        let meta = shard.seal_to(&path).unwrap();
+        assert!(matches!(shard.storage, ShardStorage::Sealed { .. }));
+        assert!(!spill.exists(), "anonymous spill file survived sealing");
+        assert_eq!(staging_leftovers(&d), 0);
+        let back = CorpusShard::open_sealed(&path, 3, &meta).unwrap();
+        assert_eq!(collect_walks(&back), vec![vec![0u32, 1, 2]; 10]);
+        // Sealed shards are durable: dropping must not delete the file.
+        drop(shard);
+        drop(back);
+        assert!(path.exists());
+        let _ = std::fs::remove_dir_all(&d);
     }
 
     #[test]
